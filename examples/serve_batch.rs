@@ -1,0 +1,82 @@
+//! Serving example: start the batching sampling service with a pre-trained
+//! PAS dictionary, fire concurrent mixed requests at it, and report
+//! latency / throughput / batching statistics.
+//!
+//! Run: `cargo run --release --example serve_batch`
+
+use pas::experiments::common::default_train;
+use pas::experiments::ExpOpts;
+use pas::pas::train::PasTrainer;
+use pas::schedule::default_schedule;
+use pas::score::analytic::AnalyticEps;
+use pas::server::{SamplingRequest, Service, ServiceConfig};
+use pas::util::timer::Timer;
+use std::sync::atomic::Ordering;
+use std::time::Duration;
+
+fn main() {
+    // Pre-train one PAS dictionary the service can serve (`pas: true`).
+    let opts = ExpOpts::quick();
+    let ds = pas::data::registry::get("gmm2d").unwrap();
+    let model = AnalyticEps::from_dataset(&ds);
+    let solver = pas::solvers::registry::get("ddim").unwrap();
+    let sched = default_schedule(10);
+    let dict = PasTrainer::new(default_train(&opts, "ddim"))
+        .train(solver.as_ref(), model.as_ref(), &sched, "gmm2d", false)
+        .expect("training")
+        .dict;
+    println!("trained service-side PAS dict: {} params", dict.n_params());
+
+    let svc = Service::start(
+        ServiceConfig {
+            workers: 4,
+            max_batch: 512,
+            batch_window: Duration::from_millis(4),
+            queue_depth: 512,
+        },
+        vec![dict],
+    );
+
+    // Fire a burst of concurrent requests: two phases (pas off, then on)
+    // so the dynamic batcher can fuse compatible neighbours.
+    let t = Timer::start();
+    let total_requests = 64;
+    let rxs: Vec<_> = (0..total_requests)
+        .map(|i| {
+            svc.submit(SamplingRequest {
+                id: 0,
+                dataset: "gmm2d".into(),
+                solver: "ddim".into(),
+                nfe: 10,
+                n_samples: 32,
+                seed: i as u64,
+                use_pas: i >= total_requests / 2,
+            })
+            .expect("queue full")
+        })
+        .collect();
+    let mut total_samples = 0usize;
+    let mut lat = Vec::new();
+    let mut fused_max = 0usize;
+    for rx in rxs {
+        let r = rx.recv().unwrap();
+        assert!(r.error.is_none(), "{:?}", r.error);
+        total_samples += r.n;
+        lat.push(r.latency_ms);
+        fused_max = fused_max.max(r.batched_with);
+    }
+    let wall = t.elapsed_s();
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    println!("== serve_batch results ==");
+    println!("requests:        {total_requests} ({total_samples} samples total)");
+    println!("wall time:       {:.1} ms", wall * 1e3);
+    println!("throughput:      {:.0} samples/s", total_samples as f64 / wall);
+    println!("latency p50/p95: {:.1} / {:.1} ms", lat[lat.len() / 2], lat[lat.len() * 95 / 100]);
+    println!("max batch fusion: {fused_max} requests");
+    println!(
+        "batches formed:  {} (from {} fused requests)",
+        svc.metrics.batches.load(Ordering::Relaxed),
+        svc.metrics.fused_requests.load(Ordering::Relaxed)
+    );
+    svc.shutdown();
+}

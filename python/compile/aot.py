@@ -1,0 +1,99 @@
+"""AOT export: lower the trained denoiser to HLO **text** artifacts.
+
+For each exported dataset this produces
+
+    artifacts/eps_<dataset>.hlo.txt    # HLO text, weights baked as consts
+    artifacts/eps_<dataset>.meta.json  # {name, batch, dim, dataset}
+
+which `rust/src/runtime` loads via ``HloModuleProto::from_text_file``.
+
+HLO *text*, not ``.serialize()``: jax >= 0.5 emits protos with 64-bit
+instruction ids which xla_extension 0.5.1 rejects; the text parser
+reassigns ids (see /opt/xla-example/README.md).
+
+Usage (normally via ``make artifacts``):
+    python -m compile.aot --out-dir ../artifacts --data-dir ../artifacts/data
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model, train_model
+
+# Exported model variants: (dataset, hidden, n_blocks, train steps).
+EXPORTS = [
+    ("spiral2d", 96, 3, 2500),
+    ("gmm-hd64", 128, 4, 2500),
+]
+BATCH = 64
+
+
+def to_hlo_text(lowered):
+    """stablehlo -> XlaComputation -> HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def export_eps(params, dim, batch=BATCH, use_pallas=True):
+    """Lower eps(x, t) with weights closed over as constants."""
+
+    def fn(x, t):
+        return (model.eps_apply(params, x, t, use_pallas=use_pallas),)
+
+    x_spec = jax.ShapeDtypeStruct((batch, dim), jnp.float32)
+    t_spec = jax.ShapeDtypeStruct((batch,), jnp.float32)
+    lowered = jax.jit(fn).lower(x_spec, t_spec)
+    return to_hlo_text(lowered)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--data-dir", default="../artifacts/data")
+    ap.add_argument("--steps", type=int, default=None, help="override train steps")
+    ap.add_argument("--batch", type=int, default=BATCH)
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    for dataset, hidden, n_blocks, steps in EXPORTS:
+        data_prefix = os.path.join(args.data_dir, dataset)
+        if not os.path.exists(data_prefix + ".bin"):
+            raise SystemExit(
+                f"missing {data_prefix}.bin — run `pas dump-data` first (make artifacts does this)"
+            )
+        cache = os.path.join(args.out_dir, f"weights_{dataset}.npz")
+        print(f"[aot] {dataset}: training/loading denoiser (hidden={hidden})")
+        params, loss = train_model.train_or_load(
+            data_prefix,
+            cache,
+            hidden=hidden,
+            n_blocks=n_blocks,
+            steps=args.steps or steps,
+        )
+        with open(data_prefix + ".meta.json") as f:
+            dim = json.load(f)["dim"]
+        print(f"[aot] {dataset}: lowering eps(x, t) to HLO text (batch={args.batch})")
+        hlo = export_eps(params, dim, batch=args.batch, use_pallas=True)
+        name = f"eps_{dataset}"
+        hlo_path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(hlo_path, "w") as f:
+            f.write(hlo)
+        meta = {"name": name, "batch": args.batch, "dim": dim, "dataset": dataset}
+        with open(os.path.join(args.out_dir, f"{name}.meta.json"), "w") as f:
+            json.dump(meta, f)
+        print(f"[aot] wrote {hlo_path} ({len(hlo)} chars)")
+        if loss is not None:
+            print(f"[aot] {dataset}: final dsm loss {loss:.4f}")
+    print("[aot] done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the Pallas kernels — the CORE correctness signal.
+
+Every kernel in this package must match its reference here to float32
+tolerance under pytest (including the hypothesis shape/seed sweeps in
+python/tests/test_kernel.py).
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def resblock_ref(x, temb, w1, b1, w2, b2):
+    """Reference for fused_resblock: y = x + silu(x@w1 + b1 + temb) @ w2 + b2."""
+    h = x @ w1 + b1[None, :] + temb
+    h = h * jax.nn.sigmoid(h)
+    return x + h @ w2 + b2[None, :]
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def mlp_ref(x, w, b):
+    """Plain affine layer reference (used by model tests)."""
+    return x @ w + b[None, :]

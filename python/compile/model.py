@@ -1,0 +1,120 @@
+"""L2 — the JAX denoiser (EDM-preconditioned residual MLP).
+
+``eps_apply(params, x, t)`` predicts the noise for a batch under the EDM
+parameterization used throughout the rust coordinator:
+
+    c_in    = 1 / sqrt(t^2 + sigma_data^2)
+    c_skip  = sigma_data^2 / (t^2 + sigma_data^2)
+    c_out   = t * sigma_data / sqrt(t^2 + sigma_data^2)
+    c_noise = log(t) / 4
+    D(x, t) = c_skip * x + c_out * F(c_in * x, c_noise)       # x0 prediction
+    eps     = (x - D) / t
+
+The network body F is: input proj -> K fused residual blocks (the L1
+Pallas kernel) with per-block projected Fourier time embeddings -> output
+proj. Everything is f32; weights are baked into the AOT artifact as
+constants by aot.py.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.fused_resblock import fused_resblock
+
+SIGMA_DATA = 1.0
+N_FOURIER = 16
+
+
+def init_params(key, dim, hidden=128, n_blocks=4):
+    """Initialize model parameters (a flat dict of jnp arrays)."""
+    keys = jax.random.split(key, 3 + 3 * n_blocks)
+    # NOTE: params holds ONLY jnp arrays (jit traces every leaf); structural
+    # metadata like n_blocks is inferred from the key set.
+    params = {
+        # Fixed random Fourier frequencies for the time embedding.
+        "freqs": jax.random.normal(keys[0], (N_FOURIER,)) * 2.0,
+        "w_in": jax.random.normal(keys[1], (dim, hidden)) / jnp.sqrt(dim),
+        "b_in": jnp.zeros((hidden,)),
+        "w_out": jnp.zeros((hidden, dim)),  # zero-init output: F(x)=0 at start
+        "b_out": jnp.zeros((dim,)),
+    }
+    for k in range(n_blocks):
+        params[f"blk{k}_w1"] = (
+            jax.random.normal(keys[3 + 3 * k], (hidden, hidden)) / jnp.sqrt(hidden)
+        )
+        params[f"blk{k}_b1"] = jnp.zeros((hidden,))
+        params[f"blk{k}_w2"] = (
+            jax.random.normal(keys[4 + 3 * k], (hidden, hidden))
+            / jnp.sqrt(hidden)
+            * 0.5
+        )
+        params[f"blk{k}_b2"] = jnp.zeros((hidden,))
+        params[f"blk{k}_temb"] = (
+            jax.random.normal(keys[5 + 3 * k], (2 * N_FOURIER, hidden))
+            / jnp.sqrt(2 * N_FOURIER)
+        )
+    return params
+
+
+def n_blocks_of(params):
+    """Infer the block count from the parameter key structure (static)."""
+    return len([k for k in params if k.endswith("_temb")])
+
+
+def time_embed(params, c_noise):
+    """Fourier features of the conditioning noise level, (B, 2*N_FOURIER)."""
+    ang = c_noise[:, None] * params["freqs"][None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def body(params, x_in, c_noise, use_pallas):
+    """The raw network F(c_in * x, c_noise)."""
+    emb = time_embed(params, c_noise)
+    h = x_in @ params["w_in"] + params["b_in"][None, :]
+    for k in range(n_blocks_of(params)):
+        temb = emb @ params[f"blk{k}_temb"]
+        args = (
+            h,
+            temb,
+            params[f"blk{k}_w1"],
+            params[f"blk{k}_b1"],
+            params[f"blk{k}_w2"],
+            params[f"blk{k}_b2"],
+        )
+        h = fused_resblock(*args) if use_pallas else ref.resblock_ref(*args)
+    return h @ params["w_out"] + params["b_out"][None, :]
+
+
+@partial(jax.jit, static_argnames=("use_pallas",))
+def denoise(params, x, t, use_pallas=False):
+    """EDM x0-prediction D(x, t). x: (B, D); t: (B,)."""
+    t = t[:, None]
+    c_in = 1.0 / jnp.sqrt(t**2 + SIGMA_DATA**2)
+    c_skip = SIGMA_DATA**2 / (t**2 + SIGMA_DATA**2)
+    c_out = t * SIGMA_DATA / jnp.sqrt(t**2 + SIGMA_DATA**2)
+    c_noise = jnp.log(t[:, 0]) / 4.0
+    f = body(params, c_in * x, c_noise, use_pallas)
+    return c_skip * x + c_out * f
+
+
+@partial(jax.jit, static_argnames=("use_pallas",))
+def eps_apply(params, x, t, use_pallas=False):
+    """Noise prediction eps(x, t) = (x - D(x, t)) / t."""
+    d = denoise(params, x, t, use_pallas=use_pallas)
+    return (x - d) / t[:, None]
+
+
+def save_params(params, path):
+    import numpy as np
+
+    np.savez(path, **{k: np.asarray(v) for k, v in params.items()})
+
+
+def load_params(path):
+    import numpy as np
+
+    z = np.load(path)
+    return {k: jnp.asarray(z[k], dtype=jnp.float32) for k in z.files}

@@ -1,0 +1,103 @@
+"""Build-time denoiser training (denoising score matching, EDM weighting).
+
+Trains the L2 MLP denoiser on dataset samples exported by the rust side
+(`pas dump-data`). Runs once during `make artifacts`; the resulting weights
+are baked into the HLO artifact by aot.py. Never on the request path.
+"""
+
+import json
+import os
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model
+
+# EDM sigma sampling: log-normal, wider than EDM's default so the sampler's
+# whole [0.002, 80] range is covered.
+P_MEAN = -0.6
+P_STD = 1.6
+
+
+def load_dataset(prefix):
+    """Load `<prefix>.bin` (+ `.meta.json`) written by `pas dump-data`."""
+    with open(prefix + ".meta.json") as f:
+        meta = json.load(f)
+    x = np.fromfile(prefix + ".bin", dtype="<f4").reshape(meta["n"], meta["dim"])
+    return jnp.asarray(x), meta
+
+
+def dsm_loss(params, x0, key):
+    """EDM-weighted denoising score matching loss."""
+    b = x0.shape[0]
+    k1, k2 = jax.random.split(key)
+    sigma = jnp.exp(P_MEAN + P_STD * jax.random.normal(k1, (b,)))
+    noise = jax.random.normal(k2, x0.shape)
+    x_t = x0 + sigma[:, None] * noise
+    d = model.denoise(params, x_t, sigma, use_pallas=False)
+    w = (sigma**2 + model.SIGMA_DATA**2) / (sigma * model.SIGMA_DATA) ** 2
+    return jnp.mean(w[:, None] * (d - x0) ** 2)
+
+
+@partial(jax.jit, static_argnames=())
+def adam_step(params, opt_m, opt_v, step, x0, key, lr):
+    trainable = {k: v for k, v in params.items() if isinstance(v, jnp.ndarray)}
+    grads = jax.grad(
+        lambda tp: dsm_loss({**params, **tp}, x0, key)
+    )(trainable)
+    b1, b2, eps = 0.9, 0.999, 1e-8
+    new_m, new_v, new_p = {}, {}, dict(params)
+    for k, g in grads.items():
+        new_m[k] = b1 * opt_m[k] + (1 - b1) * g
+        new_v[k] = b2 * opt_v[k] + (1 - b2) * g * g
+        mh = new_m[k] / (1 - b1**step)
+        vh = new_v[k] / (1 - b2**step)
+        new_p[k] = params[k] - lr * mh / (jnp.sqrt(vh) + eps)
+    return new_p, new_m, new_v
+
+
+def train(
+    data_prefix,
+    hidden=128,
+    n_blocks=4,
+    steps=2500,
+    batch=256,
+    lr=2e-3,
+    seed=0,
+    log_every=500,
+):
+    """Train a denoiser; returns (params, meta, final_loss)."""
+    x, meta = load_dataset(data_prefix)
+    dim = meta["dim"]
+    key = jax.random.PRNGKey(seed)
+    key, k_init = jax.random.split(key)
+    params = model.init_params(k_init, dim, hidden=hidden, n_blocks=n_blocks)
+    trainable = {k: v for k, v in params.items() if isinstance(v, jnp.ndarray)}
+    opt_m = {k: jnp.zeros_like(v) for k, v in trainable.items()}
+    opt_v = {k: jnp.zeros_like(v) for k, v in trainable.items()}
+    n = x.shape[0]
+    last = None
+    for step in range(1, steps + 1):
+        key, k_batch, k_loss = jax.random.split(key, 3)
+        idx = jax.random.randint(k_batch, (batch,), 0, n)
+        x0 = x[idx]
+        params, opt_m, opt_v = adam_step(
+            params, opt_m, opt_v, step, x0, k_loss, lr
+        )
+        if step % log_every == 0 or step == steps:
+            key, k_eval = jax.random.split(key)
+            last = float(dsm_loss(params, x[:1024], k_eval))
+            print(f"  [train {meta['dataset']}] step {step}: dsm loss {last:.4f}")
+    return params, meta, last
+
+
+def train_or_load(data_prefix, cache_path, **kw):
+    """Train unless cached weights exist (make artifacts is incremental)."""
+    if os.path.exists(cache_path):
+        return model.load_params(cache_path), None
+    params, meta, loss = train(data_prefix, **kw)
+    os.makedirs(os.path.dirname(cache_path), exist_ok=True)
+    model.save_params(params, cache_path)
+    return params, loss

@@ -1,0 +1,71 @@
+"""L2 model tests: shapes, EDM preconditioning identities, pallas/ref parity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(jax.random.PRNGKey(0), dim=8, hidden=32, n_blocks=2)
+
+
+def test_shapes(params):
+    x = jax.random.normal(jax.random.PRNGKey(1), (16, 8))
+    t = jnp.full((16,), 2.0)
+    d = model.denoise(params, x, t)
+    e = model.eps_apply(params, x, t)
+    assert d.shape == (16, 8)
+    assert e.shape == (16, 8)
+
+
+def test_eps_denoise_identity(params):
+    """eps = (x - D)/t must hold exactly."""
+    x = jax.random.normal(jax.random.PRNGKey(2), (8, 8))
+    t = jnp.full((8,), 0.7)
+    d = model.denoise(params, x, t)
+    e = model.eps_apply(params, x, t)
+    np.testing.assert_allclose(
+        np.asarray(e), np.asarray((x - d) / 0.7), rtol=1e-6, atol=1e-6
+    )
+
+
+def test_zero_init_network_is_cskip_only(params):
+    """With w_out = 0 (the init), D(x,t) = c_skip * x exactly."""
+    fresh = model.init_params(jax.random.PRNGKey(3), dim=4, hidden=16, n_blocks=1)
+    x = jax.random.normal(jax.random.PRNGKey(4), (5, 4))
+    t = jnp.full((5,), 3.0)
+    d = model.denoise(fresh, x, t)
+    c_skip = model.SIGMA_DATA**2 / (9.0 + model.SIGMA_DATA**2)
+    np.testing.assert_allclose(np.asarray(d), c_skip * np.asarray(x), rtol=1e-6)
+
+
+def test_pallas_and_ref_paths_agree(params):
+    x = jax.random.normal(jax.random.PRNGKey(5), (64, 8))
+    t = jnp.exp(jax.random.normal(jax.random.PRNGKey(6), (64,)))
+    a = model.eps_apply(params, x, t, use_pallas=False)
+    b = model.eps_apply(params, x, t, use_pallas=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-5)
+
+
+def test_finite_across_sigma_range(params):
+    """The sampler hits t in [0.002, 80]; outputs must stay finite."""
+    x = jax.random.normal(jax.random.PRNGKey(7), (4, 8)) * 80.0
+    for t_val in [0.002, 0.1, 1.0, 10.0, 80.0]:
+        e = model.eps_apply(params, x, jnp.full((4,), t_val))
+        assert bool(jnp.isfinite(e).all()), t_val
+
+
+def test_params_save_load_roundtrip(tmp_path, params):
+    p = str(tmp_path / "w.npz")
+    model.save_params(params, p)
+    back = model.load_params(p)
+    assert set(back) == set(params)
+    x = jax.random.normal(jax.random.PRNGKey(8), (4, 8))
+    t = jnp.full((4,), 1.5)
+    a = model.eps_apply(params, x, t)
+    b = model.eps_apply(back, x, t)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)

@@ -1,0 +1,35 @@
+//! Bench: timed end-to-end regeneration of the paper's headline cells
+//! (quick sizes) — proves every table's pipeline runs and tracks its cost.
+
+#[path = "harness.rs"]
+mod harness;
+
+use pas::experiments::common::{eval_cell, Bench, Cell};
+use pas::experiments::ExpOpts;
+
+fn main() {
+    println!("== e2e_tables: headline cells at quick sizes ==");
+    let opts = ExpOpts::quick();
+    let bench = Bench::new("gmm-hd64", 0.0, &opts);
+    for (label, cell) in [
+        ("table2: ddim@10", Cell::plain("ddim", 10)),
+        ("table2: ddim+PAS@10 (train+sample)", Cell::pas("ddim", 10)),
+        ("table2: ipndm@10", Cell::plain("ipndm", 10)),
+        ("table2: unipc3m@10", Cell::plain("unipc3m", 10)),
+        (
+            "table2: ddim+TP+PAS@10",
+            Cell {
+                tp: true,
+                ..Cell::pas("ddim", 10)
+            },
+        ),
+    ] {
+        harness::bench(label, 0, 2, 0.2, || {
+            harness::black_box(eval_cell(&bench, &cell, &opts));
+        });
+    }
+    // One full quick experiment as the macro benchmark.
+    harness::bench("fig3 (full runner, quick)", 0, 1, 0.0, || {
+        harness::black_box(pas::experiments::run("fig3", &opts).unwrap());
+    });
+}

@@ -1,0 +1,73 @@
+//! Minimal bench harness (the offline vendor set has no criterion):
+//! warmup + timed iterations, reporting median / mean / p95 per iteration.
+//! Used by every `cargo bench` target.
+
+use std::time::Instant;
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub median_s: f64,
+    pub mean_s: f64,
+    pub p95_s: f64,
+}
+
+impl BenchResult {
+    pub fn print(&self) {
+        println!(
+            "{:<44} {:>10}/iter  mean {:>10}  p95 {:>10}  ({} iters)",
+            self.name,
+            fmt(self.median_s),
+            fmt(self.mean_s),
+            fmt(self.p95_s),
+            self.iters
+        );
+    }
+}
+
+pub fn fmt(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{:.3} s", s)
+    }
+}
+
+/// Run `f` repeatedly: `warmup` untimed, then timed iterations until
+/// `min_time_s` elapses (at least `min_iters`).
+pub fn bench(name: &str, warmup: usize, min_iters: usize, min_time_s: f64, mut f: impl FnMut()) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::new();
+    let start = Instant::now();
+    while times.len() < min_iters || start.elapsed().as_secs_f64() < min_time_s {
+        let t = Instant::now();
+        f();
+        times.push(t.elapsed().as_secs_f64());
+        if times.len() > 10_000 {
+            break;
+        }
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = times.len();
+    let r = BenchResult {
+        name: name.to_string(),
+        iters: n,
+        median_s: times[n / 2],
+        mean_s: times.iter().sum::<f64>() / n as f64,
+        p95_s: times[(n * 95 / 100).min(n - 1)],
+    };
+    r.print();
+    r
+}
+
+/// Prevent the optimizer from discarding a value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}

@@ -1,0 +1,26 @@
+//! Bench: metric evaluation cost (gFID's sqrtm dominates at D=256).
+
+#[path = "harness.rs"]
+mod harness;
+
+use pas::metrics::{gfid, mmd2_rbf, sliced_w2};
+use pas::util::rng::Pcg64;
+
+fn main() {
+    println!("== metrics_cost ==");
+    let mut rng = Pcg64::seed(9);
+    for dim in [2usize, 64, 256] {
+        let n = 2048;
+        let a = rng.normal_vec(n * dim);
+        let b = rng.normal_vec(n * dim);
+        harness::bench(&format!("gfid n={n} dim={dim}"), 1, 3, 0.5, || {
+            harness::black_box(gfid(&a, n, &b, n, dim));
+        });
+        harness::bench(&format!("sliced_w2 n={n} dim={dim}"), 1, 3, 0.3, || {
+            harness::black_box(sliced_w2(&a, n, &b, n, dim, 32, 1));
+        });
+        harness::bench(&format!("mmd2 n={n} dim={dim}"), 1, 3, 0.3, || {
+            harness::black_box(mmd2_rbf(&a, n, &b, n, dim));
+        });
+    }
+}

@@ -1,0 +1,73 @@
+//! Bench: the §3.5 cost claim — one PCA-based correction must be
+//! negligible next to one model evaluation (paper: 0.06 s vs 30.2 s on
+//! Stable Diffusion = 0.2 %). We measure the PCA basis + reconstruction
+//! against (a) the analytic model and (b) the PJRT denoiser when
+//! artifacts are present.
+
+#[path = "harness.rs"]
+mod harness;
+
+use pas::pas::pca::{pca_basis, TrajBuffer};
+use pas::score::analytic::AnalyticEps;
+use pas::score::EpsModel;
+use pas::util::rng::Pcg64;
+
+fn main() {
+    println!("== pas_overhead: PCA correction vs one NFE ==");
+    let mut rng = Pcg64::seed(3);
+    for dim in [64usize, 256, 4096] {
+        // Buffer shaped like a 10-NFE run at its last step: 11 rows.
+        let mut q = TrajBuffer::new(dim);
+        for _ in 0..11 {
+            q.push(&rng.normal_vec(dim));
+        }
+        let d = rng.normal_vec(dim);
+        let r = harness::bench(&format!("pca_basis dim={dim} rows=12"), 10, 50, 0.3, || {
+            harness::black_box(pca_basis(&q, &d, 4));
+        });
+        // One batched model eval on the matching analytic dataset.
+        if dim == 64 {
+            let ds = pas::data::registry::get("gmm-hd64").unwrap();
+            let model = AnalyticEps::from_dataset(&ds);
+            let n = 64;
+            let x = rng.normal_vec(n * dim);
+            let mut out = vec![0.0; n * dim];
+            let m = harness::bench("analytic eval gmm-hd64 b64 (1 NFE)", 3, 20, 0.3, || {
+                model.eval_batch(&x, n, 2.0, &mut out);
+            });
+            // Per-sample PCA vs per-sample NFE share.
+            println!(
+                "  -> PCA/NFE ratio (batch 64): {:.3}% (paper claims ~0.2%)",
+                r.median_s * 64.0 / m.median_s * 100.0
+            );
+        }
+    }
+
+    // PJRT model eval if artifacts exist.
+    let dir = pas::runtime::artifacts_dir();
+    if dir.join("eps_gmm-hd64.hlo.txt").exists() {
+        let rt = pas::runtime::Runtime::cpu().unwrap();
+        let exe = rt.load_artifact(&dir, "eps_gmm-hd64").unwrap();
+        let model = pas::score::pjrt::PjrtEps::new(exe);
+        let n = 64;
+        let x = rng.normal_vec(n * 64);
+        let mut out = vec![0.0; n * 64];
+        let m = harness::bench("pjrt eval eps_gmm-hd64 b64 (1 NFE)", 3, 20, 0.5, || {
+            model.eval_batch(&x, n, 2.0, &mut out);
+        });
+        let mut q = TrajBuffer::new(64);
+        for _ in 0..11 {
+            q.push(&rng.normal_vec(64));
+        }
+        let d = rng.normal_vec(64);
+        let r = harness::bench("pca_basis dim=64 rows=12", 10, 50, 0.3, || {
+            harness::black_box(pca_basis(&q, &d, 4));
+        });
+        println!(
+            "  -> PCA/PJRT-NFE ratio (batch 64): {:.3}%",
+            r.median_s * 64.0 / m.median_s * 100.0
+        );
+    } else {
+        println!("(artifacts missing; skipping PJRT comparison — run `make artifacts`)");
+    }
+}

@@ -1,0 +1,59 @@
+//! Bench: PJRT executable throughput (the request-path model eval) and
+//! end-to-end sampling on the AOT-compiled denoiser.
+
+#[path = "harness.rs"]
+mod harness;
+
+use pas::schedule::default_schedule;
+use pas::score::pjrt::PjrtEps;
+use pas::score::EpsModel;
+use pas::solvers::{registry, run_solver};
+use pas::traj::sample_prior;
+use pas::util::rng::Pcg64;
+
+fn main() {
+    let dir = pas::runtime::artifacts_dir();
+    if !dir.join("eps_gmm-hd64.hlo.txt").exists() {
+        println!("artifacts missing — run `make artifacts` first; skipping pjrt_eval");
+        return;
+    }
+    let rt = pas::runtime::Runtime::cpu().unwrap();
+    println!("== pjrt_eval on {} ==", rt.platform());
+    for name in ["eps_spiral2d", "eps_gmm-hd64"] {
+        let exe = rt.load_artifact(&dir, name).unwrap();
+        let model = PjrtEps::new(exe);
+        let (b, d) = (model.batch(), model.dim());
+        let mut rng = Pcg64::seed(5);
+        let x = rng.normal_vec(b * d);
+        let mut out = vec![0.0; b * d];
+        harness::bench(&format!("{name} eval b{b}"), 3, 20, 0.5, || {
+            model.eval_batch(&x, b, 2.0, &mut out);
+            harness::black_box(&out);
+        });
+        // Padding path: n not a multiple of the compiled batch.
+        let x_small = rng.normal_vec(10 * d);
+        let mut out_small = vec![0.0; 10 * d];
+        harness::bench(&format!("{name} eval n=10 (padded to b{b})"), 3, 20, 0.5, || {
+            model.eval_batch(&x_small, 10, 2.0, &mut out_small);
+            harness::black_box(&out_small);
+        });
+    }
+    // End-to-end sampling run on the PJRT model.
+    let exe = rt.load_artifact(&dir, "eps_gmm-hd64").unwrap();
+    let model = PjrtEps::new(exe);
+    let solver = registry::get("ddim").unwrap();
+    let sched = default_schedule(10);
+    let mut rng = Pcg64::seed(6);
+    let n = model.batch();
+    let x_t = sample_prior(&mut rng, n, model.dim(), sched.t_max());
+    harness::bench("ddim 10NFE on pjrt eps_gmm-hd64 b64", 1, 3, 1.0, || {
+        harness::black_box(run_solver(
+            solver.as_ref(),
+            &model,
+            &x_t,
+            n,
+            &sched,
+            None,
+        ));
+    });
+}

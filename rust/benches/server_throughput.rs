@@ -1,0 +1,62 @@
+//! Bench: sampling-service throughput and batching efficiency under a
+//! concurrent open loop (L3 serving path).
+
+#[path = "harness.rs"]
+mod harness;
+
+use pas::server::{SamplingRequest, Service, ServiceConfig};
+use std::sync::atomic::Ordering;
+use std::time::{Duration, Instant};
+
+fn run_load(workers: usize, requests: usize, n_per_req: usize) {
+    let svc = Service::start(
+        ServiceConfig {
+            workers,
+            max_batch: 512,
+            batch_window: Duration::from_millis(2),
+            queue_depth: 1024,
+        },
+        Vec::new(),
+    );
+    let t = Instant::now();
+    let rxs: Vec<_> = (0..requests)
+        .filter_map(|i| {
+            svc.submit(SamplingRequest {
+                id: 0,
+                dataset: "gmm-hd64".into(),
+                solver: "ddim".into(),
+                nfe: 10,
+                n_samples: n_per_req,
+                seed: i as u64,
+                use_pas: false,
+            })
+            .ok()
+        })
+        .collect();
+    let accepted = rxs.len();
+    let mut samples = 0usize;
+    for rx in rxs {
+        if let Ok(r) = rx.recv() {
+            if r.error.is_none() {
+                samples += r.n;
+            }
+        }
+    }
+    let wall = t.elapsed().as_secs_f64();
+    let batches = svc.metrics.batches.load(Ordering::Relaxed);
+    println!(
+        "workers={workers:<2} reqs={requests} accepted={accepted} samples={samples} \
+         wall={:.2}s -> {:.0} samples/s, {:.1} reqs/batch",
+        wall,
+        samples as f64 / wall,
+        accepted as f64 / batches.max(1) as f64
+    );
+    svc.shutdown();
+}
+
+fn main() {
+    println!("== server_throughput (gmm-hd64, ddim@10, 16 samples/req) ==");
+    for workers in [1usize, 2, 4, 8] {
+        run_load(workers, 128, 16);
+    }
+}

@@ -1,0 +1,58 @@
+//! Bench: per-step cost of every solver on the analytic models — the L3
+//! compute hot path (analytic eps eval dominates; see EXPERIMENTS.md §Perf).
+
+#[path = "harness.rs"]
+mod harness;
+
+use pas::schedule::default_schedule;
+use pas::score::analytic::AnalyticEps;
+use pas::solvers::{registry, run_solver};
+use pas::traj::sample_prior;
+use pas::util::rng::Pcg64;
+
+fn main() {
+    println!("== solver_step: full 10-NFE sampling run, batch 256 ==");
+    for ds_name in ["gmm2d", "gmm-hd64", "latent256"] {
+        let ds = pas::data::registry::get(ds_name).unwrap();
+        let model = AnalyticEps::from_dataset(&ds);
+        let mut rng = Pcg64::seed(1);
+        let n = 256;
+        for solver_name in ["ddim", "ipndm", "dpmpp3m", "unipc3m", "deis-tab3"] {
+            let solver = registry::get(solver_name).unwrap();
+            let steps = solver.steps_for_nfe(10).unwrap();
+            let sched = default_schedule(steps);
+            let x_t = sample_prior(&mut rng, n, ds.dim(), sched.t_max());
+            harness::bench(
+                &format!("{ds_name}/{solver_name} 10NFE b{n}"),
+                1,
+                5,
+                0.5,
+                || {
+                    harness::black_box(run_solver(
+                        solver.as_ref(),
+                        model.as_ref(),
+                        &x_t,
+                        n,
+                        &sched,
+                        None,
+                    ));
+                },
+            );
+        }
+    }
+    // Raw model eval throughput (the inner hot loop).
+    println!("\n== analytic eps eval, batch 256 ==");
+    for ds_name in ["gmm2d", "gmm-hd64", "latent256"] {
+        let ds = pas::data::registry::get(ds_name).unwrap();
+        let model = AnalyticEps::from_dataset(&ds);
+        let mut rng = Pcg64::seed(2);
+        let n = 256;
+        let x = sample_prior(&mut rng, n, ds.dim(), 10.0);
+        let mut out = vec![0.0; n * ds.dim()];
+        use pas::score::EpsModel;
+        harness::bench(&format!("{ds_name}/eval b{n}"), 3, 20, 0.5, || {
+            model.eval_batch(&x, n, 2.0, &mut out);
+            harness::black_box(&out);
+        });
+    }
+}

@@ -1,0 +1,407 @@
+//! Command-line interface (hand-rolled: the offline vendor set has no
+//! clap). `pas help` prints the full usage.
+
+use crate::config::RunConfig;
+use crate::experiments::{self, ExpOpts};
+use crate::metrics::gfid;
+use crate::pas::coords::CoordinateDict;
+use crate::pas::correct::CorrectedSampler;
+use crate::pas::train::PasTrainer;
+use crate::schedule::default_schedule;
+use crate::score::analytic::AnalyticEps;
+use crate::score::cfg::RowCfgEps;
+use crate::score::EpsModel;
+use crate::solvers::run_solver;
+use crate::traj::sample_prior;
+use crate::util::json::Json;
+use crate::util::rng::Pcg64;
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+/// Parsed flags: `--key value` and bare positionals.
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: HashMap<String, String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Args {
+        let mut positional = Vec::new();
+        let mut flags = HashMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    flags.insert(key.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    flags.insert(key.to_string(), "true".to_string());
+                    i += 1;
+                }
+            } else {
+                positional.push(a.clone());
+                i += 1;
+            }
+        }
+        Args { positional, flags }
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+}
+
+const USAGE: &str = "pas — PCA-based Adaptive Search for diffusion sampling (paper reproduction)
+
+USAGE:
+  pas list                                  list datasets, solvers, experiments
+  pas sample  --dataset D --solver S --nfe N --n K [--coords f.json]
+              [--guidance G] [--seed X] [--out samples.json] [--gfid]
+  pas train   --dataset D --solver S --nfe N [--config f.toml]
+              [--n-traj K] [--epochs E] [--lr L] [--tau T] [--loss l1|l2|...]
+              --out coords.json
+  pas repro   <id>|all [--quick] [--out results/] [--n-samples K]
+  pas serve   [--addr 127.0.0.1:7777] [--workers W]
+  pas client  --addr HOST:PORT --dataset D --solver S --nfe N --n K
+  pas pjrt-check [--artifacts DIR] [--name eps_spiral2d]
+  pas help
+
+Experiments (pas repro): fig2 fig3 table2 table3 table5 table6 fig6a fig6b
+fig6c fig6d fig7 table8 table9 table11 ablate-param
+";
+
+/// Entry point; returns a process exit code.
+pub fn main(argv: Vec<String>) -> i32 {
+    let args = Args::parse(&argv);
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let r = match cmd {
+        "help" | "-h" | "--help" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        "list" => cmd_list(),
+        "sample" => cmd_sample(&args),
+        "train" => cmd_train(&args),
+        "repro" => cmd_repro(&args),
+        "serve" => cmd_serve(&args),
+        "client" => cmd_client(&args),
+        "pjrt-check" => cmd_pjrt_check(&args),
+        "dump-data" => cmd_dump_data(&args),
+        other => Err(format!("unknown command {other}\n{USAGE}")),
+    };
+    match r {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_list() -> Result<(), String> {
+    println!("datasets:");
+    for name in crate::data::registry::ALL {
+        let ds = crate::data::registry::get(name).unwrap();
+        println!("  {name:<12} dim={:<4} {} (stands in for {})", ds.dim(), ds.about, ds.stands_in_for);
+    }
+    println!("solvers:");
+    for name in crate::solvers::registry::ALL {
+        let pas = if crate::solvers::registry::supports_pas(name) { " [PAS]" } else { "" };
+        println!("  {name}{pas}");
+    }
+    println!("experiments: {}", experiments::ALL.join(" "));
+    Ok(())
+}
+
+fn build_model(dataset: &str, guidance: f64) -> Result<(crate::data::Dataset, Box<dyn EpsModel>), String> {
+    let ds = crate::data::registry::get(dataset).ok_or_else(|| format!("unknown dataset {dataset}"))?;
+    let model: Box<dyn EpsModel> = if guidance > 0.0 {
+        if !ds.is_conditional() {
+            return Err(format!("{dataset} is not conditional; drop --guidance"));
+        }
+        RowCfgEps::from_spec(&ds.spec, guidance)
+    } else {
+        AnalyticEps::from_dataset(&ds)
+    };
+    Ok((ds, model))
+}
+
+fn cmd_sample(args: &Args) -> Result<(), String> {
+    let dataset = args.get("dataset").unwrap_or("gmm-hd64");
+    let solver_name = args.get("solver").unwrap_or("ddim");
+    let nfe = args.get_usize("nfe", 10);
+    let n = args.get_usize("n", 64);
+    let seed = args.get_usize("seed", 0) as u64;
+    let guidance = args.get_f64("guidance", 0.0);
+    let (ds, model) = build_model(dataset, guidance)?;
+    let solver = crate::solvers::registry::get(solver_name)
+        .ok_or_else(|| format!("unknown solver {solver_name}"))?;
+    let steps = solver
+        .steps_for_nfe(nfe)
+        .ok_or_else(|| format!("{solver_name} cannot hit NFE={nfe} exactly"))?;
+    let sched = default_schedule(steps);
+    let mut rng = Pcg64::seed(seed);
+    let x_t = sample_prior(&mut rng, n, ds.dim(), sched.t_max());
+    let (run, corrected) = if let Some(path) = args.get("coords") {
+        let dict = CoordinateDict::load(&PathBuf::from(path))?;
+        (
+            CorrectedSampler::sample(&dict, solver.as_ref(), model.as_ref(), &x_t, n, &sched),
+            true,
+        )
+    } else {
+        (
+            run_solver(solver.as_ref(), model.as_ref(), &x_t, n, &sched, None),
+            false,
+        )
+    };
+    println!(
+        "sampled n={n} dim={} solver={solver_name} nfe={} pas={corrected}",
+        ds.dim(),
+        run.nfe
+    );
+    if args.has("gfid") {
+        let mut rref = Pcg64::seed(seed ^ 0xfade);
+        let n_ref = 8192;
+        let reference = ds.spec.sample(&mut rref, n_ref);
+        let f = gfid(&run.x0, n, &reference, n_ref, ds.dim());
+        println!("gFID = {f:.4}");
+    }
+    if let Some(out) = args.get("out") {
+        let mut o = Json::obj();
+        o.set("dataset", Json::Str(dataset.into()))
+            .set("solver", Json::Str(solver_name.into()))
+            .set("nfe", Json::Num(run.nfe as f64))
+            .set("dim", Json::Num(ds.dim() as f64))
+            .set("n", Json::Num(n as f64))
+            .set("samples", Json::from_f64_slice(&run.x0));
+        std::fs::write(out, o.to_string()).map_err(|e| e.to_string())?;
+        println!("wrote {out}");
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<(), String> {
+    let mut rc = if let Some(cfg_path) = args.get("config") {
+        RunConfig::load(&PathBuf::from(cfg_path))?
+    } else {
+        RunConfig::default()
+    };
+    if let Some(d) = args.get("dataset") {
+        rc.dataset = d.into();
+    }
+    if let Some(s) = args.get("solver") {
+        rc.solver = s.into();
+    }
+    if args.has("nfe") {
+        rc.nfe = args.get_usize("nfe", rc.nfe);
+    }
+    if args.has("n-traj") {
+        rc.train.n_traj = args.get_usize("n-traj", rc.train.n_traj);
+    }
+    if args.has("epochs") {
+        rc.train.epochs = args.get_usize("epochs", rc.train.epochs);
+    }
+    if args.has("lr") {
+        rc.train.lr = args.get_f64("lr", rc.train.lr);
+    }
+    if args.has("tau") {
+        rc.train.tau = args.get_f64("tau", rc.train.tau);
+    }
+    if let Some(l) = args.get("loss") {
+        rc.train.loss = crate::pas::train::Loss::parse(l).ok_or_else(|| format!("unknown loss {l}"))?;
+    }
+    rc.validate()?;
+    let (ds, model) = build_model(&rc.dataset, rc.guidance)?;
+    let solver = crate::solvers::registry::get(&rc.solver).unwrap();
+    let steps = solver
+        .steps_for_nfe(rc.nfe)
+        .ok_or_else(|| format!("{} cannot hit NFE={}", rc.solver, rc.nfe))?;
+    let sched = default_schedule(steps);
+    let trainer = PasTrainer::new(rc.train.clone());
+    let tr = trainer.train(solver.as_ref(), model.as_ref(), &sched, ds.name(), false)?;
+    println!(
+        "trained PAS for {}@{} nfe={}: corrected steps [{}], {} parameters, {:.2}s",
+        rc.solver,
+        rc.dataset,
+        rc.nfe,
+        tr.trace.corrected_steps_str(),
+        tr.dict.n_params(),
+        tr.train_seconds
+    );
+    let out = args.get("out").unwrap_or("coords.json");
+    tr.dict.save(&PathBuf::from(out)).map_err(|e| e.to_string())?;
+    println!("wrote {out}");
+    Ok(())
+}
+
+fn cmd_repro(args: &Args) -> Result<(), String> {
+    let id = args
+        .positional
+        .get(1)
+        .ok_or("usage: pas repro <id>|all [--quick]")?
+        .clone();
+    let mut opts = if args.has("quick") {
+        ExpOpts::quick()
+    } else {
+        ExpOpts::default()
+    };
+    if args.has("n-samples") {
+        opts.n_samples = args.get_usize("n-samples", opts.n_samples);
+    }
+    if args.has("n-traj") {
+        opts.n_traj = args.get_usize("n-traj", opts.n_traj);
+    }
+    if let Some(o) = args.get("out") {
+        opts.out_dir = PathBuf::from(o);
+    }
+    let ids: Vec<&str> = if id == "all" {
+        experiments::ALL.to_vec()
+    } else {
+        vec![id.as_str()]
+    };
+    for id in ids {
+        let t = crate::util::timer::Timer::start();
+        let tables = experiments::run_and_save(id, &opts)?;
+        for table in &tables {
+            print!("{}", table.markdown());
+        }
+        eprintln!(
+            "[{id}] done in {} -> {}",
+            crate::util::timer::fmt_duration(t.elapsed_s()),
+            opts.out_dir.join(format!("{id}.md")).display()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<(), String> {
+    use crate::server::{Service, ServiceConfig};
+    let addr = args.get("addr").unwrap_or("127.0.0.1:7777").to_string();
+    let cfg = ServiceConfig {
+        workers: args.get_usize("workers", 4),
+        ..ServiceConfig::default()
+    };
+    let svc = std::sync::Arc::new(Service::start(cfg, Vec::new()));
+    let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let local = crate::server::protocol::serve(svc, &addr, stop).map_err(|e| e.to_string())?;
+    println!("pas server listening on {local} (line-delimited JSON; Ctrl-C to stop)");
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_client(args: &Args) -> Result<(), String> {
+    use std::io::{BufRead, BufReader, Write};
+    let addr = args.get("addr").unwrap_or("127.0.0.1:7777");
+    let mut req = Json::obj();
+    req.set("dataset", Json::Str(args.get("dataset").unwrap_or("gmm-hd64").into()))
+        .set("solver", Json::Str(args.get("solver").unwrap_or("ddim").into()))
+        .set("nfe", Json::Num(args.get_usize("nfe", 10) as f64))
+        .set("n", Json::Num(args.get_usize("n", 4) as f64))
+        .set("seed", Json::Num(args.get_usize("seed", 0) as f64));
+    let mut conn = std::net::TcpStream::connect(addr).map_err(|e| e.to_string())?;
+    conn.write_all(format!("{}\n", req.to_string()).as_bytes())
+        .map_err(|e| e.to_string())?;
+    let mut reader = BufReader::new(conn);
+    let mut line = String::new();
+    reader.read_line(&mut line).map_err(|e| e.to_string())?;
+    println!("{}", line.trim());
+    Ok(())
+}
+
+/// Export dataset samples for the build-time Python denoiser training
+/// (little-endian f32 `.bin` + `.meta.json`). The data distribution is
+/// *defined* in rust; Python only consumes it.
+fn cmd_dump_data(args: &Args) -> Result<(), String> {
+    let dataset = args.get("dataset").ok_or("need --dataset")?;
+    let n = args.get_usize("n", 20_000);
+    let seed = args.get_usize("seed", 0) as u64;
+    let out = args.get("out").ok_or("need --out (path prefix)")?;
+    let ds = crate::data::registry::get(dataset).ok_or_else(|| format!("unknown dataset {dataset}"))?;
+    let mut rng = Pcg64::seed_stream(seed, 0xda7a);
+    let x = ds.spec.sample(&mut rng, n);
+    let mut bytes = Vec::with_capacity(x.len() * 4);
+    for v in &x {
+        bytes.extend_from_slice(&(*v as f32).to_le_bytes());
+    }
+    let prefix = PathBuf::from(out);
+    if let Some(dir) = prefix.parent() {
+        std::fs::create_dir_all(dir).map_err(|e| e.to_string())?;
+    }
+    std::fs::write(prefix.with_extension("bin"), &bytes).map_err(|e| e.to_string())?;
+    let mut meta = Json::obj();
+    meta.set("dataset", Json::Str(dataset.into()))
+        .set("n", Json::Num(n as f64))
+        .set("dim", Json::Num(ds.dim() as f64))
+        .set("seed", Json::Num(seed as f64));
+    std::fs::write(prefix.with_extension("meta.json"), meta.to_string()).map_err(|e| e.to_string())?;
+    println!("wrote {} samples of {dataset} (dim {}) to {out}.bin", n, ds.dim());
+    Ok(())
+}
+
+fn cmd_pjrt_check(args: &Args) -> Result<(), String> {
+    let dir = args
+        .get("artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(crate::runtime::artifacts_dir);
+    let name = args.get("name").unwrap_or("eps_spiral2d");
+    let rt = crate::runtime::Runtime::cpu().map_err(|e| format!("{e:#}"))?;
+    println!("PJRT platform: {}", rt.platform());
+    let exe = rt.load_artifact(&dir, name).map_err(|e| format!("{e:#}"))?;
+    let (b, d) = (exe.meta.batch, exe.meta.dim);
+    println!("loaded {name}: batch={b} dim={d} dataset={}", exe.meta.dataset);
+    let x = vec![0.5f32; b * d];
+    let t = vec![1.0f32; b];
+    let y = exe.eval_eps(&x, &t).map_err(|e| format!("{e:#}"))?;
+    let finite = y.iter().all(|v| v.is_finite());
+    println!(
+        "executed: out len={} finite={finite} first={:?}",
+        y.len(),
+        &y[..d.min(4)]
+    );
+    if !finite {
+        return Err("non-finite output".into());
+    }
+    println!("pjrt-check OK");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn args_parse_flags_and_positionals() {
+        let argv: Vec<String> = ["repro", "fig2", "--quick", "--n-samples", "64"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let a = Args::parse(&argv);
+        assert_eq!(a.positional, vec!["repro", "fig2"]);
+        assert!(a.has("quick"));
+        assert_eq!(a.get_usize("n-samples", 0), 64);
+    }
+
+    #[test]
+    fn list_runs() {
+        assert!(cmd_list().is_ok());
+    }
+
+    #[test]
+    fn unknown_command_fails() {
+        assert_eq!(main(vec!["frobnicate".into()]), 1);
+    }
+}

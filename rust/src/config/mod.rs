@@ -1,0 +1,241 @@
+//! Typed run configuration + a minimal TOML-subset parser.
+//!
+//! The offline dependency set has no toml crate, so we parse the subset we
+//! need: `[section]` headers, `key = value` with string / number / bool
+//! values, and `#` comments. This covers every config shipped in
+//! `configs/` and keeps the launcher (`pas run --config f.toml`)
+//! self-contained.
+
+use crate::pas::coords::ScaleMode;
+use crate::pas::train::{Loss, Optimizer, TrainConfig};
+use std::collections::BTreeMap;
+
+/// Raw parsed TOML subset: section → key → value string.
+#[derive(Debug, Default, Clone)]
+pub struct Toml {
+    pub sections: BTreeMap<String, BTreeMap<String, String>>,
+}
+
+impl Toml {
+    pub fn parse(src: &str) -> Result<Toml, String> {
+        let mut t = Toml::default();
+        let mut cur = String::new();
+        t.sections.insert(String::new(), BTreeMap::new());
+        for (lineno, raw) in src.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                cur = name.trim().to_string();
+                t.sections.entry(cur.clone()).or_default();
+            } else if let Some((k, v)) = line.split_once('=') {
+                let key = k.trim().to_string();
+                let mut val = v.trim().to_string();
+                if val.starts_with('"') && val.ends_with('"') && val.len() >= 2 {
+                    val = val[1..val.len() - 1].to_string();
+                }
+                t.sections.get_mut(&cur).unwrap().insert(key, val);
+            } else {
+                return Err(format!("config line {} unparseable: {raw}", lineno + 1));
+            }
+        }
+        Ok(t)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&str> {
+        self.sections.get(section)?.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_f64(&self, section: &str, key: &str) -> Option<f64> {
+        self.get(section, key)?.parse().ok()
+    }
+
+    pub fn get_usize(&self, section: &str, key: &str) -> Option<usize> {
+        self.get(section, key)?.parse().ok()
+    }
+
+    pub fn get_bool(&self, section: &str, key: &str) -> Option<bool> {
+        match self.get(section, key)? {
+            "true" => Some(true),
+            "false" => Some(false),
+            _ => None,
+        }
+    }
+}
+
+/// A full run configuration: dataset + solver + schedule + PAS training.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub dataset: String,
+    pub solver: String,
+    pub nfe: usize,
+    pub n_samples: usize,
+    pub seed: u64,
+    /// Guidance scale for conditional datasets (1.0 = conditional only).
+    pub guidance: f64,
+    /// Teleportation sigma_skip; 0 disables TP.
+    pub sigma_skip: f64,
+    pub train: TrainConfig,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            dataset: "gmm-hd64".into(),
+            solver: "ddim".into(),
+            nfe: 10,
+            n_samples: 1024,
+            seed: 0,
+            guidance: 0.0,
+            sigma_skip: 0.0,
+            train: TrainConfig::default(),
+        }
+    }
+}
+
+impl RunConfig {
+    pub fn from_toml(t: &Toml) -> Result<RunConfig, String> {
+        let mut c = RunConfig::default();
+        let s = "run";
+        if let Some(v) = t.get(s, "dataset") {
+            c.dataset = v.to_string();
+        }
+        if let Some(v) = t.get(s, "solver") {
+            c.solver = v.to_string();
+        }
+        if let Some(v) = t.get_usize(s, "nfe") {
+            c.nfe = v;
+        }
+        if let Some(v) = t.get_usize(s, "n_samples") {
+            c.n_samples = v;
+        }
+        if let Some(v) = t.get_f64(s, "seed") {
+            c.seed = v as u64;
+        }
+        if let Some(v) = t.get_f64(s, "guidance") {
+            c.guidance = v;
+        }
+        if let Some(v) = t.get_f64(s, "sigma_skip") {
+            c.sigma_skip = v;
+        }
+        let p = "pas";
+        if let Some(v) = t.get_usize(p, "n_basis") {
+            c.train.n_basis = v;
+        }
+        if let Some(v) = t.get_f64(p, "lr") {
+            c.train.lr = v;
+        }
+        if let Some(v) = t.get_usize(p, "epochs") {
+            c.train.epochs = v;
+        }
+        if let Some(v) = t.get_usize(p, "minibatch") {
+            c.train.minibatch = v;
+        }
+        if let Some(v) = t.get_usize(p, "n_traj") {
+            c.train.n_traj = v;
+        }
+        if let Some(v) = t.get_f64(p, "tau") {
+            c.train.tau = v;
+        }
+        if let Some(v) = t.get(p, "loss") {
+            c.train.loss = Loss::parse(v).ok_or_else(|| format!("unknown loss {v}"))?;
+        }
+        if let Some(v) = t.get(p, "scale_mode") {
+            c.train.scale_mode =
+                ScaleMode::parse(v).ok_or_else(|| format!("unknown scale_mode {v}"))?;
+        }
+        if let Some(v) = t.get(p, "optimizer") {
+            c.train.optimizer = match v {
+                "sgd" => Optimizer::Sgd,
+                "adam" => Optimizer::Adam,
+                _ => return Err(format!("unknown optimizer {v}")),
+            };
+        }
+        if let Some(v) = t.get(p, "teacher") {
+            c.train.teacher = v.to_string();
+        }
+        if let Some(v) = t.get_usize(p, "teacher_nfe") {
+            c.train.teacher_nfe = v;
+        }
+        if let Some(v) = t.get_f64(p, "train_seed") {
+            c.train.seed = v as u64;
+        }
+        c.validate()?;
+        Ok(c)
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<RunConfig, String> {
+        let src = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+        Self::from_toml(&Toml::parse(&src)?)
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if crate::data::registry::get(&self.dataset).is_none() {
+            return Err(format!("unknown dataset {}", self.dataset));
+        }
+        if crate::solvers::registry::get(&self.solver).is_none() {
+            return Err(format!("unknown solver {}", self.solver));
+        }
+        if self.nfe == 0 || self.nfe > 1000 {
+            return Err(format!("nfe {} out of range", self.nfe));
+        }
+        if !(1..=8).contains(&self.train.n_basis) {
+            return Err(format!("n_basis {} out of range", self.train.n_basis));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# sample config
+[run]
+dataset = "gmm2d"
+solver = "ipndm"
+nfe = 8
+n_samples = 512
+guidance = 7.5
+
+[pas]
+lr = 0.05
+loss = "l1"
+tau = 1e-4
+n_traj = 128
+scale_mode = "relative"
+"#;
+
+    #[test]
+    fn parses_sample() {
+        let t = Toml::parse(SAMPLE).unwrap();
+        let c = RunConfig::from_toml(&t).unwrap();
+        assert_eq!(c.dataset, "gmm2d");
+        assert_eq!(c.solver, "ipndm");
+        assert_eq!(c.nfe, 8);
+        assert_eq!(c.guidance, 7.5);
+        assert_eq!(c.train.lr, 0.05);
+        assert_eq!(c.train.tau, 1e-4);
+        assert_eq!(c.train.n_traj, 128);
+        assert_eq!(c.train.scale_mode, ScaleMode::Relative);
+    }
+
+    #[test]
+    fn rejects_unknown_solver() {
+        let t = Toml::parse("[run]\nsolver = \"magic\"\n").unwrap();
+        assert!(RunConfig::from_toml(&t).is_err());
+    }
+
+    #[test]
+    fn rejects_garbage_line() {
+        assert!(Toml::parse("this is not toml").is_err());
+    }
+
+    #[test]
+    fn comments_and_blank_lines_ok() {
+        let t = Toml::parse("# hi\n\n[run]\nnfe = 6 # inline\n").unwrap();
+        assert_eq!(t.get_usize("run", "nfe"), Some(6));
+    }
+}

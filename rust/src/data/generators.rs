@@ -1,0 +1,242 @@
+//! Constructors for the concrete synthetic datasets.
+//!
+//! Each generator builds a [`GmmSpec`] deterministically from a fixed seed
+//! so every run of the system sees the same data distribution. Structured
+//! 2-D sets (spiral, checkerboard) are expressed as many small isotropic
+//! modes along the structure — the analytic score stays exact while the
+//! geometry (curved, multi-modal) matches what makes diffusion sampling
+//! trajectories bend.
+
+use super::{GmmSpec, Mode};
+use crate::util::rng::Pcg64;
+use std::f64::consts::PI;
+
+/// 8 isotropic modes on a circle in R² — the classic "8 gaussians".
+pub fn gmm2d() -> GmmSpec {
+    let r = 6.0;
+    let modes = (0..8)
+        .map(|k| {
+            let th = 2.0 * PI * k as f64 / 8.0;
+            Mode::isotropic(vec![r * th.cos(), r * th.sin()], 0.09, 1.0, 0)
+        })
+        .collect();
+    GmmSpec {
+        name: "gmm2d".into(),
+        modes,
+        n_classes: 1,
+    }
+}
+
+/// Two-arm spiral in R², expressed as 40 small modes along the arms.
+pub fn spiral2d() -> GmmSpec {
+    let mut modes = Vec::new();
+    for arm in 0..2 {
+        for k in 0..20 {
+            let u = k as f64 / 19.0;
+            let th = 3.0 * PI * u + arm as f64 * PI;
+            let rad = 1.0 + 5.0 * u;
+            modes.push(Mode::isotropic(
+                vec![rad * th.cos(), rad * th.sin()],
+                0.04 + 0.03 * u,
+                1.0,
+                0,
+            ));
+        }
+    }
+    GmmSpec {
+        name: "spiral2d".into(),
+        modes,
+        n_classes: 1,
+    }
+}
+
+/// 4×4 checkerboard in R² (8 occupied cells as flat-ish modes).
+pub fn checker2d() -> GmmSpec {
+    let mut modes = Vec::new();
+    for i in 0..4 {
+        for j in 0..4 {
+            if (i + j) % 2 == 0 {
+                let cx = -4.5 + 3.0 * i as f64;
+                let cy = -4.5 + 3.0 * j as f64;
+                // Slightly anisotropic cells.
+                let cov = vec![0.55, 0.1, 0.1, 0.55];
+                modes.push(Mode::full(vec![cx, cy], &cov, 1.0, 0));
+            }
+        }
+    }
+    GmmSpec {
+        name: "checker2d".into(),
+        modes,
+        n_classes: 1,
+    }
+}
+
+/// Random anisotropic low-rank covariance `V diag(s) Vᵀ + floor * I`,
+/// returned as a dense d×d row-major matrix.
+fn random_lowrank_cov(rng: &mut Pcg64, d: usize, rank: usize, scale: f64, floor: f64) -> Vec<f64> {
+    let mut cov = vec![0.0; d * d];
+    for j in 0..d {
+        cov[j * d + j] = floor;
+    }
+    for r in 0..rank {
+        // Random direction.
+        let mut v = rng.normal_vec(d);
+        let n = crate::tensor::norm2(&v);
+        for x in v.iter_mut() {
+            *x /= n;
+        }
+        // Power-law spectrum.
+        let s = scale / (1.0 + r as f64).powf(1.2);
+        for a in 0..d {
+            let ca = s * v[a];
+            if ca == 0.0 {
+                continue;
+            }
+            for b in 0..d {
+                cov[a * d + b] += ca * v[b];
+            }
+        }
+    }
+    cov
+}
+
+/// CIFAR10 stand-in: 10 anisotropic modes in R^64 (moderate D, multi-mode).
+pub fn gmm_hd64() -> GmmSpec {
+    let d = 64;
+    let mut rng = Pcg64::seed_stream(0xC1FA_0010, 64);
+    let mut modes = Vec::new();
+    for _ in 0..10 {
+        let mut mean = rng.normal_vec(d);
+        crate::tensor::scale(4.0, &mut mean);
+        let cov = random_lowrank_cov(&mut rng, d, 8, 1.5, 0.05);
+        modes.push(Mode::full(mean, &cov, 1.0, 0));
+    }
+    GmmSpec {
+        name: "gmm-hd64".into(),
+        modes,
+        n_classes: 1,
+    }
+}
+
+/// FFHQ stand-in: concentric "shells" — modes arranged on two nested
+/// spheres in R^64, a smooth single-family manifold.
+pub fn shells64() -> GmmSpec {
+    let d = 64;
+    let mut rng = Pcg64::seed_stream(0xFF_80, 65);
+    let mut modes = Vec::new();
+    for (rad, var) in [(5.0, 0.3), (9.0, 0.5)] {
+        for _ in 0..12 {
+            let mut dir = rng.normal_vec(d);
+            let n = crate::tensor::norm2(&dir);
+            let mean: Vec<f64> = dir.iter_mut().map(|x| *x / n * rad).collect();
+            modes.push(Mode::isotropic(mean, var, 1.0, 0));
+        }
+    }
+    GmmSpec {
+        name: "shells64".into(),
+        modes,
+        n_classes: 1,
+    }
+}
+
+/// LSUN-Bedroom stand-in: D = 256 with low intrinsic rank (rank-16
+/// covariances), few well-separated modes — "high-D latent" regime.
+pub fn latent256() -> GmmSpec {
+    let d = 256;
+    let mut rng = Pcg64::seed_stream(0xBED_00, 256);
+    let mut modes = Vec::new();
+    for _ in 0..6 {
+        let mut mean = rng.normal_vec(d);
+        crate::tensor::scale(3.0, &mut mean);
+        let cov = random_lowrank_cov(&mut rng, d, 16, 2.0, 0.02);
+        modes.push(Mode::full(mean, &cov, 1.0, 0));
+    }
+    GmmSpec {
+        name: "latent256".into(),
+        modes,
+        n_classes: 1,
+    }
+}
+
+/// ImageNet / Stable-Diffusion stand-in: class-conditional GMM in R^64,
+/// 8 classes × 3 modes each. Used with the CFG wrapper (guidance 7.5 for
+/// the Stable-Diffusion analog, Table 3).
+pub fn cond_gmm64() -> GmmSpec {
+    let d = 64;
+    let n_classes = 8;
+    let mut rng = Pcg64::seed_stream(0x1A6E, 66);
+    let mut modes = Vec::new();
+    for c in 0..n_classes {
+        // Class center.
+        let mut center = rng.normal_vec(d);
+        crate::tensor::scale(5.0, &mut center);
+        for _ in 0..3 {
+            let mut mean = center.clone();
+            let jit = rng.normal_vec(d);
+            crate::tensor::axpy(1.2, &jit, &mut mean);
+            let cov = random_lowrank_cov(&mut rng, d, 6, 1.0, 0.05);
+            modes.push(Mode::full(mean, &cov, 1.0, c));
+        }
+    }
+    GmmSpec {
+        name: "cond-gmm64".into(),
+        modes,
+        n_classes,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_generators_build() {
+        for (spec, d, cond) in [
+            (gmm2d(), 2, false),
+            (spiral2d(), 2, false),
+            (checker2d(), 2, false),
+            (gmm_hd64(), 64, false),
+            (shells64(), 64, false),
+            (latent256(), 256, false),
+            (cond_gmm64(), 64, true),
+        ] {
+            assert_eq!(spec.dim(), d, "{}", spec.name);
+            assert_eq!(spec.n_classes > 1, cond, "{}", spec.name);
+            assert!(!spec.modes.is_empty());
+            for m in &spec.modes {
+                assert_eq!(m.dim(), d);
+                assert!(m.lam.iter().all(|&l| l >= 0.0));
+            }
+        }
+    }
+
+    #[test]
+    fn generators_are_deterministic() {
+        let a = gmm_hd64();
+        let b = gmm_hd64();
+        assert_eq!(a.modes[3].mean, b.modes[3].mean);
+        assert_eq!(a.modes[3].lam, b.modes[3].lam);
+    }
+
+    #[test]
+    fn cond_gmm_has_all_classes() {
+        let spec = cond_gmm64();
+        for c in 0..spec.n_classes {
+            assert!(spec.modes.iter().any(|m| m.label == c));
+        }
+    }
+
+    #[test]
+    fn checker_cells_separated() {
+        let spec = checker2d();
+        assert_eq!(spec.modes.len(), 8);
+        // Adjacent occupied cells are 3*sqrt(2) apart at least.
+        for (i, a) in spec.modes.iter().enumerate() {
+            for b in spec.modes.iter().skip(i + 1) {
+                let dx = a.mean[0] - b.mean[0];
+                let dy = a.mean[1] - b.mean[1];
+                assert!(dx * dx + dy * dy > 8.0);
+            }
+        }
+    }
+}

@@ -1,0 +1,292 @@
+//! Synthetic dataset substrates.
+//!
+//! The paper evaluates on CIFAR10 / FFHQ / ImageNet / LSUN / Stable
+//! Diffusion via *pre-trained* networks. Offline we substitute analytically
+//! tractable data distributions (Gaussian mixtures, possibly derived from
+//! structured generators like spirals and checkerboards) whose PF-ODE score
+//! is exact — the same Gaussian(-mixture) family the paper's own theory
+//! section (§3.4, Wang & Vastola) uses to explain PAS. See DESIGN.md §3 for
+//! the dataset ↔ paper mapping.
+//!
+//! Every dataset is represented as a [`GmmSpec`] (weights, means, per-mode
+//! covariance eigendecompositions), so sampling *and* exact score evaluation
+//! share one code path. Conditional datasets carry per-class mode groups.
+
+pub mod generators;
+pub mod registry;
+
+use crate::linalg::eigh;
+use crate::util::rng::Pcg64;
+
+/// One Gaussian mode, stored by its covariance eigendecomposition:
+/// `Sigma = Uᵀ diag(lam) U` where rows of `u` are eigenvectors.
+#[derive(Clone, Debug)]
+pub struct Mode {
+    pub mean: Vec<f64>,
+    /// Eigenvalues of Sigma (descending, >= 0).
+    pub lam: Vec<f64>,
+    /// Eigenvector rows, (d, d) row-major; `None` means Sigma is isotropic
+    /// `lam[0] * I` (fast path: no rotation needed).
+    pub u: Option<Vec<f64>>,
+    pub weight: f64,
+    /// Class label for conditional datasets (0 for unconditional).
+    pub label: usize,
+}
+
+impl Mode {
+    /// Isotropic mode `N(mean, var * I)`.
+    pub fn isotropic(mean: Vec<f64>, var: f64, weight: f64, label: usize) -> Mode {
+        let d = mean.len();
+        Mode {
+            mean,
+            lam: vec![var; d],
+            u: None,
+            weight,
+            label,
+        }
+    }
+
+    /// Full-covariance mode; `cov` is d×d row-major PSD.
+    pub fn full(mean: Vec<f64>, cov: &[f64], weight: f64, label: usize) -> Mode {
+        let d = mean.len();
+        assert_eq!(cov.len(), d * d);
+        let mut work = cov.to_vec();
+        let (lam, u) = eigh(&mut work, d);
+        let lam = lam.into_iter().map(|v| v.max(0.0)).collect();
+        Mode {
+            mean,
+            lam,
+            u: Some(u),
+            weight,
+            label,
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.mean.len()
+    }
+
+    /// Draw one sample into `out`.
+    pub fn sample_into(&self, rng: &mut Pcg64, out: &mut [f64]) {
+        let d = self.dim();
+        debug_assert_eq!(out.len(), d);
+        match &self.u {
+            None => {
+                let s = self.lam[0].sqrt();
+                for j in 0..d {
+                    out[j] = self.mean[j] + s * rng.normal();
+                }
+            }
+            Some(u) => {
+                // x = mean + Uᵀ (sqrt(lam) ⊙ z) with U rows = eigvecs.
+                out.copy_from_slice(&self.mean);
+                for k in 0..d {
+                    let c = self.lam[k].sqrt() * rng.normal();
+                    if c == 0.0 {
+                        continue;
+                    }
+                    let row = &u[k * d..(k + 1) * d];
+                    for j in 0..d {
+                        out[j] += c * row[j];
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// A Gaussian-mixture data distribution (possibly class-conditional).
+#[derive(Clone, Debug)]
+pub struct GmmSpec {
+    pub name: String,
+    pub modes: Vec<Mode>,
+    pub n_classes: usize,
+}
+
+impl GmmSpec {
+    pub fn dim(&self) -> usize {
+        self.modes[0].dim()
+    }
+
+    /// Draw `n` samples (row-major n×d) from the marginal data distribution.
+    pub fn sample(&self, rng: &mut Pcg64, n: usize) -> Vec<f64> {
+        let d = self.dim();
+        let weights: Vec<f64> = self.modes.iter().map(|m| m.weight).collect();
+        let mut out = vec![0.0; n * d];
+        for i in 0..n {
+            let k = rng.categorical(&weights);
+            self.modes[k].sample_into(rng, &mut out[i * d..(i + 1) * d]);
+        }
+        out
+    }
+
+    /// Draw `n` samples from class `label` (conditional datasets).
+    pub fn sample_class(&self, rng: &mut Pcg64, n: usize, label: usize) -> Vec<f64> {
+        let d = self.dim();
+        let modes: Vec<&Mode> = self.modes.iter().filter(|m| m.label == label).collect();
+        assert!(!modes.is_empty(), "no modes with label {label}");
+        let weights: Vec<f64> = modes.iter().map(|m| m.weight).collect();
+        let mut out = vec![0.0; n * d];
+        for i in 0..n {
+            let k = rng.categorical(&weights);
+            modes[k].sample_into(rng, &mut out[i * d..(i + 1) * d]);
+        }
+        out
+    }
+
+    /// Dataset-level mean and covariance **of the mixture** (used by the
+    /// teleportation warm start, which fits a single Gaussian to the data).
+    pub fn mixture_moments(&self) -> (Vec<f64>, Vec<f64>) {
+        let d = self.dim();
+        let wsum: f64 = self.modes.iter().map(|m| m.weight).sum();
+        let mut mu = vec![0.0; d];
+        for m in &self.modes {
+            for j in 0..d {
+                mu[j] += m.weight / wsum * m.mean[j];
+            }
+        }
+        // Sigma = Σ w (Sigma_k + (mu_k-mu)(mu_k-mu)ᵀ)
+        let mut cov = vec![0.0; d * d];
+        for m in &self.modes {
+            let w = m.weight / wsum;
+            // Covariance part.
+            match &m.u {
+                None => {
+                    for j in 0..d {
+                        cov[j * d + j] += w * m.lam[j];
+                    }
+                }
+                Some(u) => {
+                    for k in 0..d {
+                        if m.lam[k] == 0.0 {
+                            continue;
+                        }
+                        let row = &u[k * d..(k + 1) * d];
+                        let c = w * m.lam[k];
+                        for a in 0..d {
+                            let ca = c * row[a];
+                            if ca == 0.0 {
+                                continue;
+                            }
+                            for b in 0..d {
+                                cov[a * d + b] += ca * row[b];
+                            }
+                        }
+                    }
+                }
+            }
+            // Mean-spread part.
+            for a in 0..d {
+                let da = m.mean[a] - mu[a];
+                if da == 0.0 {
+                    continue;
+                }
+                for b in 0..d {
+                    cov[a * d + b] += w * da * (m.mean[b] - mu[b]);
+                }
+            }
+        }
+        (mu, cov)
+    }
+}
+
+/// Public dataset handle used throughout the crate.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub spec: GmmSpec,
+    /// Short description for docs/CLI.
+    pub about: &'static str,
+    /// Which paper dataset this one stands in for.
+    pub stands_in_for: &'static str,
+}
+
+impl Dataset {
+    pub fn name(&self) -> &str {
+        &self.spec.name
+    }
+
+    pub fn dim(&self) -> usize {
+        self.spec.dim()
+    }
+
+    pub fn is_conditional(&self) -> bool {
+        self.spec.n_classes > 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn isotropic_mode_moments() {
+        let m = Mode::isotropic(vec![1.0, -2.0], 0.25, 1.0, 0);
+        let mut rng = Pcg64::seed(1);
+        let n = 20_000;
+        let mut buf = vec![0.0; 2];
+        let (mut s0, mut s1, mut v0) = (0.0, 0.0, 0.0);
+        for _ in 0..n {
+            m.sample_into(&mut rng, &mut buf);
+            s0 += buf[0];
+            s1 += buf[1];
+            v0 += (buf[0] - 1.0) * (buf[0] - 1.0);
+        }
+        assert!((s0 / n as f64 - 1.0).abs() < 0.02);
+        assert!((s1 / n as f64 + 2.0).abs() < 0.02);
+        assert!((v0 / n as f64 - 0.25).abs() < 0.01);
+    }
+
+    #[test]
+    fn full_mode_recovers_covariance() {
+        let cov = vec![2.0, 1.2, 1.2, 1.0];
+        let m = Mode::full(vec![0.0, 0.0], &cov, 1.0, 0);
+        let mut rng = Pcg64::seed(2);
+        let n = 40_000;
+        let mut acc = [0.0f64; 4];
+        let mut buf = vec![0.0; 2];
+        for _ in 0..n {
+            m.sample_into(&mut rng, &mut buf);
+            acc[0] += buf[0] * buf[0];
+            acc[1] += buf[0] * buf[1];
+            acc[2] += buf[1] * buf[0];
+            acc[3] += buf[1] * buf[1];
+        }
+        for (i, want) in cov.iter().enumerate() {
+            let got = acc[i] / n as f64;
+            assert!((got - want).abs() < 0.06, "cov[{i}]: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn mixture_moments_two_point() {
+        // Two unit-weight point-ish modes at ±1 in 1D with var 0.
+        let spec = GmmSpec {
+            name: "test".into(),
+            modes: vec![
+                Mode::isotropic(vec![1.0], 0.0, 1.0, 0),
+                Mode::isotropic(vec![-1.0], 0.0, 1.0, 0),
+            ],
+            n_classes: 1,
+        };
+        let (mu, cov) = spec.mixture_moments();
+        assert!(mu[0].abs() < 1e-12);
+        assert!((cov[0] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn conditional_sampling_respects_labels() {
+        let spec = GmmSpec {
+            name: "c".into(),
+            modes: vec![
+                Mode::isotropic(vec![10.0, 0.0], 0.01, 1.0, 0),
+                Mode::isotropic(vec![-10.0, 0.0], 0.01, 1.0, 1),
+            ],
+            n_classes: 2,
+        };
+        let mut rng = Pcg64::seed(3);
+        let xs = spec.sample_class(&mut rng, 50, 1);
+        for i in 0..50 {
+            assert!(xs[i * 2] < 0.0);
+        }
+    }
+}

@@ -1,0 +1,85 @@
+//! Name → dataset registry used by the CLI, config system and experiments.
+
+use super::{generators, Dataset};
+
+/// All registered dataset names (stable order: the order tables print in).
+pub const ALL: &[&str] = &[
+    "gmm2d",
+    "spiral2d",
+    "checker2d",
+    "gmm-hd64",
+    "shells64",
+    "latent256",
+    "cond-gmm64",
+];
+
+/// The four unconditional "main table" datasets (Table 2 analog).
+pub const MAIN_TABLE: &[&str] = &["gmm-hd64", "shells64", "cond-gmm64", "latent256"];
+
+/// Look up a dataset by name.
+pub fn get(name: &str) -> Option<Dataset> {
+    let (spec, about, stands_in_for) = match name {
+        "gmm2d" => (
+            generators::gmm2d(),
+            "8 isotropic Gaussians on a circle in R^2",
+            "2-D intuition figures",
+        ),
+        "spiral2d" => (
+            generators::spiral2d(),
+            "two-arm spiral (40 modes) in R^2",
+            "2-D intuition figures",
+        ),
+        "checker2d" => (
+            generators::checker2d(),
+            "4x4 checkerboard (8 cells) in R^2",
+            "2-D intuition figures",
+        ),
+        "gmm-hd64" => (
+            generators::gmm_hd64(),
+            "10 anisotropic low-rank modes in R^64",
+            "CIFAR10 32x32",
+        ),
+        "shells64" => (
+            generators::shells64(),
+            "24 modes on two nested spheres in R^64",
+            "FFHQ 64x64",
+        ),
+        "latent256" => (
+            generators::latent256(),
+            "6 rank-16 modes in R^256",
+            "LSUN Bedroom 256x256",
+        ),
+        "cond-gmm64" => (
+            generators::cond_gmm64(),
+            "8-class conditional GMM in R^64 (use with CFG)",
+            "ImageNet 64x64 / Stable Diffusion v1.4",
+        ),
+        _ => return None,
+    };
+    Some(Dataset {
+        spec,
+        about,
+        stands_in_for,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_resolves_all() {
+        for name in ALL {
+            let ds = get(name).unwrap_or_else(|| panic!("missing {name}"));
+            assert_eq!(ds.name(), *name);
+        }
+        assert!(get("nope").is_none());
+    }
+
+    #[test]
+    fn main_table_subset_of_all() {
+        for name in MAIN_TABLE {
+            assert!(ALL.contains(name));
+        }
+    }
+}

@@ -1,0 +1,399 @@
+//! Ablation runners: Fig. 6a–d, Fig. 7, Table 8 (tolerance), Table 9
+//! (teacher solver), Table 10/11 (iPNDM order ± PAS with L1/L2 metrics),
+//! plus the parameterization ablation this reproduction adds.
+
+use super::common::{default_train, eval_cell, fmt_gfid, Bench, Cell};
+use super::{ExpOpts, Table};
+use crate::metrics::{mean_l1, mean_l2};
+use crate::pas::coords::ScaleMode;
+use crate::pas::correct::CorrectedSampler;
+use crate::pas::train::{Loss, PasTrainer};
+use crate::schedule::default_schedule;
+use crate::solvers::run_solver;
+use crate::traj::{ground_truth, sample_prior};
+use crate::util::rng::Pcg64;
+
+const NFE_GRID: [usize; 4] = [5, 6, 8, 10];
+const ABLATION_DS: &str = "gmm-hd64"; // the paper ablates on CIFAR10
+
+fn cell_with(
+    solver: &str,
+    nfe: usize,
+    opts: &ExpOpts,
+    f: impl FnOnce(&mut crate::pas::train::TrainConfig),
+) -> Cell {
+    let mut cfg = default_train(opts, solver);
+    f(&mut cfg);
+    Cell {
+        train_overrides: Some(cfg),
+        ..Cell::pas(solver, nfe)
+    }
+}
+
+/// Fig. 6a / Table 7: adaptive search on/off. PAS(-AS) corrects *every*
+/// step and should be worse than plain DDIM.
+pub fn fig6a(opts: &ExpOpts) -> Vec<Table> {
+    let bench = Bench::new(ABLATION_DS, 0.0, opts);
+    let mut t = Table::new(
+        "fig6a",
+        "adaptive search ablation (gFID; PAS(-AS) corrects every step)",
+        &["5", "6", "8", "10"],
+    );
+    // Plain + full PAS rows via the standard path.
+    for (label, mk) in [
+        ("ddim", Cell::plain as fn(&str, usize) -> Cell),
+        ("ddim + PAS", Cell::pas as fn(&str, usize) -> Cell),
+    ] {
+        let cells: Vec<String> = NFE_GRID
+            .iter()
+            .map(|&n| fmt_gfid(eval_cell(&bench, &mk("ddim", n), opts).map(|r| r.gfid)))
+            .collect();
+        t.row(label, cells);
+    }
+    // PAS(-AS): train with force_all_steps, then evaluate.
+    let cells: Vec<String> = NFE_GRID
+        .iter()
+        .map(|&nfe| {
+            let solver = crate::solvers::registry::get("ddim").unwrap();
+            let sched = default_schedule(nfe);
+            let trainer = PasTrainer::new(default_train(opts, "ddim"));
+            let tr = trainer
+                .train(solver.as_ref(), bench.model.as_ref(), &sched, ABLATION_DS, true)
+                .unwrap();
+            let mut rng = Pcg64::seed_stream(opts.seed ^ 0xa5, nfe as u64);
+            let x_t = sample_prior(&mut rng, opts.n_samples, bench.dim(), sched.t_max());
+            let run = CorrectedSampler::sample(
+                &tr.dict,
+                solver.as_ref(),
+                bench.model.as_ref(),
+                &x_t,
+                opts.n_samples,
+                &sched,
+            );
+            fmt_gfid(Some(crate::metrics::gfid(
+                &run.x0,
+                opts.n_samples,
+                &bench.reference,
+                bench.n_ref,
+                bench.dim(),
+            )))
+        })
+        .collect();
+    t.row("ddim + PAS (-AS)", cells);
+    vec![t]
+}
+
+/// Fig. 6b: loss-function ablation.
+pub fn fig6b(opts: &ExpOpts) -> Vec<Table> {
+    let bench = Bench::new(ABLATION_DS, 0.0, opts);
+    let mut t = Table::new(
+        "fig6b",
+        "loss function ablation (gFID, DDIM + PAS)",
+        &["5", "6", "8", "10"],
+    );
+    for (label, loss) in [
+        ("l1", Loss::L1),
+        ("l2", Loss::L2),
+        ("pseudo-huber", Loss::PseudoHuber { c: 0.03 }),
+        ("rpfeat (lpips stand-in)", Loss::RpFeat { proj_dim: 16, seed: 7 }),
+    ] {
+        let cells: Vec<String> = NFE_GRID
+            .iter()
+            .map(|&n| {
+                let c = cell_with("ddim", n, opts, |cfg| cfg.loss = loss.clone());
+                fmt_gfid(eval_cell(&bench, &c, opts).map(|r| r.gfid))
+            })
+            .collect();
+        t.row(label, cells);
+    }
+    vec![t]
+}
+
+/// Fig. 6c: number of basis vectors (1–4).
+pub fn fig6c(opts: &ExpOpts) -> Vec<Table> {
+    let bench = Bench::new(ABLATION_DS, 0.0, opts);
+    let mut t = Table::new(
+        "fig6c",
+        "number of orthogonal basis vectors (gFID, DDIM + PAS)",
+        &["5", "6", "8", "10"],
+    );
+    let base: Vec<String> = NFE_GRID
+        .iter()
+        .map(|&n| fmt_gfid(eval_cell(&bench, &Cell::plain("ddim", n), opts).map(|r| r.gfid)))
+        .collect();
+    t.row("ddim (no PAS)", base);
+    for k in 1..=4usize {
+        let cells: Vec<String> = NFE_GRID
+            .iter()
+            .map(|&n| {
+                let c = cell_with("ddim", n, opts, |cfg| cfg.n_basis = k);
+                fmt_gfid(eval_cell(&bench, &c, opts).map(|r| r.gfid))
+            })
+            .collect();
+        t.row(format!("{k} basis"), cells);
+    }
+    vec![t]
+}
+
+/// Fig. 6d: number of ground-truth trajectories.
+pub fn fig6d(opts: &ExpOpts) -> Vec<Table> {
+    let bench = Bench::new(ABLATION_DS, 0.0, opts);
+    let mut t = Table::new(
+        "fig6d",
+        "number of ground-truth trajectories (gFID, DDIM + PAS; paper sweeps 500-20k, scaled here)",
+        &["5", "6", "8", "10"],
+    );
+    for n_traj in [32usize, 64, 128, 256, 512] {
+        if n_traj > opts.n_traj * 4 {
+            continue;
+        }
+        let cells: Vec<String> = NFE_GRID
+            .iter()
+            .map(|&n| {
+                let c = cell_with("ddim", n, opts, |cfg| cfg.n_traj = n_traj);
+                fmt_gfid(eval_cell(&bench, &c, opts).map(|r| r.gfid))
+            })
+            .collect();
+        t.row(format!("{n_traj} traj"), cells);
+    }
+    vec![t]
+}
+
+/// Fig. 7: learning-rate sweep for DDIM and iPNDM.
+pub fn fig7(opts: &ExpOpts) -> Vec<Table> {
+    let bench = Bench::new(ABLATION_DS, 0.0, opts);
+    let mut out = Vec::new();
+    for solver in ["ddim", "ipndm"] {
+        let mut t = Table::new(
+            "fig7",
+            &format!("learning-rate ablation ({solver} + PAS, gFID)"),
+            &["5", "6", "8", "10"],
+        );
+        let base: Vec<String> = NFE_GRID
+            .iter()
+            .map(|&n| fmt_gfid(eval_cell(&bench, &Cell::plain(solver, n), opts).map(|r| r.gfid)))
+            .collect();
+        t.row(format!("{solver} (no PAS)"), base);
+        for lr in [1e-4, 1e-3, 1e-2, 1e-1, 1.0] {
+            let cells: Vec<String> = NFE_GRID
+                .iter()
+                .map(|&n| {
+                    let c = cell_with(solver, n, opts, |cfg| cfg.lr = lr);
+                    fmt_gfid(eval_cell(&bench, &c, opts).map(|r| r.gfid))
+                })
+                .collect();
+            t.row(format!("lr={lr:.0e}"), cells);
+        }
+        out.push(t);
+    }
+    out
+}
+
+/// Table 8: tolerance sweep.
+pub fn table8(opts: &ExpOpts) -> Vec<Table> {
+    let bench = Bench::new(ABLATION_DS, 0.0, opts);
+    let mut t = Table::new(
+        "table8",
+        "tolerance tau ablation (gFID)",
+        &["5", "6", "8", "10"],
+    );
+    for solver in ["ddim", "ipndm"] {
+        let base: Vec<String> = NFE_GRID
+            .iter()
+            .map(|&n| fmt_gfid(eval_cell(&bench, &Cell::plain(solver, n), opts).map(|r| r.gfid)))
+            .collect();
+        t.row(format!("{solver} (no PAS)"), base);
+        for tau in [1e-1, 1e-2, 1e-3, 1e-4] {
+            let cells: Vec<String> = NFE_GRID
+                .iter()
+                .map(|&n| {
+                    let c = cell_with(solver, n, opts, |cfg| cfg.tau = tau);
+                    fmt_gfid(eval_cell(&bench, &c, opts).map(|r| r.gfid))
+                })
+                .collect();
+            t.row(format!("{solver} tau={tau:.0e}"), cells);
+        }
+    }
+    vec![t]
+}
+
+/// Table 9: teacher-solver ablation (Heun / DDIM / DPM-Solver-2 teachers).
+pub fn table9(opts: &ExpOpts) -> Vec<Table> {
+    let mut out = Vec::new();
+    for ds_name in ["gmm-hd64", "shells64"] {
+        let bench = Bench::new(ds_name, 0.0, opts);
+        let mut t = Table::new(
+            "table9",
+            &format!("ground-truth teacher-solver ablation on {ds_name} (DDIM + PAS, gFID)"),
+            &["5", "6", "8", "10"],
+        );
+        let base: Vec<String> = NFE_GRID
+            .iter()
+            .map(|&n| fmt_gfid(eval_cell(&bench, &Cell::plain("ddim", n), opts).map(|r| r.gfid)))
+            .collect();
+        t.row("ddim (no PAS)", base);
+        for teacher in ["heun", "ddim", "dpm2"] {
+            let cells: Vec<String> = NFE_GRID
+                .iter()
+                .map(|&n| {
+                    let c = cell_with("ddim", n, opts, |cfg| cfg.teacher = teacher.into());
+                    fmt_gfid(eval_cell(&bench, &c, opts).map(|r| r.gfid))
+                })
+                .collect();
+            t.row(format!("teacher={teacher}"), cells);
+        }
+        out.push(t);
+    }
+    out
+}
+
+/// Table 10/11: iPNDM order 1–4 ± PAS, gFID plus L1/L2 endpoint metrics
+/// against the teacher (the paper's "order-4 FID doesn't improve but
+/// L1/L2 do" observation).
+pub fn table11(opts: &ExpOpts) -> Vec<Table> {
+    let bench = Bench::new(ABLATION_DS, 0.0, opts);
+    let mut t = Table::new(
+        "table11",
+        "iPNDM order ablation (gFID)",
+        &["5", "6", "8", "10"],
+    );
+    for order in 1..=4usize {
+        let name = format!("ipndm{order}");
+        for pas in [false, true] {
+            let label = if pas {
+                format!("{name} + PAS")
+            } else {
+                name.clone()
+            };
+            let cells: Vec<String> = NFE_GRID
+                .iter()
+                .map(|&n| {
+                    let c = if pas {
+                        Cell::pas(&name, n)
+                    } else {
+                        Cell::plain(&name, n)
+                    };
+                    fmt_gfid(eval_cell(&bench, &c, opts).map(|r| r.gfid))
+                })
+                .collect();
+            t.row(label, cells);
+        }
+    }
+
+    // L1/L2 endpoint metrics for order 4 (Table 11 bottom block).
+    let mut t2 = Table::new(
+        "table11-l1l2",
+        "ipndm4 ± PAS: endpoint L2(MSE)/L1 vs teacher (per-dim)",
+        &["5", "6", "8", "10"],
+    );
+    let solver = crate::solvers::registry::get("ipndm4").unwrap();
+    let teacher = crate::solvers::registry::get("heun").unwrap();
+    let mut rows: Vec<(String, Vec<String>)> = vec![
+        ("ipndm4 L2".into(), vec![]),
+        ("ipndm4+PAS L2".into(), vec![]),
+        ("ipndm4 L1".into(), vec![]),
+        ("ipndm4+PAS L1".into(), vec![]),
+    ];
+    for &nfe in &NFE_GRID {
+        let sched = default_schedule(nfe);
+        let n = opts.n_samples.min(512);
+        let dim = bench.dim();
+        let mut rng = Pcg64::seed_stream(opts.seed ^ 0x11, nfe as u64);
+        let x_t = sample_prior(&mut rng, n, dim, sched.t_max());
+        let gt = ground_truth(teacher.as_ref(), bench.model.as_ref(), &x_t, n, &sched, 100);
+        let plain = run_solver(solver.as_ref(), bench.model.as_ref(), &x_t, n, &sched, None);
+        let trainer = PasTrainer::new({
+            let mut c = default_train(opts, "ipndm4");
+            c.loss = Loss::L2;
+            c
+        });
+        let tr = trainer
+            .train(solver.as_ref(), bench.model.as_ref(), &sched, ABLATION_DS, false)
+            .unwrap();
+        let corr = CorrectedSampler::sample(
+            &tr.dict,
+            solver.as_ref(),
+            bench.model.as_ref(),
+            &x_t,
+            n,
+            &sched,
+        );
+        let gt0 = gt.xs.last().unwrap();
+        rows[0].1.push(format!("{:.5}", mean_l2(&plain.x0, gt0, n, dim)));
+        rows[1].1.push(format!("{:.5}", mean_l2(&corr.x0, gt0, n, dim)));
+        rows[2].1.push(format!("{:.5}", mean_l1(&plain.x0, gt0, n, dim)));
+        rows[3].1.push(format!("{:.5}", mean_l1(&corr.x0, gt0, n, dim)));
+    }
+    for (l, c) in rows {
+        t2.row(l, c);
+    }
+    vec![t, t2]
+}
+
+/// Extra ablation (ours): absolute vs relative coordinate parameterization
+/// (DESIGN.md §3 documents the deviation).
+pub fn ablate_param(opts: &ExpOpts) -> Vec<Table> {
+    let mut out = Vec::new();
+    for ds_name in ["gmm2d", "gmm-hd64"] {
+        let bench = Bench::new(ds_name, 0.0, opts);
+        let mut t = Table::new(
+            "ablate-param",
+            &format!("coordinate parameterization on {ds_name} (DDIM + PAS, gFID)"),
+            &["5", "6", "8", "10"],
+        );
+        let base: Vec<String> = NFE_GRID
+            .iter()
+            .map(|&n| fmt_gfid(eval_cell(&bench, &Cell::plain("ddim", n), opts).map(|r| r.gfid)))
+            .collect();
+        t.row("ddim (no PAS)", base);
+        for (label, mode) in [
+            ("absolute (paper-literal)", ScaleMode::Absolute),
+            ("relative (ours)", ScaleMode::Relative),
+        ] {
+            let cells: Vec<String> = NFE_GRID
+                .iter()
+                .map(|&n| {
+                    let c = cell_with("ddim", n, opts, |cfg| cfg.scale_mode = mode);
+                    fmt_gfid(eval_cell(&bench, &c, opts).map(|r| r.gfid))
+                })
+                .collect();
+            t.row(label, cells);
+        }
+        out.push(t);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig6c_more_bases_never_fail() {
+        let mut opts = ExpOpts::quick();
+        opts.n_samples = 128;
+        opts.n_traj = 32;
+        opts.epochs = 8;
+        let bench = Bench::new("gmm2d", 0.0, &opts);
+        for k in 1..=4usize {
+            let c = cell_with("ddim", 6, &opts, |cfg| cfg.n_basis = k);
+            let r = eval_cell(&bench, &c, &opts).unwrap();
+            assert!(r.gfid.is_finite());
+        }
+    }
+
+    #[test]
+    fn table8_high_tau_disables_correction() {
+        let mut opts = ExpOpts::quick();
+        opts.n_samples = 128;
+        opts.n_traj = 32;
+        opts.epochs = 8;
+        let bench = Bench::new("gmm2d", 0.0, &opts);
+        // With an absurd tolerance nothing passes the rule → dict empty →
+        // gFID equals plain DDIM.
+        let c = cell_with("ddim", 6, &opts, |cfg| cfg.tau = 1e9);
+        let r = eval_cell(&bench, &c, &opts).unwrap();
+        let plain = eval_cell(&bench, &Cell::plain("ddim", 6), &opts).unwrap();
+        assert!((r.gfid - plain.gfid).abs() < 1e-9, "{} vs {}", r.gfid, plain.gfid);
+    }
+}

@@ -1,0 +1,220 @@
+//! Shared machinery for the experiment runners: model construction,
+//! reference sets, PAS training, and gFID evaluation of a
+//! (solver, NFE, PAS?, TP?) configuration.
+
+use super::ExpOpts;
+use crate::data::Dataset;
+use crate::metrics::gfid;
+use crate::pas::coords::{CoordinateDict, ScaleMode};
+use crate::pas::correct::CorrectedSampler;
+use crate::pas::teleport::{teleported_schedule, Teleporter};
+use crate::pas::train::{PasTrainer, TrainConfig, TrainResult};
+use crate::schedule::{default_schedule, Schedule};
+use crate::score::analytic::AnalyticEps;
+use crate::score::cfg::RowCfgEps;
+use crate::score::EpsModel;
+use crate::solvers::{run_solver, Solver};
+use crate::traj::sample_prior;
+use crate::util::rng::Pcg64;
+
+/// Everything needed to evaluate one dataset.
+pub struct Bench {
+    pub ds: Dataset,
+    pub model: Box<dyn EpsModel>,
+    pub reference: Vec<f64>,
+    pub n_ref: usize,
+    /// Teleporter fitted to the data moments (for +TP rows).
+    pub tp: Teleporter,
+    pub guidance: f64,
+}
+
+impl Bench {
+    /// Build a bench for `dataset`; `guidance > 0` selects the guided
+    /// conditional model (cond datasets only).
+    pub fn new(dataset: &str, guidance: f64, opts: &ExpOpts) -> Bench {
+        let ds = crate::data::registry::get(dataset)
+            .unwrap_or_else(|| panic!("unknown dataset {dataset}"));
+        let model: Box<dyn EpsModel> = if guidance > 0.0 {
+            RowCfgEps::from_spec(&ds.spec, guidance)
+        } else {
+            AnalyticEps::from_dataset(&ds)
+        };
+        let mut rng = Pcg64::seed_stream(opts.seed, 0x4ef0);
+        let reference = ds.spec.sample(&mut rng, opts.n_ref);
+        let tp = Teleporter::from_dataset(&ds);
+        Bench {
+            ds,
+            model,
+            reference,
+            n_ref: opts.n_ref,
+            tp,
+            guidance,
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.ds.dim()
+    }
+}
+
+/// One evaluation configuration (a cell of Table 2/3/5).
+#[derive(Clone, Debug)]
+pub struct Cell {
+    pub solver: String,
+    pub nfe: usize,
+    pub pas: bool,
+    pub tp: bool,
+    /// Override default PAS hyperparameters.
+    pub train_overrides: Option<TrainConfig>,
+}
+
+impl Cell {
+    pub fn plain(solver: &str, nfe: usize) -> Cell {
+        Cell {
+            solver: solver.into(),
+            nfe,
+            pas: false,
+            tp: false,
+            train_overrides: None,
+        }
+    }
+
+    pub fn pas(solver: &str, nfe: usize) -> Cell {
+        Cell {
+            pas: true,
+            ..Cell::plain(solver, nfe)
+        }
+    }
+}
+
+/// Default PAS training config scaled by ExpOpts. Tau follows the paper's
+/// two-tier recommendation (larger for high-error DDIM, smaller for
+/// iPNDM), rescaled because our losses are per-dimension means rather
+/// than raw sums (DESIGN.md §3): 1e-2 / 1e-3.
+pub fn default_train(opts: &ExpOpts, solver: &str) -> TrainConfig {
+    let tau = if solver.starts_with("ddim") { 1e-2 } else { 1e-3 };
+    TrainConfig {
+        n_traj: opts.n_traj,
+        epochs: opts.epochs,
+        tau,
+        lr: 2e-2,
+        scale_mode: ScaleMode::Relative,
+        seed: opts.seed,
+        ..TrainConfig::default()
+    }
+}
+
+/// Outcome of evaluating one cell.
+pub struct CellResult {
+    pub gfid: f64,
+    pub dict: Option<CoordinateDict>,
+    pub train: Option<TrainResult>,
+}
+
+/// Evaluate a cell: train PAS if requested, sample `opts.n_samples`,
+/// return gFID vs the bench reference. Returns None for non-representable
+/// NFE (the paper's "\\" cells).
+pub fn eval_cell(bench: &Bench, cell: &Cell, opts: &ExpOpts) -> Option<CellResult> {
+    let solver: Box<dyn Solver> = crate::solvers::registry::get(&cell.solver)?;
+    let steps = solver.steps_for_nfe(cell.nfe)?;
+    let base_sched = default_schedule(steps);
+    let sched: Schedule = if cell.tp {
+        teleported_schedule(&base_sched, crate::pas::teleport::SIGMA_SKIP_DEFAULT)
+    } else {
+        base_sched
+    };
+    let t_gen = crate::schedule::T_MAX_DEFAULT;
+
+    // Optional PAS training.
+    let mut dict = None;
+    let mut train_res = None;
+    if cell.pas {
+        let cfg = cell
+            .train_overrides
+            .clone()
+            .unwrap_or_else(|| default_train(opts, &cell.solver));
+        let trainer = PasTrainer::new(cfg);
+        let tp_arg = cell.tp.then_some((&bench.tp, t_gen));
+        match trainer.train_tp(
+            solver.as_ref(),
+            bench.model.as_ref(),
+            &sched,
+            bench.ds.name(),
+            false,
+            tp_arg,
+        ) {
+            Ok(tr) => {
+                dict = Some(tr.dict.clone());
+                train_res = Some(tr);
+            }
+            Err(e) => {
+                crate::util::log::log(
+                    crate::util::log::Level::Warn,
+                    format_args!("PAS training failed for {}: {e}", cell.solver),
+                );
+                return None;
+            }
+        }
+    }
+
+    // Sampling. One shared prior stream across ALL cells of a table so
+    // method comparisons are paired (same noise draws), not confounded by
+    // gFID estimator variance.
+    let n = opts.n_samples;
+    let dim = bench.dim();
+    let mut rng = Pcg64::seed_stream(opts.seed ^ 0xe7a1, 1);
+    let mut x_t = sample_prior(&mut rng, n, dim, t_gen);
+    if cell.tp {
+        bench.tp.teleport(&mut x_t, n, t_gen, sched.t_max());
+    }
+    let run = match &dict {
+        Some(d) => CorrectedSampler::sample(d, solver.as_ref(), bench.model.as_ref(), &x_t, n, &sched),
+        None => run_solver(solver.as_ref(), bench.model.as_ref(), &x_t, n, &sched, None),
+    };
+    let f = gfid(&run.x0, n, &bench.reference, bench.n_ref, dim);
+    Some(CellResult {
+        gfid: f,
+        dict,
+        train: train_res,
+    })
+}
+
+/// Format a gFID value the way the paper's tables do.
+pub fn fmt_gfid(v: Option<f64>) -> String {
+    match v {
+        None => "\\".to_string(),
+        Some(f) if f >= 100.0 => format!("{f:.1}"),
+        Some(f) => format!("{f:.3}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_builds_and_cell_evaluates() {
+        let opts = ExpOpts::quick();
+        let bench = Bench::new("gmm2d", 0.0, &opts);
+        let r = eval_cell(&bench, &Cell::plain("ddim", 6), &opts).unwrap();
+        assert!(r.gfid.is_finite() && r.gfid >= 0.0);
+        // Heun at odd NFE is not representable.
+        assert!(eval_cell(&bench, &Cell::plain("heun", 5), &opts).is_none());
+    }
+
+    #[test]
+    fn pas_cell_trains_and_improves_ddim() {
+        let mut opts = ExpOpts::quick();
+        opts.n_samples = 512;
+        let bench = Bench::new("gmm2d", 0.0, &opts);
+        let plain = eval_cell(&bench, &Cell::plain("ddim", 8), &opts).unwrap();
+        let pas = eval_cell(&bench, &Cell::pas("ddim", 8), &opts).unwrap();
+        assert!(pas.dict.is_some());
+        assert!(
+            pas.gfid < plain.gfid,
+            "PAS should improve DDIM: {} -> {}",
+            plain.gfid,
+            pas.gfid
+        );
+    }
+}

@@ -1,0 +1,177 @@
+//! Figure runners: Fig. 2 (PCA cumulative variance) and Fig. 3
+//! (S-shaped truncation error, before/after PAS).
+
+use super::common::{default_train, Bench};
+use super::{ExpOpts, Table};
+use crate::pas::pca::cumulative_percent_variance;
+use crate::pas::train::PasTrainer;
+use crate::schedule::default_schedule;
+use crate::solvers::run_solver;
+use crate::traj::{s_shape_stats, sample_prior};
+use crate::util::rng::Pcg64;
+
+/// Figure 2: cumulative percent variance vs number of principal
+/// components, for (a) single-trajectory matrices `{x_T, d_N..d_1}`
+/// averaged over samples, and (b) the stacked endpoints of K
+/// trajectories `{x^k_{t_i}}`.
+pub fn fig2(opts: &ExpOpts) -> Vec<Table> {
+    let datasets = ["gmm-hd64", "shells64", "latent256"];
+    let top_k = 8;
+    let nfe = 100usize;
+    let n_traj = 64.min(opts.n_traj);
+    let cols: Vec<String> = (1..=top_k).map(|k| format!("{k} PC")).collect();
+    let cols_ref: Vec<&str> = cols.iter().map(|s| s.as_str()).collect();
+    let mut ta = Table::new(
+        "fig2a",
+        "cumulative % variance of a single trajectory {x_T, d_i} (mean over trajectories), Euler 100 NFE",
+        &cols_ref,
+    );
+    let mut tb = Table::new(
+        "fig2b",
+        "cumulative % variance across K trajectories {x^k_{t_i}} stacked",
+        &cols_ref,
+    );
+    for name in datasets {
+        let bench = Bench::new(name, 0.0, opts);
+        let dim = bench.dim();
+        let sched = default_schedule(nfe);
+        let mut rng = Pcg64::seed_stream(opts.seed, 0xf16);
+        let x_t = sample_prior(&mut rng, n_traj, dim, sched.t_max());
+        let solver = crate::solvers::registry::get("ddim").unwrap();
+        let run = run_solver(solver.as_ref(), bench.model.as_ref(), &x_t, n_traj, &sched, None);
+
+        // (a) per-trajectory matrix {x_T, d_N, ..., d_1}: rows = NFE + 1.
+        // Raw rows (paper-literal; x_T's norm dominates) and unit-norm rows
+        // (scale-free subspace dimension — the informative view).
+        let mut acc = vec![0.0; top_k];
+        let mut acc_unit = vec![0.0; top_k];
+        for k in 0..n_traj {
+            let mut m = Vec::with_capacity((nfe + 1) * dim);
+            m.extend_from_slice(&x_t[k * dim..(k + 1) * dim]);
+            for d in &run.ds {
+                m.extend_from_slice(&d[k * dim..(k + 1) * dim]);
+            }
+            let cv = cumulative_percent_variance(&m, nfe + 1, dim, top_k);
+            for (a, v) in acc.iter_mut().zip(cv.iter()) {
+                *a += v;
+            }
+            // Unit-normalize rows.
+            let mut mu = m.clone();
+            for r in 0..=nfe {
+                let row = &mut mu[r * dim..(r + 1) * dim];
+                let n2 = crate::tensor::norm2(row);
+                if n2 > 0.0 {
+                    for v in row.iter_mut() {
+                        *v /= n2;
+                    }
+                }
+            }
+            let cvu = cumulative_percent_variance(&mu, nfe + 1, dim, top_k);
+            for (a, v) in acc_unit.iter_mut().zip(cvu.iter()) {
+                *a += v;
+            }
+        }
+        let row_a: Vec<String> = acc
+            .iter()
+            .map(|v| format!("{:.2}", v / n_traj as f64))
+            .collect();
+        ta.row(name, row_a);
+        let row_u: Vec<String> = acc_unit
+            .iter()
+            .map(|v| format!("{:.2}", v / n_traj as f64))
+            .collect();
+        ta.row(format!("{name} (unit rows)"), row_u);
+
+        // (b) stack the K trajectories' states at all nodes: rows = K*(N+1)
+        // — we subsample nodes to keep the Gram matrix small.
+        let stride = 10;
+        let mut m = Vec::new();
+        let mut rows = 0usize;
+        for (j, xs) in run.xs.iter().enumerate() {
+            if j % stride != 0 {
+                continue;
+            }
+            for k in 0..n_traj {
+                m.extend_from_slice(&xs[k * dim..(k + 1) * dim]);
+                rows += 1;
+            }
+        }
+        let cv = cumulative_percent_variance(&m, rows, dim, top_k);
+        tb.row(name, cv.iter().map(|v| format!("{v:.2}")).collect());
+    }
+    vec![ta, tb]
+}
+
+/// Figure 3: the per-node truncation-error curve of Euler/DDIM at 10 NFE
+/// vs the teacher, before (a) and after (b) PAS, plus the S-shape
+/// statistics used to justify adaptive search.
+pub fn fig3(opts: &ExpOpts) -> Vec<Table> {
+    let bench = Bench::new("gmm-hd64", 0.0, opts);
+    let sched = default_schedule(10);
+    let solver = crate::solvers::registry::get("ddim").unwrap();
+    let trainer = PasTrainer::new(default_train(opts, "ddim"));
+    let tr = trainer
+        .train(solver.as_ref(), bench.model.as_ref(), &sched, "gmm-hd64", false)
+        .expect("training");
+    let cols: Vec<String> = (0..=10).map(|j| format!("t{}", 10 - j)).collect();
+    let cols_ref: Vec<&str> = cols.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(
+        "fig3",
+        "mean L2 truncation error per node (DDIM 10 NFE vs Heun teacher), before/after PAS",
+        &cols_ref,
+    );
+    t.row(
+        "ddim (a)",
+        tr.curve_uncorrected.iter().map(|v| format!("{v:.4}")).collect(),
+    );
+    t.row(
+        "ddim + PAS (b)",
+        tr.curve_corrected.iter().map(|v| format!("{v:.4}")).collect(),
+    );
+    let (pos, early, late) = s_shape_stats(&tr.curve_uncorrected);
+    let mut s = Table::new(
+        "fig3-sshape",
+        "S-shape statistics of the uncorrected curve (max-growth position as step fraction; error-growth share in first/last third)",
+        &["max-growth pos", "early third", "late third", "corrected steps"],
+    );
+    s.row(
+        "ddim@10",
+        vec![
+            format!("{pos:.2}"),
+            format!("{:.2}", early),
+            format!("{:.2}", late),
+            tr.trace.corrected_steps_str(),
+        ],
+    );
+    vec![t, s]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig2_shapes() {
+        let mut opts = ExpOpts::quick();
+        opts.n_traj = 8;
+        opts.n_ref = 64;
+        let tables = fig2(&opts);
+        assert_eq!(tables.len(), 2);
+        // 3 datasets x (raw + unit-normalized rows).
+        assert_eq!(tables[0].rows.len(), 6);
+        // Single-trajectory variance must be high with few PCs — for the
+        // raw rows and for the scale-free unit rows.
+        for row_idx in [0, 1] {
+            let row = &tables[0].rows[row_idx].1;
+            let three_pc: f64 = row[2].parse().unwrap();
+            assert!(
+                three_pc > 95.0,
+                "3 PCs should capture ~all variance (row {row_idx}): {three_pc}"
+            );
+        }
+        // ...while cross-trajectory variance must NOT saturate by 3 PCs.
+        let b_row = &tables[1].rows[0].1;
+        let b3: f64 = b_row[2].parse().unwrap();
+        assert!(b3 < 95.0, "K-trajectory variance should not saturate: {b3}");
+    }
+}

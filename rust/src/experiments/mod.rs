@@ -1,0 +1,163 @@
+//! Experiment harness: one runner per table and figure of the paper.
+//!
+//! Every runner takes [`ExpOpts`], returns one or more [`Table`]s, and is
+//! reachable via `pas repro <id>` (plus `cargo bench e2e_tables` for the
+//! timed variants). The mapping from paper artifacts to runners lives in
+//! DESIGN.md §5; measured outputs are curated into EXPERIMENTS.md.
+//!
+//! Paper datasets map onto the stand-ins of `data::registry` (DESIGN.md
+//! §3): gmm-hd64 ↔ CIFAR10, shells64 ↔ FFHQ, cond-gmm64 ↔ ImageNet /
+//! Stable Diffusion, latent256 ↔ LSUN Bedroom. FID ↔ gFID.
+
+pub mod common;
+pub mod figures;
+pub mod tables;
+pub mod ablations;
+
+use std::path::PathBuf;
+
+/// A rendered result table.
+#[derive(Clone, Debug)]
+pub struct Table {
+    pub id: String,
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<(String, Vec<String>)>,
+}
+
+impl Table {
+    pub fn new(id: &str, title: &str, columns: &[&str]) -> Table {
+        Table {
+            id: id.to_string(),
+            title: title.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, label: impl Into<String>, cells: Vec<String>) {
+        self.rows.push((label.into(), cells));
+    }
+
+    pub fn markdown(&self) -> String {
+        let mut s = format!("### {} — {}\n\n", self.id, self.title);
+        s.push_str("| method |");
+        for c in &self.columns {
+            s.push_str(&format!(" {c} |"));
+        }
+        s.push_str("\n|---|");
+        for _ in &self.columns {
+            s.push_str("---|");
+        }
+        s.push('\n');
+        for (label, cells) in &self.rows {
+            s.push_str(&format!("| {label} |"));
+            for c in cells {
+                s.push_str(&format!(" {c} |"));
+            }
+            s.push('\n');
+        }
+        s.push('\n');
+        s
+    }
+}
+
+/// Global experiment options (sizes shrink with `--quick` for CI).
+#[derive(Clone, Debug)]
+pub struct ExpOpts {
+    /// Samples per gFID evaluation (paper: 50k; default here 2048).
+    pub n_samples: usize,
+    /// Reference-set size for gFID.
+    pub n_ref: usize,
+    /// Ground-truth trajectories for PAS training.
+    pub n_traj: usize,
+    /// Training epochs.
+    pub epochs: usize,
+    pub seed: u64,
+    pub out_dir: PathBuf,
+}
+
+impl Default for ExpOpts {
+    fn default() -> Self {
+        ExpOpts {
+            n_samples: 2048,
+            n_ref: 8192,
+            n_traj: 256,
+            epochs: 48,
+            seed: 0,
+            out_dir: PathBuf::from("results"),
+        }
+    }
+}
+
+impl ExpOpts {
+    /// Small sizes for tests / smoke runs.
+    pub fn quick() -> ExpOpts {
+        ExpOpts {
+            n_samples: 256,
+            n_ref: 1024,
+            n_traj: 64,
+            epochs: 16,
+            ..ExpOpts::default()
+        }
+    }
+}
+
+/// All experiment ids, in the order DESIGN.md lists them.
+pub const ALL: &[&str] = &[
+    "fig2", "fig3", "table2", "table3", "table5", "table6", "fig6a", "fig6b", "fig6c", "fig6d",
+    "fig7", "table8", "table9", "table11", "ablate-param",
+];
+
+/// Run one experiment by id.
+pub fn run(id: &str, opts: &ExpOpts) -> Result<Vec<Table>, String> {
+    match id {
+        "fig2" => Ok(figures::fig2(opts)),
+        "fig3" => Ok(figures::fig3(opts)),
+        "table2" => Ok(tables::table2(opts)),
+        "table3" => Ok(tables::table3(opts)),
+        "table5" => Ok(tables::table5(opts)),
+        "table6" | "table1" => Ok(tables::table6(opts)),
+        "fig6a" | "table7" => Ok(ablations::fig6a(opts)),
+        "fig6b" => Ok(ablations::fig6b(opts)),
+        "fig6c" => Ok(ablations::fig6c(opts)),
+        "fig6d" => Ok(ablations::fig6d(opts)),
+        "fig7" => Ok(ablations::fig7(opts)),
+        "table8" => Ok(ablations::table8(opts)),
+        "table9" => Ok(ablations::table9(opts)),
+        "table11" | "table10" => Ok(ablations::table11(opts)),
+        "ablate-param" => Ok(ablations::ablate_param(opts)),
+        _ => Err(format!("unknown experiment {id}; known: {ALL:?}")),
+    }
+}
+
+/// Run an experiment and write its markdown to `<out_dir>/<id>.md`.
+pub fn run_and_save(id: &str, opts: &ExpOpts) -> Result<Vec<Table>, String> {
+    let tables = run(id, opts)?;
+    std::fs::create_dir_all(&opts.out_dir).map_err(|e| e.to_string())?;
+    let mut md = String::new();
+    for t in &tables {
+        md.push_str(&t.markdown());
+    }
+    std::fs::write(opts.out_dir.join(format!("{id}.md")), md).map_err(|e| e.to_string())?;
+    Ok(tables)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_markdown() {
+        let mut t = Table::new("t0", "demo", &["5", "10"]);
+        t.row("ddim", vec!["49.68".into(), "15.69".into()]);
+        let md = t.markdown();
+        assert!(md.contains("| ddim | 49.68 | 15.69 |"));
+        assert!(md.contains("### t0"));
+    }
+
+    #[test]
+    fn unknown_id_errors() {
+        assert!(run("nope", &ExpOpts::quick()).is_err());
+    }
+}

@@ -1,0 +1,175 @@
+//! Main result tables: Table 2 (unconditional + conditional main grid),
+//! Table 3 (Stable-Diffusion analog, guided), Table 5 (NFE 4–10 sweep),
+//! Table 6 (corrected time points, covers Table 1).
+
+use super::common::{eval_cell, fmt_gfid, Bench, Cell};
+use super::{ExpOpts, Table};
+
+const NFE_GRID: [usize; 4] = [5, 6, 8, 10];
+
+fn grid_row(bench: &Bench, label: &str, mk: impl Fn(usize) -> Cell, opts: &ExpOpts) -> (String, Vec<String>) {
+    let cells: Vec<String> = NFE_GRID
+        .iter()
+        .map(|&nfe| fmt_gfid(eval_cell(bench, &mk(nfe), opts).map(|r| r.gfid)))
+        .collect();
+    (label.to_string(), cells)
+}
+
+/// Table 2: the main gFID grid across the four paper-dataset stand-ins.
+pub fn table2(opts: &ExpOpts) -> Vec<Table> {
+    let mut out = Vec::new();
+    for ds_name in crate::data::registry::MAIN_TABLE {
+        let guidance = if *ds_name == "cond-gmm64" { 2.0 } else { 0.0 };
+        let bench = Bench::new(ds_name, guidance, opts);
+        let mut t = Table::new(
+            "table2",
+            &format!(
+                "gFID on {ds_name} (stands in for {}), NFE grid",
+                bench.ds.stands_in_for
+            ),
+            &["5", "6", "8", "10"],
+        );
+        let methods: Vec<(&str, Box<dyn Fn(usize) -> Cell>)> = vec![
+            ("ddim", Box::new(|n| Cell::plain("ddim", n))),
+            ("ddim + TP", Box::new(|n| Cell { tp: true, ..Cell::plain("ddim", n) })),
+            ("ddim + PAS", Box::new(|n| Cell::pas("ddim", n))),
+            ("ddim + TP + PAS", Box::new(|n| Cell { tp: true, ..Cell::pas("ddim", n) })),
+            ("heun", Box::new(|n| Cell::plain("heun", n))),
+            ("dpm2", Box::new(|n| Cell::plain("dpm2", n))),
+            ("dpmpp3m", Box::new(|n| Cell::plain("dpmpp3m", n))),
+            ("deis-tab3", Box::new(|n| Cell::plain("deis-tab3", n))),
+            ("unipc3m", Box::new(|n| Cell::plain("unipc3m", n))),
+            ("ipndm", Box::new(|n| Cell::plain("ipndm", n))),
+            ("ipndm + TP", Box::new(|n| Cell { tp: true, ..Cell::plain("ipndm", n) })),
+            ("ipndm + PAS", Box::new(|n| Cell::pas("ipndm", n))),
+            ("ipndm + TP + PAS", Box::new(|n| Cell { tp: true, ..Cell::pas("ipndm", n) })),
+        ];
+        for (label, mk) in methods {
+            let (l, cells) = grid_row(&bench, label, mk, opts);
+            t.row(l, cells);
+        }
+        out.push(t);
+    }
+    out
+}
+
+/// Table 3: the Stable-Diffusion analog — guided conditional sampling at
+/// guidance 7.5, DDIM ± PAS vs the multistep state of the art.
+pub fn table3(opts: &ExpOpts) -> Vec<Table> {
+    let bench = Bench::new("cond-gmm64", 7.5, opts);
+    let mut t = Table::new(
+        "table3",
+        "gFID on cond-gmm64 with guidance scale 7.5 (stands in for Stable Diffusion v1.4)",
+        &["5", "6", "8", "10"],
+    );
+    let methods: Vec<(&str, Box<dyn Fn(usize) -> Cell>)> = vec![
+        ("ddim", Box::new(|n| Cell::plain("ddim", n))),
+        ("dpmpp2m", Box::new(|n| Cell::plain("dpmpp2m", n))),
+        ("unipc2m", Box::new(|n| Cell::plain("unipc2m", n))),
+        ("ddim + PAS", Box::new(|n| Cell::pas("ddim", n))),
+    ];
+    for (label, mk) in methods {
+        let (l, cells) = grid_row(&bench, label, mk, opts);
+        t.row(l, cells);
+    }
+    vec![t]
+}
+
+/// Table 5: NFE 4–10 sweep on the CIFAR10 and FFHQ stand-ins.
+pub fn table5(opts: &ExpOpts) -> Vec<Table> {
+    let nfes = [4usize, 5, 6, 7, 8, 9, 10];
+    let cols: Vec<String> = nfes.iter().map(|n| n.to_string()).collect();
+    let cols_ref: Vec<&str> = cols.iter().map(|s| s.as_str()).collect();
+    let mut out = Vec::new();
+    for ds_name in ["gmm-hd64", "shells64"] {
+        let bench = Bench::new(ds_name, 0.0, opts);
+        let mut t = Table::new(
+            "table5",
+            &format!("gFID vs NFE on {ds_name} ({})", bench.ds.stands_in_for),
+            &cols_ref,
+        );
+        let methods: Vec<(&str, Box<dyn Fn(usize) -> Cell>)> = vec![
+            ("ddim", Box::new(|n| Cell::plain("ddim", n))),
+            ("ddim + PAS", Box::new(|n| Cell::pas("ddim", n))),
+            ("heun", Box::new(|n| Cell::plain("heun", n))),
+            ("dpm2", Box::new(|n| Cell::plain("dpm2", n))),
+            ("dpmpp3m", Box::new(|n| Cell::plain("dpmpp3m", n))),
+            ("deis-tab3", Box::new(|n| Cell::plain("deis-tab3", n))),
+            ("unipc3m", Box::new(|n| Cell::plain("unipc3m", n))),
+            ("ipndm", Box::new(|n| Cell::plain("ipndm", n))),
+            ("ipndm + PAS", Box::new(|n| Cell::pas("ipndm", n))),
+        ];
+        for (label, mk) in methods {
+            let cells: Vec<String> = nfes
+                .iter()
+                .map(|&nfe| fmt_gfid(eval_cell(&bench, &mk(nfe), opts).map(|r| r.gfid)))
+                .collect();
+            t.row(label, cells);
+        }
+        out.push(t);
+    }
+    out
+}
+
+/// Table 6 (and Table 1): the corrected time points chosen by adaptive
+/// search per dataset, solver and NFE.
+pub fn table6(opts: &ExpOpts) -> Vec<Table> {
+    let mut out = Vec::new();
+    for ds_name in crate::data::registry::MAIN_TABLE {
+        let guidance = if *ds_name == "cond-gmm64" { 2.0 } else { 0.0 };
+        let bench = Bench::new(ds_name, guidance, opts);
+        let mut t = Table::new(
+            "table6",
+            &format!("time points corrected by adaptive search on {ds_name}"),
+            &["5", "6", "8", "10"],
+        );
+        for solver in ["ddim", "ipndm"] {
+            let cells: Vec<String> = NFE_GRID
+                .iter()
+                .map(|&nfe| {
+                    eval_cell(&bench, &Cell::pas(solver, nfe), opts)
+                        .and_then(|r| r.train)
+                        .map(|tr| {
+                            let s = tr.trace.corrected_steps_str();
+                            format!("{s} ({}p)", tr.dict.n_params())
+                        })
+                        .unwrap_or_else(|| "\\".into())
+                })
+                .collect();
+            t.row(format!("{solver} + PAS"), cells);
+        }
+        out.push(t);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A miniature Table-2 sanity check on one dataset: the paper's
+    /// ordering DDIM > DDIM+PAS (gFID, lower better) must hold.
+    #[test]
+    fn table2_ordering_holds_on_gmm2d() {
+        let mut opts = ExpOpts::quick();
+        opts.n_samples = 512;
+        let bench = Bench::new("gmm2d", 0.0, &opts);
+        let ddim = eval_cell(&bench, &Cell::plain("ddim", 8), &opts).unwrap().gfid;
+        let pas = eval_cell(&bench, &Cell::pas("ddim", 8), &opts).unwrap().gfid;
+        let ipndm = eval_cell(&bench, &Cell::plain("ipndm", 8), &opts).unwrap().gfid;
+        assert!(pas < ddim, "ddim {ddim} vs +pas {pas}");
+        assert!(ipndm < ddim, "ipndm {ipndm} vs ddim {ddim}");
+    }
+
+    #[test]
+    fn table6_reports_steps() {
+        let mut opts = ExpOpts::quick();
+        opts.n_samples = 128;
+        let bench = Bench::new("gmm2d", 0.0, &opts);
+        let r = eval_cell(&bench, &Cell::pas("ddim", 6), &opts).unwrap();
+        let tr = r.train.unwrap();
+        // At least one corrected step, each storing <= 4 coords.
+        assert!(!tr.dict.steps.is_empty());
+        assert!(tr.dict.n_params() <= 24);
+    }
+}

@@ -1,0 +1,46 @@
+//! # PAS — PCA-based Adaptive Search for diffusion sampling correction
+//!
+//! Full-system reproduction of *"Diffusion Sampling Correction via
+//! Approximately 10 Parameters"* (ICML 2025) as a three-layer
+//! rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the coordinator: solvers, the PAS trainer and
+//!   corrected sampler, trajectory/ground-truth generation, metrics, the
+//!   experiment harness that regenerates every table and figure of the
+//!   paper, a threaded batching sampling server, and the PJRT runtime that
+//!   loads the AOT-compiled denoiser. Python is never on the request path.
+//! * **L2** — a JAX MLP denoiser (`python/compile/model.py`), trained at
+//!   build time and lowered to HLO text artifacts.
+//! * **L1** — the denoiser hot-spot as a Pallas kernel
+//!   (`python/compile/kernels/fused_resblock.py`, interpret=True).
+//!
+//! See `DESIGN.md` for the system inventory and the per-experiment index,
+//! and `EXPERIMENTS.md` for measured results.
+
+pub mod util;
+pub mod tensor;
+pub mod linalg;
+pub mod schedule;
+pub mod data;
+pub mod score;
+pub mod solvers;
+pub mod traj;
+pub mod pas;
+pub mod metrics;
+pub mod runtime;
+pub mod server;
+pub mod config;
+pub mod experiments;
+pub mod cli;
+
+/// Convenience re-exports for examples and downstream users.
+pub mod prelude {
+    pub use crate::data::Dataset;
+    pub use crate::pas::coords::CoordinateDict;
+    pub use crate::pas::correct::CorrectedSampler;
+    pub use crate::pas::train::{PasTrainer, TrainConfig};
+    pub use crate::schedule::Schedule;
+    pub use crate::score::EpsModel;
+    pub use crate::solvers::{SolveRun, Solver};
+    pub use crate::util::rng::Pcg64;
+}

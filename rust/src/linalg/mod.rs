@@ -1,0 +1,405 @@
+//! Dense linear algebra built from scratch for the offline environment:
+//! symmetric eigendecomposition (cyclic Jacobi), thin SVD via the Gram
+//! trick (tailored to PAS's "few rows, huge columns" trajectory matrices),
+//! modified Gram–Schmidt, Cholesky and PSD matrix square root.
+
+use crate::tensor::{dot, matmul_into, norm2};
+
+/// Symmetric eigendecomposition via cyclic Jacobi rotations.
+///
+/// `a` is n×n row-major symmetric (destroyed). Returns `(eigvals, eigvecs)`
+/// with eigenvalues **descending** and eigenvectors as rows of the returned
+/// matrix (`eigvecs[k*n..][..n]` is the k-th eigenvector).
+pub fn eigh(a: &mut [f64], n: usize) -> (Vec<f64>, Vec<f64>) {
+    assert_eq!(a.len(), n * n);
+    let mut v = vec![0.0; n * n];
+    for i in 0..n {
+        v[i * n + i] = 1.0;
+    }
+    let max_sweeps = 30;
+    for _sweep in 0..max_sweeps {
+        // Off-diagonal Frobenius norm for convergence.
+        let mut off = 0.0;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                off += a[i * n + j] * a[i * n + j];
+            }
+        }
+        if off.sqrt() < 1e-14 * (1.0 + frob(a)) {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = a[p * n + q];
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = a[p * n + p];
+                let aqq = a[q * n + q];
+                let theta = 0.5 * (aqq - app) / apq;
+                let t = if theta >= 0.0 {
+                    1.0 / (theta + (1.0 + theta * theta).sqrt())
+                } else {
+                    -1.0 / (-theta + (1.0 + theta * theta).sqrt())
+                };
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = t * c;
+                // Update rows/cols p and q of a.
+                for k in 0..n {
+                    let akp = a[k * n + p];
+                    let akq = a[k * n + q];
+                    a[k * n + p] = c * akp - s * akq;
+                    a[k * n + q] = s * akp + c * akq;
+                }
+                for k in 0..n {
+                    let apk = a[p * n + k];
+                    let aqk = a[q * n + k];
+                    a[p * n + k] = c * apk - s * aqk;
+                    a[q * n + k] = s * apk + c * aqk;
+                }
+                // Accumulate rotations into v (rows are eigvecs^T for now).
+                for k in 0..n {
+                    let vkp = v[p * n + k];
+                    let vkq = v[q * n + k];
+                    v[p * n + k] = c * vkp - s * vkq;
+                    v[q * n + k] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+    let mut vals: Vec<f64> = (0..n).map(|i| a[i * n + i]).collect();
+    // Sort descending, carrying eigenvectors (rows of v).
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&i, &j| vals[j].partial_cmp(&vals[i]).unwrap());
+    let mut sorted_vals = vec![0.0; n];
+    let mut sorted_vecs = vec![0.0; n * n];
+    for (new_i, &old_i) in order.iter().enumerate() {
+        sorted_vals[new_i] = vals[old_i];
+        sorted_vecs[new_i * n..(new_i + 1) * n].copy_from_slice(&v[old_i * n..(old_i + 1) * n]);
+    }
+    vals.clear();
+    (sorted_vals, sorted_vecs)
+}
+
+fn frob(a: &[f64]) -> f64 {
+    dot(a, a).sqrt()
+}
+
+/// Thin SVD of a *short-fat* row-major matrix `x` (r rows, d cols, r ≪ d)
+/// via the Gram trick: eigendecompose `G = X Xᵀ` (r×r), then
+/// `v_k = Xᵀ w_k / s_k`. Returns `(singular_values_desc, right_vectors)`
+/// where right vectors are rows of the returned (k, d) buffer, and
+/// `k = min(r, top_k)` after dropping numerically-zero singular values.
+pub fn svd_right_vectors(x: &[f64], r: usize, d: usize, top_k: usize) -> (Vec<f64>, Vec<f64>) {
+    assert_eq!(x.len(), r * d);
+    // G = X Xᵀ, r×r.
+    let mut g = vec![0.0; r * r];
+    for i in 0..r {
+        for j in i..r {
+            let v = dot(&x[i * d..(i + 1) * d], &x[j * d..(j + 1) * d]);
+            g[i * r + j] = v;
+            g[j * r + i] = v;
+        }
+    }
+    let (vals, w) = eigh(&mut g, r);
+    let smax = vals.first().copied().unwrap_or(0.0).max(0.0).sqrt();
+    let tol = smax * 1e-9;
+    let mut svals = Vec::new();
+    let mut vt = Vec::new();
+    for k in 0..r.min(top_k) {
+        let s = vals[k].max(0.0).sqrt();
+        if s <= tol || s == 0.0 {
+            break;
+        }
+        svals.push(s);
+        // v = Xᵀ w / s : accumulate rows of X weighted by w[k].
+        let wk = &w[k * r..(k + 1) * r];
+        let mut v = vec![0.0; d];
+        for i in 0..r {
+            let c = wk[i] / s;
+            if c == 0.0 {
+                continue;
+            }
+            let row = &x[i * d..(i + 1) * d];
+            for (vj, &xj) in v.iter_mut().zip(row.iter()) {
+                *vj += c * xj;
+            }
+        }
+        vt.extend_from_slice(&v);
+    }
+    (svals, vt)
+}
+
+/// Modified Gram–Schmidt over row vectors of dimension `d`.
+///
+/// Takes candidate vectors in order, returns an orthonormal set (rows).
+/// Candidates whose residual norm falls below `tol * ||candidate||` are
+/// dropped (collinear with the span so far) — this mirrors Algorithm 1's
+/// `Schmidt(v1, v1', v2', v3')` where `v1'` is often collinear with `v1`.
+/// To always return `want` vectors, pass deterministic fallback directions;
+/// here the caller (pas::pca) completes the basis with coordinate axes.
+pub fn gram_schmidt(cands: &[Vec<f64>], want: usize, tol: f64) -> Vec<Vec<f64>> {
+    let mut basis: Vec<Vec<f64>> = Vec::with_capacity(want);
+    for cand in cands {
+        if basis.len() >= want {
+            break;
+        }
+        let cn = norm2(cand);
+        if cn == 0.0 {
+            continue;
+        }
+        let mut v = cand.clone();
+        // Two MGS passes for numerical orthogonality.
+        for _ in 0..2 {
+            for b in &basis {
+                let c = dot(&v, b);
+                for (vi, bi) in v.iter_mut().zip(b.iter()) {
+                    *vi -= c * bi;
+                }
+            }
+        }
+        let n = norm2(&v);
+        if n > tol * cn {
+            for vi in v.iter_mut() {
+                *vi /= n;
+            }
+            basis.push(v);
+        }
+    }
+    basis
+}
+
+/// Cholesky factorization of a PSD matrix (n×n row-major): returns lower
+/// triangular L with `A = L Lᵀ`. Adds `jitter` to the diagonal as needed.
+pub fn cholesky(a: &[f64], n: usize, jitter: f64) -> Result<Vec<f64>, String> {
+    assert_eq!(a.len(), n * n);
+    let mut l = vec![0.0; n * n];
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = a[i * n + j];
+            for k in 0..j {
+                s -= l[i * n + k] * l[j * n + k];
+            }
+            if i == j {
+                let v = s + jitter;
+                if v <= 0.0 {
+                    return Err(format!("cholesky: non-PSD pivot {v} at {i}"));
+                }
+                l[i * n + i] = v.sqrt();
+            } else {
+                l[i * n + j] = s / l[j * n + j];
+            }
+        }
+    }
+    Ok(l)
+}
+
+/// Symmetric PSD matrix square root via eigendecomposition.
+pub fn sqrtm_psd(a: &[f64], n: usize) -> Vec<f64> {
+    let mut work = a.to_vec();
+    let (vals, vecs) = eigh(&mut work, n);
+    // sqrt(A) = Vᵀ diag(sqrt(max(vals,0))) V  with V rows = eigvecs.
+    let mut scaled = vec![0.0; n * n]; // rows: sqrt(lam_k) * v_k
+    for k in 0..n {
+        let s = vals[k].max(0.0).sqrt();
+        for j in 0..n {
+            scaled[k * n + j] = s * vecs[k * n + j];
+        }
+    }
+    // out = vecsᵀ * scaled
+    let mut vt = vec![0.0; n * n];
+    for i in 0..n {
+        for k in 0..n {
+            vt[i * n + k] = vecs[k * n + i];
+        }
+    }
+    let mut out = vec![0.0; n * n];
+    matmul_into(&vt, n, n, &scaled, n, &mut out);
+    out
+}
+
+/// Trace of a square row-major matrix.
+pub fn trace(a: &[f64], n: usize) -> f64 {
+    (0..n).map(|i| a[i * n + i]).sum()
+}
+
+/// Solve `A x = b` in place by Gaussian elimination with partial pivoting
+/// (A destroyed, solution left in `b`). Intended for the tiny systems of
+/// UniPC (n ≤ 3) but correct for any n.
+pub fn solve_linear(a: &mut [f64], b: &mut [f64], n: usize) -> Result<(), String> {
+    assert_eq!(a.len(), n * n);
+    assert_eq!(b.len(), n);
+    for col in 0..n {
+        // Pivot.
+        let mut piv = col;
+        for r in (col + 1)..n {
+            if a[r * n + col].abs() > a[piv * n + col].abs() {
+                piv = r;
+            }
+        }
+        if a[piv * n + col].abs() < 1e-300 {
+            return Err(format!("singular at column {col}"));
+        }
+        if piv != col {
+            for c in 0..n {
+                a.swap(col * n + c, piv * n + c);
+            }
+            b.swap(col, piv);
+        }
+        let diag = a[col * n + col];
+        for r in (col + 1)..n {
+            let f = a[r * n + col] / diag;
+            if f == 0.0 {
+                continue;
+            }
+            for c in col..n {
+                a[r * n + c] -= f * a[col * n + c];
+            }
+            b[r] -= f * b[col];
+        }
+    }
+    // Back substitution.
+    for col in (0..n).rev() {
+        let mut s = b[col];
+        for c in (col + 1)..n {
+            s -= a[col * n + c] * b[c];
+        }
+        b[col] = s / a[col * n + col];
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn approx(a: f64, b: f64, eps: f64) -> bool {
+        (a - b).abs() <= eps * (1.0 + a.abs().max(b.abs()))
+    }
+
+    #[test]
+    fn eigh_diag() {
+        let mut a = vec![3.0, 0.0, 0.0, 1.0];
+        let (vals, vecs) = eigh(&mut a, 2);
+        assert!(approx(vals[0], 3.0, 1e-12) && approx(vals[1], 1.0, 1e-12));
+        // Eigvec rows orthonormal.
+        assert!(approx(dot(&vecs[0..2], &vecs[0..2]), 1.0, 1e-12));
+        assert!(approx(dot(&vecs[0..2], &vecs[2..4]), 0.0, 1e-12));
+    }
+
+    #[test]
+    fn eigh_reconstructs() {
+        let mut rng = Pcg64::seed(5);
+        let n = 8;
+        // Random symmetric A = B Bᵀ.
+        let b: Vec<f64> = (0..n * n).map(|_| rng.normal()).collect();
+        let mut a = vec![0.0; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                a[i * n + j] = dot(&b[i * n..(i + 1) * n], &b[j * n..(j + 1) * n]);
+            }
+        }
+        let orig = a.clone();
+        let (vals, vecs) = eigh(&mut a, n);
+        // Reconstruct Σ_k λ_k v_k v_kᵀ.
+        let mut rec = vec![0.0; n * n];
+        for k in 0..n {
+            let v = &vecs[k * n..(k + 1) * n];
+            for i in 0..n {
+                for j in 0..n {
+                    rec[i * n + j] += vals[k] * v[i] * v[j];
+                }
+            }
+        }
+        for i in 0..n * n {
+            assert!(approx(rec[i], orig[i], 1e-8), "{} vs {}", rec[i], orig[i]);
+        }
+        // Descending order.
+        for k in 1..n {
+            assert!(vals[k - 1] >= vals[k] - 1e-12);
+        }
+    }
+
+    #[test]
+    fn svd_known_rank() {
+        // X rows: e1*2, e2*3, e1*2 (rank 2 in d=5).
+        let d = 5;
+        let mut x = vec![0.0; 3 * d];
+        x[0] = 2.0;
+        x[d + 1] = 3.0;
+        x[2 * d] = 2.0;
+        let (svals, vt) = svd_right_vectors(&x, 3, d, 3);
+        assert_eq!(svals.len(), 2, "rank should be 2, got {svals:?}");
+        // Singular values: 3 (the e2 row) and sqrt(2² + 2²) = sqrt(8).
+        assert!(approx(svals[0], 3.0, 1e-9));
+        assert!(approx(svals[1], (8.0f64).sqrt(), 1e-9));
+        // Top right vector = ±e2, second = ±e1.
+        assert!(vt[1].abs() > 0.999);
+        assert!(vt[d].abs() > 0.999);
+    }
+
+    #[test]
+    fn svd_matches_reconstruction() {
+        let mut rng = Pcg64::seed(17);
+        let (r, d) = (6, 40);
+        let x: Vec<f64> = (0..r * d).map(|_| rng.normal()).collect();
+        let (svals, vt) = svd_right_vectors(&x, r, d, r);
+        assert_eq!(svals.len(), r);
+        // Right vectors orthonormal.
+        for i in 0..r {
+            for j in 0..r {
+                let g = dot(&vt[i * d..(i + 1) * d], &vt[j * d..(j + 1) * d]);
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!(approx(g, want, 1e-8), "g[{i}{j}]={g}");
+            }
+        }
+        // Energy preserved: Σ s² = ||X||_F².
+        let e: f64 = svals.iter().map(|s| s * s).sum();
+        assert!(approx(e, dot(&x, &x), 1e-8));
+    }
+
+    #[test]
+    fn gram_schmidt_drops_collinear() {
+        let v1 = vec![1.0, 0.0, 0.0];
+        let v1_dup = vec![2.0, 0.0, 0.0];
+        let v2 = vec![1.0, 1.0, 0.0];
+        let basis = gram_schmidt(&[v1, v1_dup, v2], 4, 1e-8);
+        assert_eq!(basis.len(), 2);
+        assert!(approx(dot(&basis[0], &basis[1]), 0.0, 1e-12));
+    }
+
+    #[test]
+    fn cholesky_roundtrip() {
+        let a = vec![4.0, 2.0, 2.0, 3.0];
+        let l = cholesky(&a, 2, 0.0).unwrap();
+        // L Lᵀ == A
+        let mut rec = vec![0.0; 4];
+        for i in 0..2 {
+            for j in 0..2 {
+                for k in 0..2 {
+                    rec[i * 2 + j] += l[i * 2 + k] * l[j * 2 + k];
+                }
+            }
+        }
+        for i in 0..4 {
+            assert!(approx(rec[i], a[i], 1e-12));
+        }
+    }
+
+    #[test]
+    fn sqrtm_squares_back() {
+        let a = vec![2.0, 1.0, 1.0, 2.0];
+        let s = sqrtm_psd(&a, 2);
+        let mut sq = vec![0.0; 4];
+        matmul_into(&s, 2, 2, &s, 2, &mut sq);
+        for i in 0..4 {
+            assert!(approx(sq[i], a[i], 1e-10), "{:?}", sq);
+        }
+    }
+
+    #[test]
+    fn trace_works() {
+        assert_eq!(trace(&[1.0, 5.0, 5.0, 2.0], 2), 3.0);
+    }
+}

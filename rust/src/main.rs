@@ -1,0 +1,6 @@
+//! `pas` binary — leader entrypoint. See `pas help`.
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    std::process::exit(pas::cli::main(argv));
+}

@@ -1,0 +1,215 @@
+//! Sample-quality and trajectory-fidelity metrics.
+//!
+//! The paper reports Inception-FID; offline we use **gFID** — the Fréchet
+//! distance between Gaussians fit to the two sample sets *in data space*
+//! (identical functional form to FID with an identity feature extractor) —
+//! plus sliced 2-Wasserstein and RBF-MMD as corroborating metrics, and the
+//! raw `L1`/`L2` trajectory errors the paper itself reports in Table 11.
+
+use crate::linalg::{sqrtm_psd, trace};
+use crate::tensor::{col_means, covariance, l1_dist, l2_dist_sq, matmul_into};
+use crate::util::rng::Pcg64;
+
+/// Fréchet distance between Gaussians fit to two sample sets:
+/// `||mu_a - mu_b||² + tr(Sa + Sb - 2 (Sa^{1/2} Sb Sa^{1/2})^{1/2})`.
+pub fn gfid(a: &[f64], na: usize, b: &[f64], nb: usize, dim: usize) -> f64 {
+    let mu_a = col_means(a, na, dim);
+    let mu_b = col_means(b, nb, dim);
+    let sa = covariance(a, na, dim);
+    let sb = covariance(b, nb, dim);
+    let mean_term = l2_dist_sq(&mu_a, &mu_b);
+    // (Sa^{1/2} Sb Sa^{1/2})^{1/2} via PSD square roots.
+    let sa_half = sqrtm_psd(&sa, dim);
+    let mut tmp = vec![0.0; dim * dim];
+    matmul_into(&sa_half, dim, dim, &sb, dim, &mut tmp);
+    let mut inner = vec![0.0; dim * dim];
+    matmul_into(&tmp, dim, dim, &sa_half, dim, &mut inner);
+    let cross = sqrtm_psd(&inner, dim);
+    let cov_term = trace(&sa, dim) + trace(&sb, dim) - 2.0 * trace(&cross, dim);
+    (mean_term + cov_term).max(0.0)
+}
+
+/// Sliced 2-Wasserstein distance: average over `n_proj` random 1-D
+/// projections of the squared W2 between empirical distributions.
+pub fn sliced_w2(a: &[f64], na: usize, b: &[f64], nb: usize, dim: usize, n_proj: usize, seed: u64) -> f64 {
+    let mut rng = Pcg64::seed_stream(seed, 0x5712);
+    let m = na.min(nb);
+    let mut total = 0.0;
+    let mut pa = vec![0.0; na];
+    let mut pb = vec![0.0; nb];
+    for _ in 0..n_proj {
+        // Random unit direction.
+        let mut dir = rng.normal_vec(dim);
+        let norm = crate::tensor::norm2(&dir);
+        for v in dir.iter_mut() {
+            *v /= norm;
+        }
+        for (i, p) in pa.iter_mut().enumerate() {
+            *p = crate::tensor::dot(&a[i * dim..(i + 1) * dim], &dir);
+        }
+        for (i, p) in pb.iter_mut().enumerate() {
+            *p = crate::tensor::dot(&b[i * dim..(i + 1) * dim], &dir);
+        }
+        pa.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        pb.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        // Quantile-matched squared differences.
+        let mut s = 0.0;
+        for q in 0..m {
+            let qa = pa[q * na / m];
+            let qb = pb[q * nb / m];
+            s += (qa - qb) * (qa - qb);
+        }
+        total += s / m as f64;
+    }
+    total / n_proj as f64
+}
+
+/// RBF-kernel MMD² with bandwidth set by the median heuristic over a
+/// subsample.
+pub fn mmd2_rbf(a: &[f64], na: usize, b: &[f64], nb: usize, dim: usize) -> f64 {
+    // Median pairwise distance over a capped subsample for bandwidth.
+    let cap = 128usize;
+    let step_a = (na / cap.min(na)).max(1);
+    let step_b = (nb / cap.min(nb)).max(1);
+    let mut d2s = Vec::new();
+    let rows_a: Vec<&[f64]> = (0..na)
+        .step_by(step_a)
+        .map(|i| &a[i * dim..(i + 1) * dim])
+        .collect();
+    let rows_b: Vec<&[f64]> = (0..nb)
+        .step_by(step_b)
+        .map(|i| &b[i * dim..(i + 1) * dim])
+        .collect();
+    for (i, ra) in rows_a.iter().enumerate() {
+        for rb in rows_a.iter().skip(i + 1) {
+            d2s.push(l2_dist_sq(ra, rb));
+        }
+    }
+    for ra in &rows_a {
+        for rb in &rows_b {
+            d2s.push(l2_dist_sq(ra, rb));
+        }
+    }
+    let bw = crate::util::median(&d2s).max(1e-12);
+    let k = |x: &[f64], y: &[f64]| (-l2_dist_sq(x, y) / bw).exp();
+    let (mut kaa, mut kbb, mut kab) = (0.0, 0.0, 0.0);
+    let la = rows_a.len();
+    let lb = rows_b.len();
+    for i in 0..la {
+        for j in 0..la {
+            if i != j {
+                kaa += k(rows_a[i], rows_a[j]);
+            }
+        }
+    }
+    for i in 0..lb {
+        for j in 0..lb {
+            if i != j {
+                kbb += k(rows_b[i], rows_b[j]);
+            }
+        }
+    }
+    for ra in &rows_a {
+        for rb in &rows_b {
+            kab += k(ra, rb);
+        }
+    }
+    kaa / (la * (la - 1)) as f64 + kbb / (lb * (lb - 1)) as f64 - 2.0 * kab / (la * lb) as f64
+}
+
+/// Mean per-sample L2 distance between matched sample sets (Table 11's
+/// "L2 (MSE)" against the teacher endpoint). Normalized per dimension.
+pub fn mean_l2(a: &[f64], b: &[f64], n: usize, dim: usize) -> f64 {
+    let mut s = 0.0;
+    for i in 0..n {
+        s += l2_dist_sq(&a[i * dim..(i + 1) * dim], &b[i * dim..(i + 1) * dim]);
+    }
+    s / (n * dim) as f64
+}
+
+/// Mean per-sample L1 distance (Table 11's "L1"), normalized per dimension.
+pub fn mean_l1(a: &[f64], b: &[f64], n: usize, dim: usize) -> f64 {
+    let mut s = 0.0;
+    for i in 0..n {
+        s += l1_dist(&a[i * dim..(i + 1) * dim], &b[i * dim..(i + 1) * dim]);
+    }
+    s / (n * dim) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gaussian_set(rng: &mut Pcg64, n: usize, dim: usize, mu: f64, sd: f64) -> Vec<f64> {
+        (0..n * dim).map(|_| mu + sd * rng.normal()).collect()
+    }
+
+    #[test]
+    fn gfid_zero_for_identical_sets() {
+        let mut rng = Pcg64::seed(1);
+        let a = gaussian_set(&mut rng, 500, 4, 0.0, 1.0);
+        let f = gfid(&a, 500, &a, 500, 4);
+        assert!(f < 1e-9, "{f}");
+    }
+
+    #[test]
+    fn gfid_detects_mean_shift() {
+        let mut rng = Pcg64::seed(2);
+        let a = gaussian_set(&mut rng, 2000, 3, 0.0, 1.0);
+        let b = gaussian_set(&mut rng, 2000, 3, 1.0, 1.0);
+        let f = gfid(&a, 2000, &b, 2000, 3);
+        // ||mu_a - mu_b||² = 3 exactly in expectation.
+        assert!((f - 3.0).abs() < 0.3, "{f}");
+    }
+
+    #[test]
+    fn gfid_detects_variance_mismatch() {
+        let mut rng = Pcg64::seed(3);
+        let a = gaussian_set(&mut rng, 3000, 2, 0.0, 1.0);
+        let b = gaussian_set(&mut rng, 3000, 2, 0.0, 2.0);
+        // tr term: 2·(1 + 4 − 2·2) = 2 per... per-dim (1+4-4)=1 → 2 total.
+        let f = gfid(&a, 3000, &b, 3000, 2);
+        assert!((f - 2.0).abs() < 0.4, "{f}");
+    }
+
+    #[test]
+    fn gfid_is_symmetric() {
+        let mut rng = Pcg64::seed(4);
+        let a = gaussian_set(&mut rng, 800, 5, 0.0, 1.0);
+        let b = gaussian_set(&mut rng, 800, 5, 0.3, 1.4);
+        let f1 = gfid(&a, 800, &b, 800, 5);
+        let f2 = gfid(&b, 800, &a, 800, 5);
+        assert!((f1 - f2).abs() < 1e-6 * (1.0 + f1), "{f1} vs {f2}");
+    }
+
+    #[test]
+    fn sliced_w2_orders_divergence() {
+        let mut rng = Pcg64::seed(5);
+        let reference = gaussian_set(&mut rng, 1000, 4, 0.0, 1.0);
+        let near = gaussian_set(&mut rng, 1000, 4, 0.1, 1.0);
+        let far = gaussian_set(&mut rng, 1000, 4, 2.0, 1.0);
+        let wn = sliced_w2(&reference, 1000, &near, 1000, 4, 32, 9);
+        let wf = sliced_w2(&reference, 1000, &far, 1000, 4, 32, 9);
+        assert!(wf > wn * 5.0, "{wn} vs {wf}");
+    }
+
+    #[test]
+    fn mmd_zero_for_same_distribution() {
+        let mut rng = Pcg64::seed(6);
+        let a = gaussian_set(&mut rng, 400, 3, 0.0, 1.0);
+        let b = gaussian_set(&mut rng, 400, 3, 0.0, 1.0);
+        let c = gaussian_set(&mut rng, 400, 3, 3.0, 1.0);
+        let same = mmd2_rbf(&a, 400, &b, 400, 3);
+        let diff = mmd2_rbf(&a, 400, &c, 400, 3);
+        assert!(same.abs() < 0.02, "{same}");
+        assert!(diff > 0.1, "{diff}");
+    }
+
+    #[test]
+    fn mean_l1_l2_basics() {
+        let a = vec![1.0, 2.0, 3.0, 4.0];
+        let b = vec![0.0, 2.0, 3.0, 2.0];
+        assert!((mean_l2(&a, &b, 2, 2) - (1.0 + 4.0) / 4.0).abs() < 1e-12);
+        assert!((mean_l1(&a, &b, 2, 2) - 3.0 / 4.0).abs() < 1e-12);
+    }
+}

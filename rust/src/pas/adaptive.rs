@@ -1,0 +1,106 @@
+//! Adaptive search (paper §3.3): decide per time point whether the trained
+//! correction is worth keeping.
+//!
+//! The cumulative truncation error of fast solvers is "S"-shaped: linear
+//! trajectory segments accumulate negligible error, so correcting them only
+//! injects bias along the extra basis vectors (the paper's PAS(-AS)
+//! ablation, Table 7, is *worse than DDIM*). The rule keeps a step's
+//! coordinates only when
+//!
+//! ```text
+//! L2 - (L1 + tau) > 0
+//! ```
+//!
+//! where `L2` is the uncorrected loss, `L1` the corrected loss (Eq. 20),
+//! and `tau > 0` a tolerance (1e-2 for high-error solvers like DDIM,
+//! 1e-4 for iPNDM — Table 8 shows the method is insensitive in between).
+
+/// Outcome of the adaptive decision at one time point.
+#[derive(Clone, Debug)]
+pub struct AdaptiveDecision {
+    /// Paper time-point index `i` (N..1).
+    pub step_i: usize,
+    /// Mean per-dimension loss without correction (paper's `L_2`).
+    pub loss_uncorrected: f64,
+    /// Mean per-dimension loss with the trained correction (paper's `L_1`).
+    pub loss_corrected: f64,
+    pub tau: f64,
+    pub corrected: bool,
+}
+
+/// The tolerance rule (Algorithm 1 line 15).
+pub fn decide(loss_uncorrected: f64, loss_corrected: f64, tau: f64) -> bool {
+    loss_uncorrected - (loss_corrected + tau) > 0.0
+}
+
+impl AdaptiveDecision {
+    pub fn evaluate(step_i: usize, loss_uncorrected: f64, loss_corrected: f64, tau: f64) -> Self {
+        AdaptiveDecision {
+            step_i,
+            loss_uncorrected,
+            loss_corrected,
+            tau,
+            corrected: decide(loss_uncorrected, loss_corrected, tau),
+        }
+    }
+}
+
+/// Summary over a whole training run (printed by `pas train`, used by the
+/// Table 1/6 experiment).
+#[derive(Clone, Debug, Default)]
+pub struct AdaptiveTrace {
+    pub decisions: Vec<AdaptiveDecision>,
+}
+
+impl AdaptiveTrace {
+    pub fn corrected_steps(&self) -> Vec<usize> {
+        self.decisions
+            .iter()
+            .filter(|d| d.corrected)
+            .map(|d| d.step_i)
+            .collect()
+    }
+
+    /// Render "6,4,2"-style list as in Tables 1 and 6.
+    pub fn corrected_steps_str(&self) -> String {
+        let steps = self.corrected_steps();
+        if steps.is_empty() {
+            "-".to_string()
+        } else {
+            steps
+                .iter()
+                .map(|s| s.to_string())
+                .collect::<Vec<_>>()
+                .join(",")
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rule_matches_paper_inequality() {
+        assert!(decide(1.0, 0.5, 0.1)); // clear win
+        assert!(!decide(1.0, 0.95, 0.1)); // within tolerance → skip
+        assert!(!decide(0.5, 1.0, 0.0)); // correction made things worse
+        assert!(!decide(1.0, 1.0, 0.0)); // strict inequality
+    }
+
+    #[test]
+    fn trace_formats_steps_descending() {
+        let mut tr = AdaptiveTrace::default();
+        for (i, l2, l1) in [(6, 1.0, 0.2), (5, 0.5, 0.49), (4, 0.8, 0.3)] {
+            tr.decisions
+                .push(AdaptiveDecision::evaluate(i, l2, l1, 1e-2));
+        }
+        assert_eq!(tr.corrected_steps(), vec![6, 4]);
+        assert_eq!(tr.corrected_steps_str(), "6,4");
+    }
+
+    #[test]
+    fn empty_trace_renders_dash() {
+        assert_eq!(AdaptiveTrace::default().corrected_steps_str(), "-");
+    }
+}

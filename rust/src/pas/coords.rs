@@ -1,0 +1,190 @@
+//! Learned coordinate storage — the "approximately 10 parameters".
+//!
+//! A [`CoordinateDict`] maps corrected time points (paper index `i`, from
+//! NFE down to 1) to their learned coordinate vectors, plus the metadata
+//! needed to reproduce the correction at sampling time. JSON on disk.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// How learned coordinates relate to the per-sample basis scale.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScaleMode {
+    /// Paper-literal: `d~ = U Cᵀ` with `c_1` initialized at the mean
+    /// `||d_{t_i}||` over training samples.
+    Absolute,
+    /// Scale-relative extension: `d~ = ||d|| · U Cᵀ` with `c_1` initialized
+    /// at 1 — generalizes better when direction norms vary across samples
+    /// (low-D datasets). Ablated by `repro ablate-param`.
+    Relative,
+}
+
+impl ScaleMode {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ScaleMode::Absolute => "absolute",
+            ScaleMode::Relative => "relative",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ScaleMode> {
+        match s {
+            "absolute" => Some(ScaleMode::Absolute),
+            "relative" => Some(ScaleMode::Relative),
+            _ => None,
+        }
+    }
+}
+
+/// Trained PAS artifact for one (dataset, solver, NFE) combination.
+#[derive(Clone, Debug)]
+pub struct CoordinateDict {
+    /// Paper time-point index `i` (N..1) → learned coordinates (len ≤ n_basis).
+    pub steps: BTreeMap<usize, Vec<f64>>,
+    pub n_basis: usize,
+    pub scale_mode: ScaleMode,
+    pub solver: String,
+    pub dataset: String,
+    pub nfe: usize,
+}
+
+impl CoordinateDict {
+    pub fn new(
+        n_basis: usize,
+        scale_mode: ScaleMode,
+        solver: &str,
+        dataset: &str,
+        nfe: usize,
+    ) -> CoordinateDict {
+        CoordinateDict {
+            steps: BTreeMap::new(),
+            n_basis,
+            scale_mode,
+            solver: solver.to_string(),
+            dataset: dataset.to_string(),
+            nfe,
+        }
+    }
+
+    /// Total stored learnable parameters — the paper's headline "~10".
+    pub fn n_params(&self) -> usize {
+        self.steps.values().map(|c| c.len()).sum()
+    }
+
+    /// Corrected time points, descending (the paper's Table 1/6 rows).
+    pub fn corrected_steps(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self.steps.keys().copied().collect();
+        v.sort_unstable_by(|a, b| b.cmp(a));
+        v
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut steps = Json::obj();
+        for (i, c) in &self.steps {
+            steps.set(&i.to_string(), Json::from_f64_slice(c));
+        }
+        let mut o = Json::obj();
+        o.set("n_basis", Json::Num(self.n_basis as f64))
+            .set("scale_mode", Json::Str(self.scale_mode.as_str().into()))
+            .set("solver", Json::Str(self.solver.clone()))
+            .set("dataset", Json::Str(self.dataset.clone()))
+            .set("nfe", Json::Num(self.nfe as f64))
+            .set("steps", steps);
+        o
+    }
+
+    pub fn from_json(j: &Json) -> Result<CoordinateDict, String> {
+        let n_basis = j
+            .get("n_basis")
+            .and_then(|v| v.as_usize())
+            .ok_or("missing n_basis")?;
+        let scale_mode = j
+            .get("scale_mode")
+            .and_then(|v| v.as_str())
+            .and_then(ScaleMode::parse)
+            .ok_or("bad scale_mode")?;
+        let solver = j
+            .get("solver")
+            .and_then(|v| v.as_str())
+            .ok_or("missing solver")?
+            .to_string();
+        let dataset = j
+            .get("dataset")
+            .and_then(|v| v.as_str())
+            .ok_or("missing dataset")?
+            .to_string();
+        let nfe = j
+            .get("nfe")
+            .and_then(|v| v.as_usize())
+            .ok_or("missing nfe")?;
+        let mut steps = BTreeMap::new();
+        if let Some(Json::Obj(m)) = j.get("steps") {
+            for (k, v) in m {
+                let i: usize = k.parse().map_err(|_| format!("bad step key {k}"))?;
+                let c = v.to_f64_vec().ok_or("bad coords")?;
+                steps.insert(i, c);
+            }
+        }
+        Ok(CoordinateDict {
+            steps,
+            n_basis,
+            scale_mode,
+            solver,
+            dataset,
+            nfe,
+        })
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_json().to_string())
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<CoordinateDict, String> {
+        let s = std::fs::read_to_string(path).map_err(|e| e.to_string())?;
+        Self::from_json(&Json::parse(&s)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_roundtrip() {
+        let mut d = CoordinateDict::new(4, ScaleMode::Absolute, "ddim", "gmm2d", 10);
+        d.steps.insert(6, vec![1.5, 0.1, -0.2, 0.0]);
+        d.steps.insert(4, vec![1.1, 0.0, 0.3, 0.05]);
+        let j = d.to_json();
+        let back = CoordinateDict::from_json(&j).unwrap();
+        assert_eq!(back.steps, d.steps);
+        assert_eq!(back.scale_mode, d.scale_mode);
+        assert_eq!(back.n_params(), 8);
+        assert_eq!(back.corrected_steps(), vec![6, 4]);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let mut d = CoordinateDict::new(4, ScaleMode::Relative, "ipndm3", "gmm-hd64", 8);
+        d.steps.insert(3, vec![1.0, 0.0, 0.0, -0.01]);
+        let dir = std::env::temp_dir().join("pas_test_coords");
+        let path = dir.join("c.json");
+        d.save(&path).unwrap();
+        let back = CoordinateDict::load(&path).unwrap();
+        assert_eq!(back.steps, d.steps);
+        assert_eq!(back.solver, "ipndm3");
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn approximately_10_parameters() {
+        // The paper's headline: 1–3 corrected steps × 4 coords ≈ 4–12.
+        let mut d = CoordinateDict::new(4, ScaleMode::Absolute, "ddim", "cifar", 10);
+        for i in [6, 4, 2] {
+            d.steps.insert(i, vec![0.0; 4]);
+        }
+        assert_eq!(d.n_params(), 12);
+    }
+}

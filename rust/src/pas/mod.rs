@@ -1,0 +1,20 @@
+//! **PAS** — PCA-based Adaptive Search (the paper's contribution).
+//!
+//! * [`pca`] — trajectory buffers and the pinned-first-vector PCA basis
+//!   (Algorithm 1 lines 2–6).
+//! * [`coords`] — the learned "~10 parameters" and their on-disk format.
+//! * [`train`] — Algorithm 1: sequential per-step coordinate training
+//!   against teacher trajectories with analytic gradients.
+//! * [`adaptive`] — the tolerance rule that keeps only high-curvature
+//!   steps (§3.3).
+//! * [`correct`] — Algorithm 2: the corrected sampler as a
+//!   [`crate::solvers::DirectionHook`].
+//! * [`teleport`] — the TP warm start from the analytic Gaussian score
+//!   (Wang & Vastola), used by the `+TP+PAS` rows of Table 2.
+
+pub mod pca;
+pub mod coords;
+pub mod train;
+pub mod adaptive;
+pub mod correct;
+pub mod teleport;

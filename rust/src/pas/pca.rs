@@ -1,0 +1,292 @@
+//! PCA-based basis extraction over the sampling-trajectory buffer
+//! (paper §3.1, Algorithm 1 lines 2–6).
+//!
+//! At step `t_i` the buffer holds `Q = {x_T, d_{t_N}, ..., d_{t_{i+1}}}`.
+//! Following the paper's fast path, we skip the explicit projection
+//! (Eq. 12) and instead append the current direction before the SVD
+//! (Eq. 13): `X' = Concat(Q, d_{t_i})`, take the top `k-1` right singular
+//! vectors, pin `v_1 = d_{t_i}/||d_{t_i}||`, and Gram–Schmidt
+//! `(v_1, v'_1, ..., v'_{k-1})` into at most `k` orthonormal basis vectors
+//! `U` (Eq. 14). The first basis vector is always the normalized current
+//! direction, so the first learned coordinate is a pure rescaling of
+//! `d_{t_i}` (Eq. 15).
+//!
+//! SVD uses the Gram trick ([`crate::linalg::svd_right_vectors`]):
+//! the buffer is short-fat (≤ NFE+2 rows, D columns), so the cost is
+//! `O(r² D)` with r ≈ 12 — the "negligible vs one NFE" cost claim of
+//! §3.5, which `benches/pas_overhead.rs` measures.
+
+use crate::linalg::{gram_schmidt, svd_right_vectors};
+use crate::tensor::norm2;
+
+/// Per-sample trajectory buffer: row 0 is `x_T`, then one row per used
+/// (possibly corrected) direction.
+#[derive(Clone, Debug)]
+pub struct TrajBuffer {
+    pub dim: usize,
+    rows: Vec<f64>,
+    n_rows: usize,
+}
+
+impl TrajBuffer {
+    pub fn new(dim: usize) -> TrajBuffer {
+        TrajBuffer {
+            dim,
+            rows: Vec::new(),
+            n_rows: 0,
+        }
+    }
+
+    pub fn push(&mut self, row: &[f64]) {
+        assert_eq!(row.len(), self.dim);
+        self.rows.extend_from_slice(row);
+        self.n_rows += 1;
+    }
+
+    pub fn len(&self) -> usize {
+        self.n_rows
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n_rows == 0
+    }
+
+    pub fn as_slice(&self) -> &[f64] {
+        &self.rows
+    }
+}
+
+/// Orthonormal basis for one sample's correction subspace.
+#[derive(Clone, Debug)]
+pub struct Basis {
+    pub dim: usize,
+    /// `k * dim` row-major; row 0 is `d/||d||`.
+    pub u: Vec<f64>,
+    pub k: usize,
+    /// `||d_{t_i}||` — used to initialize `c_1` (absolute mode) or to
+    /// rescale learned coordinates (relative mode).
+    pub d_norm: f64,
+}
+
+impl Basis {
+    pub fn row(&self, k: usize) -> &[f64] {
+        &self.u[k * self.dim..(k + 1) * self.dim]
+    }
+
+    /// Reconstruct a direction from coordinates: `d = Uᵀ C` (uses the
+    /// first `min(k, coords.len())` coordinates).
+    pub fn direction(&self, coords: &[f64]) -> Vec<f64> {
+        let mut d = vec![0.0; self.dim];
+        self.direction_into(coords, &mut d);
+        d
+    }
+
+    pub fn direction_into(&self, coords: &[f64], out: &mut [f64]) {
+        out.fill(0.0);
+        for (k, &c) in coords.iter().take(self.k).enumerate() {
+            if c == 0.0 {
+                continue;
+            }
+            let row = self.row(k);
+            for (o, &r) in out.iter_mut().zip(row.iter()) {
+                *o += c * r;
+            }
+        }
+    }
+
+    /// Project a vector onto the basis: returns the `k` coordinates.
+    pub fn project(&self, v: &[f64]) -> Vec<f64> {
+        (0..self.k)
+            .map(|k| crate::tensor::dot(self.row(k), v))
+            .collect()
+    }
+}
+
+/// The paper's `PCA(Q, d_{t_i})` routine. `n_basis` is the total number of
+/// basis vectors wanted (paper default 4, ablated 1–4 in Fig. 6c).
+pub fn pca_basis(q: &TrajBuffer, d: &[f64], n_basis: usize) -> Basis {
+    let dim = q.dim;
+    assert_eq!(d.len(), dim);
+    assert!(n_basis >= 1);
+    let d_norm = norm2(d);
+    if d_norm == 0.0 {
+        // Degenerate: no direction to correct; return an empty basis that
+        // reconstructs the zero vector.
+        return Basis {
+            dim,
+            u: Vec::new(),
+            k: 0,
+            d_norm,
+        };
+    }
+    let v1: Vec<f64> = d.iter().map(|x| x / d_norm).collect();
+    if n_basis == 1 || q.is_empty() {
+        return Basis {
+            dim,
+            u: v1,
+            k: 1,
+            d_norm,
+        };
+    }
+    // X' = Concat(Q, d)  (Eq. 13).
+    let r = q.len() + 1;
+    let mut x = Vec::with_capacity(r * dim);
+    x.extend_from_slice(q.as_slice());
+    x.extend_from_slice(d);
+    let (_svals, vt) = svd_right_vectors(&x, r, dim, n_basis - 1);
+    let n_sv = vt.len() / dim;
+    // Candidates: v1 first (pinned), then the singular vectors.
+    let mut cands: Vec<Vec<f64>> = Vec::with_capacity(1 + n_sv);
+    cands.push(v1);
+    for k in 0..n_sv {
+        cands.push(vt[k * dim..(k + 1) * dim].to_vec());
+    }
+    let basis = gram_schmidt(&cands, n_basis, 1e-7);
+    let k = basis.len();
+    let mut u = Vec::with_capacity(k * dim);
+    for b in basis {
+        u.extend_from_slice(&b);
+    }
+    Basis { dim, u, k, d_norm }
+}
+
+/// Cumulative percent variance of the top principal components of a row
+/// matrix (used by the Figure 2 experiment). Returns one entry per
+/// component: `cum_var[k] = (Σ_{j<=k} s_j²) / (Σ_j s_j²) * 100`.
+pub fn cumulative_percent_variance(x: &[f64], rows: usize, dim: usize, top_k: usize) -> Vec<f64> {
+    // Center rows (classical PCA).
+    let mu = crate::tensor::col_means(x, rows, dim);
+    let mut c = x.to_vec();
+    for i in 0..rows {
+        for j in 0..dim {
+            c[i * dim + j] -= mu[j];
+        }
+    }
+    let total: f64 = crate::tensor::dot(&c, &c);
+    if total == 0.0 {
+        return vec![100.0; top_k];
+    }
+    let (svals, _) = svd_right_vectors(&c, rows, dim, top_k.min(rows));
+    let mut out = Vec::with_capacity(top_k);
+    let mut acc = 0.0;
+    for k in 0..top_k {
+        if k < svals.len() {
+            acc += svals[k] * svals[k];
+        }
+        out.push(acc / total * 100.0);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::dot;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn basis_is_orthonormal_and_pinned() {
+        let dim = 16;
+        let mut rng = Pcg64::seed(1);
+        let mut q = TrajBuffer::new(dim);
+        for _ in 0..5 {
+            q.push(&rng.normal_vec(dim));
+        }
+        let d = rng.normal_vec(dim);
+        let b = pca_basis(&q, &d, 4);
+        assert!(b.k >= 2 && b.k <= 4, "k = {}", b.k);
+        // Row 0 is d / ||d||.
+        let dn = norm2(&d);
+        for j in 0..dim {
+            assert!((b.row(0)[j] - d[j] / dn).abs() < 1e-12);
+        }
+        // Orthonormal.
+        for a in 0..b.k {
+            for c in 0..b.k {
+                let g = dot(b.row(a), b.row(c));
+                let want = if a == c { 1.0 } else { 0.0 };
+                assert!((g - want).abs() < 1e-8, "g[{a}{c}]={g}");
+            }
+        }
+    }
+
+    #[test]
+    fn direction_roundtrip_via_initial_coords() {
+        // With C = [||d||, 0, 0, 0] the reconstruction is exactly d (Eq. 15).
+        let dim = 8;
+        let mut rng = Pcg64::seed(2);
+        let mut q = TrajBuffer::new(dim);
+        q.push(&rng.normal_vec(dim));
+        q.push(&rng.normal_vec(dim));
+        let d = rng.normal_vec(dim);
+        let b = pca_basis(&q, &d, 4);
+        let mut coords = vec![0.0; 4];
+        coords[0] = b.d_norm;
+        let rec = b.direction(&coords);
+        for j in 0..dim {
+            assert!((rec[j] - d[j]).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn trajectory_in_plane_recovered() {
+        // Rows spanning a 2-plane in R^32: basis must cover that plane and
+        // k must not exceed 3 (plane + numerical dust dropped).
+        let dim = 32;
+        let mut e1 = vec![0.0; dim];
+        e1[0] = 1.0;
+        let mut e2 = vec![0.0; dim];
+        e2[1] = 1.0;
+        let mut q = TrajBuffer::new(dim);
+        for i in 0..6 {
+            let a = 1.0 + i as f64;
+            let row: Vec<f64> = (0..dim)
+                .map(|j| a * e1[j] + (2.0 - 0.3 * a) * e2[j])
+                .collect();
+            q.push(&row);
+        }
+        let d: Vec<f64> = (0..dim).map(|j| 0.5 * e1[j] - 0.2 * e2[j]).collect();
+        let b = pca_basis(&q, &d, 4);
+        assert!(
+            b.k <= 3,
+            "plane data must not produce >3 basis vectors, k={}",
+            b.k
+        );
+        // Any vector in the plane reconstructs exactly from its projection.
+        let v: Vec<f64> = (0..dim).map(|j| -1.3 * e1[j] + 0.7 * e2[j]).collect();
+        let coords = b.project(&v);
+        let rec = b.direction(&coords);
+        for j in 0..dim {
+            assert!((rec[j] - v[j]).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn n_basis_1_is_pure_rescaling() {
+        let dim = 4;
+        let q = TrajBuffer::new(dim);
+        let d = vec![2.0, 0.0, 0.0, 0.0];
+        let b = pca_basis(&q, &d, 1);
+        assert_eq!(b.k, 1);
+        assert_eq!(b.row(0), &[1.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn cumulative_variance_of_low_rank_data() {
+        // 20 rows in a 2-D subspace of R^50: two PCs reach ~100 %.
+        let dim = 50;
+        let mut rng = Pcg64::seed(3);
+        let b1 = rng.normal_vec(dim);
+        let b2 = rng.normal_vec(dim);
+        let mut x = Vec::new();
+        for _ in 0..20 {
+            let (a, c) = (rng.normal(), rng.normal());
+            for j in 0..dim {
+                x.push(a * b1[j] + c * b2[j]);
+            }
+        }
+        let cv = cumulative_percent_variance(&x, 20, dim, 5);
+        assert!(cv[1] > 99.9, "{cv:?}");
+        assert!(cv[0] < 100.0);
+    }
+}

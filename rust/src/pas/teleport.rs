@@ -1,0 +1,179 @@
+//! Teleportation (TP) warm start — Wang & Vastola's analytic Gaussian
+//! score solution, used by the `+TP` / `+TP+PAS` rows of Table 2.
+//!
+//! Fit a single Gaussian `N(mu, Sigma)` to the data distribution; under
+//! the EDM PF-ODE with a Gaussian score the exact solution decouples in
+//! Sigma's eigenbasis:
+//!
+//! ```text
+//! y_j(s) = y_j(T) * sqrt((lam_j + s²) / (lam_j + T²)),   y = U (x − mu)
+//! ```
+//!
+//! so the whole stretch from `sigma = T` down to `sigma_skip` (paper:
+//! 10.0) costs *zero NFE*, and the solver spends its entire budget on the
+//! curved low-noise region.
+
+use crate::data::Dataset;
+use crate::linalg::eigh;
+use crate::schedule::{Schedule, ScheduleKind};
+
+pub const SIGMA_SKIP_DEFAULT: f64 = 10.0;
+
+pub struct Teleporter {
+    pub mu: Vec<f64>,
+    /// Eigenvalues of the fitted covariance (descending).
+    pub lam: Vec<f64>,
+    /// Eigenvector rows (d, d).
+    pub u: Vec<f64>,
+    pub dim: usize,
+}
+
+impl Teleporter {
+    /// Fit to a dataset's exact mixture moments.
+    pub fn from_dataset(ds: &Dataset) -> Teleporter {
+        let (mu, cov) = ds.spec.mixture_moments();
+        Self::from_moments(mu, &cov)
+    }
+
+    /// Fit to empirical moments of a sample set.
+    pub fn from_samples(x: &[f64], n: usize, dim: usize) -> Teleporter {
+        let mu = crate::tensor::col_means(x, n, dim);
+        let cov = crate::tensor::covariance(x, n, dim);
+        Self::from_moments(mu, &cov)
+    }
+
+    pub fn from_moments(mu: Vec<f64>, cov: &[f64]) -> Teleporter {
+        let dim = mu.len();
+        let mut work = cov.to_vec();
+        let (lam, u) = eigh(&mut work, dim);
+        let lam = lam.into_iter().map(|v| v.max(0.0)).collect();
+        Teleporter { mu, lam, u, dim }
+    }
+
+    /// Exact Gaussian-score PF-ODE transport of a batch from time
+    /// `from_t` to `to_t` (in place). Works in either direction.
+    pub fn teleport(&self, x: &mut [f64], n: usize, from_t: f64, to_t: f64) {
+        let d = self.dim;
+        assert_eq!(x.len(), n * d);
+        // Per-eigendirection scaling factors.
+        let scale: Vec<f64> = self
+            .lam
+            .iter()
+            .map(|&l| ((l + to_t * to_t) / (l + from_t * from_t)).sqrt())
+            .collect();
+        let mut y = vec![0.0; d];
+        for k in 0..n {
+            let xk = &mut x[k * d..(k + 1) * d];
+            // y = U (x − mu), row-eigvec convention.
+            for (c, yc) in y.iter_mut().enumerate() {
+                let row = &self.u[c * d..(c + 1) * d];
+                let mut s = 0.0;
+                for j in 0..d {
+                    s += row[j] * (xk[j] - self.mu[j]);
+                }
+                *yc = s * scale[c];
+            }
+            // x = mu + Uᵀ y.
+            xk.copy_from_slice(&self.mu);
+            for c in 0..d {
+                let yc = y[c];
+                if yc == 0.0 {
+                    continue;
+                }
+                let row = &self.u[c * d..(c + 1) * d];
+                for j in 0..d {
+                    xk[j] += yc * row[j];
+                }
+            }
+        }
+    }
+}
+
+/// Build the post-teleport sampling schedule: the full NFE budget is spent
+/// between `t_min` and `sigma_skip` with the same generator as `base`.
+pub fn teleported_schedule(base: &Schedule, sigma_skip: f64) -> Schedule {
+    match base.kind {
+        ScheduleKind::Polynomial { rho } => {
+            Schedule::polynomial(base.n_steps(), base.t_min(), sigma_skip, rho)
+        }
+        ScheduleKind::Uniform => Schedule::uniform(base.n_steps(), base.t_min(), sigma_skip),
+        ScheduleKind::LogSnr => Schedule::log_snr(base.n_steps(), base.t_min(), sigma_skip),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Mode;
+    use crate::schedule::Schedule;
+    use crate::score::analytic::AnalyticEps;
+    use crate::solvers::{euler::Euler, run_solver};
+    use crate::util::rng::Pcg64;
+
+    /// For a single Gaussian the teleport must match a finely-integrated
+    /// PF-ODE run of the analytic score.
+    #[test]
+    fn matches_fine_ode_on_single_gaussian() {
+        let d = 6;
+        let mut rng = Pcg64::seed(1);
+        let mu: Vec<f64> = rng.normal_vec(d);
+        // Anisotropic diagonal covariance.
+        let mut cov = vec![0.0; d * d];
+        for j in 0..d {
+            cov[j * d + j] = 0.2 + 0.4 * j as f64;
+        }
+        let tp = Teleporter::from_moments(mu.clone(), &cov);
+        let model = AnalyticEps::new("g", vec![Mode::full(mu, &cov, 1.0, 0)]);
+        let (t_hi, t_lo) = (80.0, 10.0);
+        let x0: Vec<f64> = rng.normal_vec(d).iter().map(|z| z * t_hi).collect();
+        // Fine ODE integration 80 -> 10.
+        let sched = Schedule::log_snr(800, t_lo, t_hi);
+        let run = run_solver(&Euler, model.as_ref(), &x0, 1, &sched, None);
+        // Teleport.
+        let mut xt = x0.clone();
+        tp.teleport(&mut xt, 1, t_hi, t_lo);
+        for j in 0..d {
+            assert!(
+                (run.x0[j] - xt[j]).abs() < 2e-2 * (1.0 + xt[j].abs()),
+                "dim {j}: ode {} vs tp {}",
+                run.x0[j],
+                xt[j]
+            );
+        }
+    }
+
+    #[test]
+    fn teleport_roundtrip_is_identity() {
+        let ds = crate::data::registry::get("gmm-hd64").unwrap();
+        let tp = Teleporter::from_dataset(&ds);
+        let mut rng = Pcg64::seed(2);
+        let x0 = rng.normal_vec(3 * 64);
+        let mut x = x0.clone();
+        tp.teleport(&mut x, 3, 80.0, 10.0);
+        tp.teleport(&mut x, 3, 10.0, 80.0);
+        for (a, b) in x.iter().zip(x0.iter()) {
+            assert!((a - b).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn teleport_shrinks_scale() {
+        let ds = crate::data::registry::get("gmm-hd64").unwrap();
+        let tp = Teleporter::from_dataset(&ds);
+        let mut rng = Pcg64::seed(3);
+        let mut x: Vec<f64> = rng.normal_vec(8 * 64).iter().map(|z| z * 80.0).collect();
+        let before = crate::tensor::norm2(&x);
+        tp.teleport(&mut x, 8, 80.0, 10.0);
+        let after = crate::tensor::norm2(&x);
+        assert!(after < before * 0.5, "{before} -> {after}");
+    }
+
+    #[test]
+    fn teleported_schedule_caps_at_sigma_skip() {
+        let base = crate::schedule::default_schedule(10);
+        let s = teleported_schedule(&base, 10.0);
+        assert_eq!(s.n_steps(), 10);
+        assert!((s.t_max() - 10.0).abs() < 1e-9);
+        assert!((s.t_min() - base.t_min()).abs() < 1e-12);
+    }
+}

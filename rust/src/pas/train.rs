@@ -1,0 +1,581 @@
+//! PAS training — Algorithm 1.
+//!
+//! Time points are trained **sequentially** (correcting step `i` shifts
+//! every later state), sharing one coordinate vector `C` across all
+//! training trajectories while the basis `U^k` is per-sample. Because every
+//! PAS-supported solver is *affine in the current direction*
+//! (`x' = base + gamma · d`, with `gamma` from [`crate::solvers::Solver::gamma`]),
+//! the coordinate gradient is analytic — no autodiff anywhere:
+//!
+//! ```text
+//! x'_k(C)  = base_k + gamma · s_k · U_kᵀ C      (s_k = 1 or ||d_k||)
+//! ∇_C loss = gamma · s_k · U_k · ∇_{x'} loss
+//! ```
+//!
+//! Losses are evaluated **per dimension** (mean, not sum) so the tolerance
+//! `tau` transfers across datasets of different dimension; this is the one
+//! normalization choice we add on top of the paper (documented in
+//! DESIGN.md §3).
+
+use super::adaptive::{decide, AdaptiveDecision, AdaptiveTrace};
+use super::coords::{CoordinateDict, ScaleMode};
+use super::pca::{pca_basis, Basis, TrajBuffer};
+use crate::schedule::Schedule;
+use crate::score::EpsModel;
+use crate::solvers::{Solver, StepCtx};
+use crate::traj::{ground_truth, sample_prior, truncation_error_curve, GroundTruth};
+use crate::util::rng::Pcg64;
+use crate::util::timer::Timer;
+
+/// Training loss functions (Fig. 6b ablation).
+#[derive(Clone, Debug)]
+pub enum Loss {
+    L1,
+    L2,
+    /// Pseudo-Huber with softening constant `c` (Song & Dhariwal 2024).
+    PseudoHuber { c: f64 },
+    /// Random-projection feature loss — our offline stand-in for LPIPS
+    /// (frozen random features as an untrained perceptual proxy).
+    RpFeat { proj_dim: usize, seed: u64 },
+}
+
+impl Loss {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Loss::L1 => "l1",
+            Loss::L2 => "l2",
+            Loss::PseudoHuber { .. } => "pseudo-huber",
+            Loss::RpFeat { .. } => "rpfeat",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Loss> {
+        match s {
+            "l1" => Some(Loss::L1),
+            "l2" => Some(Loss::L2),
+            "pseudo-huber" => Some(Loss::PseudoHuber { c: 0.03 }),
+            "rpfeat" => Some(Loss::RpFeat {
+                proj_dim: 16,
+                seed: 7,
+            }),
+            _ => None,
+        }
+    }
+}
+
+/// Loss evaluator with optional fixed random projection.
+struct LossEval {
+    loss: Loss,
+    /// (proj_dim, d) row-major projection for RpFeat.
+    proj: Option<(usize, Vec<f64>)>,
+}
+
+impl LossEval {
+    fn new(loss: &Loss, dim: usize) -> LossEval {
+        let proj = if let Loss::RpFeat { proj_dim, seed } = loss {
+            let mut rng = Pcg64::seed_stream(*seed, 0x9f);
+            let scale = 1.0 / (dim as f64).sqrt();
+            let p: Vec<f64> = (0..proj_dim * dim).map(|_| rng.normal() * scale).collect();
+            Some((*proj_dim, p))
+        } else {
+            None
+        };
+        LossEval {
+            loss: loss.clone(),
+            proj,
+        }
+    }
+
+    /// Per-sample loss (mean per dimension) of residual `r`.
+    fn value(&self, r: &[f64]) -> f64 {
+        let d = r.len() as f64;
+        match &self.loss {
+            Loss::L1 => r.iter().map(|v| v.abs()).sum::<f64>() / d,
+            Loss::L2 => r.iter().map(|v| v * v).sum::<f64>() / d,
+            Loss::PseudoHuber { c } => {
+                r.iter().map(|v| (v * v + c * c).sqrt() - c).sum::<f64>() / d
+            }
+            Loss::RpFeat { .. } => {
+                let (p_dim, p) = self.proj.as_ref().unwrap();
+                let mut s = 0.0;
+                for row in 0..*p_dim {
+                    let pr = crate::tensor::dot(&p[row * r.len()..(row + 1) * r.len()], r);
+                    s += pr * pr;
+                }
+                s / *p_dim as f64
+            }
+        }
+    }
+
+    /// Gradient of the per-sample loss w.r.t. the residual, into `out`.
+    fn grad(&self, r: &[f64], out: &mut [f64]) {
+        let d = r.len() as f64;
+        match &self.loss {
+            Loss::L1 => {
+                for (o, &v) in out.iter_mut().zip(r.iter()) {
+                    *o = v.signum() / d;
+                }
+            }
+            Loss::L2 => {
+                for (o, &v) in out.iter_mut().zip(r.iter()) {
+                    *o = 2.0 * v / d;
+                }
+            }
+            Loss::PseudoHuber { c } => {
+                for (o, &v) in out.iter_mut().zip(r.iter()) {
+                    *o = v / (v * v + c * c).sqrt() / d;
+                }
+            }
+            Loss::RpFeat { .. } => {
+                let (p_dim, p) = self.proj.as_ref().unwrap();
+                out.fill(0.0);
+                let dl = r.len();
+                for row in 0..*p_dim {
+                    let prow = &p[row * dl..(row + 1) * dl];
+                    let pr = crate::tensor::dot(prow, r);
+                    let c = 2.0 * pr / *p_dim as f64;
+                    for (o, &pv) in out.iter_mut().zip(prow.iter()) {
+                        *o += c * pv;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Coordinate optimizer (the paper uses SGD; Adam is sturdier across our
+/// dataset scales and is the default — `repro fig7` sweeps the lr either way).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Optimizer {
+    Sgd,
+    Adam,
+}
+
+/// Full training configuration (defaults follow the paper's recommended
+/// settings, §4.1 and Appendix B).
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub n_basis: usize,
+    pub lr: f64,
+    pub epochs: usize,
+    pub minibatch: usize,
+    /// Number of ground-truth trajectories (paper: 5k; our datasets
+    /// saturate far earlier — Fig. 6d analog sweeps this).
+    pub n_traj: usize,
+    pub tau: f64,
+    pub loss: Loss,
+    pub scale_mode: ScaleMode,
+    pub optimizer: Optimizer,
+    /// Teacher solver name (paper: Heun's 2nd).
+    pub teacher: String,
+    /// Teacher NFE budget (paper: 100).
+    pub teacher_nfe: usize,
+    pub seed: u64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            n_basis: 4,
+            lr: 1e-2,
+            epochs: 48,
+            minibatch: 32,
+            n_traj: 256,
+            tau: 1e-2,
+            loss: Loss::L1,
+            scale_mode: ScaleMode::Absolute,
+            optimizer: Optimizer::Adam,
+            teacher: "heun".into(),
+            teacher_nfe: 100,
+            seed: 0,
+        }
+    }
+}
+
+/// Everything `PasTrainer::train` produces.
+#[derive(Debug)]
+pub struct TrainResult {
+    pub dict: CoordinateDict,
+    pub trace: AdaptiveTrace,
+    /// Truncation-error curve of the *uncorrected* student vs ground truth
+    /// (Figure 3a) on the training trajectories.
+    pub curve_uncorrected: Vec<f64>,
+    /// Truncation-error curve of the PAS-corrected student (Figure 3b).
+    pub curve_corrected: Vec<f64>,
+    pub train_seconds: f64,
+    pub teacher_nfe_spent: usize,
+}
+
+pub struct PasTrainer {
+    pub cfg: TrainConfig,
+}
+
+impl PasTrainer {
+    pub fn new(cfg: TrainConfig) -> PasTrainer {
+        PasTrainer { cfg }
+    }
+
+    /// Run Algorithm 1 for `solver` on `model` over `sched`.
+    ///
+    /// `force_all_steps` disables the adaptive rule and stores every step
+    /// (the PAS(-AS) ablation, Table 7 / Fig. 6a).
+    pub fn train(
+        &self,
+        solver: &dyn Solver,
+        model: &dyn EpsModel,
+        sched: &Schedule,
+        dataset_name: &str,
+        force_all_steps: bool,
+    ) -> Result<TrainResult, String> {
+        self.train_tp(solver, model, sched, dataset_name, force_all_steps, None)
+    }
+
+    /// [`Self::train`] with an optional teleportation warm start: priors
+    /// are drawn at `t_gen` and transported analytically to the schedule's
+    /// `t_max` (= `sigma_skip`) before training — the `+TP+PAS` rows.
+    pub fn train_tp(
+        &self,
+        solver: &dyn Solver,
+        model: &dyn EpsModel,
+        sched: &Schedule,
+        dataset_name: &str,
+        force_all_steps: bool,
+        teleport: Option<(&crate::pas::teleport::Teleporter, f64)>,
+    ) -> Result<TrainResult, String> {
+        let cfg = &self.cfg;
+        let dim = model.dim();
+        let n = cfg.n_traj;
+        let n_steps = sched.n_steps();
+        let timer = Timer::start();
+        let mut rng = Pcg64::seed_stream(cfg.seed, 0x7a5);
+
+        // Ground truth (teacher trajectories on the shared grid),
+        // optionally warm-started via teleportation.
+        let x_t = match teleport {
+            None => sample_prior(&mut rng, n, dim, sched.t_max()),
+            Some((tp, t_gen)) => {
+                let mut x = sample_prior(&mut rng, n, dim, t_gen);
+                tp.teleport(&mut x, n, t_gen, sched.t_max());
+                x
+            }
+        };
+        let teacher = crate::solvers::registry::get(&cfg.teacher)
+            .ok_or_else(|| format!("unknown teacher solver {}", cfg.teacher))?;
+        let gt: GroundTruth =
+            ground_truth(teacher.as_ref(), model, &x_t, n, sched, cfg.teacher_nfe);
+
+        // Uncorrected student run for the Figure-3a curve.
+        let unc = crate::solvers::run_solver(solver, model, &x_t, n, sched, None);
+        let curve_uncorrected = truncation_error_curve(&unc.xs, &gt);
+
+        // Live (corrected) rollout state.
+        let mut xs: Vec<Vec<f64>> = vec![x_t.clone()];
+        let mut ds: Vec<Vec<f64>> = Vec::new();
+        let mut buffers: Vec<TrajBuffer> = (0..n)
+            .map(|k| {
+                let mut b = TrajBuffer::new(dim);
+                b.push(&x_t[k * dim..(k + 1) * dim]);
+                b
+            })
+            .collect();
+
+        let le = LossEval::new(&cfg.loss, dim);
+        let mut dict = CoordinateDict::new(
+            cfg.n_basis,
+            cfg.scale_mode,
+            solver.name(),
+            dataset_name,
+            n_steps,
+        );
+        let mut trace = AdaptiveTrace::default();
+
+        let mut d_all = vec![0.0; n * dim];
+        let mut base = vec![0.0; n * dim];
+        let mut x_next_unc = vec![0.0; n * dim];
+        let zeros = vec![0.0; n * dim];
+
+        for j in 0..n_steps {
+            let i_paper = n_steps - j;
+            model.eval_batch(&xs[j], n, sched.ts[j], &mut d_all);
+            let ctx = StepCtx {
+                j,
+                i_paper,
+                t: sched.ts[j],
+                t_next: sched.ts[j + 1],
+                sched,
+                xs: &xs,
+                ds: &ds,
+            };
+            let gamma = solver
+                .gamma(&ctx)
+                .ok_or_else(|| format!("solver {} does not support PAS", solver.name()))?;
+            // Affine base: step with d = 0.
+            solver.step(model, &ctx, &xs[j], &zeros, n, &mut base);
+            // Uncorrected next state (for the adaptive decision).
+            solver.step(model, &ctx, &xs[j], &d_all, n, &mut x_next_unc);
+
+            // Per-sample bases.
+            let bases: Vec<Basis> = (0..n)
+                .map(|k| pca_basis(&buffers[k], &d_all[k * dim..(k + 1) * dim], cfg.n_basis))
+                .collect();
+            let scale_of = |b: &Basis| match cfg.scale_mode {
+                ScaleMode::Absolute => 1.0,
+                ScaleMode::Relative => b.d_norm,
+            };
+
+            // Initialize coordinates (Eq. 15): c1 anchors the identity
+            // reconstruction; shared across samples, so absolute mode uses
+            // the mean direction norm.
+            let mut c = vec![0.0; cfg.n_basis];
+            c[0] = match cfg.scale_mode {
+                ScaleMode::Absolute => {
+                    bases.iter().map(|b| b.d_norm).sum::<f64>() / n as f64
+                }
+                ScaleMode::Relative => 1.0,
+            };
+            let c_init = c.clone();
+
+            // SGD/Adam over shared coordinates.
+            let gt_node = &gt.xs[j + 1];
+            let mut adam_m = vec![0.0; cfg.n_basis];
+            let mut adam_v = vec![0.0; cfg.n_basis];
+            let mut step_count = 0usize;
+            let mut grad = vec![0.0; cfg.n_basis];
+            let mut dtilde = vec![0.0; dim];
+            let mut resid = vec![0.0; dim];
+            let mut gx = vec![0.0; dim];
+            for _epoch in 0..cfg.epochs {
+                let perm = rng.permutation(n);
+                for chunk in perm.chunks(cfg.minibatch) {
+                    grad.fill(0.0);
+                    for &k in chunk {
+                        let b = &bases[k];
+                        if b.k == 0 {
+                            continue;
+                        }
+                        let s = scale_of(b);
+                        b.direction_into(&c, &mut dtilde);
+                        for v in dtilde.iter_mut() {
+                            *v *= s;
+                        }
+                        // x' = base + gamma d~ ; residual vs ground truth.
+                        let bk = &base[k * dim..(k + 1) * dim];
+                        let gk = &gt_node[k * dim..(k + 1) * dim];
+                        for m in 0..dim {
+                            resid[m] = bk[m] + gamma * dtilde[m] - gk[m];
+                        }
+                        le.grad(&resid, &mut gx);
+                        let gs = gamma * s / chunk.len() as f64;
+                        for (m, g) in grad.iter_mut().take(b.k).enumerate() {
+                            *g += gs * crate::tensor::dot(b.row(m), &gx);
+                        }
+                    }
+                    step_count += 1;
+                    match cfg.optimizer {
+                        Optimizer::Sgd => {
+                            for (cm, g) in c.iter_mut().zip(grad.iter()) {
+                                *cm -= cfg.lr * g;
+                            }
+                        }
+                        Optimizer::Adam => {
+                            let (b1, b2, eps) = (0.9, 0.999, 1e-8);
+                            let t_ = step_count as f64;
+                            for m in 0..cfg.n_basis {
+                                adam_m[m] = b1 * adam_m[m] + (1.0 - b1) * grad[m];
+                                adam_v[m] = b2 * adam_v[m] + (1.0 - b2) * grad[m] * grad[m];
+                                let mh = adam_m[m] / (1.0 - b1.powf(t_));
+                                let vh = adam_v[m] / (1.0 - b2.powf(t_));
+                                c[m] -= cfg.lr * mh / (vh.sqrt() + eps);
+                            }
+                        }
+                    }
+                }
+            }
+
+            // Adaptive decision (Eq. 20): mean per-sample losses.
+            let mut x_next_cor = vec![0.0; n * dim];
+            let mut l_unc = 0.0;
+            let mut l_cor = 0.0;
+            for k in 0..n {
+                let b = &bases[k];
+                let s = scale_of(b);
+                b.direction_into(&c, &mut dtilde);
+                for v in dtilde.iter_mut() {
+                    *v *= s;
+                }
+                let bk = &base[k * dim..(k + 1) * dim];
+                let gk = &gt_node[k * dim..(k + 1) * dim];
+                let xc = &mut x_next_cor[k * dim..(k + 1) * dim];
+                for m in 0..dim {
+                    xc[m] = bk[m] + gamma * dtilde[m];
+                    resid[m] = xc[m] - gk[m];
+                }
+                l_cor += le.value(&resid);
+                let xu = &x_next_unc[k * dim..(k + 1) * dim];
+                for m in 0..dim {
+                    resid[m] = xu[m] - gk[m];
+                }
+                l_unc += le.value(&resid);
+            }
+            l_unc /= n as f64;
+            l_cor /= n as f64;
+            let keep = if force_all_steps {
+                // PAS(-AS): always store unless training completely
+                // diverged into non-finite territory.
+                c.iter().all(|v| v.is_finite())
+            } else {
+                decide(l_unc, l_cor, cfg.tau)
+            };
+            trace
+                .decisions
+                .push(AdaptiveDecision::evaluate(i_paper, l_unc, l_cor, cfg.tau));
+            if force_all_steps {
+                trace.decisions.last_mut().unwrap().corrected = keep;
+            }
+
+            // Advance the rollout with the kept direction (Alg 1 lines 16–19).
+            if keep {
+                dict.steps.insert(i_paper, c.clone());
+                let mut d_used = vec![0.0; n * dim];
+                for k in 0..n {
+                    let b = &bases[k];
+                    let s = scale_of(b);
+                    b.direction_into(&c, &mut dtilde);
+                    for (m, v) in dtilde.iter().enumerate() {
+                        d_used[k * dim + m] = s * v;
+                    }
+                    // Guard: an empty basis falls back to the raw direction.
+                    if b.k == 0 {
+                        d_used[k * dim..(k + 1) * dim]
+                            .copy_from_slice(&d_all[k * dim..(k + 1) * dim]);
+                    }
+                }
+                xs.push(x_next_cor);
+                for k in 0..n {
+                    buffers[k].push(&d_used[k * dim..(k + 1) * dim]);
+                }
+                ds.push(d_used);
+            } else {
+                // Revert to the plain solver step; discard trained coords.
+                let _ = c_init;
+                xs.push(x_next_unc.clone());
+                for k in 0..n {
+                    buffers[k].push(&d_all[k * dim..(k + 1) * dim]);
+                }
+                ds.push(d_all.clone());
+            }
+        }
+
+        let curve_corrected = truncation_error_curve(&xs, &gt);
+        Ok(TrainResult {
+            dict,
+            trace,
+            curve_uncorrected,
+            curve_corrected,
+            train_seconds: timer.elapsed_s(),
+            teacher_nfe_spent: gt.teacher_nfe,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::registry::get;
+    use crate::schedule::default_schedule;
+    use crate::score::analytic::AnalyticEps;
+    use crate::solvers::registry as solvers;
+
+    fn quick_cfg() -> TrainConfig {
+        TrainConfig {
+            n_traj: 48,
+            epochs: 24,
+            minibatch: 16,
+            teacher_nfe: 60,
+            lr: 5e-2,
+            ..TrainConfig::default()
+        }
+    }
+
+    #[test]
+    fn training_reduces_final_truncation_error() {
+        let ds = get("gmm2d").unwrap();
+        let model = AnalyticEps::from_dataset(&ds);
+        let sched = default_schedule(8);
+        let solver = solvers::get("ddim").unwrap();
+        let tr = PasTrainer::new(TrainConfig {
+            scale_mode: ScaleMode::Relative,
+            ..quick_cfg()
+        })
+        .train(solver.as_ref(), model.as_ref(), &sched, "gmm2d", false)
+        .unwrap();
+        let before = *tr.curve_uncorrected.last().unwrap();
+        let after = *tr.curve_corrected.last().unwrap();
+        assert!(
+            after < before * 0.9,
+            "PAS must cut final truncation error: {before} -> {after}"
+        );
+        assert!(!tr.dict.steps.is_empty(), "no steps corrected");
+    }
+
+    #[test]
+    fn adaptive_search_skips_some_steps() {
+        let ds = get("gmm-hd64").unwrap();
+        let model = AnalyticEps::from_dataset(&ds);
+        let sched = default_schedule(8);
+        let solver = solvers::get("ddim").unwrap();
+        let tr = PasTrainer::new(quick_cfg())
+            .train(solver.as_ref(), model.as_ref(), &sched, "gmm-hd64", false)
+            .unwrap();
+        let corrected = tr.dict.steps.len();
+        assert!(corrected < 8, "adaptive search must not correct all steps");
+        // The "~10 parameters" property.
+        assert!(tr.dict.n_params() <= 8 * 4);
+    }
+
+    #[test]
+    fn unsupported_solver_errors() {
+        let ds = get("gmm2d").unwrap();
+        let model = AnalyticEps::from_dataset(&ds);
+        let sched = default_schedule(4);
+        let heun = solvers::get("heun").unwrap();
+        let err = PasTrainer::new(quick_cfg())
+            .train(heun.as_ref(), model.as_ref(), &sched, "gmm2d", false)
+            .unwrap_err();
+        assert!(err.contains("does not support PAS"), "{err}");
+    }
+
+    #[test]
+    fn losses_have_consistent_gradients() {
+        // Finite-difference check for each loss.
+        let dim = 12;
+        let mut rng = Pcg64::seed(5);
+        let r = rng.normal_vec(dim);
+        for loss in [
+            Loss::L2,
+            Loss::PseudoHuber { c: 0.1 },
+            Loss::RpFeat {
+                proj_dim: 6,
+                seed: 3,
+            },
+        ] {
+            let le = LossEval::new(&loss, dim);
+            let mut g = vec![0.0; dim];
+            le.grad(&r, &mut g);
+            for m in 0..dim {
+                let h = 1e-6;
+                let mut rp = r.clone();
+                rp[m] += h;
+                let mut rm = r.clone();
+                rm[m] -= h;
+                let fd = (le.value(&rp) - le.value(&rm)) / (2.0 * h);
+                assert!(
+                    (fd - g[m]).abs() < 1e-5 * (1.0 + fd.abs()),
+                    "{}: fd {fd} vs {}",
+                    loss.name(),
+                    g[m]
+                );
+            }
+        }
+    }
+}

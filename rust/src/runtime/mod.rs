@@ -1,0 +1,153 @@
+//! PJRT runtime: loads AOT-compiled HLO artifacts (produced once at build
+//! time by `python/compile/aot.py`) and executes them from the rust
+//! request path. Python is never involved at runtime.
+//!
+//! Interchange is HLO **text**: jax ≥ 0.5 serializes protos with 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md). Artifacts live in
+//! `artifacts/<name>.hlo.txt` next to a `<name>.meta.json` describing the
+//! example shapes.
+
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Metadata exported alongside each HLO artifact.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    /// Fixed batch the executable was lowered with.
+    pub batch: usize,
+    /// Data dimension D.
+    pub dim: usize,
+    /// Dataset the denoiser was trained on.
+    pub dataset: String,
+}
+
+impl ArtifactMeta {
+    pub fn load(path: &Path) -> Result<ArtifactMeta> {
+        let s = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&s).map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))?;
+        let get = |k: &str| -> Result<f64> {
+            j.get(k)
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| anyhow::anyhow!("missing {k} in {}", path.display()))
+        };
+        Ok(ArtifactMeta {
+            name: j
+                .get("name")
+                .and_then(|v| v.as_str())
+                .unwrap_or("model")
+                .to_string(),
+            batch: get("batch")? as usize,
+            dim: get("dim")? as usize,
+            dataset: j
+                .get("dataset")
+                .and_then(|v| v.as_str())
+                .unwrap_or("unknown")
+                .to_string(),
+        })
+    }
+}
+
+/// A compiled PJRT executable with its metadata.
+pub struct Executable {
+    pub meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The PJRT client wrapper (CPU). One per process; executables share it.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact and compile it.
+    pub fn load_hlo(&self, hlo_path: &Path, meta: ArtifactMeta) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            hlo_path
+                .to_str()
+                .context("artifact path must be valid UTF-8")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", hlo_path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", hlo_path.display()))?;
+        Ok(Executable { meta, exe })
+    }
+
+    /// Load `<dir>/<name>.hlo.txt` + `<dir>/<name>.meta.json`.
+    pub fn load_artifact(&self, dir: &Path, name: &str) -> Result<Executable> {
+        let meta = ArtifactMeta::load(&dir.join(format!("{name}.meta.json")))?;
+        self.load_hlo(&dir.join(format!("{name}.hlo.txt")), meta)
+    }
+}
+
+impl Executable {
+    /// Execute the denoiser on `(batch, dim)` f32 inputs plus a per-row
+    /// time vector; returns the eps prediction `(batch, dim)`.
+    pub fn eval_eps(&self, x: &[f32], t: &[f32]) -> Result<Vec<f32>> {
+        let b = self.meta.batch;
+        let d = self.meta.dim;
+        anyhow::ensure!(
+            x.len() == b * d,
+            "x shape mismatch: {} != {}",
+            x.len(),
+            b * d
+        );
+        anyhow::ensure!(t.len() == b, "t shape mismatch");
+        let lx = xla::Literal::vec1(x).reshape(&[b as i64, d as i64])?;
+        let lt = xla::Literal::vec1(t);
+        let result = self.exe.execute::<xla::Literal>(&[lx, lt])?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True → 1-tuple.
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}
+
+/// Default artifact directory: `$PAS_ARTIFACTS` or `./artifacts`.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var("PAS_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn meta_roundtrip() {
+        let dir = std::env::temp_dir().join("pas_meta_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("m.meta.json");
+        std::fs::write(
+            &p,
+            r#"{"name":"eps","batch":64,"dim":2,"dataset":"spiral2d"}"#,
+        )
+        .unwrap();
+        let m = ArtifactMeta::load(&p).unwrap();
+        assert_eq!(m.batch, 64);
+        assert_eq!(m.dim, 2);
+        assert_eq!(m.dataset, "spiral2d");
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn missing_meta_errors() {
+        let err = ArtifactMeta::load(Path::new("/nonexistent/x.meta.json"));
+        assert!(err.is_err());
+    }
+}

@@ -1,0 +1,175 @@
+//! Sampling time schedules (EDM convention: `alpha_t = 1`, `sigma_t = t`).
+//!
+//! The paper (Eq. 19) uses the polynomial (Karras) schedule with `rho = 7`
+//! for both sampling and ground-truth generation; uniform and log-SNR grids
+//! are provided for ablations.
+
+/// A descending time grid `t_N = T > t_{N-1} > ... > t_0 = eps`.
+///
+/// Indexing convention throughout the crate: `ts[j]` for `j = 0..=N` holds
+/// `t_{N-j}`, i.e. `ts[0] = T` and `ts[N] = eps`. A solver "step i" (paper
+/// notation, `i = N..1`) moves from `ts[N-i]` to `ts[N-i+1]`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Schedule {
+    pub ts: Vec<f64>,
+    pub kind: ScheduleKind,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ScheduleKind {
+    Polynomial { rho: f64 },
+    Uniform,
+    LogSnr,
+}
+
+impl Schedule {
+    /// Polynomial (Karras/EDM) schedule, Eq. (19) of the paper:
+    /// `t_i = (t_0^{1/rho} + i/N (t_N^{1/rho} - t_0^{1/rho}))^rho`.
+    pub fn polynomial(n: usize, t_min: f64, t_max: f64, rho: f64) -> Schedule {
+        assert!(n >= 1 && t_min > 0.0 && t_max > t_min);
+        let a = t_min.powf(1.0 / rho);
+        let b = t_max.powf(1.0 / rho);
+        let ts = (0..=n)
+            .map(|j| {
+                // j = 0 → i = N (t_max), j = N → i = 0 (t_min).
+                let i = (n - j) as f64;
+                (a + i / n as f64 * (b - a)).powf(rho)
+            })
+            .collect();
+        Schedule {
+            ts,
+            kind: ScheduleKind::Polynomial { rho },
+        }
+    }
+
+    /// Uniform grid in t.
+    pub fn uniform(n: usize, t_min: f64, t_max: f64) -> Schedule {
+        let ts = (0..=n)
+            .map(|j| t_max - (t_max - t_min) * j as f64 / n as f64)
+            .collect();
+        Schedule {
+            ts,
+            kind: ScheduleKind::Uniform,
+        }
+    }
+
+    /// Uniform in log-SNR (for EDM, lambda = -log t ⇒ geometric t grid).
+    pub fn log_snr(n: usize, t_min: f64, t_max: f64) -> Schedule {
+        let (la, lb) = (t_max.ln(), t_min.ln());
+        let ts = (0..=n)
+            .map(|j| (la + (lb - la) * j as f64 / n as f64).exp())
+            .collect();
+        Schedule {
+            ts,
+            kind: ScheduleKind::LogSnr,
+        }
+    }
+
+    /// Number of solver steps N.
+    pub fn n_steps(&self) -> usize {
+        self.ts.len() - 1
+    }
+
+    pub fn t_max(&self) -> f64 {
+        self.ts[0]
+    }
+
+    pub fn t_min(&self) -> f64 {
+        *self.ts.last().unwrap()
+    }
+
+    /// Refine this schedule by inserting `m` extra points per interval
+    /// following the *same* generator (paper §3.3): the teacher schedule of
+    /// `N(M+1)` steps shares every student node, so ground-truth states can
+    /// be read off by indexing every `(M+1)`-th teacher state.
+    pub fn refine(&self, m: usize) -> Schedule {
+        let n = self.n_steps() * (m + 1);
+        let refined = match self.kind {
+            ScheduleKind::Polynomial { rho } => {
+                Schedule::polynomial(n, self.t_min(), self.t_max(), rho)
+            }
+            ScheduleKind::Uniform => Schedule::uniform(n, self.t_min(), self.t_max()),
+            ScheduleKind::LogSnr => Schedule::log_snr(n, self.t_min(), self.t_max()),
+        };
+        refined
+    }
+
+    /// Smallest `m` such that `N(m+1) >= n_teacher` (paper §3.3), then the
+    /// actual refined teacher schedule.
+    pub fn teacher_for(&self, n_teacher: usize) -> (usize, Schedule) {
+        let n = self.n_steps();
+        let m = n_teacher.div_ceil(n).saturating_sub(1);
+        (m, self.refine(m))
+    }
+}
+
+/// EDM defaults used across the paper's experiments.
+pub const T_MIN_DEFAULT: f64 = 0.002;
+pub const T_MAX_DEFAULT: f64 = 80.0;
+pub const RHO_DEFAULT: f64 = 7.0;
+
+/// Convenience: the paper's polynomial-rho-7 grid for a given NFE-step count.
+pub fn default_schedule(n: usize) -> Schedule {
+    Schedule::polynomial(n, T_MIN_DEFAULT, T_MAX_DEFAULT, RHO_DEFAULT)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn polynomial_endpoints() {
+        let s = Schedule::polynomial(10, 0.002, 80.0, 7.0);
+        assert_eq!(s.ts.len(), 11);
+        assert!((s.t_max() - 80.0).abs() < 1e-9);
+        assert!((s.t_min() - 0.002).abs() < 1e-12);
+        for w in s.ts.windows(2) {
+            assert!(w[0] > w[1], "must be strictly descending: {:?}", w);
+        }
+    }
+
+    #[test]
+    fn polynomial_matches_formula() {
+        let (n, rho, t0, tn) = (8, 7.0, 0.002f64, 80.0f64);
+        let s = Schedule::polynomial(n, t0, tn, rho);
+        for i in 0..=n {
+            let want =
+                (t0.powf(1.0 / rho) + i as f64 / n as f64 * (tn.powf(1.0 / rho) - t0.powf(1.0 / rho)))
+                    .powf(rho);
+            let got = s.ts[n - i];
+            assert!((got - want).abs() < 1e-9 * want.max(1.0), "i={i}");
+        }
+    }
+
+    #[test]
+    fn refine_shares_nodes() {
+        let s = Schedule::polynomial(5, 0.002, 80.0, 7.0);
+        let r = s.refine(9); // teacher with 50 steps
+        assert_eq!(r.n_steps(), 50);
+        for (j, &t) in s.ts.iter().enumerate() {
+            let tr = r.ts[j * 10];
+            assert!(
+                (t - tr).abs() < 1e-9 * t.max(1e-3),
+                "node {j}: {t} vs {tr}"
+            );
+        }
+    }
+
+    #[test]
+    fn teacher_for_covers_requested_nfe() {
+        let s = default_schedule(6);
+        let (m, teacher) = s.teacher_for(100);
+        assert!(6 * (m + 1) >= 100);
+        assert_eq!(teacher.n_steps(), 6 * (m + 1));
+        // m is minimal.
+        assert!(6 * m < 100);
+    }
+
+    #[test]
+    fn uniform_and_logsnr() {
+        let u = Schedule::uniform(4, 1.0, 9.0);
+        assert_eq!(u.ts, vec![9.0, 7.0, 5.0, 3.0, 1.0]);
+        let g = Schedule::log_snr(2, 1.0, 100.0);
+        assert!((g.ts[1] - 10.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,522 @@
+//! Exact analytic score / noise prediction for Gaussian-mixture data.
+//!
+//! For data `q(x0) = Σ_k w_k N(mu_k, Sigma_k)` the noised marginal at EDM
+//! time `t` is `q_t(x) = Σ_k w_k N(mu_k, Sigma_k + t² I)` and
+//!
+//! ```text
+//! score(x,t) = Σ_k r_k(x,t) (Sigma_k + t² I)^{-1} (mu_k − x)
+//! eps(x,t)   = −t · score(x,t)
+//! ```
+//!
+//! with softmax responsibilities `r_k`. Per-mode covariances are stored by
+//! eigendecomposition, so `(Sigma_k + t² I)^{-1} v = Uᵀ diag(1/(lam+t²)) U v`
+//! costs two (d×d)·(d) products per mode — the analytic-model hot path that
+//! the `solver_step` bench profiles.
+//!
+//! This is the same Gaussian(-score) family the paper's theory section
+//! (§3.4, Wang & Vastola 2023/2024) uses; it reproduces exactly the
+//! geometric trajectory structure PAS exploits.
+
+use super::EpsModel;
+use crate::data::{Dataset, GmmSpec, Mode};
+
+/// Internal per-mode evaluation representation. Dense covariances whose
+/// eigen-spectrum ends in a flat isotropic tail (all our synthetic
+/// datasets: low-rank structure + `floor * I`) are evaluated in truncated
+/// form via the Woodbury split
+///
+/// `(Sigma + t²I)^{-1} = (tail+t²)^{-1} I  +  U_rᵀ [diag(1/(lam+t²)) − (tail+t²)^{-1}] U_r`
+///
+/// which costs O(r·d) per sample instead of O(d²) — the headline §Perf
+/// optimization (16x on latent256).
+enum ModeEval {
+    /// `Sigma = var * I`.
+    Iso { var: f64 },
+    /// Flat tail + r significant eigenpairs (rows of `u_r`).
+    LowRank {
+        tail: f64,
+        lam: Vec<f64>,
+        u_r: Vec<f64>,
+        r: usize,
+    },
+    /// Full eigendecomposition (no exploitable tail).
+    Full { lam: Vec<f64>, u: Vec<f64> },
+}
+
+impl ModeEval {
+    fn build(mode: &Mode) -> ModeEval {
+        let d = mode.dim();
+        match &mode.u {
+            None => ModeEval::Iso { var: mode.lam[0] },
+            Some(u) => {
+                // Detect a flat isotropic tail in the (descending) spectrum.
+                let lam_min = *mode.lam.last().unwrap();
+                let scale = mode.lam[0].abs() + 1.0;
+                let mut r = d;
+                while r > 0 && (mode.lam[r - 1] - lam_min).abs() <= 1e-9 * scale {
+                    r -= 1;
+                }
+                if r <= d / 2 {
+                    let tail = mode.lam[r..].iter().sum::<f64>() / (d - r).max(1) as f64;
+                    ModeEval::LowRank {
+                        tail,
+                        lam: mode.lam[..r].to_vec(),
+                        u_r: u[..r * d].to_vec(),
+                        r,
+                    }
+                } else {
+                    ModeEval::Full {
+                        lam: mode.lam.clone(),
+                        u: u.clone(),
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Analytic GMM eps-model over a subset of modes.
+pub struct AnalyticEps {
+    modes: Vec<Mode>,
+    evals: Vec<ModeEval>,
+    /// Precomputed log-weights.
+    logw: Vec<f64>,
+    d: usize,
+    name: String,
+}
+
+impl AnalyticEps {
+    pub fn new(name: impl Into<String>, modes: Vec<Mode>) -> Box<AnalyticEps> {
+        assert!(!modes.is_empty());
+        let d = modes[0].dim();
+        let wsum: f64 = modes.iter().map(|m| m.weight).sum();
+        let logw = modes.iter().map(|m| (m.weight / wsum).ln()).collect();
+        let evals = modes.iter().map(ModeEval::build).collect();
+        Box::new(AnalyticEps {
+            modes,
+            evals,
+            logw,
+            d,
+            name: name.into(),
+        })
+    }
+
+    /// Unconditional model over all modes of the dataset.
+    pub fn from_dataset(ds: &Dataset) -> Box<AnalyticEps> {
+        Self::from_spec(&ds.spec)
+    }
+
+    pub fn from_spec(spec: &GmmSpec) -> Box<AnalyticEps> {
+        Self::new(spec.name.clone(), spec.modes.clone())
+    }
+
+    /// Conditional model restricted to modes with `label`.
+    pub fn conditional(spec: &GmmSpec, label: usize) -> Box<AnalyticEps> {
+        let modes: Vec<Mode> = spec
+            .modes
+            .iter()
+            .filter(|m| m.label == label)
+            .cloned()
+            .collect();
+        assert!(!modes.is_empty(), "no modes for label {label}");
+        Self::new(format!("{}[class={label}]", spec.name), modes)
+    }
+
+    /// Per-sample eps evaluation into `out` (length d); returns log q_t(x)
+    /// up to the dimension-independent constant (useful for tests).
+    fn eval_one(&self, x: &[f64], t: f64, out: &mut [f64], scratch: &mut Scratch) -> f64 {
+        let d = self.d;
+        let t2 = t * t;
+        let k_modes = self.modes.len();
+        // Pass 1: per-mode log densities and the precision-weighted
+        // residuals s_k = (Sigma_k + t²I)^{-1} (mu_k − x).
+        scratch.ensure(k_modes, d);
+        let mut max_lp = f64::NEG_INFINITY;
+        for (k, mode) in self.modes.iter().enumerate() {
+            let sk = &mut scratch.smat[k * d..(k + 1) * d];
+            let lp = match &self.evals[k] {
+                ModeEval::Iso { var } => {
+                    // Isotropic: s = (mu − x)/(var+t²).
+                    let denom = var + t2;
+                    let mut q = 0.0;
+                    for j in 0..d {
+                        let r = mode.mean[j] - x[j];
+                        sk[j] = r / denom;
+                        q += r * r;
+                    }
+                    self.logw[k] - 0.5 * (q / denom + d as f64 * denom.ln())
+                }
+                ModeEval::LowRank { tail, lam, u_r, r } => {
+                    // Woodbury split around the flat tail: only r rows of U
+                    // are touched — O(r·d) per sample.
+                    let base = 1.0 / (tail + t2);
+                    let resid = &mut scratch.y[..d];
+                    let mut q0 = 0.0;
+                    for j in 0..d {
+                        let rj = x[j] - mode.mean[j];
+                        resid[j] = rj;
+                        q0 += rj * rj;
+                        sk[j] = -base * rj;
+                    }
+                    let mut q = base * q0;
+                    let mut logdet = (d - r) as f64 * (tail + t2).ln();
+                    for c in 0..*r {
+                        let row = &u_r[c * d..(c + 1) * d];
+                        let yc = crate::tensor::dot(row, resid);
+                        let denom = lam[c] + t2;
+                        let delta = 1.0 / denom - base;
+                        q += yc * yc * delta;
+                        logdet += denom.ln();
+                        let coef = yc * delta;
+                        if coef != 0.0 {
+                            for j in 0..d {
+                                sk[j] -= coef * row[j];
+                            }
+                        }
+                    }
+                    self.logw[k] - 0.5 * (q + logdet)
+                }
+                ModeEval::Full { lam, u } => {
+                    // y = U (x − mu) in eigenbasis rows.
+                    let y = &mut scratch.y[..d];
+                    for (c, yc) in y.iter_mut().enumerate() {
+                        let row = &u[c * d..(c + 1) * d];
+                        let mut s = 0.0;
+                        for j in 0..d {
+                            s += row[j] * (x[j] - mode.mean[j]);
+                        }
+                        *yc = s;
+                    }
+                    // Quadratic form + logdet; z = y/(lam+t²).
+                    let mut q = 0.0;
+                    let mut logdet = 0.0;
+                    let z = &mut scratch.z[..d];
+                    for c in 0..d {
+                        let denom = lam[c] + t2;
+                        z[c] = y[c] / denom;
+                        q += y[c] * z[c];
+                        logdet += denom.ln();
+                    }
+                    // s = −Uᵀ z (note mu − x = −(x − mu)).
+                    sk.fill(0.0);
+                    for c in 0..d {
+                        let zc = z[c];
+                        if zc == 0.0 {
+                            continue;
+                        }
+                        let row = &u[c * d..(c + 1) * d];
+                        for j in 0..d {
+                            sk[j] -= zc * row[j];
+                        }
+                    }
+                    self.logw[k] - 0.5 * (q + logdet)
+                }
+            };
+            scratch.lp[k] = lp;
+            if lp > max_lp {
+                max_lp = lp;
+            }
+        }
+        // Pass 2: softmax-combine.
+        let mut z = 0.0;
+        for k in 0..k_modes {
+            scratch.lp[k] = (scratch.lp[k] - max_lp).exp();
+            z += scratch.lp[k];
+        }
+        out.fill(0.0);
+        for k in 0..k_modes {
+            let r = scratch.lp[k] / z;
+            if r < 1e-300 {
+                continue;
+            }
+            let sk = &scratch.smat[k * d..(k + 1) * d];
+            for j in 0..d {
+                out[j] += r * sk[j];
+            }
+        }
+        // out currently holds score(x,t); eps = −t · score.
+        for v in out.iter_mut() {
+            *v *= -t;
+        }
+        max_lp + z.ln()
+    }
+
+    /// Log marginal density (up to the `−d/2·log 2π` constant). Exposed for
+    /// tests and for mode-interpolation experiments.
+    pub fn log_density(&self, x: &[f64], t: f64) -> f64 {
+        let mut out = vec![0.0; self.d];
+        let mut scratch = Scratch::new(self.modes.len(), self.d);
+        self.eval_one(x, t, &mut out, &mut scratch)
+    }
+}
+
+struct Scratch {
+    lp: Vec<f64>,
+    smat: Vec<f64>,
+    y: Vec<f64>,
+    z: Vec<f64>,
+}
+
+impl Scratch {
+    fn new(k: usize, d: usize) -> Scratch {
+        Scratch {
+            lp: vec![0.0; k],
+            smat: vec![0.0; k * d],
+            y: vec![0.0; d],
+            z: vec![0.0; d],
+        }
+    }
+
+    fn ensure(&mut self, k: usize, d: usize) {
+        if self.lp.len() < k {
+            self.lp.resize(k, 0.0);
+        }
+        if self.smat.len() < k * d {
+            self.smat.resize(k * d, 0.0);
+        }
+        if self.y.len() < d {
+            self.y.resize(d, 0.0);
+            self.z.resize(d, 0.0);
+        }
+    }
+}
+
+/// Worker threads for batched evaluation: `PAS_THREADS` env override, else
+/// the machine's available parallelism (capped at 16).
+fn eval_threads() -> usize {
+    static CACHED: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
+    *CACHED.get_or_init(|| {
+        if let Ok(v) = std::env::var("PAS_THREADS") {
+            if let Ok(n) = v.parse::<usize>() {
+                return n.max(1);
+            }
+        }
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+            .min(16)
+    })
+}
+
+impl AnalyticEps {
+    fn eval_range(&self, x: &[f64], t: f64, out: &mut [f64]) {
+        let d = self.d;
+        let n = x.len() / d;
+        let mut scratch = Scratch::new(self.modes.len(), d);
+        for i in 0..n {
+            self.eval_one(
+                &x[i * d..(i + 1) * d],
+                t,
+                &mut out[i * d..(i + 1) * d],
+                &mut scratch,
+            );
+        }
+    }
+}
+
+impl EpsModel for AnalyticEps {
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn eval_batch(&self, x: &[f64], n: usize, t: f64, out: &mut [f64]) {
+        assert_eq!(x.len(), n * self.d);
+        assert_eq!(out.len(), n * self.d);
+        let threads = eval_threads();
+        // Parallel fan-out over samples when the batch is worth it
+        // (perf pass, EXPERIMENTS.md §Perf: the analytic eps eval is the
+        // whole-stack bottleneck on every table).
+        if threads > 1 && n >= 4 * threads && n * self.d >= 4096 {
+            let chunk_rows = n.div_ceil(threads);
+            let d = self.d;
+            std::thread::scope(|s| {
+                let mut rem_x = x;
+                let mut rem_out = &mut *out;
+                for _ in 0..threads {
+                    let take = chunk_rows.min(rem_x.len() / d);
+                    if take == 0 {
+                        break;
+                    }
+                    let (cx, rx) = rem_x.split_at(take * d);
+                    let (co, ro) = rem_out.split_at_mut(take * d);
+                    rem_x = rx;
+                    rem_out = ro;
+                    s.spawn(move || self.eval_range(cx, t, co));
+                }
+            });
+        } else {
+            self.eval_range(x, t, out);
+        }
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    /// Single isotropic Gaussian N(mu, v I): eps(x,t) = t (x − mu)/(v + t²).
+    #[test]
+    fn single_gaussian_closed_form() {
+        let mu = vec![1.0, -2.0, 0.5];
+        let v = 0.7;
+        let m = AnalyticEps::new("g", vec![Mode::isotropic(mu.clone(), v, 1.0, 0)]);
+        let x = vec![0.3, 0.1, -0.4];
+        let t = 2.5;
+        let eps = m.eval(&x, 1, t);
+        for j in 0..3 {
+            let want = t * (x[j] - mu[j]) / (v + t * t);
+            assert!((eps[j] - want).abs() < 1e-12, "{} vs {}", eps[j], want);
+        }
+    }
+
+    /// Full-covariance single mode must agree with the isotropic fast path
+    /// when Sigma is isotropic.
+    #[test]
+    fn full_matches_isotropic() {
+        let d = 5;
+        let mu = vec![0.2; d];
+        let v = 0.4;
+        let mut cov = vec![0.0; d * d];
+        for j in 0..d {
+            cov[j * d + j] = v;
+        }
+        let iso = AnalyticEps::new("i", vec![Mode::isotropic(mu.clone(), v, 1.0, 0)]);
+        let full = AnalyticEps::new("f", vec![Mode::full(mu, &cov, 1.0, 0)]);
+        let mut rng = Pcg64::seed(4);
+        let x = rng.normal_vec(d);
+        let a = iso.eval(&x, 1, 1.7);
+        let b = full.eval(&x, 1, 1.7);
+        for j in 0..d {
+            assert!((a[j] - b[j]).abs() < 1e-9);
+        }
+    }
+
+    /// eps must match the finite-difference gradient of log density:
+    /// eps = −t ∇ log q_t.
+    #[test]
+    fn matches_log_density_gradient() {
+        let spec = crate::data::generators::gmm2d();
+        let m = AnalyticEps::from_spec(&spec);
+        let x = vec![1.3, -0.7];
+        let t = 3.0;
+        let eps = m.eval(&x, 1, t);
+        let h = 1e-5;
+        for j in 0..2 {
+            let mut xp = x.clone();
+            let mut xm = x.clone();
+            xp[j] += h;
+            xm[j] -= h;
+            let g = (m.log_density(&xp, t) - m.log_density(&xm, t)) / (2.0 * h);
+            let want = -t * g;
+            assert!(
+                (eps[j] - want).abs() < 1e-5 * (1.0 + want.abs()),
+                "{} vs {}",
+                eps[j],
+                want
+            );
+        }
+    }
+
+    /// At large t, eps(x,t) ≈ x/t ⋅ t²/(t²+var) ≈ (x − mu_data)/t; sanity:
+    /// the prior direction dominates.
+    #[test]
+    fn large_t_limit() {
+        let spec = crate::data::generators::gmm2d();
+        let m = AnalyticEps::from_spec(&spec);
+        let t = 80.0;
+        let x = vec![t * 0.9, -t * 0.3];
+        let eps = m.eval(&x, 1, t);
+        for j in 0..2 {
+            let want = x[j] / t; // mixture mean ≈ 0, var ≪ t²
+            assert!((eps[j] - want).abs() < 0.05, "{} vs {}", eps[j], want);
+        }
+    }
+
+    /// Responsibilities: near one mode, eps points along that mode's pull.
+    #[test]
+    fn near_mode_attraction() {
+        let spec = crate::data::generators::gmm2d();
+        let m = AnalyticEps::from_spec(&spec);
+        // Mode 0 sits at (6, 0) with var 0.09.
+        let x = vec![6.3, 0.0];
+        let t = 0.05;
+        let eps = m.eval(&x, 1, t);
+        // eps ≈ t (x−mu)/(var+t²) > 0 in coordinate 0.
+        let want = t * 0.3 / (0.09 + t * t);
+        assert!((eps[0] - want).abs() < 1e-6);
+        assert!(eps[1].abs() < 1e-9);
+    }
+
+    /// The low-rank Woodbury fast path must match the dense eigen path
+    /// exactly (the latent256/gmm-hd64 modes are rank-r + floor·I by
+    /// construction).
+    #[test]
+    fn lowrank_fast_path_matches_dense() {
+        let mut rng = Pcg64::seed(21);
+        let d = 32;
+        // Rank-4 + floor covariance.
+        let mut cov = vec![0.0; d * d];
+        for j in 0..d {
+            cov[j * d + j] = 0.05;
+        }
+        for _ in 0..4 {
+            let v = rng.normal_vec(d);
+            for a in 0..d {
+                for b in 0..d {
+                    cov[a * d + b] += 0.8 * v[a] * v[b] / d as f64 * 4.0;
+                }
+            }
+        }
+        let mu = rng.normal_vec(d);
+        let mode = Mode::full(mu, &cov, 1.0, 0);
+        let m = AnalyticEps::new("lr", vec![mode.clone()]);
+        // Verify the fast path actually engaged.
+        assert!(matches!(m.evals[0], ModeEval::LowRank { .. }));
+        // Dense comparator: force Full by constructing a ModeEval manually.
+        let dense = AnalyticEps {
+            modes: vec![mode.clone()],
+            evals: vec![ModeEval::Full {
+                lam: mode.lam.clone(),
+                u: mode.u.clone().unwrap(),
+            }],
+            logw: vec![0.0],
+            d,
+            name: "dense".into(),
+        };
+        for trial in 0..5 {
+            let x = rng.normal_vec(d);
+            let t = 0.1 + trial as f64;
+            let fast = m.eval(&x, 1, t);
+            let slow = dense.eval(&x, 1, t);
+            for j in 0..d {
+                assert!(
+                    (fast[j] - slow[j]).abs() < 1e-9 * (1.0 + slow[j].abs()),
+                    "trial {trial} dim {j}: {} vs {}",
+                    fast[j],
+                    slow[j]
+                );
+            }
+            let lf = m.log_density(&x, t);
+            let ls = dense.log_density(&x, t);
+            assert!((lf - ls).abs() < 1e-8 * (1.0 + ls.abs()), "{lf} vs {ls}");
+        }
+    }
+
+    #[test]
+    fn batch_matches_single() {
+        let spec = crate::data::generators::checker2d();
+        let m = AnalyticEps::from_spec(&spec);
+        let mut rng = Pcg64::seed(8);
+        let x = rng.normal_vec(6);
+        let batch = m.eval(&x, 3, 1.0);
+        for i in 0..3 {
+            let single = m.eval(&x[i * 2..(i + 1) * 2], 1, 1.0);
+            assert_eq!(&batch[i * 2..(i + 1) * 2], single.as_slice());
+        }
+    }
+}

@@ -1,0 +1,70 @@
+//! NFE-counting wrapper: wraps any [`EpsModel`] and counts evaluations.
+//!
+//! Used by tests and benches to *prove* the NFE accounting of every solver
+//! (the paper's tables are all parameterized by NFE, so an off-by-one here
+//! would silently skew every comparison).
+
+use super::EpsModel;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+pub struct CountingEps<'a> {
+    pub inner: &'a dyn EpsModel,
+    count: AtomicUsize,
+}
+
+impl<'a> CountingEps<'a> {
+    pub fn new(inner: &'a dyn EpsModel) -> CountingEps<'a> {
+        CountingEps {
+            inner,
+            count: AtomicUsize::new(0),
+        }
+    }
+
+    /// Number of `eval_batch` calls so far (batch counts as one NFE: all
+    /// trajectories advance in lockstep, matching how the paper counts
+    /// model invocations per sample).
+    pub fn nfe(&self) -> usize {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn reset(&self) {
+        self.count.store(0, Ordering::Relaxed);
+    }
+}
+
+impl EpsModel for CountingEps<'_> {
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+
+    fn eval_batch(&self, x: &[f64], n: usize, t: f64, out: &mut [f64]) {
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.inner.eval_batch(x, n, t, out);
+    }
+
+    fn name(&self) -> &str {
+        self.inner.name()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::registry;
+    use crate::score::analytic::AnalyticEps;
+
+    #[test]
+    fn counts_calls() {
+        let ds = registry::get("gmm2d").unwrap();
+        let m = AnalyticEps::from_dataset(&ds);
+        let c = CountingEps::new(m.as_ref());
+        let x = vec![0.0; 4];
+        let mut out = vec![0.0; 4];
+        for _ in 0..5 {
+            c.eval_batch(&x, 2, 1.0, &mut out);
+        }
+        assert_eq!(c.nfe(), 5);
+        c.reset();
+        assert_eq!(c.nfe(), 0);
+    }
+}

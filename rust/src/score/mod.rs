@@ -1,0 +1,76 @@
+//! Noise-prediction (`eps_theta`) model abstraction.
+//!
+//! Everything on the sampling path talks to an [`EpsModel`]: the analytic
+//! Gaussian-mixture score (exact, used as both substrate and ground-truth
+//! oracle), the classifier-free-guidance wrapper for conditional datasets,
+//! and the PJRT-backed model that executes the AOT-compiled JAX denoiser
+//! ([`crate::score::pjrt`]).
+//!
+//! EDM convention throughout: `alpha_t = 1`, `sigma_t = t`, PF-ODE
+//! `dx/dt = eps(x, t)`, and `eps(x,t) = -t * score(x,t)` (Eq. 6–7).
+
+pub mod analytic;
+pub mod cfg;
+pub mod counting;
+pub mod pjrt;
+
+/// Batched noise-prediction network.
+pub trait EpsModel {
+    /// Data dimension D.
+    fn dim(&self) -> usize;
+
+    /// Evaluate `eps(x, t)` for a batch: `x` and `out` are `(n, d)`
+    /// row-major flat buffers; a single shared `t` (all solvers in this
+    /// crate advance the whole batch on one time grid).
+    fn eval_batch(&self, x: &[f64], n: usize, t: f64, out: &mut [f64]);
+
+    /// Human-readable identifier.
+    fn name(&self) -> &str;
+
+    /// Convenience: allocate-and-return variant.
+    fn eval(&self, x: &[f64], n: usize, t: f64) -> Vec<f64> {
+        let mut out = vec![0.0; x.len()];
+        self.eval_batch(x, n, t, &mut out);
+        out
+    }
+
+    /// Data prediction `x0(x,t) = x - t * eps(x,t)` (Eq. 6 with EDM
+    /// parameterization), used by data-prediction solvers (DPM-Solver++,
+    /// UniPC).
+    fn data_prediction(&self, x: &[f64], n: usize, t: f64) -> Vec<f64> {
+        let mut out = self.eval(x, n, t);
+        for i in 0..x.len() {
+            out[i] = x[i] - t * out[i];
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    struct Zero {
+        d: usize,
+    }
+
+    impl EpsModel for Zero {
+        fn dim(&self) -> usize {
+            self.d
+        }
+        fn eval_batch(&self, _x: &[f64], n: usize, _t: f64, out: &mut [f64]) {
+            assert_eq!(out.len(), n * self.d);
+            out.fill(0.0);
+        }
+        fn name(&self) -> &str {
+            "zero"
+        }
+    }
+
+    #[test]
+    fn data_prediction_identity_for_zero_eps() {
+        let m = Zero { d: 3 };
+        let x = vec![1.0, 2.0, 3.0];
+        assert_eq!(m.data_prediction(&x, 1, 5.0), x);
+    }
+}

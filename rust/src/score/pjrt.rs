@@ -1,0 +1,62 @@
+//! PJRT-backed eps model: the L3 view of the AOT-compiled JAX denoiser.
+//!
+//! The executable is lowered with a fixed batch `B`; calls with `n != B`
+//! are padded/tiled transparently (samplers batch trajectories, so the
+//! fixed shape is almost always hit exactly). f64 ↔ f32 conversion happens
+//! at this boundary — the network is trained and lowered in f32.
+
+use super::EpsModel;
+use crate::runtime::Executable;
+
+pub struct PjrtEps {
+    exe: Executable,
+    name: String,
+}
+
+impl PjrtEps {
+    pub fn new(exe: Executable) -> PjrtEps {
+        let name = format!("pjrt:{}@{}", exe.meta.name, exe.meta.dataset);
+        PjrtEps { exe, name }
+    }
+
+    pub fn batch(&self) -> usize {
+        self.exe.meta.batch
+    }
+}
+
+impl EpsModel for PjrtEps {
+    fn dim(&self) -> usize {
+        self.exe.meta.dim
+    }
+
+    fn eval_batch(&self, x: &[f64], n: usize, t: f64, out: &mut [f64]) {
+        let d = self.dim();
+        let b = self.batch();
+        assert_eq!(x.len(), n * d);
+        let mut xf = vec![0.0f32; b * d];
+        let tf = vec![t as f32; b];
+        let mut done = 0usize;
+        while done < n {
+            let take = (n - done).min(b);
+            for i in 0..take * d {
+                xf[i] = x[done * d + i] as f32;
+            }
+            // Pad the tail with copies of the last row (harmless).
+            for i in take * d..b * d {
+                xf[i] = xf[i % (take * d).max(1)];
+            }
+            let y = self
+                .exe
+                .eval_eps(&xf, &tf)
+                .expect("PJRT execution failed");
+            for i in 0..take * d {
+                out[done * d + i] = y[i] as f64;
+            }
+            done += take;
+        }
+    }
+
+    fn name(&self) -> &str {
+        &self.name
+    }
+}

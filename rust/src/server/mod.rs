@@ -1,0 +1,13 @@
+//! Batched sampling service (L3 "serving" path).
+//!
+//! A threaded coordinator in the vLLM-router mold, scaled to this system:
+//! clients submit sampling requests (`dataset, solver, nfe, n, pas?`);
+//! a **dynamic batcher** groups compatible requests (same model/solver/
+//! schedule/correction) into worker batches up to `max_batch`, bounded
+//! queues provide **backpressure**, and a worker pool drives the samplers.
+//! The TCP front-end speaks line-delimited JSON ([`protocol`]).
+
+pub mod protocol;
+pub mod service;
+
+pub use service::{Service, ServiceConfig, SamplingRequest, SamplingResponse};

@@ -1,0 +1,166 @@
+//! TCP front-end: line-delimited JSON over a listener socket.
+//!
+//! Request line:
+//! `{"dataset":"gmm2d","solver":"ddim","nfe":10,"n":16,"seed":1,"pas":false}`
+//!
+//! Response line:
+//! `{"id":1,"n":16,"dim":2,"nfe":10,"batched_with":3,"latency_ms":4.2,
+//!   "samples":[...]}` or `{"error":"..."}`.
+
+use super::service::{SamplingRequest, Service};
+use crate::util::json::Json;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+pub fn parse_request(line: &str) -> Result<SamplingRequest, String> {
+    let j = Json::parse(line)?;
+    Ok(SamplingRequest {
+        id: 0,
+        dataset: j
+            .get("dataset")
+            .and_then(|v| v.as_str())
+            .unwrap_or("gmm-hd64")
+            .to_string(),
+        solver: j
+            .get("solver")
+            .and_then(|v| v.as_str())
+            .unwrap_or("ddim")
+            .to_string(),
+        nfe: j.get("nfe").and_then(|v| v.as_usize()).unwrap_or(10),
+        n_samples: j.get("n").and_then(|v| v.as_usize()).unwrap_or(1).clamp(1, 4096),
+        seed: j.get("seed").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64,
+        use_pas: j.get("pas").and_then(|v| v.as_bool()).unwrap_or(false),
+    })
+}
+
+pub fn response_json(resp: &super::service::SamplingResponse) -> Json {
+    let mut o = Json::obj();
+    if let Some(e) = &resp.error {
+        o.set("error", Json::Str(e.clone()));
+        return o;
+    }
+    o.set("id", Json::Num(resp.id as f64))
+        .set("n", Json::Num(resp.n as f64))
+        .set("dim", Json::Num(resp.dim as f64))
+        .set("nfe", Json::Num(resp.nfe_spent as f64))
+        .set("batched_with", Json::Num(resp.batched_with as f64))
+        .set("latency_ms", Json::Num(resp.latency_ms))
+        .set("samples", Json::from_f64_slice(&resp.samples));
+    o
+}
+
+/// Serve until `stop` is set. Binds to `addr` (e.g. "127.0.0.1:7777");
+/// returns the bound address (useful with port 0 in tests).
+pub fn serve(
+    service: Arc<Service>,
+    addr: &str,
+    stop: Arc<AtomicBool>,
+) -> std::io::Result<std::net::SocketAddr> {
+    let listener = TcpListener::bind(addr)?;
+    let local = listener.local_addr()?;
+    listener.set_nonblocking(true)?;
+    std::thread::spawn(move || {
+        loop {
+            if stop.load(Ordering::Relaxed) {
+                break;
+            }
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    let svc = service.clone();
+                    std::thread::spawn(move || {
+                        let _ = handle_client(stream, &svc);
+                    });
+                }
+                Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(std::time::Duration::from_millis(10));
+                }
+                Err(_) => break,
+            }
+        }
+    });
+    Ok(local)
+}
+
+fn handle_client(stream: TcpStream, svc: &Service) -> std::io::Result<()> {
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let reply = match parse_request(&line) {
+            Ok(req) => match svc.call(req) {
+                Ok(resp) => response_json(&resp),
+                Err(e) => {
+                    let mut o = Json::obj();
+                    o.set("error", Json::Str(e));
+                    o
+                }
+            },
+            Err(e) => {
+                let mut o = Json::obj();
+                o.set("error", Json::Str(e));
+                o
+            }
+        };
+        writer.write_all(reply.to_string().as_bytes())?;
+        writer.write_all(b"\n")?;
+        writer.flush()?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::server::service::ServiceConfig;
+
+    #[test]
+    fn parses_request_line() {
+        let r = parse_request(r#"{"dataset":"gmm2d","solver":"ipndm","nfe":8,"n":4,"seed":3}"#)
+            .unwrap();
+        assert_eq!(r.dataset, "gmm2d");
+        assert_eq!(r.solver, "ipndm");
+        assert_eq!(r.nfe, 8);
+        assert_eq!(r.n_samples, 4);
+        assert!(!r.use_pas);
+    }
+
+    #[test]
+    fn end_to_end_over_tcp() {
+        let svc = Arc::new(Service::start(ServiceConfig::default(), Vec::new()));
+        let stop = Arc::new(AtomicBool::new(false));
+        let addr = serve(svc, "127.0.0.1:0", stop.clone()).unwrap();
+        let mut conn = TcpStream::connect(addr).unwrap();
+        conn.write_all(b"{\"dataset\":\"gmm2d\",\"solver\":\"ddim\",\"nfe\":6,\"n\":2,\"seed\":1}\n")
+            .unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let j = Json::parse(line.trim()).unwrap();
+        assert!(j.get("error").is_none(), "{line}");
+        assert_eq!(j.get("n").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(
+            j.get("samples").unwrap().as_arr().unwrap().len(),
+            4 // 2 samples x dim 2
+        );
+        stop.store(true, Ordering::Relaxed);
+    }
+
+    #[test]
+    fn malformed_request_gets_error() {
+        let svc = Arc::new(Service::start(ServiceConfig::default(), Vec::new()));
+        let stop = Arc::new(AtomicBool::new(false));
+        let addr = serve(svc, "127.0.0.1:0", stop.clone()).unwrap();
+        let mut conn = TcpStream::connect(addr).unwrap();
+        conn.write_all(b"not json\n").unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("error"));
+        stop.store(true, Ordering::Relaxed);
+    }
+}

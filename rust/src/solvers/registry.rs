@@ -1,0 +1,83 @@
+//! Name → solver registry (CLI, configs, experiment harness).
+
+use super::dpmpp::DpmPp;
+use super::euler::Euler;
+use super::multistep::{DeisTab, Ipndm};
+use super::rk::{Dpm2, Heun};
+use super::unipc::UniPc;
+use super::Solver;
+
+/// All registered solver names.
+pub const ALL: &[&str] = &[
+    "ddim",
+    "heun",
+    "dpm2",
+    "dpmpp2m",
+    "dpmpp3m",
+    "deis-tab3",
+    "unipc3m",
+    "ipndm1",
+    "ipndm2",
+    "ipndm3",
+    "ipndm4",
+    "ipndm", // alias for the paper's default order 3
+];
+
+/// Look up a solver by name.
+pub fn get(name: &str) -> Option<Box<dyn Solver>> {
+    Some(match name {
+        "ddim" | "euler" => Box::new(Euler),
+        "heun" => Box::new(Heun),
+        "dpm2" => Box::new(Dpm2),
+        "dpmpp2m" => Box::new(DpmPp::new(2)),
+        "dpmpp3m" => Box::new(DpmPp::new(3)),
+        "deis-tab1" => Box::new(DeisTab::new(1)),
+        "deis-tab2" => Box::new(DeisTab::new(2)),
+        "deis-tab3" => Box::new(DeisTab::new(3)),
+        "unipc1m" => Box::new(UniPc::new(1)),
+        "unipc2m" => Box::new(UniPc::new(2)),
+        "unipc3m" => Box::new(UniPc::new(3)),
+        "ipndm1" => Box::new(Ipndm::new(1)),
+        "ipndm2" => Box::new(Ipndm::new(2)),
+        "ipndm3" | "ipndm" => Box::new(Ipndm::new(3)),
+        "ipndm4" => Box::new(Ipndm::new(4)),
+        _ => return None,
+    })
+}
+
+/// Solvers PAS can correct (those exposing a linear `gamma`): the paper
+/// applies PAS to DDIM and iPNDM; DEIS and DPM++ also qualify here.
+pub fn supports_pas(name: &str) -> bool {
+    matches!(
+        name,
+        "ddim" | "euler" | "ipndm" | "ipndm1" | "ipndm2" | "ipndm3" | "ipndm4"
+            | "deis-tab1" | "deis-tab2" | "deis-tab3" | "dpmpp2m" | "dpmpp3m"
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_resolve() {
+        for name in ALL {
+            let s = get(name).unwrap_or_else(|| panic!("missing {name}"));
+            assert!(!s.name().is_empty());
+        }
+        assert!(get("nope").is_none());
+    }
+
+    #[test]
+    fn alias_matches_order3() {
+        assert_eq!(get("ipndm").unwrap().name(), "ipndm3");
+    }
+
+    #[test]
+    fn pas_support_flags() {
+        assert!(supports_pas("ddim"));
+        assert!(supports_pas("ipndm"));
+        assert!(!supports_pas("heun"));
+        assert!(!supports_pas("unipc3m"));
+    }
+}

@@ -1,0 +1,164 @@
+//! Single-step Runge–Kutta style solvers: Heun's 2nd (EDM) and
+//! DPM-Solver-2. Both spend 2 NFE per step, hence the "\\" cells at odd
+//! NFE in the paper's tables — `steps_for_nfe` returns `None` there.
+
+use super::{Solver, StepCtx};
+use crate::score::EpsModel;
+
+/// Heun's 2nd order solver (Karras et al. 2022): Euler predictor followed
+/// by a trapezoidal correction. Used in this repo mainly as the *teacher*
+/// for ground-truth trajectories (paper §4.1 uses Heun with 100 NFE).
+pub struct Heun;
+
+impl Solver for Heun {
+    fn name(&self) -> &str {
+        "heun"
+    }
+
+    fn evals_per_step(&self) -> usize {
+        2
+    }
+
+    fn gamma(&self, _ctx: &StepCtx<'_>) -> Option<f64> {
+        None // second eval depends on d nonlinearly through x_pred
+    }
+
+    fn step(
+        &self,
+        model: &dyn EpsModel,
+        ctx: &StepCtx<'_>,
+        x: &[f64],
+        d: &[f64],
+        n: usize,
+        out: &mut [f64],
+    ) {
+        let h = ctx.h();
+        // Predictor.
+        for i in 0..x.len() {
+            out[i] = x[i] + h * d[i];
+        }
+        // Corrector.
+        let mut d2 = vec![0.0; x.len()];
+        model.eval_batch(out, n, ctx.t_next, &mut d2);
+        for i in 0..x.len() {
+            out[i] = x[i] + 0.5 * h * (d[i] + d2[i]);
+        }
+    }
+}
+
+/// DPM-Solver-2 (Lu et al. 2022a) with midpoint ratio r = 1/2. In the EDM
+/// eps form with `lambda = -ln t`, the lambda-midpoint is the geometric
+/// mean `t_mid = sqrt(t t')`:
+///
+/// ```text
+/// x_mid = x + (t_mid − t) eps(x, t)
+/// x'    = x + (t' − t)    eps(x_mid, t_mid)
+/// ```
+pub struct Dpm2;
+
+impl Solver for Dpm2 {
+    fn name(&self) -> &str {
+        "dpm2"
+    }
+
+    fn evals_per_step(&self) -> usize {
+        2
+    }
+
+    fn gamma(&self, _ctx: &StepCtx<'_>) -> Option<f64> {
+        None
+    }
+
+    fn step(
+        &self,
+        model: &dyn EpsModel,
+        ctx: &StepCtx<'_>,
+        x: &[f64],
+        d: &[f64],
+        n: usize,
+        out: &mut [f64],
+    ) {
+        let t_mid = (ctx.t * ctx.t_next).sqrt();
+        let mut x_mid = vec![0.0; x.len()];
+        for i in 0..x.len() {
+            x_mid[i] = x[i] + (t_mid - ctx.t) * d[i];
+        }
+        let mut d_mid = vec![0.0; x.len()];
+        model.eval_batch(&x_mid, n, t_mid, &mut d_mid);
+        let h = ctx.h();
+        for i in 0..x.len() {
+            out[i] = x[i] + h * d_mid[i];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::Schedule;
+    use crate::score::EpsModel;
+    use crate::solvers::{euler::Euler, run_solver, Solver};
+
+    /// Curved test ODE: eps(x,t) = t x / (1 + t²) — the unit-Gaussian
+    /// score, with exact solution x(t') = x(t) sqrt((1+t'²)/(1+t²)).
+    /// (Unlike eps = x/t, Euler is NOT exact on this one.)
+    struct CurvedEps;
+    impl EpsModel for CurvedEps {
+        fn dim(&self) -> usize {
+            1
+        }
+        fn eval_batch(&self, x: &[f64], _n: usize, t: f64, out: &mut [f64]) {
+            for i in 0..x.len() {
+                out[i] = t * x[i] / (1.0 + t * t);
+            }
+        }
+        fn name(&self) -> &str {
+            "curved"
+        }
+    }
+
+    fn exact(x: f64, t_from: f64, t_to: f64) -> f64 {
+        x * ((1.0 + t_to * t_to) / (1.0 + t_from * t_from)).sqrt()
+    }
+
+    #[test]
+    fn nfe_accounting() {
+        assert_eq!(Heun.steps_for_nfe(10), Some(5));
+        assert_eq!(Heun.steps_for_nfe(5), None);
+        assert_eq!(Dpm2.steps_for_nfe(8), Some(4));
+        assert_eq!(Dpm2.steps_for_nfe(7), None);
+    }
+
+    #[test]
+    fn second_order_beats_euler_at_equal_steps() {
+        let sched = Schedule::log_snr(10, 1.0, 10.0);
+        let want = exact(10.0, 10.0, 1.0);
+        let e = run_solver(&Euler, &CurvedEps, &[10.0], 1, &sched, None);
+        let h = run_solver(&Heun, &CurvedEps, &[10.0], 1, &sched, None);
+        let d2 = run_solver(&Dpm2, &CurvedEps, &[10.0], 1, &sched, None);
+        let err = |v: f64| (v - want).abs();
+        assert!(err(h.x0[0]) < err(e.x0[0]) * 0.5, "heun {} euler {}", h.x0[0], e.x0[0]);
+        assert!(err(d2.x0[0]) < err(e.x0[0]) * 0.5, "dpm2 {} euler {}", d2.x0[0], e.x0[0]);
+    }
+
+    #[test]
+    fn nfe_spent_matches_declared() {
+        let sched = Schedule::log_snr(4, 1.0, 10.0);
+        let run = run_solver(&Heun, &CurvedEps, &[10.0], 1, &sched, None);
+        assert_eq!(run.nfe, 8);
+    }
+
+    /// Heun converges at order 2: quartering the step size should cut the
+    /// error by ~16x (we assert at least 8x to be robust).
+    #[test]
+    fn heun_convergence_order() {
+        let want = exact(10.0, 10.0, 1.0);
+        let err = |n: usize| {
+            let sched = Schedule::log_snr(n, 1.0, 10.0);
+            (run_solver(&Heun, &CurvedEps, &[10.0], 1, &sched, None).x0[0] - want).abs()
+        };
+        let e1 = err(8);
+        let e2 = err(32);
+        assert!(e2 < e1 / 8.0, "e(8)={e1} e(32)={e2}");
+    }
+}

@@ -1,0 +1,266 @@
+//! Row-major f64 batch/matrix primitives.
+//!
+//! Everything on the L3 coordinator path works on flat `&[f64]` buffers with
+//! explicit `(rows, cols)` shapes — no generic tensor machinery, just the
+//! handful of dense ops the solvers, PCA and metrics need, written so the
+//! hot loops vectorize.
+
+/// A dense row-major matrix / batch of row vectors.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Mat {
+        assert_eq!(data.len(), rows * cols, "shape mismatch");
+        Mat { rows, cols, data }
+    }
+
+    pub fn eye(n: usize) -> Mat {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f64) {
+        self.data[i * self.cols + j] = v;
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t.data[j * self.rows + i] = self.data[i * self.cols + j];
+            }
+        }
+        t
+    }
+
+    /// `self * other`, blocked ikj loop (good cache behaviour, autovectorizes).
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let mut out = Mat::zeros(self.rows, other.cols);
+        matmul_into(
+            &self.data,
+            self.rows,
+            self.cols,
+            &other.data,
+            other.cols,
+            &mut out.data,
+        );
+        out
+    }
+}
+
+/// `c[m,n] += a[m,k] * b[k,n]` over flat row-major buffers (c must be zeroed
+/// by the caller when a fresh product is wanted).
+#[inline]
+pub fn matmul_acc(a: &[f64], m: usize, k: usize, b: &[f64], n: usize, c: &mut [f64]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        for (p, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b[p * n..(p + 1) * n];
+            for (cv, &bv) in crow.iter_mut().zip(brow.iter()) {
+                *cv += av * bv;
+            }
+        }
+    }
+}
+
+/// `c = a * b` over flat buffers.
+#[inline]
+pub fn matmul_into(a: &[f64], m: usize, k: usize, b: &[f64], n: usize, c: &mut [f64]) {
+    c.fill(0.0);
+    matmul_acc(a, m, k, b, n, c);
+}
+
+/// Dot product.
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut s = 0.0;
+    for i in 0..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// Euclidean norm.
+#[inline]
+pub fn norm2(a: &[f64]) -> f64 {
+    dot(a, a).sqrt()
+}
+
+/// `y += alpha * x`.
+#[inline]
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for i in 0..x.len() {
+        y[i] += alpha * x[i];
+    }
+}
+
+/// `y = x`.
+#[inline]
+pub fn copy(x: &[f64], y: &mut [f64]) {
+    y.copy_from_slice(x);
+}
+
+/// `x *= alpha`.
+#[inline]
+pub fn scale(alpha: f64, x: &mut [f64]) {
+    for v in x.iter_mut() {
+        *v *= alpha;
+    }
+}
+
+/// Sum of |a - b| over the slice.
+#[inline]
+pub fn l1_dist(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut s = 0.0;
+    for i in 0..a.len() {
+        s += (a[i] - b[i]).abs();
+    }
+    s
+}
+
+/// Squared L2 distance.
+#[inline]
+pub fn l2_dist_sq(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut s = 0.0;
+    for i in 0..a.len() {
+        let d = a[i] - b[i];
+        s += d * d;
+    }
+    s
+}
+
+/// Column means of an (n, d) batch.
+pub fn col_means(x: &[f64], n: usize, d: usize) -> Vec<f64> {
+    let mut mu = vec![0.0; d];
+    for i in 0..n {
+        axpy(1.0, &x[i * d..(i + 1) * d], &mut mu);
+    }
+    scale(1.0 / n.max(1) as f64, &mut mu);
+    mu
+}
+
+/// Sample covariance (biased, 1/n) of an (n, d) batch; returns d*d row-major.
+pub fn covariance(x: &[f64], n: usize, d: usize) -> Vec<f64> {
+    let mu = col_means(x, n, d);
+    let mut cov = vec![0.0; d * d];
+    let mut cent = vec![0.0; d];
+    for i in 0..n {
+        let row = &x[i * d..(i + 1) * d];
+        for j in 0..d {
+            cent[j] = row[j] - mu[j];
+        }
+        for a in 0..d {
+            let ca = cent[a];
+            if ca == 0.0 {
+                continue;
+            }
+            let out = &mut cov[a * d..(a + 1) * d];
+            for b in 0..d {
+                out[b] += ca * cent[b];
+            }
+        }
+    }
+    scale(1.0 / n.max(1) as f64, &mut cov);
+    cov
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_small() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Mat::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_rect() {
+        let a = Mat::from_vec(2, 3, vec![1.0, 0.0, 2.0, 0.0, 1.0, -1.0]);
+        let b = Mat::from_vec(3, 1, vec![3.0, 4.0, 5.0]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![13.0, -1.0]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let a = Mat::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn identity_is_neutral() {
+        let a = Mat::from_vec(3, 3, (0..9).map(|x| x as f64).collect());
+        assert_eq!(a.matmul(&Mat::eye(3)), a);
+        assert_eq!(Mat::eye(3).matmul(&a), a);
+    }
+
+    #[test]
+    fn norms_and_dists() {
+        assert_eq!(norm2(&[3.0, 4.0]), 5.0);
+        assert_eq!(l1_dist(&[1.0, -1.0], &[0.0, 1.0]), 3.0);
+        assert_eq!(l2_dist_sq(&[1.0, 2.0], &[0.0, 0.0]), 5.0);
+    }
+
+    #[test]
+    fn covariance_of_known_data() {
+        // x = {(1,0),(−1,0),(0,2),(0,−2)} → mean 0, cov diag(0.5, 2).
+        let x = vec![1.0, 0.0, -1.0, 0.0, 0.0, 2.0, 0.0, -2.0];
+        let c = covariance(&x, 4, 2);
+        assert!((c[0] - 0.5).abs() < 1e-12);
+        assert!((c[3] - 2.0).abs() < 1e-12);
+        assert!(c[1].abs() < 1e-12 && c[2].abs() < 1e-12);
+    }
+
+    #[test]
+    fn col_means_works() {
+        let x = vec![1.0, 2.0, 3.0, 4.0];
+        assert_eq!(col_means(&x, 2, 2), vec![2.0, 3.0]);
+    }
+}

@@ -1,0 +1,166 @@
+//! Trajectory generation: prior draws, teacher (ground-truth) runs, and
+//! the truncation-error analysis behind Figure 3 ("S"-shaped error).
+
+use crate::schedule::Schedule;
+use crate::score::EpsModel;
+use crate::solvers::{run_solver, Solver};
+use crate::tensor::l2_dist_sq;
+use crate::util::rng::Pcg64;
+
+/// Draw `n` prior samples `x_T ~ N(0, T^2 I)` (EDM prior).
+pub fn sample_prior(rng: &mut Pcg64, n: usize, dim: usize, t_max: f64) -> Vec<f64> {
+    let mut x = rng.normal_vec(n * dim);
+    crate::tensor::scale(t_max, &mut x);
+    x
+}
+
+/// Ground-truth trajectories for a student schedule (paper §3.3).
+///
+/// The teacher runs `teacher_nfe` model evaluations on the refined grid
+/// that shares every student node; the ground-truth states are read off by
+/// indexing every `(M+1)`-th teacher state.
+pub struct GroundTruth {
+    /// Per student node `ts[0..=N]`: states (n, d) flattened.
+    pub xs: Vec<Vec<f64>>,
+    pub n: usize,
+    pub dim: usize,
+    /// NFE the teacher actually spent.
+    pub teacher_nfe: usize,
+}
+
+/// Generate ground-truth trajectories with an arbitrary teacher solver.
+///
+/// `teacher_nfe` is a *budget* in model evaluations: the refined grid gets
+/// `N(M+1)` steps with `M` minimal so that `N(M+1) * evals_per_step >=
+/// teacher_nfe` is representable — in practice Heun/100 on a 10-step
+/// student grid refines by M=4 (50 steps × 2 evals).
+pub fn ground_truth(
+    teacher: &dyn Solver,
+    model: &dyn EpsModel,
+    x_t: &[f64],
+    n: usize,
+    student: &Schedule,
+    teacher_nfe: usize,
+) -> GroundTruth {
+    let steps_budget = teacher_nfe / teacher.evals_per_step();
+    assert!(steps_budget >= student.n_steps(), "teacher budget too small");
+    let (m, fine) = student.teacher_for(steps_budget);
+    let run = run_solver(teacher, model, x_t, n, &fine, None);
+    let stride = m + 1;
+    let xs = (0..=student.n_steps())
+        .map(|j| run.xs[j * stride].clone())
+        .collect();
+    GroundTruth {
+        xs,
+        n,
+        dim: model.dim(),
+        teacher_nfe: run.nfe,
+    }
+}
+
+/// Per-node mean L2 distance between a student run's states and the ground
+/// truth — the cumulative truncation-error curve of Figure 3. Entry `j`
+/// corresponds to node `ts[j]` (entry 0 is always 0: shared prior draw).
+pub fn truncation_error_curve(student_xs: &[Vec<f64>], gt: &GroundTruth) -> Vec<f64> {
+    assert_eq!(student_xs.len(), gt.xs.len());
+    let (n, d) = (gt.n, gt.dim);
+    student_xs
+        .iter()
+        .zip(gt.xs.iter())
+        .map(|(a, b)| {
+            let mut s = 0.0;
+            for i in 0..n {
+                s += l2_dist_sq(&a[i * d..(i + 1) * d], &b[i * d..(i + 1) * d]).sqrt();
+            }
+            s / n as f64
+        })
+        .collect()
+}
+
+/// Quantify the "S"-shape of a cumulative error curve: returns
+/// `(max_step_increase_position_fraction, early_fraction, late_fraction)`
+/// where early/late fractions are the share of total error growth in the
+/// first/last third of steps. An S-shape has a mid-trajectory bulge:
+/// `early + late < ~0.6` of total growth.
+pub fn s_shape_stats(curve: &[f64]) -> (f64, f64, f64) {
+    let n = curve.len() - 1;
+    let total = curve[n] - curve[0];
+    if total <= 0.0 {
+        return (0.0, 0.0, 0.0);
+    }
+    let mut max_inc = 0.0;
+    let mut max_pos = 0;
+    for j in 0..n {
+        let inc = curve[j + 1] - curve[j];
+        if inc > max_inc {
+            max_inc = inc;
+            max_pos = j;
+        }
+    }
+    let third = n / 3;
+    let early = (curve[third] - curve[0]) / total;
+    let late = (curve[n] - curve[n - third]) / total;
+    (max_pos as f64 / n as f64, early, late)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::registry::get;
+    use crate::schedule::default_schedule;
+    use crate::score::analytic::AnalyticEps;
+    use crate::solvers::registry as solvers;
+
+    #[test]
+    fn prior_scale() {
+        let mut rng = Pcg64::seed(1);
+        let x = sample_prior(&mut rng, 2000, 2, 80.0);
+        let sd = crate::util::std_dev(&x);
+        assert!((sd - 80.0).abs() < 2.0, "{sd}");
+    }
+
+    #[test]
+    fn ground_truth_shares_prior_and_is_finer() {
+        let ds = get("gmm2d").unwrap();
+        let model = AnalyticEps::from_dataset(&ds);
+        let sched = default_schedule(5);
+        let mut rng = Pcg64::seed(2);
+        let x_t = sample_prior(&mut rng, 8, 2, sched.t_max());
+        let heun = solvers::get("heun").unwrap();
+        let gt = ground_truth(heun.as_ref(), model.as_ref(), &x_t, 8, &sched, 100);
+        assert_eq!(gt.xs.len(), 6);
+        assert_eq!(gt.xs[0], x_t);
+        assert!(gt.teacher_nfe >= 100);
+    }
+
+    #[test]
+    fn student_error_grows_then_gt_matches_itself() {
+        let ds = get("gmm2d").unwrap();
+        let model = AnalyticEps::from_dataset(&ds);
+        let sched = default_schedule(8);
+        let mut rng = Pcg64::seed(3);
+        let x_t = sample_prior(&mut rng, 16, 2, sched.t_max());
+        let heun = solvers::get("heun").unwrap();
+        let gt = ground_truth(heun.as_ref(), model.as_ref(), &x_t, 16, &sched, 100);
+        // Student: Euler on the same grid.
+        let ddim = solvers::get("ddim").unwrap();
+        let run = run_solver(ddim.as_ref(), model.as_ref(), &x_t, 16, &sched, None);
+        let curve = truncation_error_curve(&run.xs, &gt);
+        assert_eq!(curve[0], 0.0);
+        assert!(curve.last().unwrap() > &0.01, "{curve:?}");
+        // GT vs itself is identically zero.
+        let zero = truncation_error_curve(&gt.xs, &gt);
+        assert!(zero.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn s_shape_detects_mid_bulge() {
+        // Synthetic S-curve (logistic-ish cumulative).
+        let curve: Vec<f64> = (0..=10)
+            .map(|j| 1.0 / (1.0 + (-((j as f64) - 5.0)).exp()))
+            .collect();
+        let (pos, early, late) = s_shape_stats(&curve);
+        assert!((0.25..=0.75).contains(&pos), "{pos}");
+        assert!(early < 0.3 && late < 0.3, "{early} {late}");
+    }
+}

@@ -1,0 +1,71 @@
+//! Wall-clock timing helpers used by the bench harness and experiments.
+
+use std::time::Instant;
+
+/// Simple scope timer.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Timer {
+        Timer {
+            start: Instant::now(),
+        }
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.elapsed_s() * 1e3
+    }
+
+    pub fn elapsed_us(&self) -> f64 {
+        self.elapsed_s() * 1e6
+    }
+}
+
+/// Time a closure, returning (result, seconds).
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t = Timer::start();
+    let r = f();
+    (r, t.elapsed_s())
+}
+
+/// Human-readable duration.
+pub fn fmt_duration(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else if s < 120.0 {
+        format!("{:.2} s", s)
+    } else {
+        format!("{:.1} min", s / 60.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn formats() {
+        assert!(fmt_duration(2e-9).ends_with("ns"));
+        assert!(fmt_duration(2e-6).ends_with("µs"));
+        assert!(fmt_duration(2e-3).ends_with("ms"));
+        assert!(fmt_duration(2.0).ends_with(" s"));
+        assert!(fmt_duration(200.0).ends_with("min"));
+    }
+
+    #[test]
+    fn times_something() {
+        let (v, s) = time_it(|| (0..1000).sum::<u64>());
+        assert_eq!(v, 499_500);
+        assert!(s >= 0.0);
+    }
+}

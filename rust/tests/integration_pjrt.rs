@@ -1,0 +1,132 @@
+//! Integration tests across the runtime boundary: rust loads and executes
+//! the AOT-compiled JAX denoiser. Skipped gracefully (with a loud message)
+//! when `make artifacts` hasn't run.
+
+use pas::score::pjrt::PjrtEps;
+use pas::score::EpsModel;
+use pas::util::rng::Pcg64;
+
+fn artifacts_present() -> bool {
+    let dir = pas::runtime::artifacts_dir();
+    let ok = dir.join("eps_gmm-hd64.hlo.txt").exists();
+    if !ok {
+        eprintln!("SKIP: artifacts missing — run `make artifacts`");
+    }
+    ok
+}
+
+#[test]
+fn load_and_execute_both_artifacts() {
+    if !artifacts_present() {
+        return;
+    }
+    let rt = pas::runtime::Runtime::cpu().unwrap();
+    for (name, dim) in [("eps_spiral2d", 2usize), ("eps_gmm-hd64", 64)] {
+        let exe = rt.load_artifact(&pas::runtime::artifacts_dir(), name).unwrap();
+        assert_eq!(exe.meta.dim, dim);
+        let b = exe.meta.batch;
+        let x = vec![0.25f32; b * dim];
+        let t = vec![1.5f32; b];
+        let y = exe.eval_eps(&x, &t).unwrap();
+        assert_eq!(y.len(), b * dim);
+        assert!(y.iter().all(|v| v.is_finite()));
+    }
+}
+
+/// Padding path: evaluating n < batch must equal the head of a full-batch
+/// evaluation with identical rows.
+#[test]
+fn padded_eval_matches_full_batch() {
+    if !artifacts_present() {
+        return;
+    }
+    let rt = pas::runtime::Runtime::cpu().unwrap();
+    let exe = rt
+        .load_artifact(&pas::runtime::artifacts_dir(), "eps_gmm-hd64")
+        .unwrap();
+    let model = PjrtEps::new(exe);
+    let d = model.dim();
+    let b = model.batch();
+    let mut rng = Pcg64::seed(12);
+    let rows = rng.normal_vec(10 * d);
+    // Full batch: repeat rows cyclically (matching the padding scheme).
+    let mut full = vec![0.0; b * d];
+    for i in 0..b * d {
+        full[i] = rows[i % (10 * d)];
+    }
+    let out_small = model.eval(&rows, 10, 2.0);
+    let out_full = model.eval(&full, b, 2.0);
+    for i in 0..10 * d {
+        assert!(
+            (out_small[i] - out_full[i]).abs() < 1e-5,
+            "row mismatch at {i}: {} vs {}",
+            out_small[i],
+            out_full[i]
+        );
+    }
+}
+
+/// The denoiser must behave like an eps-model: at large t, eps(x, t) ≈ x/t
+/// for x drawn from the prior (EDM preconditioning sanity).
+#[test]
+fn pjrt_model_eps_large_t_structure() {
+    if !artifacts_present() {
+        return;
+    }
+    let rt = pas::runtime::Runtime::cpu().unwrap();
+    let exe = rt
+        .load_artifact(&pas::runtime::artifacts_dir(), "eps_gmm-hd64")
+        .unwrap();
+    let model = PjrtEps::new(exe);
+    let d = model.dim();
+    let n = model.batch();
+    let t = 80.0;
+    let mut rng = Pcg64::seed(13);
+    let x: Vec<f64> = rng.normal_vec(n * d).iter().map(|z| z * t).collect();
+    let eps = model.eval(&x, n, t);
+    // Correlation between eps and x/t should be high.
+    let (mut dot, mut na, mut nb) = (0.0, 0.0, 0.0);
+    for i in 0..n * d {
+        let want = x[i] / t;
+        dot += eps[i] * want;
+        na += eps[i] * eps[i];
+        nb += want * want;
+    }
+    let corr = dot / (na.sqrt() * nb.sqrt());
+    assert!(corr > 0.95, "eps/prior correlation too low: {corr}");
+}
+
+/// Full sampling run + PAS training on the PJRT model (miniature version
+/// of examples/paper_pipeline.rs, kept fast for CI).
+#[test]
+fn pas_trains_against_pjrt_model() {
+    if !artifacts_present() {
+        return;
+    }
+    let rt = pas::runtime::Runtime::cpu().unwrap();
+    let exe = rt
+        .load_artifact(&pas::runtime::artifacts_dir(), "eps_gmm-hd64")
+        .unwrap();
+    let model = PjrtEps::new(exe);
+    let solver = pas::solvers::registry::get("ddim").unwrap();
+    let sched = pas::schedule::default_schedule(8);
+    let cfg = pas::pas::train::TrainConfig {
+        n_traj: 16,
+        epochs: 12,
+        minibatch: 16,
+        teacher_nfe: 32,
+        lr: 2e-2,
+        scale_mode: pas::pas::coords::ScaleMode::Relative,
+        ..Default::default()
+    };
+    let tr = pas::pas::train::PasTrainer::new(cfg)
+        .train(solver.as_ref(), &model, &sched, "gmm-hd64", false)
+        .unwrap();
+    // The corrected training rollout must not be worse than uncorrected.
+    let before = tr.curve_uncorrected.last().unwrap();
+    let after = tr.curve_corrected.last().unwrap();
+    assert!(
+        after <= before,
+        "PAS on PJRT model regressed: {before} -> {after}"
+    );
+}

@@ -1,0 +1,128 @@
+//! Integration: serving path with a PAS dictionary registered, TCP
+//! protocol round-trips, and the CLI surface driven in-process.
+
+use pas::experiments::common::default_train;
+use pas::experiments::ExpOpts;
+use pas::pas::train::PasTrainer;
+use pas::schedule::default_schedule;
+use pas::score::analytic::AnalyticEps;
+use pas::server::{SamplingRequest, Service, ServiceConfig};
+use std::io::{BufRead, BufReader, Write};
+use std::sync::atomic::AtomicBool;
+use std::sync::Arc;
+
+fn train_quick_dict() -> pas::pas::coords::CoordinateDict {
+    let opts = ExpOpts {
+        n_traj: 48,
+        epochs: 16,
+        ..ExpOpts::quick()
+    };
+    let ds = pas::data::registry::get("gmm2d").unwrap();
+    let model = AnalyticEps::from_dataset(&ds);
+    let solver = pas::solvers::registry::get("ddim").unwrap();
+    let sched = default_schedule(8);
+    PasTrainer::new(default_train(&opts, "ddim"))
+        .train(solver.as_ref(), model.as_ref(), &sched, "gmm2d", false)
+        .unwrap()
+        .dict
+}
+
+#[test]
+fn service_applies_registered_pas_dict() {
+    let dict = train_quick_dict();
+    assert!(!dict.steps.is_empty());
+    let svc = Service::start(ServiceConfig::default(), vec![dict]);
+    let req = |use_pas: bool| SamplingRequest {
+        id: 0,
+        dataset: "gmm2d".into(),
+        solver: "ddim".into(),
+        nfe: 8,
+        n_samples: 64,
+        seed: 7,
+        use_pas,
+    };
+    let plain = svc.call(req(false)).unwrap();
+    let pas_r = svc.call(req(true)).unwrap();
+    assert!(plain.error.is_none() && pas_r.error.is_none());
+    // Same seed → same prior; PAS must change the outputs.
+    assert_ne!(plain.samples, pas_r.samples);
+    svc.shutdown();
+}
+
+#[test]
+fn tcp_roundtrip_with_pas_flag() {
+    let dict = train_quick_dict();
+    let svc = Arc::new(Service::start(ServiceConfig::default(), vec![dict]));
+    let stop = Arc::new(AtomicBool::new(false));
+    let addr = pas::server::protocol::serve(svc, "127.0.0.1:0", stop.clone()).unwrap();
+    let mut conn = std::net::TcpStream::connect(addr).unwrap();
+    conn.write_all(
+        b"{\"dataset\":\"gmm2d\",\"solver\":\"ddim\",\"nfe\":8,\"n\":4,\"seed\":1,\"pas\":true}\n",
+    )
+    .unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let j = pas::util::json::Json::parse(line.trim()).unwrap();
+    assert!(j.get("error").is_none(), "{line}");
+    assert_eq!(j.get("samples").unwrap().as_arr().unwrap().len(), 8);
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+}
+
+/// Drive the CLI in-process: train → sample with coords → dump-data.
+#[test]
+fn cli_train_sample_dump_flow() {
+    let dir = std::env::temp_dir().join("pas_cli_it");
+    std::fs::create_dir_all(&dir).unwrap();
+    let coords = dir.join("c.json");
+    let argv = |s: &str| -> Vec<String> { s.split_whitespace().map(|x| x.to_string()).collect() };
+
+    let code = pas::cli::main(argv(&format!(
+        "train --dataset gmm2d --solver ddim --nfe 6 --n-traj 32 --epochs 8 --out {}",
+        coords.display()
+    )));
+    assert_eq!(code, 0);
+    assert!(coords.exists());
+
+    let out = dir.join("samples.json");
+    let code = pas::cli::main(argv(&format!(
+        "sample --dataset gmm2d --solver ddim --nfe 6 --n 16 --coords {} --out {}",
+        coords.display(),
+        out.display()
+    )));
+    assert_eq!(code, 0);
+    let j = pas::util::json::Json::parse(&std::fs::read_to_string(&out).unwrap()).unwrap();
+    assert_eq!(j.get("samples").unwrap().as_arr().unwrap().len(), 32);
+
+    let data = dir.join("d");
+    let code = pas::cli::main(argv(&format!(
+        "dump-data --dataset gmm2d --n 100 --out {}",
+        data.display()
+    )));
+    assert_eq!(code, 0);
+    let bin = std::fs::read(data.with_extension("bin")).unwrap();
+    assert_eq!(bin.len(), 100 * 2 * 4);
+
+    // Error paths return nonzero.
+    assert_eq!(pas::cli::main(argv("sample --dataset nope")), 1);
+    assert_eq!(pas::cli::main(argv("train --solver heun --dataset gmm2d")), 1);
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+/// The quick fig3 experiment end to end through the public runner API.
+#[test]
+fn repro_fig3_quick_runs() {
+    let mut opts = ExpOpts::quick();
+    opts.n_traj = 48;
+    opts.epochs = 16;
+    opts.out_dir = std::env::temp_dir().join("pas_results_it");
+    let tables = pas::experiments::run_and_save("fig3", &opts).unwrap();
+    assert_eq!(tables.len(), 2);
+    assert!(opts.out_dir.join("fig3.md").exists());
+    // The S-shape statistic row exists and the corrected curve endpoint is
+    // no worse than the uncorrected one.
+    let unc: f64 = tables[0].rows[0].1.last().unwrap().parse().unwrap();
+    let cor: f64 = tables[0].rows[1].1.last().unwrap().parse().unwrap();
+    assert!(cor <= unc, "fig3: corrected {cor} vs uncorrected {unc}");
+    let _ = std::fs::remove_dir_all(&opts.out_dir);
+}

@@ -1,0 +1,319 @@
+//! Property-based tests (hand-rolled sweeps — the offline vendor set has
+//! no proptest): randomized inputs over many seeds asserting structural
+//! invariants of the core machinery.
+
+use pas::data::Mode;
+use pas::linalg::{eigh, gram_schmidt, solve_linear, svd_right_vectors};
+use pas::pas::pca::{pca_basis, TrajBuffer};
+use pas::schedule::Schedule;
+use pas::score::analytic::AnalyticEps;
+use pas::score::EpsModel;
+use pas::solvers::StepCtx;
+use pas::tensor::dot;
+use pas::util::json::Json;
+use pas::util::rng::Pcg64;
+
+const TRIALS: usize = 40;
+
+/// PCA basis: orthonormal, first row pinned to d/||d||, k <= n_basis, for
+/// random buffer shapes and dimensions.
+#[test]
+fn prop_pca_basis_invariants() {
+    let mut rng = Pcg64::seed(1);
+    for trial in 0..TRIALS {
+        let dim = 2 + rng.below(96);
+        let rows = rng.below(12);
+        let n_basis = 1 + rng.below(4);
+        let mut q = TrajBuffer::new(dim);
+        for _ in 0..rows {
+            q.push(&rng.normal_vec(dim));
+        }
+        let d = rng.normal_vec(dim);
+        let b = pca_basis(&q, &d, n_basis);
+        assert!(b.k >= 1 && b.k <= n_basis, "trial {trial}: k={}", b.k);
+        let dn = pas::tensor::norm2(&d);
+        for j in 0..dim {
+            assert!((b.row(0)[j] - d[j] / dn).abs() < 1e-9, "trial {trial}");
+        }
+        for a in 0..b.k {
+            for c in 0..b.k {
+                let g = dot(b.row(a), b.row(c));
+                let want = if a == c { 1.0 } else { 0.0 };
+                assert!((g - want).abs() < 1e-7, "trial {trial}: g[{a}{c}]={g}");
+            }
+        }
+    }
+}
+
+/// Analytic eps == -t * (finite-difference gradient of log density) for
+/// random mixtures, points and times.
+#[test]
+fn prop_analytic_eps_is_score() {
+    let mut rng = Pcg64::seed(2);
+    for trial in 0..20 {
+        let dim = 2 + rng.below(4);
+        let k = 1 + rng.below(4);
+        let modes: Vec<Mode> = (0..k)
+            .map(|_| {
+                Mode::isotropic(
+                    rng.normal_vec(dim),
+                    0.2 + rng.uniform(),
+                    0.2 + rng.uniform(),
+                    0,
+                )
+            })
+            .collect();
+        let m = AnalyticEps::new("prop", modes);
+        let x = rng.normal_vec(dim);
+        let t = 0.2 + 3.0 * rng.uniform();
+        let eps = m.eval(&x, 1, t);
+        let h = 1e-5;
+        for j in 0..dim {
+            let mut xp = x.clone();
+            xp[j] += h;
+            let mut xm = x.clone();
+            xm[j] -= h;
+            let g = (m.log_density(&xp, t) - m.log_density(&xm, t)) / (2.0 * h);
+            assert!(
+                (eps[j] + t * g).abs() < 1e-4 * (1.0 + (t * g).abs()),
+                "trial {trial} dim {j}: {} vs {}",
+                eps[j],
+                -t * g
+            );
+        }
+    }
+}
+
+/// Schedules: strictly descending, exact endpoints, refinement shares nodes.
+#[test]
+fn prop_schedule_invariants() {
+    let mut rng = Pcg64::seed(3);
+    for _ in 0..TRIALS {
+        let n = 2 + rng.below(30);
+        let t_min = 1e-3 + rng.uniform() * 0.1;
+        let t_max = 1.0 + rng.uniform() * 100.0;
+        let rho = 1.0 + rng.uniform() * 9.0;
+        let s = Schedule::polynomial(n, t_min, t_max, rho);
+        assert_eq!(s.ts.len(), n + 1);
+        assert!((s.t_max() - t_max).abs() < 1e-9 * t_max);
+        assert!((s.t_min() - t_min).abs() < 1e-12 + 1e-9 * t_min);
+        for w in s.ts.windows(2) {
+            assert!(w[0] > w[1]);
+        }
+        let m = rng.below(5);
+        let r = s.refine(m);
+        for (j, &t) in s.ts.iter().enumerate() {
+            let tr = r.ts[j * (m + 1)];
+            assert!((t - tr).abs() < 1e-8 * t.max(1e-3), "{t} vs {tr}");
+        }
+    }
+}
+
+/// Every PAS-supported solver is affine in the current direction with
+/// slope gamma: step(d1) - step(d0) == gamma * (d1 - d0), for random
+/// histories and grids.
+#[test]
+fn prop_solver_affine_in_direction() {
+    let mut rng = Pcg64::seed(4);
+    for name in ["ddim", "ipndm2", "ipndm3", "ipndm4", "deis-tab3", "dpmpp3m"] {
+        let solver = pas::solvers::registry::get(name).unwrap();
+        for trial in 0..12 {
+            let n_steps = 4 + rng.below(6);
+            let sched = Schedule::polynomial(n_steps, 0.01, 10.0, 3.0 + rng.uniform() * 6.0);
+            let j = 2 + rng.below(n_steps - 3);
+            let xs: Vec<Vec<f64>> = (0..=j).map(|_| vec![rng.normal()]).collect();
+            let ds: Vec<Vec<f64>> = (0..j).map(|_| vec![rng.normal()]).collect();
+            let ctx = StepCtx {
+                j,
+                i_paper: n_steps - j,
+                t: sched.ts[j],
+                t_next: sched.ts[j + 1],
+                sched: &sched,
+                xs: &xs,
+                ds: &ds,
+            };
+            let gamma = solver.gamma(&ctx).unwrap();
+            let x = vec![xs[j][0]];
+            let (d0, d1) = (rng.normal(), rng.normal());
+            let model = DummyEps;
+            let mut o0 = vec![0.0];
+            let mut o1 = vec![0.0];
+            solver.step(&model, &ctx, &x, &[d0], 1, &mut o0);
+            solver.step(&model, &ctx, &x, &[d1], 1, &mut o1);
+            let lhs = o1[0] - o0[0];
+            let rhs = gamma * (d1 - d0);
+            assert!(
+                (lhs - rhs).abs() < 1e-9 * (1.0 + rhs.abs()),
+                "{name} trial {trial}: {lhs} vs {rhs}"
+            );
+        }
+    }
+}
+
+struct DummyEps;
+impl EpsModel for DummyEps {
+    fn dim(&self) -> usize {
+        1
+    }
+    fn eval_batch(&self, _x: &[f64], _n: usize, _t: f64, out: &mut [f64]) {
+        out.fill(0.0);
+    }
+    fn name(&self) -> &str {
+        "dummy"
+    }
+}
+
+/// eigh: eigenvector orthonormality + reconstruction for random PSD
+/// matrices of varied size.
+#[test]
+fn prop_eigh_reconstruction() {
+    let mut rng = Pcg64::seed(5);
+    for _ in 0..12 {
+        let n = 2 + rng.below(24);
+        let b = rng.normal_vec(n * n);
+        let mut a = vec![0.0; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                a[i * n + j] = dot(&b[i * n..(i + 1) * n], &b[j * n..(j + 1) * n]);
+            }
+        }
+        let orig = a.clone();
+        let (vals, vecs) = eigh(&mut a, n);
+        assert!(vals.windows(2).all(|w| w[0] >= w[1] - 1e-9));
+        let mut rec = vec![0.0; n * n];
+        for k in 0..n {
+            let v = &vecs[k * n..(k + 1) * n];
+            for i in 0..n {
+                for j in 0..n {
+                    rec[i * n + j] += vals[k] * v[i] * v[j];
+                }
+            }
+        }
+        let scale = 1.0 + orig.iter().map(|v| v.abs()).fold(0.0, f64::max);
+        for i in 0..n * n {
+            assert!((rec[i] - orig[i]).abs() < 1e-7 * scale);
+        }
+    }
+}
+
+/// SVD energy conservation: sum of squared singular values == ||X||_F².
+#[test]
+fn prop_svd_energy() {
+    let mut rng = Pcg64::seed(6);
+    for _ in 0..TRIALS {
+        let r = 1 + rng.below(10);
+        let d = r + rng.below(60);
+        let x = rng.normal_vec(r * d);
+        let (svals, _) = svd_right_vectors(&x, r, d, r);
+        let e: f64 = svals.iter().map(|s| s * s).sum();
+        let f = dot(&x, &x);
+        assert!((e - f).abs() < 1e-7 * (1.0 + f), "{e} vs {f}");
+    }
+}
+
+/// solve_linear solves random well-conditioned systems.
+#[test]
+fn prop_solve_linear() {
+    let mut rng = Pcg64::seed(7);
+    for _ in 0..TRIALS {
+        let n = 1 + rng.below(5);
+        // Diagonally dominant → well-conditioned.
+        let mut a = rng.normal_vec(n * n);
+        for i in 0..n {
+            a[i * n + i] += 5.0;
+        }
+        let x_true = rng.normal_vec(n);
+        let mut b = vec![0.0; n];
+        for i in 0..n {
+            b[i] = dot(&a[i * n..(i + 1) * n], &x_true);
+        }
+        let mut a2 = a.clone();
+        solve_linear(&mut a2, &mut b, n).unwrap();
+        for i in 0..n {
+            assert!((b[i] - x_true[i]).abs() < 1e-8, "{:?} vs {:?}", b, x_true);
+        }
+    }
+}
+
+/// Gram–Schmidt output is always orthonormal and spans no more than the
+/// input set.
+#[test]
+fn prop_gram_schmidt() {
+    let mut rng = Pcg64::seed(8);
+    for _ in 0..TRIALS {
+        let d = 3 + rng.below(40);
+        let k = 1 + rng.below(6);
+        let cands: Vec<Vec<f64>> = (0..k).map(|_| rng.normal_vec(d)).collect();
+        let basis = gram_schmidt(&cands, 4, 1e-8);
+        assert!(basis.len() <= k.min(4));
+        for i in 0..basis.len() {
+            for j in 0..basis.len() {
+                let g = dot(&basis[i], &basis[j]);
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((g - want).abs() < 1e-7);
+            }
+        }
+    }
+}
+
+/// JSON roundtrip for random numeric documents.
+#[test]
+fn prop_json_roundtrip() {
+    let mut rng = Pcg64::seed(9);
+    for _ in 0..TRIALS {
+        let n = rng.below(20);
+        let mut o = Json::obj();
+        for i in 0..n {
+            let v = match rng.below(4) {
+                0 => Json::Num((rng.normal() * 1e3).round() / 16.0),
+                1 => Json::Bool(rng.below(2) == 0),
+                2 => Json::Str(format!("k{}-\"quote\"\n", rng.below(100))),
+                _ => {
+                    let len = rng.below(6);
+                    Json::from_f64_slice(&rng.normal_vec(len))
+                }
+            };
+            o.set(&format!("key{i}"), v);
+        }
+        let s = o.to_string();
+        let back = Json::parse(&s).unwrap();
+        assert_eq!(o, back, "{s}");
+    }
+}
+
+/// Teleportation is exact on single Gaussians for random anisotropies.
+#[test]
+fn prop_teleport_matches_ode() {
+    let mut rng = Pcg64::seed(10);
+    for trial in 0..6 {
+        let d = 2 + rng.below(4);
+        let mu = rng.normal_vec(d);
+        let mut cov = vec![0.0; d * d];
+        for j in 0..d {
+            cov[j * d + j] = 0.1 + rng.uniform() * 2.0;
+        }
+        let tp = pas::pas::teleport::Teleporter::from_moments(mu.clone(), &cov);
+        let model = AnalyticEps::new("g", vec![Mode::full(mu, &cov, 1.0, 0)]);
+        let (hi, lo) = (40.0, 8.0);
+        let x0: Vec<f64> = rng.normal_vec(d).iter().map(|z| z * hi).collect();
+        let sched = Schedule::log_snr(600, lo, hi);
+        let ode = pas::solvers::run_solver(
+            pas::solvers::registry::get("heun").unwrap().as_ref(),
+            model.as_ref(),
+            &x0,
+            1,
+            &sched,
+            None,
+        );
+        let mut xt = x0.clone();
+        tp.teleport(&mut xt, 1, hi, lo);
+        for j in 0..d {
+            assert!(
+                (ode.x0[j] - xt[j]).abs() < 1e-3 * (1.0 + xt[j].abs()),
+                "trial {trial} dim {j}: {} vs {}",
+                ode.x0[j],
+                xt[j]
+            );
+        }
+    }
+}
