@@ -352,6 +352,14 @@ fn cmd_dump_data(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_pjrt_check(_args: &Args) -> Result<(), String> {
+    Err("this binary was built without the `pjrt` feature; rebuild with \
+         `--features pjrt` (requires the vendored xla crate)"
+        .into())
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_pjrt_check(args: &Args) -> Result<(), String> {
     let dir = args
         .get("artifacts")

@@ -27,6 +27,7 @@ pub mod solvers;
 pub mod traj;
 pub mod pas;
 pub mod metrics;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod server;
 pub mod config;
@@ -41,6 +42,7 @@ pub mod prelude {
     pub use crate::pas::train::{PasTrainer, TrainConfig};
     pub use crate::schedule::Schedule;
     pub use crate::score::EpsModel;
+    pub use crate::solvers::engine::{EngineConfig, Record, SamplerEngine};
     pub use crate::solvers::{SolveRun, Solver};
     pub use crate::util::rng::Pcg64;
 }

@@ -12,6 +12,7 @@ use super::pca::{pca_basis, TrajBuffer};
 use crate::schedule::Schedule;
 use crate::score::EpsModel;
 use crate::solvers::{run_solver, DirectionHook, SolveRun, Solver, StepCtx};
+use crate::util::pool::{Pool, SendPtr};
 
 pub struct CorrectedSampler<'a> {
     pub dict: &'a CoordinateDict,
@@ -48,43 +49,63 @@ impl<'a> CorrectedSampler<'a> {
 impl DirectionHook for CorrectedSampler<'_> {
     fn correct(&mut self, ctx: &StepCtx<'_>, x: &[f64], n: usize, d: &mut [f64]) -> bool {
         let dim = self.dim;
-        // First step: seed per-sample buffers with x_T.
+        // First step: seed per-sample buffers with x_T, each reserved to
+        // `nfe + 2` rows so the whole run never reallocates them.
         if ctx.j == 0 {
-            self.buffers = (0..n)
-                .map(|k| {
-                    let mut b = TrajBuffer::new(dim);
-                    b.push(&x[k * dim..(k + 1) * dim]);
-                    b
-                })
-                .collect();
+            let cap_rows = ctx.sched.n_steps() + 2;
+            self.buffers.clear();
+            self.buffers.extend((0..n).map(|k| {
+                let mut b = TrajBuffer::with_capacity(dim, cap_rows);
+                b.push(&x[k * dim..(k + 1) * dim]);
+                b
+            }));
         }
         debug_assert_eq!(self.buffers.len(), n);
-        let mut applied = false;
-        if let Some(c) = self.dict.steps.get(&ctx.i_paper) {
-            for k in 0..n {
-                let dk = &mut d[k * dim..(k + 1) * dim];
-                let basis = pca_basis(&self.buffers[k], dk, self.dict.n_basis);
-                if basis.k == 0 {
-                    continue;
+        let coords = self.dict.steps.get(&ctx.i_paper);
+        let n_basis = self.dict.n_basis;
+        let scale_mode = self.dict.scale_mode;
+        // Samples are independent: shard the per-sample PCA + coordinate
+        // reconstruction (and the buffer push) row-wise over the pool.
+        // Per-row work is the sequential code verbatim, so the result is
+        // bit-identical for any thread count. The PCA itself is the §3.5
+        // "negligible vs one NFE" cost; pushes alone are cheap, hence the
+        // larger min chunk when no correction fires at this step.
+        let bufs = SendPtr::new(self.buffers.as_mut_ptr());
+        let d_ptr = SendPtr::new(d.as_mut_ptr());
+        let min_rows = if coords.is_some() { 1 } else { 64 };
+        Pool::global().par_rows(n, usize::MAX, min_rows, |r0, r1| {
+            for k in r0..r1 {
+                // SAFETY: pool row ranges are disjoint, so each sample's
+                // buffer and direction row are touched by one task only.
+                let buf = unsafe { &mut *bufs.get().add(k) };
+                let dk =
+                    unsafe { std::slice::from_raw_parts_mut(d_ptr.get().add(k * dim), dim) };
+                if let Some(c) = coords {
+                    let basis = pca_basis(buf, dk, n_basis);
+                    if basis.k > 0 {
+                        let scale = match scale_mode {
+                            ScaleMode::Absolute => 1.0,
+                            ScaleMode::Relative => basis.d_norm,
+                        };
+                        // `d = U Cᵀ` reconstructed straight into the
+                        // direction row (same f64 op order as the legacy
+                        // allocate-and-copy path).
+                        basis.direction_into(c, dk);
+                        for v in dk.iter_mut() {
+                            *v *= scale;
+                        }
+                    }
                 }
-                let scale = match self.dict.scale_mode {
-                    ScaleMode::Absolute => 1.0,
-                    ScaleMode::Relative => basis.d_norm,
-                };
-                let mut nd = basis.direction(c);
-                for v in nd.iter_mut() {
-                    *v *= scale;
-                }
-                dk.copy_from_slice(&nd);
+                // Buffer the direction as used (corrected or not).
+                buf.push(dk);
             }
+        });
+        if coords.is_some() {
             self.corrections_applied += 1;
-            applied = true;
+            true
+        } else {
+            false
         }
-        // Buffer the direction as used (corrected or not).
-        for k in 0..n {
-            self.buffers[k].push(&d[k * dim..(k + 1) * dim]);
-        }
-        applied
     }
 }
 

@@ -37,6 +37,17 @@ impl TrajBuffer {
         }
     }
 
+    /// Buffer with room for `rows` rows reserved up front, so a sampling
+    /// run pushing one row per step (plus `x_T`) never reallocates. The
+    /// corrected sampler reserves `nfe + 2` rows this way.
+    pub fn with_capacity(dim: usize, rows: usize) -> TrajBuffer {
+        TrajBuffer {
+            dim,
+            rows: Vec::with_capacity(dim * rows),
+            n_rows: 0,
+        }
+    }
+
     pub fn push(&mut self, row: &[f64]) {
         assert_eq!(row.len(), self.dim);
         self.rows.extend_from_slice(row);

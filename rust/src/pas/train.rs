@@ -22,8 +22,9 @@ use super::coords::{CoordinateDict, ScaleMode};
 use super::pca::{pca_basis, Basis, TrajBuffer};
 use crate::schedule::Schedule;
 use crate::score::EpsModel;
-use crate::solvers::{Solver, StepCtx};
+use crate::solvers::{NodeView, Solver, StepCtx};
 use crate::traj::{ground_truth, sample_prior, truncation_error_curve, GroundTruth};
+use crate::util::pool::{Pool, SendPtr};
 use crate::util::rng::Pcg64;
 use crate::util::timer::Timer;
 
@@ -273,7 +274,7 @@ impl PasTrainer {
         let mut ds: Vec<Vec<f64>> = Vec::new();
         let mut buffers: Vec<TrajBuffer> = (0..n)
             .map(|k| {
-                let mut b = TrajBuffer::new(dim);
+                let mut b = TrajBuffer::with_capacity(dim, n_steps + 2);
                 b.push(&x_t[k * dim..(k + 1) * dim]);
                 b
             })
@@ -303,8 +304,8 @@ impl PasTrainer {
                 t: sched.ts[j],
                 t_next: sched.ts[j + 1],
                 sched,
-                xs: &xs,
-                ds: &ds,
+                xs: NodeView::nested(&xs),
+                ds: NodeView::nested(&ds),
             };
             let gamma = solver
                 .gamma(&ctx)
@@ -314,10 +315,22 @@ impl PasTrainer {
             // Uncorrected next state (for the adaptive decision).
             solver.step(model, &ctx, &xs[j], &d_all, n, &mut x_next_unc);
 
-            // Per-sample bases.
-            let bases: Vec<Basis> = (0..n)
-                .map(|k| pca_basis(&buffers[k], &d_all[k * dim..(k + 1) * dim], cfg.n_basis))
-                .collect();
+            // Per-sample bases, sharded row-wise over the pool (samples
+            // are independent; same values as the sequential loop).
+            let mut bases: Vec<Option<Basis>> = vec![None; n];
+            {
+                let out = SendPtr::new(bases.as_mut_ptr());
+                let bufs = &buffers;
+                let d_ref = &d_all;
+                Pool::global().par_rows(n, usize::MAX, 1, |r0, r1| {
+                    for k in r0..r1 {
+                        let b = pca_basis(&bufs[k], &d_ref[k * dim..(k + 1) * dim], cfg.n_basis);
+                        // SAFETY: pool row ranges are disjoint.
+                        unsafe { *out.get().add(k) = Some(b) };
+                    }
+                });
+            }
+            let bases: Vec<Basis> = bases.into_iter().map(|b| b.unwrap()).collect();
             let scale_of = |b: &Basis| match cfg.scale_mode {
                 ScaleMode::Absolute => 1.0,
                 ScaleMode::Relative => b.d_norm,

@@ -281,36 +281,30 @@ impl Scratch {
     }
 }
 
-/// Worker threads for batched evaluation: `PAS_THREADS` env override, else
-/// the machine's available parallelism (capped at 16).
-fn eval_threads() -> usize {
-    static CACHED: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
-    *CACHED.get_or_init(|| {
-        if let Ok(v) = std::env::var("PAS_THREADS") {
-            if let Ok(n) = v.parse::<usize>() {
-                return n.max(1);
-            }
-        }
-        std::thread::available_parallelism()
-            .map(|n| n.get())
-            .unwrap_or(1)
-            .min(16)
-    })
+thread_local! {
+    /// Per-thread evaluation scratch, reused across calls so the serving
+    /// path's steady state performs no heap allocation per model eval
+    /// (the `pas_overhead` bench's allocation counter checks this).
+    static SCRATCH: std::cell::RefCell<Scratch> =
+        std::cell::RefCell::new(Scratch::new(0, 0));
 }
 
 impl AnalyticEps {
     fn eval_range(&self, x: &[f64], t: f64, out: &mut [f64]) {
         let d = self.d;
         let n = x.len() / d;
-        let mut scratch = Scratch::new(self.modes.len(), d);
-        for i in 0..n {
-            self.eval_one(
-                &x[i * d..(i + 1) * d],
-                t,
-                &mut out[i * d..(i + 1) * d],
-                &mut scratch,
-            );
-        }
+        SCRATCH.with(|cell| {
+            let mut scratch = cell.borrow_mut();
+            scratch.ensure(self.modes.len(), d);
+            for i in 0..n {
+                self.eval_one(
+                    &x[i * d..(i + 1) * d],
+                    t,
+                    &mut out[i * d..(i + 1) * d],
+                    &mut scratch,
+                );
+            }
+        });
     }
 }
 
@@ -322,27 +316,22 @@ impl EpsModel for AnalyticEps {
     fn eval_batch(&self, x: &[f64], n: usize, t: f64, out: &mut [f64]) {
         assert_eq!(x.len(), n * self.d);
         assert_eq!(out.len(), n * self.d);
-        let threads = eval_threads();
         // Parallel fan-out over samples when the batch is worth it
         // (perf pass, EXPERIMENTS.md §Perf: the analytic eps eval is the
-        // whole-stack bottleneck on every table).
+        // whole-stack bottleneck on every table). Rows are independent, so
+        // sharding over the persistent pool is bit-identical to the
+        // sequential loop for every thread count.
+        let pool = crate::util::pool::Pool::global();
+        let threads = pool.size();
         if threads > 1 && n >= 4 * threads && n * self.d >= 4096 {
-            let chunk_rows = n.div_ceil(threads);
             let d = self.d;
-            std::thread::scope(|s| {
-                let mut rem_x = x;
-                let mut rem_out = &mut *out;
-                for _ in 0..threads {
-                    let take = chunk_rows.min(rem_x.len() / d);
-                    if take == 0 {
-                        break;
-                    }
-                    let (cx, rx) = rem_x.split_at(take * d);
-                    let (co, ro) = rem_out.split_at_mut(take * d);
-                    rem_x = rx;
-                    rem_out = ro;
-                    s.spawn(move || self.eval_range(cx, t, co));
-                }
+            let out_ptr = crate::util::pool::SendPtr::new(out.as_mut_ptr());
+            pool.par_rows(n, threads, 1, |r0, r1| {
+                // SAFETY: pool row ranges are disjoint.
+                let o = unsafe {
+                    std::slice::from_raw_parts_mut(out_ptr.get().add(r0 * d), (r1 - r0) * d)
+                };
+                self.eval_range(&x[r0 * d..r1 * d], t, o);
             });
         } else {
             self.eval_range(x, t, out);

@@ -12,10 +12,15 @@
 pub mod analytic;
 pub mod cfg;
 pub mod counting;
+#[cfg(feature = "pjrt")]
 pub mod pjrt;
 
 /// Batched noise-prediction network.
-pub trait EpsModel {
+///
+/// `Sync` is required so the sampling engine and the serving path can
+/// shard a batch evaluation (and the row-sharded solver step, whose
+/// higher-order solvers re-evaluate the model) across the thread pool.
+pub trait EpsModel: Sync {
     /// Data dimension D.
     fn dim(&self) -> usize;
 

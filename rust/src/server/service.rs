@@ -7,7 +7,8 @@ use crate::pas::correct::CorrectedSampler;
 use crate::schedule::default_schedule;
 use crate::score::analytic::AnalyticEps;
 use crate::score::EpsModel;
-use crate::solvers::{run_solver, Solver};
+use crate::solvers::engine::{Record, SamplerEngine};
+use crate::solvers::Solver;
 use crate::traj::sample_prior;
 use crate::util::rng::Pcg64;
 use std::collections::HashMap;
@@ -259,6 +260,10 @@ fn worker_loop(
     dicts: Arc<HashMap<(String, String, usize), CoordinateDict>>,
     stop: Arc<AtomicBool>,
 ) {
+    // One long-lived engine per worker: the serving path never records
+    // trajectories (`Record::None`), and the workspace is reused across
+    // batches, so steady-state sampling performs no per-step allocation.
+    let mut engine = SamplerEngine::with_record(Record::None);
     loop {
         let batch = {
             let guard = wrx.lock().unwrap();
@@ -273,7 +278,7 @@ fn worker_loop(
                 Err(_) => return,
             }
         };
-        run_batch(batch, &metrics, &dicts);
+        run_batch(batch, &metrics, &dicts, &mut engine);
     }
 }
 
@@ -296,6 +301,7 @@ fn run_batch(
     batch: Vec<Pending>,
     metrics: &Metrics,
     dicts: &HashMap<(String, String, usize), CoordinateDict>,
+    engine: &mut SamplerEngine,
 ) {
     let req0 = &batch[0].req;
     let ds = match crate::data::registry::get(&req0.dataset) {
@@ -325,16 +331,36 @@ fn run_batch(
     } else {
         None
     };
-    let run = match dict {
-        Some(d) => CorrectedSampler::sample(d, solver.as_ref(), model.as_ref(), &x_t, n_total, &sched),
-        None => run_solver(solver.as_ref(), model.as_ref(), &x_t, n_total, &sched, None),
+    let mut x0 = vec![0.0; n_total * dim];
+    let nfe = match dict {
+        Some(d) => {
+            let mut hook = CorrectedSampler::new(d, dim);
+            engine.run_into(
+                solver.as_ref(),
+                model.as_ref(),
+                &x_t,
+                n_total,
+                &sched,
+                Some(&mut hook),
+                &mut x0,
+            )
+        }
+        None => engine.run_into(
+            solver.as_ref(),
+            model.as_ref(),
+            &x_t,
+            n_total,
+            &sched,
+            None,
+            &mut x0,
+        ),
     };
     // Scatter results back.
     let fused = batch.len();
     let mut offset = 0usize;
     for p in batch {
         let n = p.req.n_samples;
-        let samples = run.x0[offset * dim..(offset + n) * dim].to_vec();
+        let samples = x0[offset * dim..(offset + n) * dim].to_vec();
         offset += n;
         metrics.completed.fetch_add(1, Ordering::Relaxed);
         let _ = p.reply.send(SamplingResponse {
@@ -342,7 +368,7 @@ fn run_batch(
             samples,
             n,
             dim,
-            nfe_spent: run.nfe,
+            nfe_spent: nfe,
             batched_with: fused,
             latency_ms: p.enqueued.elapsed().as_secs_f64() * 1e3,
             error: None,

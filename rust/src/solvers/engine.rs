@@ -1,0 +1,446 @@
+//! Zero-allocation parallel sampling engine.
+//!
+//! [`SamplerEngine`] replaces the seed's allocate-per-step driver
+//! ([`super::run_solver_legacy`]) with a preallocated, reusable workspace:
+//!
+//! * **State ping-pong in place.** States and directions live in two
+//!   [`NodeStore`]s — flat row-major buffers sized up front. The current
+//!   state is read from the store while the next state is written into a
+//!   disjoint slot of the *same* allocation, so a step performs no copy
+//!   of the batch and no allocation at all.
+//! * **[`Record`] policy.** `Record::Full` sizes the stores to the whole
+//!   trajectory (`nfe + 1` state rows) for experiments and training;
+//!   `Record::None` — the serving configuration — keeps only the trailing
+//!   [`HIST_NODES`]-node ring the registered solvers (order ≤ 4) can
+//!   reach, making memory O(batch) instead of O(batch × NFE). NFE
+//!   accounting is identical in both modes.
+//! * **Row-sharded stepping.** When the solver reports
+//!   [`Solver::row_independent`] and the batch is worth it, the update is
+//!   sharded row-wise over the process pool
+//!   ([`crate::util::pool::Pool`]); each shard sees a column sub-view of
+//!   the history ([`NodeView::cols`]), so per-row f64 operation order is
+//!   untouched and the output is **bit-identical** to the sequential
+//!   legacy driver for every thread count — enforced by
+//!   `tests/engine_parity.rs` across the whole solver registry.
+//!
+//! # Workspace lifecycle
+//!
+//! An engine is created once (per server worker, per bench, per
+//! experiment loop) and reused: `reset` at the top of each run re-shapes
+//! the stores without shrinking their allocations, so after the first run
+//! of a given shape the steady state performs **zero heap allocations per
+//! step** in `Record::None` mode — `benches/pas_overhead.rs` pins that
+//! with a counting global allocator. `run_into` writes the final samples
+//! into a caller-provided buffer; `run` (Record::Full only) materializes
+//! a legacy [`SolveRun`] for existing callers.
+
+use super::{DirectionHook, NodeView, SolveRun, Solver, StepCtx};
+use crate::schedule::Schedule;
+use crate::score::EpsModel;
+use crate::util::pool::{Pool, SendPtr};
+
+/// Trajectory retention policy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Record {
+    /// Keep every state and direction row (experiments, training,
+    /// [`SolveRun`] materialization).
+    Full,
+    /// Keep only the trailing solver-history ring; memory O(batch).
+    None,
+}
+
+/// Engine configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct EngineConfig {
+    pub record: Record,
+    /// Max row-shards for the solver update; `0` = pool size, `1` =
+    /// sequential stepping. Output is bit-identical either way.
+    pub threads: usize,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            record: Record::Full,
+            threads: 0,
+        }
+    }
+}
+
+/// History nodes retained in `Record::None` mode. The deepest look-back
+/// among registered solvers is 3 nodes behind the current one (order-4
+/// Adams–Bashforth, UniPC-3's corrector), i.e. 4 live nodes, plus one
+/// slot that is always the in-flight write row — 6 leaves a margin slot.
+pub const HIST_NODES: usize = 6;
+
+/// Batches smaller than this (elements) step sequentially — sharding
+/// overhead would dominate.
+const MIN_SHARD_ELEMS: usize = 4096;
+
+/// Preallocated flat row store with optional ring semantics: row `node`
+/// lives in slot `node % cap_rows`. With `cap_rows >= total rows` it is a
+/// plain dense matrix (Record::Full); smaller, it retains the trailing
+/// window only (Record::None).
+pub struct NodeStore {
+    data: Vec<f64>,
+    row_len: usize,
+    len: usize,
+    cap_rows: usize,
+}
+
+impl NodeStore {
+    fn new() -> NodeStore {
+        NodeStore {
+            data: Vec::new(),
+            row_len: 0,
+            len: 0,
+            cap_rows: 0,
+        }
+    }
+
+    /// Re-shape for a new run; never shrinks the allocation, so repeated
+    /// runs of the same shape allocate nothing.
+    fn reset(&mut self, row_len: usize, cap_rows: usize) {
+        assert!(row_len > 0 && cap_rows > 0);
+        self.row_len = row_len;
+        self.cap_rows = cap_rows;
+        self.len = 0;
+        let need = row_len * cap_rows;
+        if self.data.len() < need {
+            self.data.resize(need, 0.0);
+        }
+    }
+
+    /// Committed rows.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Committed row at absolute node index (panics if evicted).
+    pub fn row(&self, node: usize) -> &[f64] {
+        assert!(node < self.len, "node {node} not committed");
+        assert!(
+            node + self.cap_rows >= self.len,
+            "node {node} evicted (len {}, cap {})",
+            self.len,
+            self.cap_rows
+        );
+        let slot = node % self.cap_rows;
+        &self.data[slot * self.row_len..(slot + 1) * self.row_len]
+    }
+
+    fn push_row(&mut self, row: &[f64]) {
+        assert_eq!(row.len(), self.row_len);
+        let slot = self.len % self.cap_rows;
+        self.data[slot * self.row_len..(slot + 1) * self.row_len].copy_from_slice(row);
+        self.len += 1;
+    }
+
+    /// Split into (view of the committed rows, the uncommitted next-row
+    /// slot). The view's retained window never includes the write slot
+    /// (`NodeView` asserts `node + cap_rows > len`), which is what makes
+    /// the aliasing sound.
+    fn split_next(&mut self) -> (NodeView<'_>, &mut [f64]) {
+        let slot = self.len % self.cap_rows;
+        let base = self.data.as_mut_ptr();
+        let view = NodeView::ring(base as *const f64, self.row_len, self.len, self.cap_rows);
+        // SAFETY: `slot * row_len .. (slot + 1) * row_len` is in bounds
+        // (slot < cap_rows) and disjoint from every row the view can
+        // reach (see above).
+        let row = unsafe {
+            std::slice::from_raw_parts_mut(base.add(slot * self.row_len), self.row_len)
+        };
+        (view, row)
+    }
+
+    fn commit(&mut self) {
+        self.len += 1;
+    }
+
+    /// Drop the backing allocation (used by [`SamplerEngine::run`] after
+    /// materializing, so a one-shot run does not keep the flat trajectory
+    /// resident alongside the nested copy). The next `reset` re-grows.
+    fn release(&mut self) {
+        self.data = Vec::new();
+        self.len = 0;
+    }
+
+    /// Materialize nested rows (Record::Full stores only).
+    pub fn to_nested(&self) -> Vec<Vec<f64>> {
+        assert!(
+            self.cap_rows >= self.len,
+            "ring store dropped rows; use Record::Full"
+        );
+        (0..self.len).map(|i| self.row(i).to_vec()).collect()
+    }
+}
+
+impl Default for NodeStore {
+    fn default() -> Self {
+        NodeStore::new()
+    }
+}
+
+/// The workspace-pooled sampling driver. See the module docs.
+pub struct SamplerEngine {
+    cfg: EngineConfig,
+    xs: NodeStore,
+    ds: NodeStore,
+}
+
+impl SamplerEngine {
+    pub fn new(cfg: EngineConfig) -> SamplerEngine {
+        SamplerEngine {
+            cfg,
+            xs: NodeStore::new(),
+            ds: NodeStore::new(),
+        }
+    }
+
+    /// Convenience constructor with auto thread sizing.
+    pub fn with_record(record: Record) -> SamplerEngine {
+        SamplerEngine::new(EngineConfig { record, threads: 0 })
+    }
+
+    pub fn config(&self) -> &EngineConfig {
+        &self.cfg
+    }
+
+    /// Recorded states (valid after a `Record::Full` [`Self::run_into`];
+    /// [`Self::run`] releases the workspace after materializing).
+    pub fn xs(&self) -> &NodeStore {
+        &self.xs
+    }
+
+    /// Recorded directions (valid after a `Record::Full`
+    /// [`Self::run_into`]; [`Self::run`] releases the workspace after
+    /// materializing).
+    pub fn ds(&self) -> &NodeStore {
+        &self.ds
+    }
+
+    /// Run the solver, writing the final samples into `x0_out` (shape
+    /// `(n, dim)` flat). Returns the NFE spent. This is the
+    /// allocation-free serving entry point: with `Record::None` and a
+    /// warmed workspace, no step allocates.
+    pub fn run_into(
+        &mut self,
+        solver: &dyn Solver,
+        model: &dyn EpsModel,
+        x_t: &[f64],
+        n: usize,
+        sched: &Schedule,
+        mut hook: Option<&mut dyn DirectionHook>,
+        x0_out: &mut [f64],
+    ) -> usize {
+        let dim = model.dim();
+        assert_eq!(x_t.len(), n * dim, "x_t must be (n, dim) flat");
+        assert_eq!(x0_out.len(), n * dim, "x0_out must be (n, dim) flat");
+        let row_len = n * dim;
+        let n_steps = sched.n_steps();
+        let (xs_cap, ds_cap) = match self.cfg.record {
+            Record::Full => (n_steps + 1, n_steps.max(1)),
+            Record::None => ((n_steps + 1).min(HIST_NODES), n_steps.max(1).min(HIST_NODES)),
+        };
+        self.xs.reset(row_len, xs_cap);
+        self.ds.reset(row_len, ds_cap);
+        self.xs.push_row(x_t);
+        let mut nfe = 0usize;
+        for j in 0..n_steps {
+            let t = sched.ts[j];
+            let t_next = sched.ts[j + 1];
+            let (xs_view, x_next) = self.xs.split_next();
+            let (ds_view, d) = self.ds.split_next();
+            let x_cur = xs_view.row(j);
+            // Primary evaluation, straight into the direction row.
+            model.eval_batch(x_cur, n, t, d);
+            nfe += 1;
+            let ctx = StepCtx {
+                j,
+                i_paper: n_steps - j,
+                t,
+                t_next,
+                sched,
+                xs: xs_view,
+                ds: ds_view,
+            };
+            if let Some(h) = hook.as_deref_mut() {
+                h.correct(&ctx, x_cur, n, d);
+            }
+            step_rows(self.cfg.threads, solver, model, &ctx, x_cur, d, n, dim, x_next);
+            nfe += solver.evals_per_step() - 1; // internal evals
+            self.ds.commit();
+            self.xs.commit();
+        }
+        x0_out.copy_from_slice(self.xs.row(n_steps));
+        nfe
+    }
+
+    /// Run and materialize a legacy [`SolveRun`] (requires
+    /// `Record::Full`). Bit-identical to [`super::run_solver_legacy`].
+    ///
+    /// Materialization copies the flat workspace into nested rows
+    /// (transiently ~2x the trajectory footprint); the workspace is
+    /// released afterwards so only the [`SolveRun`] remains resident.
+    /// Callers that want the zero-copy flat trajectory should use
+    /// [`Self::run_into`] and read [`Self::xs`]/[`Self::ds`] instead.
+    pub fn run(
+        &mut self,
+        solver: &dyn Solver,
+        model: &dyn EpsModel,
+        x_t: &[f64],
+        n: usize,
+        sched: &Schedule,
+        hook: Option<&mut dyn DirectionHook>,
+    ) -> SolveRun {
+        assert_eq!(
+            self.cfg.record,
+            Record::Full,
+            "SolveRun materialization needs Record::Full; use run_into"
+        );
+        let mut x0 = vec![0.0; x_t.len()];
+        let nfe = self.run_into(solver, model, x_t, n, sched, hook, &mut x0);
+        let run = SolveRun {
+            x0,
+            xs: self.xs.to_nested(),
+            ds: self.ds.to_nested(),
+            nfe,
+        };
+        self.xs.release();
+        self.ds.release();
+        run
+    }
+}
+
+/// Advance the batch, sharding rows across the pool when profitable.
+/// Each shard receives column sub-views of the history, so per-row
+/// computation is exactly the sequential one.
+#[allow(clippy::too_many_arguments)]
+fn step_rows(
+    threads: usize,
+    solver: &dyn Solver,
+    model: &dyn EpsModel,
+    ctx: &StepCtx<'_>,
+    x: &[f64],
+    d: &[f64],
+    n: usize,
+    dim: usize,
+    out: &mut [f64],
+) {
+    let pool = Pool::global();
+    let max_parts = if threads == 0 { pool.size() } else { threads };
+    // Multi-eval solvers (Heun, DPM-Solver-2) call the model inside
+    // `step`; sharding would split that one batched call into per-chunk
+    // calls, breaking the "one batched eval = one NFE" counting
+    // invariant. Their internal evals parallelize inside `eval_batch`
+    // anyway, so they step unsharded.
+    if max_parts <= 1
+        || !solver.row_independent()
+        || solver.evals_per_step() != 1
+        || n < 2
+        || n * dim < MIN_SHARD_ELEMS
+    {
+        solver.step(model, ctx, x, d, n, out);
+        return;
+    }
+    let out_ptr = SendPtr::new(out.as_mut_ptr());
+    pool.par_rows(n, max_parts, 1, |r0, r1| {
+        let c0 = r0 * dim;
+        let c1 = r1 * dim;
+        let sub = StepCtx {
+            j: ctx.j,
+            i_paper: ctx.i_paper,
+            t: ctx.t,
+            t_next: ctx.t_next,
+            sched: ctx.sched,
+            xs: ctx.xs.cols(c0, c1 - c0),
+            ds: ctx.ds.cols(c0, c1 - c0),
+        };
+        // SAFETY: pool row ranges are disjoint.
+        let o = unsafe { std::slice::from_raw_parts_mut(out_ptr.get().add(c0), c1 - c0) };
+        solver.step(model, &sub, &x[c0..c1], &d[c0..c1], r1 - r0, o);
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::registry::get;
+    use crate::schedule::default_schedule;
+    use crate::score::analytic::AnalyticEps;
+    use crate::score::counting::CountingEps;
+    use crate::solvers::{registry, run_solver_legacy};
+    use crate::traj::sample_prior;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn full_record_matches_legacy_bitwise() {
+        let ds = get("gmm-hd64").unwrap();
+        let model = AnalyticEps::from_dataset(&ds);
+        let sched = default_schedule(8);
+        let mut rng = Pcg64::seed(11);
+        let n = 64;
+        let x_t = sample_prior(&mut rng, n, 64, sched.t_max());
+        let solver = registry::get("ddim").unwrap();
+        let legacy = run_solver_legacy(solver.as_ref(), model.as_ref(), &x_t, n, &sched, None);
+        let mut eng = SamplerEngine::with_record(Record::Full);
+        let run = eng.run(solver.as_ref(), model.as_ref(), &x_t, n, &sched, None);
+        assert_eq!(legacy.x0, run.x0);
+        assert_eq!(legacy.xs, run.xs);
+        assert_eq!(legacy.ds, run.ds);
+        assert_eq!(legacy.nfe, run.nfe);
+    }
+
+    #[test]
+    fn record_none_keeps_samples_and_nfe() {
+        let ds = get("gmm-hd64").unwrap();
+        let model = AnalyticEps::from_dataset(&ds);
+        let counting = CountingEps::new(model.as_ref());
+        let sched = default_schedule(10);
+        let mut rng = Pcg64::seed(12);
+        let n = 32;
+        let x_t = sample_prior(&mut rng, n, 64, sched.t_max());
+        let solver = registry::get("ipndm").unwrap();
+        let legacy = run_solver_legacy(solver.as_ref(), model.as_ref(), &x_t, n, &sched, None);
+        let mut eng = SamplerEngine::with_record(Record::None);
+        let mut x0 = vec![0.0; n * 64];
+        let nfe = eng.run_into(solver.as_ref(), &counting, &x_t, n, &sched, None, &mut x0);
+        assert_eq!(x0, legacy.x0);
+        assert_eq!(nfe, 10);
+        assert_eq!(counting.nfe(), 10);
+    }
+
+    #[test]
+    fn workspace_reuse_across_runs_is_clean() {
+        let ds = get("gmm2d").unwrap();
+        let model = AnalyticEps::from_dataset(&ds);
+        let sched = default_schedule(6);
+        let solver = registry::get("dpmpp3m").unwrap();
+        let mut eng = SamplerEngine::with_record(Record::None);
+        let mut rng = Pcg64::seed(13);
+        for trial in 0..3 {
+            let n = [8usize, 16, 8][trial];
+            let x_t = sample_prior(&mut rng, n, 2, sched.t_max());
+            let legacy =
+                run_solver_legacy(solver.as_ref(), model.as_ref(), &x_t, n, &sched, None);
+            let mut x0 = vec![0.0; n * 2];
+            eng.run_into(solver.as_ref(), model.as_ref(), &x_t, n, &sched, None, &mut x0);
+            assert_eq!(x0, legacy.x0, "trial {trial}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "Record::Full")]
+    fn run_requires_full_record() {
+        let ds = get("gmm2d").unwrap();
+        let model = AnalyticEps::from_dataset(&ds);
+        let sched = default_schedule(3);
+        let solver = registry::get("ddim").unwrap();
+        let mut eng = SamplerEngine::with_record(Record::None);
+        let _ = eng.run(solver.as_ref(), model.as_ref(), &[1.0, 1.0], 1, &sched, None);
+    }
+}

@@ -1,7 +1,7 @@
 //! ODE solvers for the EDM probability-flow ODE `dx/dt = eps(x, t)`.
 //!
-//! All solvers plug into one driver ([`run_solver`]) built around the
-//! paper's uniform first-order-representable step (Eq. 16):
+//! All solvers plug into one driver built around the paper's uniform
+//! first-order-representable step (Eq. 16):
 //!
 //! ```text
 //! x_{t_{i-1}} = phi(x_{t_i}, d_{t_i}, t_i, t_{i-1})
@@ -13,6 +13,20 @@
 //! it with history. Multistep solvers receive the corrected `d` in their
 //! history exactly as Algorithm 1 line 17 requires.
 //!
+//! Two drivers exist:
+//!
+//! * [`engine::SamplerEngine`] — the production path: preallocated
+//!   ping-pong workspace, optional trajectory recording
+//!   ([`engine::Record`]), row-sharded parallel stepping. [`run_solver`]
+//!   is a thin compatibility wrapper over it.
+//! * [`run_solver_legacy`] — the original allocate-per-step reference
+//!   driver, kept as the bit-exactness oracle for the engine parity tests
+//!   and the `solver_step` bench baseline.
+//!
+//! History is exposed to solvers through [`NodeView`], a cheap read-only
+//! view that works over both nested `Vec<Vec<f64>>` storage (legacy
+//! driver, trainer) and the engine's flat ring buffers.
+//!
 //! NFE accounting is explicit: `steps_for_nfe` refuses budgets the solver
 //! cannot hit exactly (e.g. DPM-Solver-2 at odd NFE — the "\\" cells of the
 //! paper's tables).
@@ -23,9 +37,200 @@ pub mod multistep;
 pub mod dpmpp;
 pub mod unipc;
 pub mod registry;
+pub mod engine;
 
 use crate::schedule::Schedule;
 use crate::score::EpsModel;
+use std::marker::PhantomData;
+
+/// Read-only view over the recorded per-node batch rows (`xs` states or
+/// `ds` directions). Row `i` is the flat `(n, dim)` buffer at node `i`;
+/// indexing is by *absolute node index*, matching the paper's `ts[j]`
+/// grid.
+///
+/// Backed either by nested `Vec<Vec<f64>>` rows (legacy driver, trainer,
+/// tests) or by the engine's flat — possibly ring — storage. Ring-backed
+/// views only retain the trailing window the registered solvers need
+/// (see [`engine`]); indexing an evicted node panics.
+#[derive(Clone, Copy)]
+pub struct NodeView<'a> {
+    inner: Inner<'a>,
+}
+
+#[derive(Clone, Copy)]
+enum Inner<'a> {
+    Nested {
+        rows: &'a [Vec<f64>],
+        col0: usize,
+        /// `None` = full rows (whatever each row's length is).
+        cols: Option<usize>,
+    },
+    Flat {
+        ptr: *const f64,
+        row_len: usize,
+        /// Committed (logical) rows; the retained window is the trailing
+        /// `cap_rows - 1` of them while a write is in flight.
+        len: usize,
+        cap_rows: usize,
+        col0: usize,
+        cols: usize,
+        _pd: PhantomData<&'a [f64]>,
+    },
+}
+
+// SAFETY: a NodeView only ever yields shared `&[f64]` access; the engine
+// guarantees the flat variant's pointer stays valid and disjoint from the
+// single in-flight write row for the view's lifetime.
+unsafe impl Send for NodeView<'_> {}
+unsafe impl Sync for NodeView<'_> {}
+
+impl<'a> NodeView<'a> {
+    /// View over nested rows (each row one flat `(n, dim)` buffer).
+    pub fn nested(rows: &'a [Vec<f64>]) -> NodeView<'a> {
+        NodeView {
+            inner: Inner::Nested {
+                rows,
+                col0: 0,
+                cols: None,
+            },
+        }
+    }
+
+    /// View over a dense row-major matrix holding `data.len() / row_len`
+    /// committed rows.
+    pub fn flat(data: &'a [f64], row_len: usize) -> NodeView<'a> {
+        assert!(row_len > 0 && data.len() % row_len == 0, "flat view shape");
+        let len = data.len() / row_len;
+        NodeView {
+            inner: Inner::Flat {
+                ptr: data.as_ptr(),
+                row_len,
+                len,
+                // No in-flight write row for a plain matrix view, so the
+                // strict eviction check (`node + cap_rows > len`) must
+                // admit every committed row — hence len + 1, not len.
+                cap_rows: len + 1,
+                col0: 0,
+                cols: row_len,
+                _pd: PhantomData,
+            },
+        }
+    }
+
+    /// Ring view used by the engine; `len` committed rows over `cap_rows`
+    /// slots (slot = node % cap_rows). The unbound lifetime is pinned by
+    /// the caller's signature.
+    pub(crate) fn ring(
+        ptr: *const f64,
+        row_len: usize,
+        len: usize,
+        cap_rows: usize,
+    ) -> NodeView<'a> {
+        NodeView {
+            inner: Inner::Flat {
+                ptr,
+                row_len,
+                len,
+                cap_rows,
+                col0: 0,
+                cols: row_len,
+                _pd: PhantomData,
+            },
+        }
+    }
+
+    /// Number of committed node rows.
+    pub fn len(&self) -> usize {
+        match self.inner {
+            Inner::Nested { rows, .. } => rows.len(),
+            Inner::Flat { len, .. } => len,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Row at absolute node index `node`.
+    pub fn row(&self, node: usize) -> &'a [f64] {
+        match self.inner {
+            Inner::Nested { rows, col0, cols } => {
+                let r: &'a [f64] = &rows[node];
+                match cols {
+                    Some(c) => &r[col0..col0 + c],
+                    None => &r[col0..],
+                }
+            }
+            Inner::Flat {
+                ptr,
+                row_len,
+                len,
+                cap_rows,
+                col0,
+                cols,
+                ..
+            } => {
+                assert!(node < len, "node {node} not committed (len {len})");
+                assert!(
+                    node + cap_rows > len,
+                    "node {node} evicted from the history window (len {len}, cap {cap_rows})"
+                );
+                let slot = node % cap_rows;
+                // SAFETY: slot < cap_rows, the backing allocation holds
+                // cap_rows * row_len elements, and the engine never hands
+                // out a view whose retained window overlaps its write row.
+                unsafe {
+                    std::slice::from_raw_parts(ptr.add(slot * row_len + col0), cols)
+                }
+            }
+        }
+    }
+
+    /// Sub-view restricted to columns `[c0, c0 + c)` of every row (used
+    /// by the engine to shard a batch row-range across threads; `c0` is
+    /// relative to this view's own column window).
+    pub fn cols(&self, c0: usize, c: usize) -> NodeView<'a> {
+        match self.inner {
+            Inner::Nested { rows, col0, .. } => NodeView {
+                inner: Inner::Nested {
+                    rows,
+                    col0: col0 + c0,
+                    cols: Some(c),
+                },
+            },
+            Inner::Flat {
+                ptr,
+                row_len,
+                len,
+                cap_rows,
+                col0,
+                cols,
+                ..
+            } => {
+                assert!(c0 + c <= cols, "column sub-view out of range");
+                NodeView {
+                    inner: Inner::Flat {
+                        ptr,
+                        row_len,
+                        len,
+                        cap_rows,
+                        col0: col0 + c0,
+                        cols: c,
+                        _pd: PhantomData,
+                    },
+                }
+            }
+        }
+    }
+}
+
+impl std::ops::Index<usize> for NodeView<'_> {
+    type Output = [f64];
+
+    fn index(&self, node: usize) -> &[f64] {
+        self.row(node)
+    }
+}
 
 /// Per-step context handed to solvers and hooks.
 pub struct StepCtx<'a> {
@@ -37,9 +242,9 @@ pub struct StepCtx<'a> {
     pub t_next: f64,
     pub sched: &'a Schedule,
     /// States at nodes `ts[0..=j]` (so `xs[j]` is the current state).
-    pub xs: &'a [Vec<f64>],
+    pub xs: NodeView<'a>,
     /// Corrected primary directions at `ts[0..j]` (past steps only).
-    pub ds: &'a [Vec<f64>],
+    pub ds: NodeView<'a>,
 }
 
 impl StepCtx<'_> {
@@ -98,6 +303,18 @@ pub trait Solver: Send + Sync {
     /// re-use `d` nonlinearly (UniPC corrector).
     fn gamma(&self, ctx: &StepCtx<'_>) -> Option<f64>;
 
+    /// True (the default) when `step` computes each batch row purely from
+    /// that row's slice of `x`, `d` and the history views — i.e. no
+    /// cross-row reductions. The engine only shards the batch across
+    /// threads when this holds (and the solver spends exactly one model
+    /// eval per step — see `engine::step_rows`); every registered solver
+    /// qualifies, and row-sharding then preserves the per-row f64
+    /// operation order, so results are bit-identical for any thread
+    /// count.
+    fn row_independent(&self) -> bool {
+        true
+    }
+
     /// Advance the batch: write `x_{t_{j+1}}` into `out`.
     fn step(
         &self,
@@ -124,7 +341,29 @@ pub struct SolveRun {
 
 /// Run `solver` over `sched` starting from `x_t` (a batch of `n` rows drawn
 /// from the prior `N(0, T^2 I)`).
+///
+/// Compatibility wrapper over [`engine::SamplerEngine`] with full
+/// trajectory recording; one workspace is allocated per call. Long-lived
+/// callers (the serving path, benches) should hold their own engine to
+/// reuse the workspace across runs, and use [`engine::Record::None`] when
+/// trajectories are not needed.
 pub fn run_solver(
+    solver: &dyn Solver,
+    model: &dyn EpsModel,
+    x_t: &[f64],
+    n: usize,
+    sched: &Schedule,
+    hook: Option<&mut dyn DirectionHook>,
+) -> SolveRun {
+    engine::SamplerEngine::new(engine::EngineConfig::default())
+        .run(solver, model, x_t, n, sched, hook)
+}
+
+/// The seed repo's allocate-per-step driver, kept verbatim as the
+/// reference implementation: the engine parity tests assert the engine is
+/// bit-identical to this, and `benches/solver_step.rs` reports the
+/// speedup against it.
+pub fn run_solver_legacy(
     solver: &dyn Solver,
     model: &dyn EpsModel,
     x_t: &[f64],
@@ -153,8 +392,8 @@ pub fn run_solver(
             t,
             t_next,
             sched,
-            xs: &xs,
-            ds: &ds,
+            xs: NodeView::nested(&xs),
+            ds: NodeView::nested(&ds),
         };
         if let Some(h) = hook.as_deref_mut() {
             h.correct(&ctx, &xs[j], n, &mut d);
@@ -217,5 +456,24 @@ mod tests {
         assert_eq!(run.x0, x_t, "zeroed directions must freeze the state");
         // Corrected (zeroed) directions are what lands in the record.
         assert!(run.ds.iter().all(|d| d.iter().all(|&v| v == 0.0)));
+    }
+
+    #[test]
+    fn node_view_nested_and_flat_agree() {
+        let nested: Vec<Vec<f64>> = vec![vec![1.0, 2.0, 3.0, 4.0], vec![5.0, 6.0, 7.0, 8.0]];
+        let flat: Vec<f64> = nested.iter().flatten().copied().collect();
+        let a = NodeView::nested(&nested);
+        let b = NodeView::flat(&flat, 4);
+        assert_eq!(a.len(), 2);
+        assert_eq!(b.len(), 2);
+        for i in 0..2 {
+            assert_eq!(a.row(i), b.row(i));
+            assert_eq!(&a[i], &b[i]);
+        }
+        // Column sub-views (rows of 2 samples x dim 2, take sample 1).
+        let ac = a.cols(2, 2);
+        let bc = b.cols(2, 2);
+        assert_eq!(ac.row(1), &[7.0, 8.0]);
+        assert_eq!(bc.row(1), &[7.0, 8.0]);
     }
 }

@@ -276,8 +276,8 @@ mod tests {
                 t: sched.ts[2],
                 t_next: sched.ts[3],
                 sched: &sched,
-                xs: &xs,
-                ds: &ds,
+                xs: crate::solvers::NodeView::nested(&xs),
+                ds: crate::solvers::NodeView::nested(&ds),
             };
             let gamma = solver.gamma(&ctx).unwrap();
             let mut out0 = vec![0.0];

@@ -92,9 +92,9 @@ pub fn matmul_acc(a: &[f64], m: usize, k: usize, b: &[f64], n: usize, c: &mut [f
         let arow = &a[i * k..(i + 1) * k];
         let crow = &mut c[i * n..(i + 1) * n];
         for (p, &av) in arow.iter().enumerate() {
-            if av == 0.0 {
-                continue;
-            }
+            // No zero-skip here: the data-dependent branch defeated
+            // autovectorization of the dense inner loop, and `+= 0.0 * bv`
+            // is a no-op for the finite inputs this crate feeds it.
             let brow = &b[p * n..(p + 1) * n];
             for (cv, &bv) in crow.iter_mut().zip(brow.iter()) {
                 *cv += av * bv;
@@ -110,18 +110,33 @@ pub fn matmul_into(a: &[f64], m: usize, k: usize, b: &[f64], n: usize, c: &mut [
     matmul_acc(a, m, k, b, n, c);
 }
 
-/// Dot product.
+/// Dot product, 4-lane unrolled: independent accumulators break the
+/// serial FP-add dependency chain so the loop pipelines/vectorizes. The
+/// summation order is fixed (deterministic across platforms and thread
+/// counts), just not the naive left-to-right one.
 #[inline]
 pub fn dot(a: &[f64], b: &[f64]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
-    let mut s = 0.0;
-    for i in 0..a.len() {
+    let len = a.len();
+    let n4 = len & !3;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+    let mut i = 0;
+    while i < n4 {
+        s0 += a[i] * b[i];
+        s1 += a[i + 1] * b[i + 1];
+        s2 += a[i + 2] * b[i + 2];
+        s3 += a[i + 3] * b[i + 3];
+        i += 4;
+    }
+    let mut s = (s0 + s1) + (s2 + s3);
+    while i < len {
         s += a[i] * b[i];
+        i += 1;
     }
     s
 }
 
-/// Euclidean norm.
+/// Euclidean norm (inherits the unrolled accumulation of [`dot`]).
 #[inline]
 pub fn norm2(a: &[f64]) -> f64 {
     dot(a, a).sqrt()

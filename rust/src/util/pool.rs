@@ -1,0 +1,405 @@
+//! Dependency-free scoped thread pool for the batch-parallel hot loops.
+//!
+//! The sampling engine ([`crate::solvers::engine`]), the analytic score
+//! ([`crate::score::analytic`]) and the PAS corrector
+//! ([`crate::pas::correct`]) all shard *rows of a batch* across cores.
+//! Spawning OS threads per step (what the seed code did inside
+//! `AnalyticEps::eval_batch`) costs tens of microseconds per parallel
+//! region; at 10 NFE × 3 regions/step that overhead rivals the math. This
+//! pool keeps workers parked on a condvar instead, and a dispatch costs
+//! two mutex acquisitions and **zero heap allocations** — the property the
+//! `pas_overhead` bench's allocation counter verifies for the serving
+//! path.
+//!
+//! # Semantics
+//!
+//! [`Pool::run`]`(total, f)` executes `f(0)`, …, `f(total - 1)` across the
+//! caller plus the parked workers and returns when all indices are done —
+//! the same contract as spawning inside `std::thread::scope`, which is why
+//! borrowed (non-`'static`) closures are sound here: the closure pointer
+//! handed to the workers never outlives the call (the lifetime is erased
+//! with a `transmute`, and `run` blocks until every worker finished).
+//! Panics in tasks are caught, remaining indices are drained, and the
+//! panic is re-raised on the caller thread.
+//!
+//! Nested calls (a task calling `run` again, e.g. a sharded solver step
+//! whose model eval is itself parallel) execute inline on the calling
+//! thread — no deadlocks, no oversubscription.
+//!
+//! # Determinism
+//!
+//! The pool only ever hands out *index sets*; [`Pool::par_rows`] splits a
+//! batch into contiguous row ranges. Since every caller in this crate
+//! keeps per-row work independent and processes each row sequentially
+//! inside its range, results are bit-identical for every thread count
+//! (including 1) — the engine's parity tests assert exactly that.
+//!
+//! Sizing: `PAS_THREADS` env override, else available parallelism capped
+//! at 16 (same rule the seed code used).
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+thread_local! {
+    /// Set while the current thread is executing pool tasks (workers
+    /// always; the submitting thread during its own claim loop). Nested
+    /// `run` calls from such threads execute inline.
+    static IN_POOL: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
+}
+
+/// A borrowed job: raw closure pointer + task count. Only dereferenced
+/// while the submitting `run` call is blocked, which keeps the borrow
+/// alive.
+#[derive(Clone, Copy)]
+struct Job {
+    f: *const (dyn Fn(usize) + Sync + 'static),
+    total: usize,
+}
+
+// SAFETY: the pointee is `Sync` (shared-call safe) and outlives every
+// dereference — `Pool::run` does not return before all workers are done
+// with the job.
+unsafe impl Send for Job {}
+
+struct State {
+    /// Bumped once per submitted job so parked workers can tell a fresh
+    /// job from the one they just finished.
+    epoch: u64,
+    job: Option<Job>,
+    /// Workers still processing the current epoch.
+    active: usize,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    work_cv: Condvar,
+    done_cv: Condvar,
+    /// Next task index to claim (reset per job).
+    next: AtomicUsize,
+    panicked: AtomicBool,
+}
+
+/// Persistent scoped thread pool. See the module docs.
+pub struct Pool {
+    shared: Arc<Shared>,
+    /// Serializes submissions: one job in flight at a time.
+    submit: Mutex<()>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+/// `PAS_THREADS` env override, else available parallelism capped at 16.
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("PAS_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(16)
+}
+
+impl Pool {
+    /// Pool with `threads` total participants (the submitting thread
+    /// counts as one, so `threads - 1` workers are spawned; `threads <= 1`
+    /// means fully inline execution).
+    pub fn new(threads: usize) -> Pool {
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State {
+                epoch: 0,
+                job: None,
+                active: 0,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+            next: AtomicUsize::new(0),
+            panicked: AtomicBool::new(false),
+        });
+        let workers = (0..threads.saturating_sub(1))
+            .map(|i| {
+                let sh = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("pas-pool-{i}"))
+                    .spawn(move || worker_loop(&sh))
+                    .expect("spawning pool worker")
+            })
+            .collect();
+        Pool {
+            shared,
+            submit: Mutex::new(()),
+            workers,
+        }
+    }
+
+    /// The process-wide pool every hot loop shares.
+    pub fn global() -> &'static Pool {
+        static POOL: OnceLock<Pool> = OnceLock::new();
+        POOL.get_or_init(|| Pool::new(default_threads()))
+    }
+
+    /// Total participants (workers + the submitting thread).
+    pub fn size(&self) -> usize {
+        self.workers.len() + 1
+    }
+
+    /// Run `f(0..total)` across the pool; returns when every index is
+    /// done. Allocation-free in steady state. Panics (on the caller) if
+    /// any task panicked.
+    pub fn run(&self, total: usize, f: &(dyn Fn(usize) + Sync)) {
+        if total == 0 {
+            return;
+        }
+        if self.workers.is_empty() || total == 1 || IN_POOL.with(|c| c.get()) {
+            for i in 0..total {
+                f(i);
+            }
+            return;
+        }
+        let _guard = self.submit.lock().unwrap();
+        // SAFETY: erases the closure's borrow lifetime. Sound because this
+        // function blocks (below) until `state.active == 0`, i.e. until no
+        // worker can still dereference the pointer.
+        let ptr = unsafe {
+            std::mem::transmute::<
+                &(dyn Fn(usize) + Sync),
+                *const (dyn Fn(usize) + Sync + 'static),
+            >(f)
+        };
+        self.shared.panicked.store(false, Ordering::Relaxed);
+        self.shared.next.store(0, Ordering::SeqCst);
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.job = Some(Job { f: ptr, total });
+            st.epoch = st.epoch.wrapping_add(1);
+            st.active = self.workers.len();
+        }
+        self.shared.work_cv.notify_all();
+        // The submitting thread claims indices too.
+        IN_POOL.with(|c| c.set(true));
+        claim_loop(&self.shared, f, total);
+        IN_POOL.with(|c| c.set(false));
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            while st.active > 0 {
+                st = self.shared.done_cv.wait(st).unwrap();
+            }
+            st.job = None;
+        }
+        if self.shared.panicked.load(Ordering::Relaxed) {
+            panic!("pas::util::pool: a parallel task panicked");
+        }
+    }
+
+    /// Shard `rows` into at most `min(size, max_parts)` contiguous ranges
+    /// of at least `min_rows` rows and call `f(row_start, row_end)` for
+    /// each, in parallel. Bit-identical to `f(0, rows)` whenever per-row
+    /// work is independent.
+    pub fn par_rows(
+        &self,
+        rows: usize,
+        max_parts: usize,
+        min_rows: usize,
+        f: impl Fn(usize, usize) + Sync,
+    ) {
+        if rows == 0 {
+            return;
+        }
+        let cap = self.size().min(max_parts.max(1));
+        let parts = cap.min(rows / min_rows.max(1)).max(1);
+        if parts <= 1 {
+            f(0, rows);
+            return;
+        }
+        let chunk = rows.div_ceil(parts);
+        let n_chunks = rows.div_ceil(chunk);
+        self.run(n_chunks, &|c| {
+            let r0 = c * chunk;
+            let r1 = ((c + 1) * chunk).min(rows);
+            f(r0, r1);
+        });
+    }
+}
+
+fn claim_loop(shared: &Shared, f: &(dyn Fn(usize) + Sync), total: usize) {
+    loop {
+        let i = shared.next.fetch_add(1, Ordering::SeqCst);
+        if i >= total {
+            break;
+        }
+        if shared.panicked.load(Ordering::Relaxed) {
+            continue; // drain remaining indices without running them
+        }
+        if catch_unwind(AssertUnwindSafe(|| f(i))).is_err() {
+            shared.panicked.store(true, Ordering::Relaxed);
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    IN_POOL.with(|c| c.set(true));
+    let mut seen = 0u64;
+    loop {
+        let job = {
+            let mut st = shared.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.epoch != seen {
+                    if let Some(j) = st.job {
+                        seen = st.epoch;
+                        break j;
+                    }
+                }
+                st = shared.work_cv.wait(st).unwrap();
+            }
+        };
+        // SAFETY: the submitter blocks until we decrement `active` below,
+        // so the borrow behind `job.f` is still live here.
+        let f = unsafe { &*job.f };
+        claim_loop(shared, f, job.total);
+        let mut st = shared.state.lock().unwrap();
+        st.active -= 1;
+        if st.active == 0 {
+            shared.done_cv.notify_all();
+        }
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.shared.work_cv.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Raw-pointer wrapper so parallel tasks can write to *disjoint* regions
+/// of one buffer (rustc cannot prove disjointness of computed row ranges).
+/// Every use site derives non-overlapping slices from row arithmetic.
+pub struct SendPtr<T>(*mut T);
+
+impl<T> SendPtr<T> {
+    pub fn new(p: *mut T) -> SendPtr<T> {
+        SendPtr(p)
+    }
+
+    pub fn get(&self) -> *mut T {
+        self.0
+    }
+}
+
+impl<T> Clone for SendPtr<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+
+impl<T> Copy for SendPtr<T> {}
+
+// SAFETY: a SendPtr is only a capability to *derive* disjoint &mut slices
+// inside pool tasks; all call sites guarantee disjoint row ranges.
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn runs_every_index_exactly_once() {
+        let pool = Pool::new(4);
+        let hits = AtomicU64::new(0);
+        let sum = AtomicU64::new(0);
+        pool.run(100, &|i| {
+            hits.fetch_add(1, Ordering::Relaxed);
+            sum.fetch_add(i as u64, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 100);
+        assert_eq!(sum.load(Ordering::Relaxed), 99 * 100 / 2);
+    }
+
+    #[test]
+    fn single_thread_pool_is_inline() {
+        let pool = Pool::new(1);
+        assert_eq!(pool.size(), 1);
+        let sum = AtomicU64::new(0);
+        pool.run(10, &|i| {
+            sum.fetch_add(i as u64, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 45);
+    }
+
+    #[test]
+    fn par_rows_covers_disjoint_ranges() {
+        let pool = Pool::new(3);
+        let rows = 1000;
+        let dim = 3;
+        let mut out = vec![0.0f64; rows * dim];
+        let ptr = SendPtr::new(out.as_mut_ptr());
+        pool.par_rows(rows, usize::MAX, 1, |r0, r1| {
+            let o = unsafe {
+                std::slice::from_raw_parts_mut(ptr.get().add(r0 * dim), (r1 - r0) * dim)
+            };
+            for (k, v) in o.iter_mut().enumerate() {
+                *v = (r0 * dim + k) as f64;
+            }
+        });
+        for (k, v) in out.iter().enumerate() {
+            assert_eq!(*v, k as f64, "row element {k} written exactly once");
+        }
+    }
+
+    #[test]
+    fn nested_run_executes_inline() {
+        let pool = Pool::global();
+        let count = AtomicU64::new(0);
+        pool.run(8, &|_| {
+            // Nested dispatch from a pool task must not deadlock.
+            Pool::global().run(8, &|_| {
+                count.fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 64);
+    }
+
+    #[test]
+    fn task_panic_propagates_to_caller() {
+        let pool = Pool::new(4);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            pool.run(32, &|i| {
+                if i == 7 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(r.is_err(), "panic must reach the submitter");
+        // Pool stays usable afterwards.
+        let n = AtomicU64::new(0);
+        pool.run(16, &|_| {
+            n.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(n.load(Ordering::Relaxed), 16);
+    }
+
+    #[test]
+    fn borrowed_state_is_visible_after_run() {
+        let pool = Pool::new(4);
+        let data: Vec<u64> = (0..64).collect();
+        let sum = AtomicU64::new(0);
+        pool.run(64, &|i| {
+            sum.fetch_add(data[i], Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 63 * 64 / 2);
+    }
+}

@@ -1,0 +1,182 @@
+//! Engine ⇔ legacy-driver parity: for every solver in the registry, the
+//! workspace-pooled [`SamplerEngine`] must produce **bit-identical**
+//! samples to the seed's allocate-per-step driver
+//! ([`pas::solvers::run_solver_legacy`]) — with and without a
+//! [`CorrectedSampler`] hook, with sequential and sharded stepping, and
+//! in both [`Record`] modes. Row-sharding preserves per-row f64 operation
+//! order, which is the whole determinism argument; these tests enforce
+//! it.
+
+use pas::pas::coords::{CoordinateDict, ScaleMode};
+use pas::pas::correct::CorrectedSampler;
+use pas::schedule::default_schedule;
+use pas::score::analytic::AnalyticEps;
+use pas::score::counting::CountingEps;
+use pas::solvers::engine::{EngineConfig, Record, SamplerEngine};
+use pas::solvers::registry;
+use pas::solvers::run_solver_legacy;
+use pas::traj::sample_prior;
+use pas::util::rng::Pcg64;
+
+const STEPS: usize = 6;
+const N: usize = 64; // n * dim = 4096: large enough to engage sharding
+const DIM: usize = 64;
+
+fn setup(seed: u64) -> (Box<AnalyticEps>, pas::schedule::Schedule, Vec<f64>) {
+    let ds = pas::data::registry::get("gmm-hd64").unwrap();
+    let model = AnalyticEps::from_dataset(&ds);
+    let sched = default_schedule(STEPS);
+    let mut rng = Pcg64::seed(seed);
+    let x_t = sample_prior(&mut rng, N, DIM, sched.t_max());
+    (model, sched, x_t)
+}
+
+/// A small synthetic dictionary exercising the PCA correction path at two
+/// time points (no training needed; parity only cares about the code
+/// path, not sample quality).
+fn toy_dict() -> CoordinateDict {
+    let mut dict = CoordinateDict::new(4, ScaleMode::Relative, "any", "gmm-hd64", STEPS);
+    dict.steps.insert(2, vec![1.0, 0.05, 0.0, 0.0]);
+    dict.steps.insert(4, vec![0.9, -0.1, 0.02, 0.0]);
+    dict
+}
+
+#[test]
+fn full_record_bitwise_parity_every_solver() {
+    let (model, sched, x_t) = setup(100);
+    for name in registry::ALL {
+        let solver = registry::get(name).unwrap();
+        let legacy = run_solver_legacy(solver.as_ref(), model.as_ref(), &x_t, N, &sched, None);
+        for threads in [1usize, 4] {
+            let mut eng = SamplerEngine::new(EngineConfig {
+                record: Record::Full,
+                threads,
+            });
+            let run = eng.run(solver.as_ref(), model.as_ref(), &x_t, N, &sched, None);
+            assert_eq!(legacy.x0, run.x0, "{name} x0 (threads={threads})");
+            assert_eq!(legacy.xs, run.xs, "{name} xs (threads={threads})");
+            assert_eq!(legacy.ds, run.ds, "{name} ds (threads={threads})");
+            assert_eq!(legacy.nfe, run.nfe, "{name} nfe (threads={threads})");
+        }
+    }
+}
+
+#[test]
+fn hooked_parity_every_solver() {
+    let (model, sched, x_t) = setup(101);
+    let dict = toy_dict();
+    for name in registry::ALL {
+        let solver = registry::get(name).unwrap();
+        let mut legacy_hook = CorrectedSampler::new(&dict, DIM);
+        let legacy = run_solver_legacy(
+            solver.as_ref(),
+            model.as_ref(),
+            &x_t,
+            N,
+            &sched,
+            Some(&mut legacy_hook),
+        );
+        for threads in [1usize, 4] {
+            let mut engine_hook = CorrectedSampler::new(&dict, DIM);
+            let mut eng = SamplerEngine::new(EngineConfig {
+                record: Record::Full,
+                threads,
+            });
+            let run = eng.run(
+                solver.as_ref(),
+                model.as_ref(),
+                &x_t,
+                N,
+                &sched,
+                Some(&mut engine_hook),
+            );
+            assert_eq!(legacy.x0, run.x0, "{name} hooked x0 (threads={threads})");
+            assert_eq!(legacy.ds, run.ds, "{name} hooked ds (threads={threads})");
+            assert_eq!(
+                legacy_hook.corrections_applied, engine_hook.corrections_applied,
+                "{name} corrections applied"
+            );
+            assert_eq!(engine_hook.corrections_applied, 2, "{name} dict steps hit");
+        }
+    }
+}
+
+#[test]
+fn record_none_parity_and_nfe_every_solver() {
+    let (model, sched, x_t) = setup(102);
+    for name in registry::ALL {
+        let solver = registry::get(name).unwrap();
+        let legacy = run_solver_legacy(solver.as_ref(), model.as_ref(), &x_t, N, &sched, None);
+        for threads in [1usize, 4] {
+            let counting = CountingEps::new(model.as_ref());
+            let mut eng = SamplerEngine::new(EngineConfig {
+                record: Record::None,
+                threads,
+            });
+            let mut x0 = vec![0.0; N * DIM];
+            let nfe = eng.run_into(
+                solver.as_ref(),
+                &counting,
+                &x_t,
+                N,
+                &sched,
+                None,
+                &mut x0,
+            );
+            assert_eq!(legacy.x0, x0, "{name} Record::None x0 (threads={threads})");
+            assert_eq!(legacy.nfe, nfe, "{name} Record::None nfe (threads={threads})");
+            assert_eq!(
+                nfe,
+                STEPS * solver.evals_per_step(),
+                "{name} NFE accounting in Record::None"
+            );
+            assert_eq!(counting.nfe(), nfe, "{name} model actually evaluated nfe times");
+        }
+    }
+}
+
+#[test]
+fn record_none_with_hook_matches_full() {
+    let (model, sched, x_t) = setup(103);
+    let dict = toy_dict();
+    for name in ["ddim", "ipndm4", "dpmpp3m", "unipc3m", "deis-tab3", "heun"] {
+        let solver = registry::get(name).unwrap();
+        let mut hook_full = CorrectedSampler::new(&dict, DIM);
+        let mut full = SamplerEngine::with_record(Record::Full);
+        let run = full.run(
+            solver.as_ref(),
+            model.as_ref(),
+            &x_t,
+            N,
+            &sched,
+            Some(&mut hook_full),
+        );
+        let mut hook_none = CorrectedSampler::new(&dict, DIM);
+        let mut none = SamplerEngine::with_record(Record::None);
+        let mut x0 = vec![0.0; N * DIM];
+        let nfe = none.run_into(
+            solver.as_ref(),
+            model.as_ref(),
+            &x_t,
+            N,
+            &sched,
+            Some(&mut hook_none),
+            &mut x0,
+        );
+        assert_eq!(run.x0, x0, "{name} hooked Record::None x0");
+        assert_eq!(run.nfe, nfe, "{name} hooked Record::None nfe");
+    }
+}
+
+/// The engine-backed `run_solver` wrapper is the drop-in default path.
+#[test]
+fn run_solver_wrapper_is_engine_backed_and_identical() {
+    let (model, sched, x_t) = setup(104);
+    let solver = registry::get("ipndm").unwrap();
+    let legacy = run_solver_legacy(solver.as_ref(), model.as_ref(), &x_t, N, &sched, None);
+    let run = pas::solvers::run_solver(solver.as_ref(), model.as_ref(), &x_t, N, &sched, None);
+    assert_eq!(legacy.x0, run.x0);
+    assert_eq!(legacy.xs, run.xs);
+    assert_eq!(legacy.ds, run.ds);
+    assert_eq!(legacy.nfe, run.nfe);
+}

@@ -1,6 +1,9 @@
 //! Integration tests across the runtime boundary: rust loads and executes
 //! the AOT-compiled JAX denoiser. Skipped gracefully (with a loud message)
-//! when `make artifacts` hasn't run.
+//! when `make artifacts` hasn't run. The whole file needs the `pjrt`
+//! feature (vendored xla crate).
+
+#![cfg(feature = "pjrt")]
 
 use pas::score::pjrt::PjrtEps;
 use pas::score::EpsModel;

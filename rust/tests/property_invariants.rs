@@ -8,7 +8,7 @@ use pas::pas::pca::{pca_basis, TrajBuffer};
 use pas::schedule::Schedule;
 use pas::score::analytic::AnalyticEps;
 use pas::score::EpsModel;
-use pas::solvers::StepCtx;
+use pas::solvers::{NodeView, StepCtx};
 use pas::tensor::dot;
 use pas::util::json::Json;
 use pas::util::rng::Pcg64;
@@ -129,8 +129,8 @@ fn prop_solver_affine_in_direction() {
                 t: sched.ts[j],
                 t_next: sched.ts[j + 1],
                 sched: &sched,
-                xs: &xs,
-                ds: &ds,
+                xs: NodeView::nested(&xs),
+                ds: NodeView::nested(&ds),
             };
             let gamma = solver.gamma(&ctx).unwrap();
             let x = vec![xs[j][0]];
