@@ -11,7 +11,10 @@
 
 #[path = "harness.rs"]
 mod harness;
+#[path = "../tests/support/counting_alloc.rs"]
+mod counting_alloc;
 
+use counting_alloc::{CountingAlloc, ALLOC_COUNT};
 use pas::pas::pca::{pca_basis, TrajBuffer};
 use pas::schedule::default_schedule;
 use pas::score::analytic::AnalyticEps;
@@ -19,82 +22,61 @@ use pas::score::EpsModel;
 use pas::solvers::engine::{Record, SamplerEngine};
 use pas::traj::sample_prior;
 use pas::util::rng::Pcg64;
-use std::alloc::{GlobalAlloc, Layout, System};
-use std::sync::atomic::{AtomicU64, Ordering};
-
-/// Counts every heap allocation (alloc / alloc_zeroed / realloc) made by
-/// any thread; frees are not counted — we only care that the steady state
-/// performs none.
-struct CountingAlloc;
-
-static ALLOC_COUNT: AtomicU64 = AtomicU64::new(0);
-
-unsafe impl GlobalAlloc for CountingAlloc {
-    unsafe fn alloc(&self, l: Layout) -> *mut u8 {
-        ALLOC_COUNT.fetch_add(1, Ordering::Relaxed);
-        System.alloc(l)
-    }
-
-    unsafe fn dealloc(&self, p: *mut u8, l: Layout) {
-        System.dealloc(p, l)
-    }
-
-    unsafe fn alloc_zeroed(&self, l: Layout) -> *mut u8 {
-        ALLOC_COUNT.fetch_add(1, Ordering::Relaxed);
-        System.alloc_zeroed(l)
-    }
-
-    unsafe fn realloc(&self, p: *mut u8, l: Layout, s: usize) -> *mut u8 {
-        ALLOC_COUNT.fetch_add(1, Ordering::Relaxed);
-        System.realloc(p, l, s)
-    }
-}
+use std::sync::atomic::Ordering;
 
 #[global_allocator]
 static ALLOCATOR: CountingAlloc = CountingAlloc;
 
 /// Steady-state allocations per step of the serving path: warmed engine,
-/// `Record::None`, ddim @ 10 NFE on latent256 at batch 256 (the
-/// acceptance configuration). Returns false (and the process exits
-/// non-zero) if the steady state allocates — this is an enforced
-/// invariant, not a report.
+/// `Record::None`, 10 NFE on latent256 at batch 256 (the acceptance
+/// configuration), across representative registry solvers — single-eval,
+/// multi-eval (scratch-arena + sharded internal evals) and
+/// history-hungry. Returns false (and the process exits non-zero) if any
+/// steady state allocates — this is an enforced invariant, not a report.
+/// `tests/alloc_audit.rs` covers the full registry × record-mode matrix.
 #[must_use]
 fn engine_steady_state_allocs() -> bool {
-    println!("\n== engine steady-state allocations (Record::None, ddim@10, latent256 b256) ==");
+    println!("\n== engine steady-state allocations (Record::None, 10 NFE, latent256 b256) ==");
     let ds = pas::data::registry::get("latent256").unwrap();
     let model = AnalyticEps::from_dataset(&ds);
-    let solver = pas::solvers::registry::get("ddim").unwrap();
-    let sched = default_schedule(10);
     let n = 256;
     let dim = ds.dim();
     let mut rng = Pcg64::seed(7);
-    let x_t = sample_prior(&mut rng, n, dim, sched.t_max());
     let mut engine = SamplerEngine::with_record(Record::None);
     let mut x0 = vec![0.0; n * dim];
-    // Warm-up: sizes the engine workspace and every pool worker's
-    // thread-local eval scratch (generous so no worker's lazy scratch
-    // init can land inside the measured window).
-    for _ in 0..10 {
-        engine.run_into(solver.as_ref(), model.as_ref(), &x_t, n, &sched, None, &mut x0);
+    let mut all_zero = true;
+    for solver_name in ["ddim", "dpm2", "unipc3m"] {
+        let solver = pas::solvers::registry::get(solver_name).unwrap();
+        let steps = solver.steps_for_nfe(10).unwrap();
+        let sched = default_schedule(steps);
+        let x_t = sample_prior(&mut rng, n, dim, sched.t_max());
+        // Warm-up: sizes the engine workspace (node stores + solver
+        // scratch arena) and every pool worker's thread-local eval
+        // scratch (generous so no worker's lazy scratch init can land
+        // inside the measured window).
+        for _ in 0..10 {
+            engine.run_into(solver.as_ref(), model.as_ref(), &x_t, n, &sched, None, &mut x0);
+        }
+        let runs = 20usize;
+        let before = ALLOC_COUNT.load(Ordering::SeqCst);
+        for _ in 0..runs {
+            engine.run_into(solver.as_ref(), model.as_ref(), &x_t, n, &sched, None, &mut x0);
+        }
+        let after = ALLOC_COUNT.load(Ordering::SeqCst);
+        let total = after - before;
+        println!(
+            "{solver_name}: steady-state heap allocations: {total} over {} steps ({:.4}/step)",
+            runs * steps,
+            total as f64 / (runs * steps) as f64
+        );
+        if total == 0 {
+            println!("  -> ZERO steady-state allocations per step (engine claim holds)");
+        } else {
+            println!("  -> FAIL: expected zero; the serving path regressed");
+            all_zero = false;
+        }
     }
-    let runs = 20usize;
-    let before = ALLOC_COUNT.load(Ordering::SeqCst);
-    for _ in 0..runs {
-        engine.run_into(solver.as_ref(), model.as_ref(), &x_t, n, &sched, None, &mut x0);
-    }
-    let after = ALLOC_COUNT.load(Ordering::SeqCst);
-    let steps = runs * 10;
-    let total = after - before;
-    println!(
-        "steady-state heap allocations: {total} over {steps} steps ({:.4}/step)",
-        total as f64 / steps as f64
-    );
-    if total == 0 {
-        println!("  -> ZERO steady-state allocations per step (engine claim holds)");
-    } else {
-        println!("  -> FAIL: expected zero; the serving path regressed");
-    }
-    total == 0
+    all_zero
 }
 
 fn main() {

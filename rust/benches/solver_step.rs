@@ -28,7 +28,11 @@ fn main() {
         let mut rng = Pcg64::seed(1);
         let n = 256;
         let dim = ds.dim();
-        for solver_name in ["ddim", "ipndm", "dpmpp3m", "unipc3m", "deis-tab3"] {
+        // Multi-eval solvers (heun, dpm2) included since the engine now
+        // row-shards them too (internal evals go per-chunk).
+        for solver_name in [
+            "ddim", "heun", "dpm2", "ipndm", "dpmpp3m", "unipc3m", "deis-tab3",
+        ] {
             let solver = registry::get(solver_name).unwrap();
             let steps = solver.steps_for_nfe(10).unwrap();
             let sched = default_schedule(steps);

@@ -22,7 +22,7 @@ use super::coords::{CoordinateDict, ScaleMode};
 use super::pca::{pca_basis, Basis, TrajBuffer};
 use crate::schedule::Schedule;
 use crate::score::EpsModel;
-use crate::solvers::{NodeView, Solver, StepCtx};
+use crate::solvers::{NodeView, Solver, StepCtx, StepScratch};
 use crate::traj::{ground_truth, sample_prior, truncation_error_curve, GroundTruth};
 use crate::util::pool::{Pool, SendPtr};
 use crate::util::rng::Pcg64;
@@ -294,6 +294,8 @@ impl PasTrainer {
         let mut base = vec![0.0; n * dim];
         let mut x_next_unc = vec![0.0; n * dim];
         let zeros = vec![0.0; n * dim];
+        // One arena reused by both per-step solver calls (gamma path).
+        let mut step_scratch = vec![0.0; solver.scratch_spec(dim, n).len_for(n)];
 
         for j in 0..n_steps {
             let i_paper = n_steps - j;
@@ -311,9 +313,11 @@ impl PasTrainer {
                 .gamma(&ctx)
                 .ok_or_else(|| format!("solver {} does not support PAS", solver.name()))?;
             // Affine base: step with d = 0.
-            solver.step(model, &ctx, &xs[j], &zeros, n, &mut base);
+            let mut sc = StepScratch::new(&mut step_scratch);
+            solver.step(model, &ctx, &xs[j], &zeros, n, &mut base, &mut sc);
             // Uncorrected next state (for the adaptive decision).
-            solver.step(model, &ctx, &xs[j], &d_all, n, &mut x_next_unc);
+            let mut sc = StepScratch::new(&mut step_scratch);
+            solver.step(model, &ctx, &xs[j], &d_all, n, &mut x_next_unc, &mut sc);
 
             // Per-sample bases, sharded row-wise over the pool (samples
             // are independent; same values as the sequential loop).

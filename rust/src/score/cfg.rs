@@ -37,6 +37,10 @@ impl EpsModel for CfgEps {
         self.cond.dim()
     }
 
+    fn rows_independent(&self) -> bool {
+        self.cond.rows_independent() && self.uncond.rows_independent()
+    }
+
     fn eval_batch(&self, x: &[f64], n: usize, t: f64, out: &mut [f64]) {
         // eps_u + s (eps_c − eps_u). Both nets evaluated per call — in NFE
         // accounting terms this is the standard "1 NFE = 1 guided eval"
@@ -92,6 +96,13 @@ impl RowCfgEps {
 impl EpsModel for RowCfgEps {
     fn dim(&self) -> usize {
         self.uncond.dim()
+    }
+
+    /// Guidance class depends on the absolute row index, so a sub-batch
+    /// eval would re-number rows — the engine must not shard around this
+    /// model.
+    fn rows_independent(&self) -> bool {
+        false
     }
 
     fn eval_batch(&self, x: &[f64], n: usize, t: f64, out: &mut [f64]) {

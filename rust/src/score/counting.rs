@@ -10,6 +10,7 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 pub struct CountingEps<'a> {
     pub inner: &'a dyn EpsModel,
     count: AtomicUsize,
+    rows: AtomicUsize,
 }
 
 impl<'a> CountingEps<'a> {
@@ -17,18 +18,43 @@ impl<'a> CountingEps<'a> {
         CountingEps {
             inner,
             count: AtomicUsize::new(0),
+            rows: AtomicUsize::new(0),
         }
     }
 
     /// Number of `eval_batch` calls so far (batch counts as one NFE: all
     /// trajectories advance in lockstep, matching how the paper counts
-    /// model invocations per sample).
+    /// model invocations per sample). NOTE: the engine may shard a
+    /// multi-eval solver's internal evaluations into per-chunk calls, in
+    /// which case call count exceeds logical NFE — use [`Self::nfe_rows`]
+    /// for a sharding-invariant count.
     pub fn nfe(&self) -> usize {
         self.count.load(Ordering::Relaxed)
     }
 
+    /// Total batch rows evaluated so far. A full-batch eval and the same
+    /// eval split into per-chunk calls contribute identically, so this is
+    /// invariant under the engine's row-sharding.
+    pub fn rows_evaluated(&self) -> usize {
+        self.rows.load(Ordering::Relaxed)
+    }
+
+    /// Sharding-invariant logical NFE for a run whose every evaluation
+    /// covered (possibly in chunks) the same `n`-row batch: total rows
+    /// evaluated divided by `n`. Panics if the row total is not an exact
+    /// multiple of `n` — that would mean some evaluation skipped rows.
+    pub fn nfe_rows(&self, n: usize) -> usize {
+        let r = self.rows.load(Ordering::Relaxed);
+        assert!(
+            n > 0 && r % n == 0,
+            "rows evaluated ({r}) not a multiple of the batch ({n})"
+        );
+        r / n
+    }
+
     pub fn reset(&self) {
         self.count.store(0, Ordering::Relaxed);
+        self.rows.store(0, Ordering::Relaxed);
     }
 }
 
@@ -37,8 +63,13 @@ impl EpsModel for CountingEps<'_> {
         self.inner.dim()
     }
 
+    fn rows_independent(&self) -> bool {
+        self.inner.rows_independent()
+    }
+
     fn eval_batch(&self, x: &[f64], n: usize, t: f64, out: &mut [f64]) {
         self.count.fetch_add(1, Ordering::Relaxed);
+        self.rows.fetch_add(n, Ordering::Relaxed);
         self.inner.eval_batch(x, n, t, out);
     }
 
@@ -64,7 +95,28 @@ mod tests {
             c.eval_batch(&x, 2, 1.0, &mut out);
         }
         assert_eq!(c.nfe(), 5);
+        assert_eq!(c.rows_evaluated(), 10);
+        assert_eq!(c.nfe_rows(2), 5);
         c.reset();
         assert_eq!(c.nfe(), 0);
+        assert_eq!(c.rows_evaluated(), 0);
+    }
+
+    /// Per-chunk calls summing to the batch count the same as full-batch
+    /// calls — the property the engine's multi-eval sharding relies on.
+    #[test]
+    fn row_accounting_is_sharding_invariant() {
+        let ds = registry::get("gmm2d").unwrap();
+        let m = AnalyticEps::from_dataset(&ds);
+        let c = CountingEps::new(m.as_ref());
+        let x = vec![0.0; 8];
+        let mut out = vec![0.0; 8];
+        // One full-batch eval (4 rows) + the same batch in 3 chunks.
+        c.eval_batch(&x, 4, 1.0, &mut out);
+        c.eval_batch(&x[..2], 1, 1.0, &mut out[..2]);
+        c.eval_batch(&x[2..6], 2, 1.0, &mut out[2..6]);
+        c.eval_batch(&x[6..], 1, 1.0, &mut out[6..]);
+        assert_eq!(c.nfe(), 4, "call count sees the chunking");
+        assert_eq!(c.nfe_rows(4), 2, "row count does not");
     }
 }

@@ -32,6 +32,19 @@ pub trait EpsModel: Sync {
     /// Human-readable identifier.
     fn name(&self) -> &str;
 
+    /// True (the default) when `eval_batch` computes each row purely from
+    /// that row's slice of `x` — so evaluating any contiguous sub-batch
+    /// yields bit-identical rows. The engine relies on this to route a
+    /// multi-eval solver's *internal* evaluations through per-chunk
+    /// `eval_batch` calls when row-sharding the step. Models that key
+    /// behavior on the absolute row index within the batch (e.g.
+    /// [`cfg::RowCfgEps`], which guides row `k` toward class `k %
+    /// n_classes`) must return false; the engine then steps such solvers
+    /// unsharded. Wrappers must delegate to their inner model.
+    fn rows_independent(&self) -> bool {
+        true
+    }
+
     /// Convenience: allocate-and-return variant.
     fn eval(&self, x: &[f64], n: usize, t: f64) -> Vec<f64> {
         let mut out = vec![0.0; x.len()];

@@ -29,6 +29,15 @@ impl EpsModel for PjrtEps {
         self.exe.meta.dim
     }
 
+    /// The executable is lowered at a fixed batch `B`: per-chunk calls
+    /// would each pad/tile to `B` (multiplying real-model cost by the
+    /// chunk count), and bitwise sub-batch identity of the f32 XLA path
+    /// is not something we can promise. Keep multi-eval solvers
+    /// unsharded around this model.
+    fn rows_independent(&self) -> bool {
+        false
+    }
+
     fn eval_batch(&self, x: &[f64], n: usize, t: f64, out: &mut [f64]) {
         let d = self.dim();
         let b = self.batch();

@@ -15,11 +15,13 @@
 //! Warm-up: order ramps 1 → 2 → 3 as history accumulates, as in the
 //! official multistep implementation.
 
-use super::{Solver, StepCtx};
+use super::{ScratchSpec, Solver, StepCtx, StepScratch};
 use crate::score::EpsModel;
 
 pub struct DpmPp {
-    pub max_order: usize,
+    /// Private so the `new` invariant (1..=3) that sizes the scratch
+    /// spec cannot be bypassed after construction.
+    max_order: usize,
     name: String,
 }
 
@@ -36,12 +38,15 @@ impl DpmPp {
         self.max_order.min(ctx.ds.len() + 1)
     }
 
-    /// Data prediction for history node `k` (0-based node index into ctx).
-    fn m_hist(ctx: &StepCtx<'_>, node: usize) -> Vec<f64> {
+    /// Data prediction for history node `k` (0-based node index into
+    /// ctx), written into the scratch-carved `out`.
+    fn m_hist_into(ctx: &StepCtx<'_>, node: usize, out: &mut [f64]) {
         let t = ctx.sched.ts[node];
         let x = &ctx.xs[node];
         let d = &ctx.ds[node];
-        x.iter().zip(d.iter()).map(|(xi, di)| xi - t * di).collect()
+        for i in 0..out.len() {
+            out[i] = x[i] - t * d[i];
+        }
     }
 
     /// Coefficient of m0 in the update (for `gamma`).
@@ -82,6 +87,16 @@ impl Solver for DpmPp {
         Some(-ctx.t * self.m0_coef(ctx))
     }
 
+    fn scratch_spec(&self, dim: usize, _n: usize) -> ScratchSpec {
+        // Data predictions m0 (always) and m1/m2 as the warm-up ramp
+        // unlocks them: sized for the max order so one arena covers
+        // every step of a run.
+        ScratchSpec {
+            per_row: self.max_order * dim,
+            flat: 0,
+        }
+    }
+
     fn step(
         &self,
         _model: &dyn EpsModel,
@@ -90,6 +105,7 @@ impl Solver for DpmPp {
         d: &[f64],
         _n: usize,
         out: &mut [f64],
+        scratch: &mut StepScratch<'_>,
     ) {
         let ord = self.effective_order(ctx);
         let (t, tn) = (ctx.t, ctx.t_next);
@@ -97,7 +113,10 @@ impl Solver for DpmPp {
         let h = (t / tn).ln();
         let phi_1 = ratio - 1.0;
         // m0 from the (possibly corrected) current direction.
-        let m0: Vec<f64> = x.iter().zip(d.iter()).map(|(xi, di)| xi - t * di).collect();
+        let m0 = scratch.take(x.len());
+        for i in 0..x.len() {
+            m0[i] = x[i] - t * d[i];
+        }
         match ord {
             1 => {
                 for i in 0..x.len() {
@@ -105,7 +124,8 @@ impl Solver for DpmPp {
                 }
             }
             2 => {
-                let m1 = Self::m_hist(ctx, ctx.j - 1);
+                let m1 = scratch.take(x.len());
+                Self::m_hist_into(ctx, ctx.j - 1, m1);
                 let h0 = (ctx.sched.ts[ctx.j - 1] / t).ln();
                 let r0 = h0 / h;
                 for i in 0..x.len() {
@@ -114,8 +134,10 @@ impl Solver for DpmPp {
                 }
             }
             _ => {
-                let m1 = Self::m_hist(ctx, ctx.j - 1);
-                let m2 = Self::m_hist(ctx, ctx.j - 2);
+                let m1 = scratch.take(x.len());
+                Self::m_hist_into(ctx, ctx.j - 1, m1);
+                let m2 = scratch.take(x.len());
+                Self::m_hist_into(ctx, ctx.j - 2, m2);
                 let h0 = (ctx.sched.ts[ctx.j - 1] / t).ln();
                 let h1 = (ctx.sched.ts[ctx.j - 2] / ctx.sched.ts[ctx.j - 1]).ln();
                 let (r0, r1) = (h0 / h, h1 / h);
@@ -236,8 +258,11 @@ mod tests {
         let gamma = solver.gamma(&ctx).unwrap();
         let mut o0 = vec![0.0];
         let mut o1 = vec![0.0];
-        solver.step(&LinearEps, &ctx, &[0.8], &[0.5], 1, &mut o0);
-        solver.step(&LinearEps, &ctx, &[0.5 - 0.5 + 0.8], &[0.5 + 1e-6], 1, &mut o1);
+        let mut buf = vec![0.0; solver.scratch_spec(1, 1).len_for(1)];
+        let mut s0 = crate::solvers::StepScratch::new(&mut buf);
+        solver.step(&LinearEps, &ctx, &[0.8], &[0.5], 1, &mut o0, &mut s0);
+        let mut s1 = crate::solvers::StepScratch::new(&mut buf);
+        solver.step(&LinearEps, &ctx, &[0.5 - 0.5 + 0.8], &[0.5 + 1e-6], 1, &mut o1, &mut s1);
         let fd = (o1[0] - o0[0]) / 1e-6;
         assert!(
             (fd - gamma).abs() < 1e-5 * (1.0 + gamma.abs()),

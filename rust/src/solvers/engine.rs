@@ -14,27 +14,39 @@
 //!   [`HIST_NODES`]-node ring the registered solvers (order ≤ 4) can
 //!   reach, making memory O(batch) instead of O(batch × NFE). NFE
 //!   accounting is identical in both modes.
-//! * **Row-sharded stepping.** When the solver reports
-//!   [`Solver::row_independent`] and the batch is worth it, the update is
-//!   sharded row-wise over the process pool
+//! * **Row-sharded stepping — for the whole registry.** When the solver
+//!   reports [`Solver::row_independent`] and the batch is worth it, the
+//!   update is sharded row-wise over the process pool
 //!   ([`crate::util::pool::Pool`]); each shard sees a column sub-view of
 //!   the history ([`NodeView::cols`]), so per-row f64 operation order is
 //!   untouched and the output is **bit-identical** to the sequential
 //!   legacy driver for every thread count — enforced by
-//!   `tests/engine_parity.rs` across the whole solver registry.
+//!   `tests/engine_parity.rs` across the whole solver registry. Multi-eval
+//!   solvers (Heun, DPM-Solver-2) shard too: their internal model
+//!   evaluations route through per-chunk `eval_batch` calls, which is
+//!   bit-preserving whenever the model is row-independent
+//!   ([`crate::score::EpsModel::rows_independent`]); models that key on
+//!   absolute row indices opt out and step unsharded.
+//! * **Scratch arenas.** Solver-internal temporaries (Heun's midpoint,
+//!   DPM++'s data predictions, UniPC's divided differences) come from an
+//!   engine-owned arena sized by [`Solver::scratch_spec`]; each parallel
+//!   chunk gets its own disjoint [`StepScratch`] slice, so no solver
+//!   allocates inside `step`.
 //!
 //! # Workspace lifecycle
 //!
 //! An engine is created once (per server worker, per bench, per
 //! experiment loop) and reused: `reset` at the top of each run re-shapes
-//! the stores without shrinking their allocations, so after the first run
-//! of a given shape the steady state performs **zero heap allocations per
-//! step** in `Record::None` mode — `benches/pas_overhead.rs` pins that
-//! with a counting global allocator. `run_into` writes the final samples
-//! into a caller-provided buffer; `run` (Record::Full only) materializes
-//! a legacy [`SolveRun`] for existing callers.
+//! the stores and the scratch arena without shrinking their allocations,
+//! so after the first run of a given shape the steady state performs
+//! **zero heap allocations per step** for every registry solver in both
+//! record modes — `tests/alloc_audit.rs` pins that with a counting global
+//! allocator (as does `benches/pas_overhead.rs` for the serving
+//! configuration). `run_into` writes the final samples into a
+//! caller-provided buffer; `run` (Record::Full only) materializes a
+//! legacy [`SolveRun`] for existing callers.
 
-use super::{DirectionHook, NodeView, SolveRun, Solver, StepCtx};
+use super::{DirectionHook, NodeView, ScratchSpec, SolveRun, Solver, StepCtx, StepScratch};
 use crate::schedule::Schedule;
 use crate::score::EpsModel;
 use crate::util::pool::{Pool, SendPtr};
@@ -190,6 +202,10 @@ pub struct SamplerEngine {
     cfg: EngineConfig,
     xs: NodeStore,
     ds: NodeStore,
+    /// Solver scratch arena ([`Solver::scratch_spec`]); sized in
+    /// `run_into`, never shrunk, carved into per-chunk [`StepScratch`]
+    /// slices by `step_rows`.
+    scratch: Vec<f64>,
 }
 
 impl SamplerEngine {
@@ -198,6 +214,7 @@ impl SamplerEngine {
             cfg,
             xs: NodeStore::new(),
             ds: NodeStore::new(),
+            scratch: Vec::new(),
         }
     }
 
@@ -248,6 +265,20 @@ impl SamplerEngine {
         };
         self.xs.reset(row_len, xs_cap);
         self.ds.reset(row_len, ds_cap);
+        // Solver scratch arena: enough for the whole batch's per-row
+        // temporaries plus one flat block per possible chunk (chunk count
+        // never exceeds the shard cap). Never shrunk, so repeated runs of
+        // the same shape allocate nothing.
+        let spec = solver.scratch_spec(dim, n);
+        let max_parts = if self.cfg.threads == 0 {
+            Pool::global().size()
+        } else {
+            self.cfg.threads
+        };
+        let scratch_need = spec.per_row * n + spec.flat * max_parts.max(1);
+        if self.scratch.len() < scratch_need {
+            self.scratch.resize(scratch_need, 0.0);
+        }
         self.xs.push_row(x_t);
         let mut nfe = 0usize;
         for j in 0..n_steps {
@@ -271,7 +302,19 @@ impl SamplerEngine {
             if let Some(h) = hook.as_deref_mut() {
                 h.correct(&ctx, x_cur, n, d);
             }
-            step_rows(self.cfg.threads, solver, model, &ctx, x_cur, d, n, dim, x_next);
+            step_rows(
+                self.cfg.threads,
+                solver,
+                model,
+                &ctx,
+                x_cur,
+                d,
+                n,
+                dim,
+                spec,
+                &mut self.scratch,
+                x_next,
+            );
             nfe += solver.evals_per_step() - 1; // internal evals
             self.ds.commit();
             self.xs.commit();
@@ -312,13 +355,18 @@ impl SamplerEngine {
         };
         self.xs.release();
         self.ds.release();
+        self.scratch = Vec::new();
         run
     }
 }
 
 /// Advance the batch, sharding rows across the pool when profitable.
-/// Each shard receives column sub-views of the history, so per-row
-/// computation is exactly the sequential one.
+/// Each shard receives column sub-views of the history and its own
+/// disjoint [`StepScratch`] slice of the engine arena, so per-row
+/// computation is exactly the sequential one. Multi-eval solvers shard
+/// too: their internal model evaluations become per-chunk `eval_batch`
+/// calls, which is bit-preserving because (and only when) the model is
+/// row-independent — the `rows_independent` guard below.
 #[allow(clippy::too_many_arguments)]
 fn step_rows(
     threads: usize,
@@ -329,26 +377,34 @@ fn step_rows(
     d: &[f64],
     n: usize,
     dim: usize,
+    spec: ScratchSpec,
+    scratch: &mut [f64],
     out: &mut [f64],
 ) {
     let pool = Pool::global();
     let max_parts = if threads == 0 { pool.size() } else { threads };
-    // Multi-eval solvers (Heun, DPM-Solver-2) call the model inside
-    // `step`; sharding would split that one batched call into per-chunk
-    // calls, breaking the "one batched eval = one NFE" counting
-    // invariant. Their internal evals parallelize inside `eval_batch`
-    // anyway, so they step unsharded.
+    // The partition is computed up front (via the same `Pool::partition`
+    // the dispatch uses) so each chunk's scratch slice can be located by
+    // arithmetic: chunk c covers rows [c*chunk, (c+1)*chunk) and its
+    // scratch starts at per_row * c * chunk + flat * c.
+    let (chunk, n_chunks) = pool.partition(n, max_parts, 1);
     if max_parts <= 1
         || !solver.row_independent()
-        || solver.evals_per_step() != 1
+        || (solver.evals_per_step() != 1 && !model.rows_independent())
         || n < 2
         || n * dim < MIN_SHARD_ELEMS
+        || n_chunks <= 1
     {
-        solver.step(model, ctx, x, d, n, out);
+        let mut s = StepScratch::new(&mut scratch[..spec.len_for(n)]);
+        solver.step(model, ctx, x, d, n, out, &mut s);
         return;
     }
+    debug_assert!(spec.per_row * n + spec.flat * n_chunks <= scratch.len());
     let out_ptr = SendPtr::new(out.as_mut_ptr());
-    pool.par_rows(n, max_parts, 1, |r0, r1| {
+    let scratch_ptr = SendPtr::new(scratch.as_mut_ptr());
+    pool.run(n_chunks, &|c| {
+        let r0 = c * chunk;
+        let r1 = ((c + 1) * chunk).min(n);
         let c0 = r0 * dim;
         let c1 = r1 * dim;
         let sub = StepCtx {
@@ -360,9 +416,15 @@ fn step_rows(
             xs: ctx.xs.cols(c0, c1 - c0),
             ds: ctx.ds.cols(c0, c1 - c0),
         };
-        // SAFETY: pool row ranges are disjoint.
+        // SAFETY: pool chunk indices are distinct, so the row ranges —
+        // and the scratch slices derived from them — are disjoint.
         let o = unsafe { std::slice::from_raw_parts_mut(out_ptr.get().add(c0), c1 - c0) };
-        solver.step(model, &sub, &x[c0..c1], &d[c0..c1], r1 - r0, o);
+        let s_off = spec.per_row * r0 + spec.flat * c;
+        let s_len = spec.len_for(r1 - r0);
+        let sbuf =
+            unsafe { std::slice::from_raw_parts_mut(scratch_ptr.get().add(s_off), s_len) };
+        let mut s = StepScratch::new(sbuf);
+        solver.step(model, &sub, &x[c0..c1], &d[c0..c1], r1 - r0, o, &mut s);
     });
 }
 
@@ -431,6 +493,81 @@ mod tests {
             eng.run_into(solver.as_ref(), model.as_ref(), &x_t, n, &sched, None, &mut x0);
             assert_eq!(x0, legacy.x0, "trial {trial}");
         }
+    }
+
+    /// Multi-eval solvers (previously excluded from sharding) must be
+    /// bit-identical to the legacy driver under sharded stepping, with
+    /// sharding-invariant NFE accounting.
+    #[test]
+    fn multi_eval_solvers_shard_bitwise() {
+        let ds = get("gmm-hd64").unwrap();
+        let model = AnalyticEps::from_dataset(&ds);
+        let sched = default_schedule(6);
+        let mut rng = Pcg64::seed(14);
+        let n = 64;
+        let x_t = sample_prior(&mut rng, n, 64, sched.t_max());
+        for name in ["heun", "dpm2"] {
+            let solver = registry::get(name).unwrap();
+            let legacy =
+                run_solver_legacy(solver.as_ref(), model.as_ref(), &x_t, n, &sched, None);
+            for threads in [2usize, 8] {
+                let counting = CountingEps::new(model.as_ref());
+                let mut eng = SamplerEngine::new(EngineConfig {
+                    record: Record::None,
+                    threads,
+                });
+                let mut x0 = vec![0.0; n * 64];
+                let nfe =
+                    eng.run_into(solver.as_ref(), &counting, &x_t, n, &sched, None, &mut x0);
+                assert_eq!(legacy.x0, x0, "{name} sharded x0 (threads={threads})");
+                assert_eq!(nfe, 12, "{name} logical NFE");
+                assert_eq!(counting.nfe_rows(n), 12, "{name} row-accounted NFE");
+            }
+        }
+    }
+
+    /// A model that keys on absolute row indices reports
+    /// `rows_independent() == false`; multi-eval solvers must then see
+    /// only full-batch evaluations (no per-chunk internal calls).
+    #[test]
+    fn rows_dependent_model_keeps_multi_eval_unsharded() {
+        struct FullBatchOnly<'a> {
+            inner: &'a dyn crate::score::EpsModel,
+            n_expect: usize,
+        }
+        impl crate::score::EpsModel for FullBatchOnly<'_> {
+            fn dim(&self) -> usize {
+                self.inner.dim()
+            }
+            fn rows_independent(&self) -> bool {
+                false
+            }
+            fn eval_batch(&self, x: &[f64], n: usize, t: f64, out: &mut [f64]) {
+                assert_eq!(n, self.n_expect, "rows-dependent model saw a chunk");
+                self.inner.eval_batch(x, n, t, out);
+            }
+            fn name(&self) -> &str {
+                "full-batch-only"
+            }
+        }
+        let ds = get("gmm-hd64").unwrap();
+        let model = AnalyticEps::from_dataset(&ds);
+        let sched = default_schedule(4);
+        let mut rng = Pcg64::seed(15);
+        let n = 64; // n * dim = 4096: sharding would otherwise engage
+        let x_t = sample_prior(&mut rng, n, 64, sched.t_max());
+        let guard = FullBatchOnly {
+            inner: model.as_ref(),
+            n_expect: n,
+        };
+        let solver = registry::get("heun").unwrap();
+        let mut eng = SamplerEngine::new(EngineConfig {
+            record: Record::None,
+            threads: 8,
+        });
+        let mut x0 = vec![0.0; n * 64];
+        let nfe = eng.run_into(solver.as_ref(), &guard, &x_t, n, &sched, None, &mut x0);
+        assert_eq!(nfe, 8);
     }
 
     #[test]

@@ -5,7 +5,7 @@
 //! `x' = x + (t' − t) eps(x, t)`. This is the paper's primary correction
 //! target ("DDIM" rows of every table).
 
-use super::{Solver, StepCtx};
+use super::{Solver, StepCtx, StepScratch};
 use crate::score::EpsModel;
 
 pub struct Euler;
@@ -27,6 +27,7 @@ impl Solver for Euler {
         d: &[f64],
         _n: usize,
         out: &mut [f64],
+        _scratch: &mut StepScratch<'_>,
     ) {
         let h = ctx.h();
         for i in 0..x.len() {

@@ -27,6 +27,37 @@
 //! view that works over both nested `Vec<Vec<f64>>` storage (legacy
 //! driver, trainer) and the engine's flat ring buffers.
 //!
+//! # Scratch arenas
+//!
+//! Solvers do not heap-allocate inside [`Solver::step`]. A solver
+//! declares its per-step temporary storage via [`Solver::scratch_spec`]
+//! (so much per batch row, so much flat) and carves the actual buffers
+//! out of a caller-owned [`StepScratch`] arena at step time. The engine
+//! preallocates one arena per run and hands every parallel row-chunk its
+//! own disjoint slice, which is what makes the whole registry — including
+//! the multi-eval Heun/DPM-Solver-2 and the history-hungry DPM++/UniPC —
+//! zero-allocation in steady state (`tests/alloc_audit.rs` enforces
+//! this). One-shot callers size an arena directly:
+//!
+//! ```
+//! use pas::solvers::{ScratchSpec, StepScratch};
+//!
+//! // A solver that needs two f64 temporaries per batch row plus three
+//! // flat coefficients would report:
+//! let spec = ScratchSpec { per_row: 2, flat: 3 };
+//! let rows = 4;
+//! let mut buf = vec![0.0; spec.len_for(rows)];
+//!
+//! // Each step re-wraps the same buffer; `take` carves disjoint
+//! // sub-buffers off the front (no zeroing — callers overwrite).
+//! let mut scratch = StepScratch::new(&mut buf);
+//! let per_row_block = scratch.take(2 * rows);
+//! let coefs = scratch.take(3);
+//! per_row_block[0] = 1.0;
+//! coefs[2] = -0.5;
+//! assert_eq!(scratch.remaining(), 0);
+//! ```
+//!
 //! NFE accounting is explicit: `steps_for_nfe` refuses budgets the solver
 //! cannot hit exactly (e.g. DPM-Solver-2 at odd NFE — the "\\" cells of the
 //! paper's tables).
@@ -259,6 +290,65 @@ impl StepCtx<'_> {
     }
 }
 
+/// Scratch requirements of one [`Solver::step`] call, in `f64` elements.
+/// See the module docs for the arena protocol.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ScratchSpec {
+    /// Elements needed per batch row (dim-proportional temporaries such
+    /// as Heun's midpoint state or DPM++'s data predictions). A chunk of
+    /// `rows` rows needs `per_row * rows` of these.
+    pub per_row: usize,
+    /// Elements independent of the batch size (coefficient vectors,
+    /// small linear systems).
+    pub flat: usize,
+}
+
+impl ScratchSpec {
+    /// No scratch at all (the default for simple solvers).
+    pub const NONE: ScratchSpec = ScratchSpec { per_row: 0, flat: 0 };
+
+    /// Total arena length for a chunk of `rows` batch rows.
+    pub fn len_for(&self, rows: usize) -> usize {
+        self.per_row * rows + self.flat
+    }
+}
+
+/// A bump-carved `f64` arena handed to [`Solver::step`]. `take` splits
+/// disjoint `&mut` sub-buffers off the front, so a solver can hold all of
+/// its temporaries simultaneously without heap allocation. Contents are
+/// NOT zeroed between steps — solvers must fully overwrite what they
+/// read.
+pub struct StepScratch<'a> {
+    rest: &'a mut [f64],
+}
+
+impl<'a> StepScratch<'a> {
+    /// Wrap a caller-owned buffer (sized via [`ScratchSpec::len_for`]).
+    pub fn new(buf: &'a mut [f64]) -> StepScratch<'a> {
+        StepScratch { rest: buf }
+    }
+
+    /// Carve `len` elements off the front. Panics if the arena was sized
+    /// below the solver's declared [`Solver::scratch_spec`].
+    pub fn take(&mut self, len: usize) -> &'a mut [f64] {
+        let rest = std::mem::take(&mut self.rest);
+        assert!(
+            len <= rest.len(),
+            "StepScratch underprovisioned: take({len}) with {} elements left \
+             (arena must be sized by the solver's scratch_spec)",
+            rest.len()
+        );
+        let (head, tail) = rest.split_at_mut(len);
+        self.rest = tail;
+        head
+    }
+
+    /// Elements not yet carved out.
+    pub fn remaining(&self) -> usize {
+        self.rest.len()
+    }
+}
+
 /// Hook invoked right after the primary model evaluation of each step.
 /// PAS implements this; tests use it to inject faults.
 pub trait DirectionHook {
@@ -306,16 +396,28 @@ pub trait Solver: Send + Sync {
     /// True (the default) when `step` computes each batch row purely from
     /// that row's slice of `x`, `d` and the history views — i.e. no
     /// cross-row reductions. The engine only shards the batch across
-    /// threads when this holds (and the solver spends exactly one model
-    /// eval per step — see `engine::step_rows`); every registered solver
-    /// qualifies, and row-sharding then preserves the per-row f64
-    /// operation order, so results are bit-identical for any thread
-    /// count.
+    /// threads when this holds; every registered solver qualifies, and
+    /// row-sharding then preserves the per-row f64 operation order, so
+    /// results are bit-identical for any thread count. Multi-eval solvers
+    /// additionally route their internal model evaluations through
+    /// per-chunk `eval_batch` calls, so the model must be row-independent
+    /// too ([`EpsModel::rows_independent`]) for the shard to engage.
     fn row_independent(&self) -> bool {
         true
     }
 
-    /// Advance the batch: write `x_{t_{j+1}}` into `out`.
+    /// Scratch [`Solver::step`] needs for a batch of `n` rows of
+    /// dimension `dim`. Callers size a [`StepScratch`] arena with
+    /// [`ScratchSpec::len_for`]; the engine does this once per run and
+    /// hands each parallel row-chunk its own disjoint slice.
+    fn scratch_spec(&self, _dim: usize, _n: usize) -> ScratchSpec {
+        ScratchSpec::NONE
+    }
+
+    /// Advance the batch: write `x_{t_{j+1}}` into `out`. `scratch` must
+    /// provide at least `scratch_spec(dim, n).len_for(n)` elements; step
+    /// performs no heap allocation.
+    #[allow(clippy::too_many_arguments)]
     fn step(
         &self,
         model: &dyn EpsModel,
@@ -324,6 +426,7 @@ pub trait Solver: Send + Sync {
         d: &[f64],
         n: usize,
         out: &mut [f64],
+        scratch: &mut StepScratch<'_>,
     );
 }
 
@@ -359,10 +462,13 @@ pub fn run_solver(
         .run(solver, model, x_t, n, sched, hook)
 }
 
-/// The seed repo's allocate-per-step driver, kept verbatim as the
-/// reference implementation: the engine parity tests assert the engine is
+/// The seed repo's allocate-per-step driver, kept as the reference
+/// implementation: the engine parity tests assert the engine is
 /// bit-identical to this, and `benches/solver_step.rs` reports the
-/// speedup against it.
+/// speedup against it. The only structural change since the seed is a
+/// one-shot [`StepScratch`] arena (the trait now requires one); the
+/// sequential per-row arithmetic — and therefore every output bit — is
+/// untouched, which is what keeps this the oracle.
 pub fn run_solver_legacy(
     solver: &dyn Solver,
     model: &dyn EpsModel,
@@ -379,6 +485,7 @@ pub fn run_solver_legacy(
     xs.push(x_t.to_vec());
     let mut nfe = 0usize;
     let mut out = vec![0.0; n * dim];
+    let mut scratch_buf = vec![0.0; solver.scratch_spec(dim, n).len_for(n)];
     for j in 0..n_steps {
         let t = sched.ts[j];
         let t_next = sched.ts[j + 1];
@@ -398,7 +505,8 @@ pub fn run_solver_legacy(
         if let Some(h) = hook.as_deref_mut() {
             h.correct(&ctx, &xs[j], n, &mut d);
         }
-        solver.step(model, &ctx, &xs[j], &d, n, &mut out);
+        let mut scratch = StepScratch::new(&mut scratch_buf);
+        solver.step(model, &ctx, &xs[j], &d, n, &mut out, &mut scratch);
         nfe += solver.evals_per_step() - 1; // internal evals
         ds.push(d);
         xs.push(out.clone());
@@ -456,6 +564,29 @@ mod tests {
         assert_eq!(run.x0, x_t, "zeroed directions must freeze the state");
         // Corrected (zeroed) directions are what lands in the record.
         assert!(run.ds.iter().all(|d| d.iter().all(|&v| v == 0.0)));
+    }
+
+    #[test]
+    fn step_scratch_carves_disjoint_buffers() {
+        let spec = ScratchSpec { per_row: 3, flat: 2 };
+        assert_eq!(spec.len_for(4), 14);
+        let mut buf = vec![0.0; spec.len_for(4)];
+        let mut s = StepScratch::new(&mut buf);
+        let a = s.take(12);
+        let b = s.take(2);
+        a.fill(1.0);
+        b.fill(2.0);
+        assert_eq!(s.remaining(), 0);
+        assert!(buf[..12].iter().all(|&v| v == 1.0));
+        assert!(buf[12..].iter().all(|&v| v == 2.0));
+    }
+
+    #[test]
+    #[should_panic(expected = "underprovisioned")]
+    fn step_scratch_overdraw_panics() {
+        let mut buf = vec![0.0; 4];
+        let mut s = StepScratch::new(&mut buf);
+        let _ = s.take(5);
     }
 
     #[test]

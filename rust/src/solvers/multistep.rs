@@ -12,7 +12,7 @@
 //! recorded history `ctx.ds`, which already contains corrected directions
 //! (Algorithm 1, line 17).
 
-use super::{Solver, StepCtx};
+use super::{Solver, StepCtx, StepScratch};
 use crate::score::EpsModel;
 
 /// Classical AB coefficients, most-recent first.
@@ -25,7 +25,9 @@ const AB: [&[f64]; 4] = [
 
 /// iPNDM with configurable order (1–4).
 pub struct Ipndm {
-    pub order: usize,
+    /// Private so the `new` invariant (1..=4, the AB table depth) cannot
+    /// be bypassed after construction.
+    order: usize,
     name: String,
 }
 
@@ -61,6 +63,7 @@ impl Solver for Ipndm {
         d: &[f64],
         _n: usize,
         out: &mut [f64],
+        _scratch: &mut StepScratch<'_>,
     ) {
         let ord = self.effective_order(ctx);
         let coefs = AB[ord - 1];
@@ -81,6 +84,9 @@ impl Solver for Ipndm {
 
 /// Exact integral over `[a, b]` of the Lagrange basis polynomials through
 /// nodes `ts` (degree ts.len()-1). Returns one coefficient per node.
+/// Heap-allocating general-`k` version; the solver hot path uses
+/// [`lagrange_integrals_into`], which is bit-identical for `k <=`
+/// [`LAGRANGE_STACK_K`] (a test pins that).
 pub fn lagrange_integrals(ts: &[f64], a: f64, b: f64) -> Vec<f64> {
     let k = ts.len();
     let mut out = vec![0.0; k];
@@ -112,9 +118,59 @@ pub fn lagrange_integrals(ts: &[f64], a: f64, b: f64) -> Vec<f64> {
     out
 }
 
+/// Max node count [`lagrange_integrals_into`] supports with stack-only
+/// temporaries (registered AB solvers use order <= 4).
+pub const LAGRANGE_STACK_K: usize = 6;
+
+/// Allocation-free [`lagrange_integrals`]: writes the `ts.len()`
+/// coefficients into `out[..ts.len()]` using fixed-size stack buffers.
+/// Per-coefficient arithmetic mirrors the Vec version operation-for-
+/// operation, so the two are bit-identical (asserted by a unit test) —
+/// this is what lets `DeisTab::step` run without heap allocation while
+/// `run_solver_legacy` stays the bitwise oracle.
+pub fn lagrange_integrals_into(ts: &[f64], a: f64, b: f64, out: &mut [f64]) {
+    let k = ts.len();
+    assert!(k <= LAGRANGE_STACK_K, "k={k} exceeds stack capacity");
+    assert!(out.len() >= k, "out too short for {k} coefficients");
+    for m in 0..k {
+        // poly *= (s - tl), updated in place high -> low degree. Entry q
+        // of the Vec version's `next` receives `poly[q-1]` (the += at
+        // p = q-1) before `- poly[q]*tl` (the -= at p = q), so the
+        // in-place update below reproduces the exact same two operations
+        // in the same order.
+        let mut poly = [0.0f64; LAGRANGE_STACK_K + 1];
+        poly[0] = 1.0;
+        let mut deg = 0usize;
+        let mut denom = 1.0;
+        for (l, &tl) in ts.iter().enumerate() {
+            if l == m {
+                continue;
+            }
+            denom *= ts[m] - tl;
+            #[allow(clippy::identity_op)]
+            {
+                poly[deg + 1] = 0.0 + poly[deg];
+                for q in (1..=deg).rev() {
+                    poly[q] = (0.0 + poly[q - 1]) - poly[q] * tl;
+                }
+                poly[0] = 0.0 - poly[0] * tl;
+            }
+            deg += 1;
+        }
+        let mut integral = 0.0;
+        for (p, &c) in poly.iter().enumerate().take(deg + 1) {
+            let q = (p + 1) as f64;
+            integral += c * (b.powi(p as i32 + 1) - a.powi(p as i32 + 1)) / q;
+        }
+        out[m] = integral / denom;
+    }
+}
+
 /// DEIS "time-AB" solver of a given order (paper baseline: order 3).
 pub struct DeisTab {
-    pub order: usize,
+    /// Private so the `new` invariant (1..=4, the size of `step`'s stack
+    /// node/coefficient buffers) cannot be bypassed after construction.
+    order: usize,
     name: String,
 }
 
@@ -127,11 +183,15 @@ impl DeisTab {
         }
     }
 
-    /// Nodes used at this step, most recent first: t_j, t_{j-1}, ...
-    fn nodes(&self, ctx: &StepCtx<'_>) -> Vec<f64> {
+    /// Nodes used at this step, most recent first (t_j, t_{j-1}, ...),
+    /// written into `out`; returns the count (≤ order ≤ 4).
+    fn nodes_into(&self, ctx: &StepCtx<'_>, out: &mut [f64; 4]) -> usize {
         let avail = ctx.ds.len();
         let k = self.order.min(avail + 1);
-        (0..k).map(|m| ctx.sched.ts[ctx.j - m]).collect()
+        for (m, o) in out.iter_mut().enumerate().take(k) {
+            *o = ctx.sched.ts[ctx.j - m];
+        }
+        k
     }
 }
 
@@ -141,11 +201,15 @@ impl Solver for DeisTab {
     }
 
     fn gamma(&self, ctx: &StepCtx<'_>) -> Option<f64> {
-        let nodes = self.nodes(ctx);
-        let c = lagrange_integrals(&nodes, ctx.t, ctx.t_next);
-        Some(c[0])
+        let mut nodes = [0.0f64; 4];
+        let k = self.nodes_into(ctx, &mut nodes);
+        let mut coefs = [0.0f64; 4];
+        lagrange_integrals_into(&nodes[..k], ctx.t, ctx.t_next, &mut coefs[..k]);
+        Some(coefs[0])
     }
 
+    // Quadrature temporaries are stack arrays (order <= 4), so no arena
+    // scratch is needed: the default ScratchSpec::NONE applies.
     fn step(
         &self,
         _model: &dyn EpsModel,
@@ -154,13 +218,16 @@ impl Solver for DeisTab {
         d: &[f64],
         _n: usize,
         out: &mut [f64],
+        _scratch: &mut StepScratch<'_>,
     ) {
-        let nodes = self.nodes(ctx);
-        let coefs = lagrange_integrals(&nodes, ctx.t, ctx.t_next);
+        let mut nodes = [0.0f64; 4];
+        let k = self.nodes_into(ctx, &mut nodes);
+        let mut coefs = [0.0f64; 4];
+        lagrange_integrals_into(&nodes[..k], ctx.t, ctx.t_next, &mut coefs[..k]);
         for i in 0..x.len() {
             out[i] = x[i] + coefs[0] * d[i];
         }
-        for (m, &c) in coefs.iter().enumerate().skip(1) {
+        for (m, &c) in coefs.iter().enumerate().take(k).skip(1) {
             let past = &ctx.ds[ctx.ds.len() - m];
             for i in 0..x.len() {
                 out[i] += c * past[i];
@@ -248,6 +315,38 @@ mod tests {
         assert!((approx - exact).abs() < 1e-10, "{approx} vs {exact}");
     }
 
+    /// The stack-buffer quadrature path used by `DeisTab::step` must be
+    /// bit-identical to the heap version `run_solver_legacy`-era code
+    /// used — this is what keeps the legacy driver a valid oracle.
+    #[test]
+    fn lagrange_into_matches_vec_bitwise() {
+        let mut rng = crate::util::rng::Pcg64::seed(77);
+        for _trial in 0..200 {
+            let k = 1 + rng.below(4);
+            // Strictly decreasing positive nodes, EDM-style.
+            let mut nodes = vec![0.0f64; k];
+            let mut t = 5.0 + rng.uniform() * 5.0;
+            for node in nodes.iter_mut() {
+                *node = t;
+                t *= 0.3 + rng.uniform() * 0.6;
+            }
+            let a = nodes[0];
+            let b = a * (0.3 + rng.uniform() * 0.6);
+            let want = lagrange_integrals(&nodes, a, b);
+            let mut got = [0.0f64; 4];
+            lagrange_integrals_into(&nodes, a, b, &mut got[..k]);
+            for m in 0..k {
+                assert_eq!(
+                    want[m].to_bits(),
+                    got[m].to_bits(),
+                    "k={k} m={m}: {} vs {}",
+                    want[m],
+                    got[m]
+                );
+            }
+        }
+    }
+
     #[test]
     fn deis_beats_euler_on_curved_ode() {
         let sched = Schedule::polynomial(12, 0.5, 10.0, 7.0);
@@ -282,8 +381,11 @@ mod tests {
             let gamma = solver.gamma(&ctx).unwrap();
             let mut out0 = vec![0.0];
             let mut out1 = vec![0.0];
-            solver.step(&LinearEps, &ctx, &[0.8], &[0.5], 1, &mut out0);
-            solver.step(&LinearEps, &ctx, &[0.8], &[0.5 + 1e-6], 1, &mut out1);
+            let mut buf = vec![0.0; solver.scratch_spec(1, 1).len_for(1)];
+            let mut s0 = crate::solvers::StepScratch::new(&mut buf);
+            solver.step(&LinearEps, &ctx, &[0.8], &[0.5], 1, &mut out0, &mut s0);
+            let mut s1 = crate::solvers::StepScratch::new(&mut buf);
+            solver.step(&LinearEps, &ctx, &[0.8], &[0.5 + 1e-6], 1, &mut out1, &mut s1);
             let fd = (out1[0] - out0[0]) / 1e-6;
             assert!(
                 (fd - gamma).abs() < 1e-6 * (1.0 + gamma.abs()),

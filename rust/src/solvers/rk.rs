@@ -2,7 +2,7 @@
 //! DPM-Solver-2. Both spend 2 NFE per step, hence the "\\" cells at odd
 //! NFE in the paper's tables — `steps_for_nfe` returns `None` there.
 
-use super::{Solver, StepCtx};
+use super::{ScratchSpec, Solver, StepCtx, StepScratch};
 use crate::score::EpsModel;
 
 /// Heun's 2nd order solver (Karras et al. 2022): Euler predictor followed
@@ -23,6 +23,14 @@ impl Solver for Heun {
         None // second eval depends on d nonlinearly through x_pred
     }
 
+    fn scratch_spec(&self, dim: usize, _n: usize) -> ScratchSpec {
+        // d2: the corrector's direction at the predicted state.
+        ScratchSpec {
+            per_row: dim,
+            flat: 0,
+        }
+    }
+
     fn step(
         &self,
         model: &dyn EpsModel,
@@ -31,6 +39,7 @@ impl Solver for Heun {
         d: &[f64],
         n: usize,
         out: &mut [f64],
+        scratch: &mut StepScratch<'_>,
     ) {
         let h = ctx.h();
         // Predictor.
@@ -38,8 +47,8 @@ impl Solver for Heun {
             out[i] = x[i] + h * d[i];
         }
         // Corrector.
-        let mut d2 = vec![0.0; x.len()];
-        model.eval_batch(out, n, ctx.t_next, &mut d2);
+        let d2 = scratch.take(x.len());
+        model.eval_batch(out, n, ctx.t_next, d2);
         for i in 0..x.len() {
             out[i] = x[i] + 0.5 * h * (d[i] + d2[i]);
         }
@@ -69,6 +78,14 @@ impl Solver for Dpm2 {
         None
     }
 
+    fn scratch_spec(&self, dim: usize, _n: usize) -> ScratchSpec {
+        // x_mid + d_mid.
+        ScratchSpec {
+            per_row: 2 * dim,
+            flat: 0,
+        }
+    }
+
     fn step(
         &self,
         model: &dyn EpsModel,
@@ -77,14 +94,15 @@ impl Solver for Dpm2 {
         d: &[f64],
         n: usize,
         out: &mut [f64],
+        scratch: &mut StepScratch<'_>,
     ) {
         let t_mid = (ctx.t * ctx.t_next).sqrt();
-        let mut x_mid = vec![0.0; x.len()];
+        let x_mid = scratch.take(x.len());
         for i in 0..x.len() {
             x_mid[i] = x[i] + (t_mid - ctx.t) * d[i];
         }
-        let mut d_mid = vec![0.0; x.len()];
-        model.eval_batch(&x_mid, n, t_mid, &mut d_mid);
+        let d_mid = scratch.take(x.len());
+        model.eval_batch(x_mid, n, t_mid, d_mid);
         let h = ctx.h();
         for i in 0..x.len() {
             out[i] = x[i] + h * d_mid[i];

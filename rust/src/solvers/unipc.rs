@@ -9,13 +9,33 @@
 //! current state over the previous transition, then **UniP** predicts the
 //! next state. One model evaluation per step; the final prediction is not
 //! corrected (no evaluation exists at t_min), matching common usage.
+//!
+//! All per-step temporaries (data predictions, divided differences, the
+//! corrected state) are carved from the caller's [`StepScratch`] arena and
+//! the order-k coefficient system lives in stack arrays, so `step`
+//! performs **zero heap allocations** — `tests/alloc_audit.rs` enforces
+//! this through the engine. A numerically singular auxiliary system
+//! (coincident `rks`, impossible on real schedules but reachable through
+//! direct calls) degrades gracefully to the first-order base update
+//! instead of panicking.
 
-use super::{Solver, StepCtx};
+use super::{ScratchSpec, Solver, StepCtx, StepScratch};
 use crate::linalg::solve_linear;
 use crate::score::EpsModel;
 
+/// Max unknowns of the bh coefficient system the stack buffers support
+/// (UniPC orders 1–3 need at most 3; tests exercise 4).
+pub const MAX_K: usize = 4;
+
+/// Coefficient magnitude beyond which the solved `rhos` are treated as a
+/// numerically-singular artifact (legit schedules produce O(1) values).
+const RHO_SANE_LIMIT: f64 = 1e8;
+
 pub struct UniPc {
-    pub max_order: usize,
+    /// Private so the `new` invariant (1..=3, strictly below [`MAX_K`])
+    /// that sizes the stack buffers and the scratch spec cannot be
+    /// bypassed after construction.
+    max_order: usize,
     name: String,
 }
 
@@ -29,23 +49,32 @@ impl UniPc {
     }
 }
 
-/// Data prediction at a recorded node.
-fn m_at(ctx: &StepCtx<'_>, node: usize) -> Vec<f64> {
+/// Data prediction at a recorded node, into the scratch-carved `out`.
+fn m_at_into(ctx: &StepCtx<'_>, node: usize, out: &mut [f64]) {
     let t = ctx.sched.ts[node];
-    ctx.xs[node]
-        .iter()
-        .zip(ctx.ds[node].iter())
-        .map(|(x, d)| x - t * d)
-        .collect()
+    let x = &ctx.xs[node];
+    let d = &ctx.ds[node];
+    for i in 0..out.len() {
+        out[i] = x[i] - t * d[i];
+    }
 }
 
-/// Build the (R, b) system of the bh update for `k` unknowns, where `rks`
-/// holds the log-SNR ratio of each auxiliary node (older history nodes,
-/// plus 1.0 for the corrector's new node). `hh = -h` (predict_x0 form).
-fn rb_system(rks: &[f64], hh: f64) -> (Vec<f64>, Vec<f64>) {
+/// Build the (R, b) system of the bh update for `k = rks.len()` unknowns,
+/// where `rks` holds the log-SNR ratio of each auxiliary node (older
+/// history nodes, plus 1.0 for the corrector's new node). `hh = -h`
+/// (predict_x0 form). Heap-allocating variant kept for tests; the solver
+/// hot path uses [`rb_system_solve`], whose arithmetic is identical.
+pub fn rb_system(rks: &[f64], hh: f64) -> (Vec<f64>, Vec<f64>) {
     let k = rks.len();
     let mut r = vec![0.0; k * k];
     let mut b = vec![0.0; k];
+    fill_rb(rks, hh, &mut r, &mut b);
+    (r, b)
+}
+
+/// Shared (R, b) construction: R is the k×k row-major system, b the rhs.
+fn fill_rb(rks: &[f64], hh: f64, r: &mut [f64], b: &mut [f64]) {
+    let k = rks.len();
     let b_h = hh.exp_m1(); // bh2 variant
     let mut h_phi_k = hh.exp_m1() / hh - 1.0;
     let mut factorial_i = 1.0;
@@ -57,14 +86,30 @@ fn rb_system(rks: &[f64], hh: f64) -> (Vec<f64>, Vec<f64>) {
         factorial_i *= (i + 1) as f64;
         h_phi_k = h_phi_k / hh - 1.0 / factorial_i;
     }
-    (r, b)
+}
+
+/// Solve the bh system into `rhos[..k]` using stack temporaries only.
+/// Returns false when the system is numerically singular (exactly
+/// coincident `rks`) or the solution is wild enough to be a singularity
+/// artifact — callers degrade to the first-order base update.
+fn rb_system_solve(rks: &[f64], hh: f64, rhos: &mut [f64; MAX_K]) -> bool {
+    let k = rks.len();
+    debug_assert!(k <= MAX_K);
+    let mut r = [0.0f64; MAX_K * MAX_K];
+    fill_rb(rks, hh, &mut r[..k * k], &mut rhos[..k]);
+    if solve_linear(&mut r[..k * k], &mut rhos[..k], k).is_err() {
+        return false;
+    }
+    rhos[..k]
+        .iter()
+        .all(|v| v.is_finite() && v.abs() <= RHO_SANE_LIMIT)
 }
 
 /// One bh-form transition from `x_s` at `t_s` to `t_t`, with anchor model
 /// output `m0` (data prediction at `t_s`'s node), divided differences
-/// `d1s[k] = (m_k - m0)/r_k` for auxiliary nodes, and their `rks`.
+/// `d1s_hist[k] = (m_k - m0)/r_k` for auxiliary nodes, and their `rks`.
 /// If `d1_new` is given (corrector), it is the un-divided `(m_t - m0)`
-/// difference with implied rk = 1.0 appended.
+/// difference with implied rk = 1.0 appended. Allocation-free.
 #[allow(clippy::too_many_arguments)]
 fn bh_transition(
     x_s: &[f64],
@@ -72,7 +117,7 @@ fn bh_transition(
     t_t: f64,
     m0: &[f64],
     rks_hist: &[f64],
-    d1s_hist: &[Vec<f64>],
+    d1s_hist: &[&[f64]],
     d1_new: Option<&[f64]>,
     out: &mut [f64],
 ) {
@@ -81,27 +126,30 @@ fn bh_transition(
     let ratio = t_t / t_s;
     let h_phi_1 = hh.exp_m1(); // = t_t/t_s − 1
     let b_h = hh.exp_m1();
-    let mut rks: Vec<f64> = rks_hist.to_vec();
+    let n_hist = rks_hist.len();
+    debug_assert_eq!(d1s_hist.len(), n_hist);
+    let mut rks = [0.0f64; MAX_K];
+    rks[..n_hist].copy_from_slice(rks_hist);
+    let mut k = n_hist;
     if d1_new.is_some() {
-        rks.push(1.0);
+        rks[k] = 1.0;
+        k += 1;
     }
     // x_t_ = ratio x_s − h_phi_1 m0  (alpha = 1)
     for i in 0..out.len() {
         out[i] = ratio * x_s[i] - h_phi_1 * m0[i];
     }
-    if rks.is_empty() {
+    if k == 0 {
         return; // first-order predictor == DDIM-form update
     }
-    let rhos = if rks.len() == 1 && d1_new.is_some() {
-        vec![0.5] // official special case for order-1 corrector
-    } else {
-        let (mut r, mut b) = rb_system(&rks, hh);
-        solve_linear(&mut r, &mut b, rks.len()).expect("bh system solvable");
-        b
-    };
-    let n_hist = d1s_hist.len();
-    for (k, d1) in d1s_hist.iter().enumerate() {
-        let c = b_h * rhos[k];
+    let mut rhos = [0.0f64; MAX_K];
+    if k == 1 && d1_new.is_some() {
+        rhos[0] = 0.5; // official special case for order-1 corrector
+    } else if !rb_system_solve(&rks[..k], hh, &mut rhos) {
+        return; // graceful degradation: keep the base update
+    }
+    for (kk, d1) in d1s_hist.iter().enumerate() {
+        let c = b_h * rhos[kk];
         for i in 0..out.len() {
             out[i] -= c * d1[i];
         }
@@ -123,6 +171,15 @@ impl Solver for UniPc {
         None // current eval feeds both UniC and UniP; PAS targets DDIM/iPNDM
     }
 
+    fn scratch_spec(&self, dim: usize, _n: usize) -> ScratchSpec {
+        // m_t, x_cur, m0, mk_tmp, d1_new, plus (max_order - 1) divided-
+        // difference rows (reused between corrector and predictor).
+        ScratchSpec {
+            per_row: (4 + self.max_order) * dim,
+            flat: 0,
+        }
+    }
+
     fn step(
         &self,
         _model: &dyn EpsModel,
@@ -131,46 +188,61 @@ impl Solver for UniPc {
         d: &[f64],
         _n: usize,
         out: &mut [f64],
+        scratch: &mut StepScratch<'_>,
     ) {
+        let l = x.len();
         let j = ctx.j;
         let t = ctx.t;
         let lam = |tt: f64| -f64::ln(tt);
         // Data prediction at the current node from the (possibly
         // PAS-corrected) primary direction.
-        let m_t: Vec<f64> = x.iter().zip(d.iter()).map(|(xi, di)| xi - t * di).collect();
+        let m_t = scratch.take(l);
+        for i in 0..l {
+            m_t[i] = x[i] - t * d[i];
+        }
+        let x_cur = scratch.take(l);
+        x_cur.copy_from_slice(x);
+        let m0 = scratch.take(l);
+        let mk_tmp = scratch.take(l);
+        let d1_new = scratch.take(l);
+        let d1_block = scratch.take((self.max_order - 1) * l);
 
         // --- UniC: re-correct the current state over the previous
         // transition t_{j-1} -> t_j using the fresh model output. ---
-        let mut x_cur = x.to_vec();
         if j >= 1 {
             let t_prev = ctx.sched.ts[j - 1];
-            let m0 = m_at(ctx, j - 1);
+            m_at_into(ctx, j - 1, m0);
             let h_prev = lam(t) - lam(t_prev);
             let order_c = self.max_order.min(j); // nodes at <= j-1
-            let mut rks = Vec::new();
-            let mut d1s: Vec<Vec<f64>> = Vec::new();
+            let mut rks = [0.0f64; MAX_K];
+            let mut n_hist = 0usize;
             for k in 1..order_c {
                 let node = j - 1 - k;
                 let rk = (lam(ctx.sched.ts[node]) - lam(t_prev)) / h_prev;
-                let mk = m_at(ctx, node);
-                d1s.push(
-                    mk.iter()
-                        .zip(m0.iter())
-                        .map(|(a, b)| (a - b) / rk)
-                        .collect(),
-                );
-                rks.push(rk);
+                m_at_into(ctx, node, mk_tmp);
+                let seg = &mut d1_block[(k - 1) * l..k * l];
+                for i in 0..l {
+                    seg[i] = (mk_tmp[i] - m0[i]) / rk;
+                }
+                rks[n_hist] = rk;
+                n_hist += 1;
             }
-            let d1_new: Vec<f64> = m_t.iter().zip(m0.iter()).map(|(a, b)| a - b).collect();
+            for i in 0..l {
+                d1_new[i] = m_t[i] - m0[i];
+            }
+            let mut d1_refs: [&[f64]; MAX_K] = [&[]; MAX_K];
+            for (k, r) in d1_refs.iter_mut().enumerate().take(n_hist) {
+                *r = &d1_block[k * l..(k + 1) * l];
+            }
             bh_transition(
                 &ctx.xs[j - 1],
                 t_prev,
                 t,
-                &m0,
-                &rks,
-                &d1s,
-                Some(&d1_new),
-                &mut x_cur,
+                m0,
+                &rks[..n_hist],
+                &d1_refs[..n_hist],
+                Some(&d1_new[..]),
+                x_cur,
             );
         }
 
@@ -179,21 +251,33 @@ impl Solver for UniPc {
         let t_next = ctx.t_next;
         let h = lam(t_next) - lam(t);
         let order_p = self.max_order.min(j + 1);
-        let mut rks = Vec::new();
-        let mut d1s: Vec<Vec<f64>> = Vec::new();
+        let mut rks = [0.0f64; MAX_K];
+        let mut n_hist = 0usize;
         for k in 1..order_p {
             let node = j - k;
             let rk = (lam(ctx.sched.ts[node]) - lam(t)) / h;
-            let mk = m_at(ctx, node);
-            d1s.push(
-                mk.iter()
-                    .zip(m_t.iter())
-                    .map(|(a, b)| (a - b) / rk)
-                    .collect(),
-            );
-            rks.push(rk);
+            m_at_into(ctx, node, mk_tmp);
+            let seg = &mut d1_block[(k - 1) * l..k * l];
+            for i in 0..l {
+                seg[i] = (mk_tmp[i] - m_t[i]) / rk;
+            }
+            rks[n_hist] = rk;
+            n_hist += 1;
         }
-        bh_transition(&x_cur, t, t_next, &m_t, &rks, &d1s, None, out);
+        let mut d1_refs: [&[f64]; MAX_K] = [&[]; MAX_K];
+        for (k, r) in d1_refs.iter_mut().enumerate().take(n_hist) {
+            *r = &d1_block[k * l..(k + 1) * l];
+        }
+        bh_transition(
+            x_cur,
+            t,
+            t_next,
+            m_t,
+            &rks[..n_hist],
+            &d1_refs[..n_hist],
+            None,
+            out,
+        );
     }
 }
 
@@ -205,6 +289,7 @@ mod tests {
     use crate::score::analytic::AnalyticEps;
     use crate::score::EpsModel;
     use crate::solvers::{euler::Euler, run_solver};
+    use crate::util::rng::Pcg64;
 
     struct LinearEps;
     impl EpsModel for LinearEps {
@@ -261,5 +346,122 @@ mod tests {
         assert_eq!(r[0], 1.0);
         assert_eq!(r[1], 1.0);
         assert!(b[0].is_finite());
+    }
+
+    /// phi_k(h) = Σ_{j≥0} h^j / (j+k)! by direct Taylor summation — an
+    /// independent construction of the quantities the bh recurrence
+    /// produces (converges fast for the |h| ≤ 3 this test uses).
+    fn phi_series(k: usize, h: f64) -> f64 {
+        let mut term = 1.0f64;
+        for f in 1..=k {
+            term /= f as f64; // 1/k!
+        }
+        let mut sum = term;
+        for j in 1..60 {
+            term *= h / (j + k) as f64;
+            sum += term;
+        }
+        sum
+    }
+
+    /// Property (satellite): the order-k coefficient system agrees with
+    /// direct construction for k ≤ 4 — R is the Vandermonde matrix in the
+    /// rks, b matches the Taylor-series phi functions, the stack-array
+    /// solve path is bit-identical to the heap path, and the solved rhos
+    /// satisfy the system.
+    #[test]
+    fn prop_rb_system_agrees_with_direct_construction() {
+        let mut rng = Pcg64::seed(11);
+        for trial in 0..200 {
+            let k = 1 + rng.below(MAX_K); // 1..=4
+            let hh = -(0.05 + 2.5 * rng.uniform());
+            // Well-separated rks, mixing the signs real schedules produce.
+            let mut rks = vec![0.0f64; k];
+            for (c, rk) in rks.iter_mut().enumerate() {
+                let sign = if rng.below(2) == 0 { 1.0 } else { -1.0 };
+                *rk = sign * (0.3 + c as f64 + rng.uniform() * 0.4);
+            }
+            let (r, b) = rb_system(&rks, hh);
+            // R: direct Vandermonde construction.
+            for i in 0..k {
+                for c in 0..k {
+                    let want = rks[c].powi(i as i32);
+                    assert_eq!(
+                        r[i * k + c].to_bits(),
+                        want.to_bits(),
+                        "trial {trial}: R[{i}][{c}]"
+                    );
+                }
+            }
+            // b[i-1] = hh * phi_{i+1}(hh) * i! / expm1(hh), via the
+            // independent series construction.
+            let b_h = hh.exp_m1();
+            let mut factorial = 1.0f64;
+            for i in 1..=k {
+                factorial *= i as f64;
+                let want = hh * phi_series(i + 1, hh) * factorial / b_h;
+                assert!(
+                    (b[i - 1] - want).abs() < 1e-8 * (1.0 + want.abs()),
+                    "trial {trial}: b[{}] = {} vs series {want}",
+                    i - 1,
+                    b[i - 1]
+                );
+            }
+            // Stack solve path: same system, and the solution actually
+            // satisfies it.
+            let mut rhos = [0.0f64; MAX_K];
+            assert!(
+                rb_system_solve(&rks, hh, &mut rhos),
+                "trial {trial}: well-separated rks must solve"
+            );
+            for i in 0..k {
+                let lhs: f64 = (0..k).map(|c| r[i * k + c] * rhos[c]).sum();
+                assert!(
+                    (lhs - b[i]).abs() < 1e-7 * (1.0 + b[i].abs()),
+                    "trial {trial}: residual row {i}: {lhs} vs {}",
+                    b[i]
+                );
+            }
+        }
+    }
+
+    /// Property (satellite): coincident or near-coincident `rks` make the
+    /// Vandermonde system singular; the transition must degrade to the
+    /// (always finite) first-order base update instead of panicking or
+    /// emitting garbage.
+    #[test]
+    fn prop_near_singular_rks_degrade_gracefully() {
+        let x_s = [1.0, -2.0];
+        let m0 = [0.3, 0.1];
+        let d1a = [0.5, -0.5];
+        let d1b = [0.2, 0.4];
+        let (t_s, t_t) = (2.0, 1.5);
+        // Base (first-order) update for reference.
+        let mut base = [0.0; 2];
+        bh_transition(&x_s, t_s, t_t, &m0, &[], &[], None, &mut base);
+        assert!(base.iter().all(|v| v.is_finite()));
+        for perturb in [0.0, 1e-16, 1e-14, 1e-12] {
+            let rks = [0.7, 0.7 * (1.0 + perturb)];
+            let d1s: [&[f64]; 2] = [&d1a, &d1b];
+            let mut out = [0.0; 2];
+            bh_transition(&x_s, t_s, t_t, &m0, &rks, &d1s, None, &mut out);
+            assert!(
+                out.iter().all(|v| v.is_finite()),
+                "perturb {perturb}: non-finite output {out:?}"
+            );
+            // Exactly singular (and singular-to-working-precision)
+            // systems fall back to the base update bit-for-bit.
+            if perturb == 0.0 {
+                assert_eq!(out, base, "exactly singular must yield the base update");
+            }
+        }
+        // Well-separated rks still apply the correction (sanity that the
+        // degradation guard is not overeager).
+        let rks = [0.7, -1.4];
+        let d1s: [&[f64]; 2] = [&d1a, &d1b];
+        let mut out = [0.0; 2];
+        bh_transition(&x_s, t_s, t_t, &m0, &rks, &d1s, None, &mut out);
+        assert!(out.iter().all(|v| v.is_finite()));
+        assert_ne!(out, base, "distinct rks must correct away from base");
     }
 }

@@ -194,6 +194,23 @@ impl Pool {
         }
     }
 
+    /// The contiguous partition [`Self::par_rows`] dispatches: returns
+    /// `(chunk_rows, n_chunks)` for sharding `rows` into at most
+    /// `min(size, max_parts)` ranges of at least `min_rows` rows; chunk
+    /// `c` covers `[c * chunk_rows, min((c + 1) * chunk_rows, rows))`.
+    /// Exposed so callers that attach per-chunk resources (the engine's
+    /// scratch arena) can compute chunk offsets from the *same* formulas
+    /// the dispatch uses.
+    pub fn partition(&self, rows: usize, max_parts: usize, min_rows: usize) -> (usize, usize) {
+        if rows == 0 {
+            return (0, 0);
+        }
+        let cap = self.size().min(max_parts.max(1));
+        let parts = cap.min(rows / min_rows.max(1)).max(1);
+        let chunk = rows.div_ceil(parts);
+        (chunk, rows.div_ceil(chunk))
+    }
+
     /// Shard `rows` into at most `min(size, max_parts)` contiguous ranges
     /// of at least `min_rows` rows and call `f(row_start, row_end)` for
     /// each, in parallel. Bit-identical to `f(0, rows)` whenever per-row
@@ -205,17 +222,14 @@ impl Pool {
         min_rows: usize,
         f: impl Fn(usize, usize) + Sync,
     ) {
-        if rows == 0 {
+        let (chunk, n_chunks) = self.partition(rows, max_parts, min_rows);
+        if n_chunks == 0 {
             return;
         }
-        let cap = self.size().min(max_parts.max(1));
-        let parts = cap.min(rows / min_rows.max(1)).max(1);
-        if parts <= 1 {
+        if n_chunks <= 1 {
             f(0, rows);
             return;
         }
-        let chunk = rows.div_ceil(parts);
-        let n_chunks = rows.div_ceil(chunk);
         self.run(n_chunks, &|c| {
             let r0 = c * chunk;
             let r1 = ((c + 1) * chunk).min(rows);

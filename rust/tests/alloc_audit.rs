@@ -1,0 +1,109 @@
+//! Allocation audit: the engine's zero-allocation claim, promoted from a
+//! bench-only, single-solver check (`benches/pas_overhead.rs`) to an
+//! enforced test over the **whole registry**.
+//!
+//! A counting global allocator measures heap allocations performed while
+//! a warmed [`SamplerEngine`] runs each registry solver in both
+//! [`Record`] modes. After warm-up (which sizes the node stores, the
+//! solver scratch arena, and every pool worker's thread-local eval
+//! scratch), the steady state must perform **zero** allocations — the
+//! scratch-arena redesign extends this guarantee to the multi-eval
+//! (Heun, DPM-Solver-2) and history-hungry (DPM++, UniPC, DEIS) solvers
+//! that previously allocated inside `step`.
+//!
+//! This file contains exactly one `#[test]` so the process-wide
+//! allocation counter is never polluted by a concurrently running test.
+
+#[path = "support/counting_alloc.rs"]
+mod counting_alloc;
+
+use counting_alloc::{CountingAlloc, ALLOC_COUNT};
+use pas::schedule::default_schedule;
+use pas::score::analytic::AnalyticEps;
+use pas::solvers::engine::{EngineConfig, Record, SamplerEngine};
+use pas::solvers::registry;
+use pas::traj::sample_prior;
+use pas::util::rng::Pcg64;
+use std::sync::atomic::Ordering;
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+/// Allocations observed across `runs` engine runs after warm-up.
+fn measure(
+    engine: &mut SamplerEngine,
+    solver: &dyn pas::solvers::Solver,
+    model: &dyn pas::score::EpsModel,
+    x_t: &[f64],
+    n: usize,
+    sched: &pas::schedule::Schedule,
+    x0: &mut [f64],
+    runs: usize,
+) -> u64 {
+    let before = ALLOC_COUNT.load(Ordering::SeqCst);
+    for _ in 0..runs {
+        engine.run_into(solver, model, x_t, n, sched, None, x0);
+    }
+    ALLOC_COUNT.load(Ordering::SeqCst) - before
+}
+
+#[test]
+fn zero_steady_state_allocs_every_solver_both_record_modes() {
+    let ds = pas::data::registry::get("gmm-hd64").unwrap();
+    let model = AnalyticEps::from_dataset(&ds);
+    let n = 64;
+    let dim = 64; // n * dim = 4096: the sharded stepping path engages
+    let sched = default_schedule(6);
+    let mut rng = Pcg64::seed(21);
+    let x_t = sample_prior(&mut rng, n, dim, sched.t_max());
+    let mut x0 = vec![0.0; n * dim];
+    let mut failures: Vec<String> = Vec::new();
+    for record in [Record::Full, Record::None] {
+        // One engine per mode, reused across the registry — the
+        // production pattern the reuse guarantee is about.
+        let mut engine = SamplerEngine::new(EngineConfig { record, threads: 0 });
+        for name in registry::ALL {
+            let solver = registry::get(name).unwrap();
+            // Warm-up: sizes the node stores and scratch arena for this
+            // solver and lets every pool worker initialize its
+            // thread-local eval scratch.
+            for _ in 0..3 {
+                engine.run_into(solver.as_ref(), model.as_ref(), &x_t, n, &sched, None, &mut x0);
+            }
+            let mut allocs = measure(
+                &mut engine,
+                solver.as_ref(),
+                model.as_ref(),
+                &x_t,
+                n,
+                &sched,
+                &mut x0,
+                5,
+            );
+            if allocs > 0 {
+                // One retry shields against a stray lazy initialization
+                // (e.g. a pool worker that raced out of every warm-up
+                // dispatch) landing inside the measured window; a real
+                // per-step allocation re-fires deterministically.
+                allocs = measure(
+                    &mut engine,
+                    solver.as_ref(),
+                    model.as_ref(),
+                    &x_t,
+                    n,
+                    &sched,
+                    &mut x0,
+                    5,
+                );
+            }
+            if allocs > 0 {
+                failures.push(format!("{name} ({record:?}): {allocs} allocs over 5 runs"));
+            }
+        }
+    }
+    assert!(
+        failures.is_empty(),
+        "steady-state heap allocations detected:\n  {}",
+        failures.join("\n  ")
+    );
+}

@@ -2,10 +2,15 @@
 //! workspace-pooled [`SamplerEngine`] must produce **bit-identical**
 //! samples to the seed's allocate-per-step driver
 //! ([`pas::solvers::run_solver_legacy`]) — with and without a
-//! [`CorrectedSampler`] hook, with sequential and sharded stepping, and
-//! in both [`Record`] modes. Row-sharding preserves per-row f64 operation
-//! order, which is the whole determinism argument; these tests enforce
-//! it.
+//! [`CorrectedSampler`] hook, across thread counts {1, 2, 5, 16}, and in
+//! both [`Record`] modes. Row-sharding (now including the multi-eval
+//! Heun/DPM-Solver-2, whose internal model evaluations become per-chunk
+//! calls) preserves per-row f64 operation order, which is the whole
+//! determinism argument; these tests enforce it.
+//!
+//! NFE is checked through [`CountingEps::nfe_rows`], the
+//! sharding-invariant row-based account: per-chunk internal evals change
+//! the *call* count but never the number of row evaluations.
 
 use pas::pas::coords::{CoordinateDict, ScaleMode};
 use pas::pas::correct::CorrectedSampler;
@@ -21,6 +26,9 @@ use pas::util::rng::Pcg64;
 const STEPS: usize = 6;
 const N: usize = 64; // n * dim = 4096: large enough to engage sharding
 const DIM: usize = 64;
+/// Shard caps exercised everywhere: sequential, even split, a count that
+/// leaves a ragged tail chunk, and more shards than most pools have.
+const THREADS: [usize; 4] = [1, 2, 5, 16];
 
 fn setup(seed: u64) -> (Box<AnalyticEps>, pas::schedule::Schedule, Vec<f64>) {
     let ds = pas::data::registry::get("gmm-hd64").unwrap();
@@ -47,7 +55,7 @@ fn full_record_bitwise_parity_every_solver() {
     for name in registry::ALL {
         let solver = registry::get(name).unwrap();
         let legacy = run_solver_legacy(solver.as_ref(), model.as_ref(), &x_t, N, &sched, None);
-        for threads in [1usize, 4] {
+        for threads in THREADS {
             let mut eng = SamplerEngine::new(EngineConfig {
                 record: Record::Full,
                 threads,
@@ -76,7 +84,7 @@ fn hooked_parity_every_solver() {
             &sched,
             Some(&mut legacy_hook),
         );
-        for threads in [1usize, 4] {
+        for threads in THREADS {
             let mut engine_hook = CorrectedSampler::new(&dict, DIM);
             let mut eng = SamplerEngine::new(EngineConfig {
                 record: Record::Full,
@@ -107,7 +115,7 @@ fn record_none_parity_and_nfe_every_solver() {
     for name in registry::ALL {
         let solver = registry::get(name).unwrap();
         let legacy = run_solver_legacy(solver.as_ref(), model.as_ref(), &x_t, N, &sched, None);
-        for threads in [1usize, 4] {
+        for threads in THREADS {
             let counting = CountingEps::new(model.as_ref());
             let mut eng = SamplerEngine::new(EngineConfig {
                 record: Record::None,
@@ -130,7 +138,11 @@ fn record_none_parity_and_nfe_every_solver() {
                 STEPS * solver.evals_per_step(),
                 "{name} NFE accounting in Record::None"
             );
-            assert_eq!(counting.nfe(), nfe, "{name} model actually evaluated nfe times");
+            assert_eq!(
+                counting.nfe_rows(N),
+                nfe,
+                "{name} model actually evaluated nfe × N rows (threads={threads})"
+            );
         }
     }
 }
@@ -139,32 +151,40 @@ fn record_none_parity_and_nfe_every_solver() {
 fn record_none_with_hook_matches_full() {
     let (model, sched, x_t) = setup(103);
     let dict = toy_dict();
-    for name in ["ddim", "ipndm4", "dpmpp3m", "unipc3m", "deis-tab3", "heun"] {
+    for name in ["ddim", "ipndm4", "dpmpp3m", "unipc3m", "deis-tab3", "heun", "dpm2"] {
         let solver = registry::get(name).unwrap();
-        let mut hook_full = CorrectedSampler::new(&dict, DIM);
-        let mut full = SamplerEngine::with_record(Record::Full);
-        let run = full.run(
-            solver.as_ref(),
-            model.as_ref(),
-            &x_t,
-            N,
-            &sched,
-            Some(&mut hook_full),
-        );
-        let mut hook_none = CorrectedSampler::new(&dict, DIM);
-        let mut none = SamplerEngine::with_record(Record::None);
-        let mut x0 = vec![0.0; N * DIM];
-        let nfe = none.run_into(
-            solver.as_ref(),
-            model.as_ref(),
-            &x_t,
-            N,
-            &sched,
-            Some(&mut hook_none),
-            &mut x0,
-        );
-        assert_eq!(run.x0, x0, "{name} hooked Record::None x0");
-        assert_eq!(run.nfe, nfe, "{name} hooked Record::None nfe");
+        for threads in [1usize, 5] {
+            let mut hook_full = CorrectedSampler::new(&dict, DIM);
+            let mut full = SamplerEngine::new(EngineConfig {
+                record: Record::Full,
+                threads,
+            });
+            let run = full.run(
+                solver.as_ref(),
+                model.as_ref(),
+                &x_t,
+                N,
+                &sched,
+                Some(&mut hook_full),
+            );
+            let mut hook_none = CorrectedSampler::new(&dict, DIM);
+            let mut none = SamplerEngine::new(EngineConfig {
+                record: Record::None,
+                threads,
+            });
+            let mut x0 = vec![0.0; N * DIM];
+            let nfe = none.run_into(
+                solver.as_ref(),
+                model.as_ref(),
+                &x_t,
+                N,
+                &sched,
+                Some(&mut hook_none),
+                &mut x0,
+            );
+            assert_eq!(run.x0, x0, "{name} hooked Record::None x0 (threads={threads})");
+            assert_eq!(run.nfe, nfe, "{name} hooked Record::None nfe (threads={threads})");
+        }
     }
 }
 
@@ -179,4 +199,26 @@ fn run_solver_wrapper_is_engine_backed_and_identical() {
     assert_eq!(legacy.xs, run.xs);
     assert_eq!(legacy.ds, run.ds);
     assert_eq!(legacy.nfe, run.nfe);
+}
+
+/// Engine workspaces (including the scratch arena) are safely reusable
+/// across *different* solvers — the production registry-serving pattern:
+/// one engine, whatever solver the request names.
+#[test]
+fn one_engine_across_the_whole_registry() {
+    let (model, sched, x_t) = setup(105);
+    let mut eng = SamplerEngine::new(EngineConfig {
+        record: Record::None,
+        threads: 0,
+    });
+    let mut x0 = vec![0.0; N * DIM];
+    for _round in 0..2 {
+        for name in registry::ALL {
+            let solver = registry::get(name).unwrap();
+            let legacy =
+                run_solver_legacy(solver.as_ref(), model.as_ref(), &x_t, N, &sched, None);
+            eng.run_into(solver.as_ref(), model.as_ref(), &x_t, N, &sched, None, &mut x0);
+            assert_eq!(legacy.x0, x0, "{name} after engine reuse");
+        }
+    }
 }

@@ -1,0 +1,141 @@
+//! Golden-trajectory snapshots: fixed-seed low-NFE runs for every
+//! registry solver, pinned **bitwise** against checked-in fixtures so
+//! refactors of the solver/engine stack cannot silently move a single
+//! bit of output.
+//!
+//! Budget: NFE = 5 for single-eval solvers; the 2-eval solvers (Heun,
+//! DPM-Solver-2) cannot represent 5 (`steps_for_nfe(5) == None` — the
+//! paper's "\\" cells), so they snapshot the nearest representable
+//! budget, NFE = 6.
+//!
+//! # Fixture lifecycle
+//!
+//! `tests/fixtures/golden_trajectories.txt` holds one line per solver:
+//! `name n_steps hex(x0_bits)...`. On a machine/toolchain where the file
+//! does not yet exist (or misses newly registered solvers), the test
+//! **bootstraps** it from [`run_solver_legacy`] — the bit-exactness
+//! oracle — and prints a reminder to commit it. Once present, every
+//! entry is asserted bit-for-bit against both the legacy driver and the
+//! engine. Fixtures pin stability per platform/libm; regenerate (delete
+//! the file) when intentionally changing numerics.
+
+use pas::schedule::default_schedule;
+use pas::score::analytic::AnalyticEps;
+use pas::solvers::engine::{EngineConfig, Record, SamplerEngine};
+use pas::solvers::{registry, run_solver_legacy};
+use pas::traj::sample_prior;
+use pas::util::rng::Pcg64;
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::path::PathBuf;
+
+const N: usize = 2;
+const DIM: usize = 2; // gmm2d
+const SEED: u64 = 424242;
+
+fn fixture_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests")
+        .join("fixtures")
+        .join("golden_trajectories.txt")
+}
+
+/// Deterministic final sample for one solver, via the legacy oracle.
+fn golden_run(name: &str) -> (usize, Vec<f64>) {
+    let ds = pas::data::registry::get("gmm2d").unwrap();
+    let model = AnalyticEps::from_dataset(&ds);
+    let solver = registry::get(name).unwrap();
+    // NFE 5 where representable, else 6 (2-eval solvers).
+    let steps = solver
+        .steps_for_nfe(5)
+        .or_else(|| solver.steps_for_nfe(6))
+        .expect("no representable low-NFE budget");
+    let sched = default_schedule(steps);
+    let mut rng = Pcg64::seed(SEED);
+    let x_t = sample_prior(&mut rng, N, DIM, sched.t_max());
+    let run = run_solver_legacy(solver.as_ref(), model.as_ref(), &x_t, N, &sched, None);
+
+    // The engine must agree with the oracle before anything is pinned.
+    let mut eng = SamplerEngine::new(EngineConfig {
+        record: Record::Full,
+        threads: 0,
+    });
+    let eng_run = eng.run(solver.as_ref(), model.as_ref(), &x_t, N, &sched, None);
+    assert_eq!(run.x0, eng_run.x0, "{name}: engine diverges from oracle");
+
+    (steps, run.x0)
+}
+
+fn parse_fixtures(text: &str) -> BTreeMap<String, (usize, Vec<u64>)> {
+    let mut out = BTreeMap::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        let name = it.next().expect("fixture name").to_string();
+        let steps: usize = it.next().expect("fixture steps").parse().expect("steps");
+        let bits: Vec<u64> = it
+            .map(|h| u64::from_str_radix(h, 16).expect("fixture hex"))
+            .collect();
+        out.insert(name, (steps, bits));
+    }
+    out
+}
+
+#[test]
+fn golden_trajectories_are_bitwise_stable() {
+    let path = fixture_path();
+    let existing = std::fs::read_to_string(&path)
+        .map(|t| parse_fixtures(&t))
+        .unwrap_or_default();
+
+    let mut regenerated = String::from(
+        "# Golden low-NFE trajectories (bitwise): `solver n_steps hex(x0 f64 bits)...`\n\
+         # Written by tests/golden_trajectories.rs; delete to regenerate.\n",
+    );
+    let mut missing: Vec<&str> = Vec::new();
+    let mut mismatches: Vec<String> = Vec::new();
+
+    for name in registry::ALL {
+        let (steps, x0) = golden_run(name);
+        let bits: Vec<u64> = x0.iter().map(|v| v.to_bits()).collect();
+        let mut line = format!("{name} {steps}");
+        for b in &bits {
+            write!(line, " {b:016x}").unwrap();
+        }
+        regenerated.push_str(&line);
+        regenerated.push('\n');
+        match existing.get(*name) {
+            None => missing.push(*name),
+            Some((fsteps, fbits)) => {
+                if *fsteps != steps || *fbits != bits {
+                    mismatches.push(format!(
+                        "{name}: fixture ({fsteps} steps, {fbits:x?}) vs run ({steps} steps, {bits:x?})"
+                    ));
+                }
+            }
+        }
+    }
+
+    assert!(
+        mismatches.is_empty(),
+        "golden trajectories drifted bitwise:\n  {}\n\
+         (delete {} to intentionally re-pin)",
+        mismatches.join("\n  "),
+        path.display()
+    );
+
+    if !missing.is_empty() {
+        std::fs::create_dir_all(path.parent().unwrap()).expect("create fixtures dir");
+        std::fs::write(&path, regenerated).expect("write fixtures");
+        eprintln!(
+            "golden_trajectories: bootstrapped {} fixture entr{} ({:?}) — commit {}",
+            missing.len(),
+            if missing.len() == 1 { "y" } else { "ies" },
+            missing,
+            path.display()
+        );
+    }
+}

@@ -8,7 +8,7 @@ use pas::pas::pca::{pca_basis, TrajBuffer};
 use pas::schedule::Schedule;
 use pas::score::analytic::AnalyticEps;
 use pas::score::EpsModel;
-use pas::solvers::{NodeView, StepCtx};
+use pas::solvers::{NodeView, StepCtx, StepScratch};
 use pas::tensor::dot;
 use pas::util::json::Json;
 use pas::util::rng::Pcg64;
@@ -138,13 +138,49 @@ fn prop_solver_affine_in_direction() {
             let model = DummyEps;
             let mut o0 = vec![0.0];
             let mut o1 = vec![0.0];
-            solver.step(&model, &ctx, &x, &[d0], 1, &mut o0);
-            solver.step(&model, &ctx, &x, &[d1], 1, &mut o1);
+            let mut buf = vec![0.0; solver.scratch_spec(1, 1).len_for(1)];
+            let mut s0 = StepScratch::new(&mut buf);
+            solver.step(&model, &ctx, &x, &[d0], 1, &mut o0, &mut s0);
+            let mut s1 = StepScratch::new(&mut buf);
+            solver.step(&model, &ctx, &x, &[d1], 1, &mut o1, &mut s1);
             let lhs = o1[0] - o0[0];
             let rhs = gamma * (d1 - d0);
             assert!(
                 (lhs - rhs).abs() < 1e-9 * (1.0 + rhs.abs()),
                 "{name} trial {trial}: {lhs} vs {rhs}"
+            );
+        }
+    }
+}
+
+/// Scratch specs: `len_for` is the declared arithmetic, and every
+/// registry solver completes full runs with an arena sized *exactly* by
+/// its spec (`run_solver_legacy` sizes exactly, so an underdeclared spec
+/// would panic in `StepScratch::take`), across batch shapes including
+/// the degenerate n = 1.
+#[test]
+fn prop_scratch_spec_sufficient_for_every_registry_solver() {
+    let ds = pas::data::registry::get("gmm2d").unwrap();
+    let model = AnalyticEps::from_dataset(&ds);
+    let sched = pas::schedule::default_schedule(6);
+    let mut rng = Pcg64::seed(12);
+    for name in pas::solvers::registry::ALL {
+        let solver = pas::solvers::registry::get(name).unwrap();
+        for n in [1usize, 3, 8] {
+            let spec = solver.scratch_spec(2, n);
+            assert_eq!(spec.len_for(n), spec.per_row * n + spec.flat, "{name}");
+            let x_t = pas::traj::sample_prior(&mut rng, n, 2, sched.t_max());
+            let run = pas::solvers::run_solver_legacy(
+                solver.as_ref(),
+                model.as_ref(),
+                &x_t,
+                n,
+                &sched,
+                None,
+            );
+            assert!(
+                run.x0.iter().all(|v| v.is_finite()),
+                "{name} n={n}: non-finite output"
             );
         }
     }

@@ -1,0 +1,37 @@
+//! Shared counting global allocator for the allocation-audit targets
+//! (`tests/alloc_audit.rs` and `benches/pas_overhead.rs` include this via
+//! `#[path]` so both enforce the *same* definition of "zero steady-state
+//! allocations"). Each including target declares its own
+//! `#[global_allocator] static ALLOCATOR: CountingAlloc = CountingAlloc;`.
+//!
+//! Counts every heap allocation (alloc / alloc_zeroed / realloc) made by
+//! any thread; frees are not counted — the audits only care that the
+//! steady state performs none.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+pub struct CountingAlloc;
+
+pub static ALLOC_COUNT: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, l: Layout) -> *mut u8 {
+        ALLOC_COUNT.fetch_add(1, Ordering::Relaxed);
+        System.alloc(l)
+    }
+
+    unsafe fn dealloc(&self, p: *mut u8, l: Layout) {
+        System.dealloc(p, l)
+    }
+
+    unsafe fn alloc_zeroed(&self, l: Layout) -> *mut u8 {
+        ALLOC_COUNT.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(l)
+    }
+
+    unsafe fn realloc(&self, p: *mut u8, l: Layout, s: usize) -> *mut u8 {
+        ALLOC_COUNT.fetch_add(1, Ordering::Relaxed);
+        System.realloc(p, l, s)
+    }
+}
