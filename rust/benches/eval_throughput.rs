@@ -1,0 +1,91 @@
+//! Bench: raw model-eval throughput — the cost every one of the paper's
+//! tables is bottlenecked by (NFE × model-eval time dominates sampling;
+//! PAS's premise is that its ~10-parameter correction is negligible next
+//! to it). Reports **rows/sec** of [`AnalyticEps::eval_batch`] (the
+//! sample-blocked GEMM pipeline) against
+//! [`AnalyticEps::eval_batch_per_sample`] (the pre-blocking per-sample
+//! path, same pool fan-out), across data dimensions {2, 64, 256} × mode
+//! counts × batch sizes.
+//!
+//! CI runs this in both `PAS_THREADS` matrix legs {1, 4} and uploads
+//! `BENCH_eval_batch.json` as an artifact alongside
+//! `BENCH_solver_step.json`; the d=256 low-rank workload (latent256) at
+//! PAS_THREADS=4 is the acceptance cell — the blocked pipeline must hold
+//! ≥ 2× rows/sec over the per-sample path there, with no regression at
+//! d=2.
+
+#[path = "harness.rs"]
+mod harness;
+
+use pas::score::analytic::AnalyticEps;
+use pas::score::EpsModel;
+use pas::traj::sample_prior;
+use pas::util::json::Json;
+use pas::util::rng::Pcg64;
+
+fn main() {
+    let threads = pas::util::pool::Pool::global().size();
+    let mut cells: Vec<Json> = Vec::new();
+    println!("== analytic eval throughput: blocked GEMM pipeline vs per-sample (threads = {threads}) ==");
+    for ds_name in ["gmm2d", "gmm-hd64", "latent256"] {
+        let ds = pas::data::registry::get(ds_name).unwrap();
+        let dim = ds.dim();
+        let all_modes = ds.spec.modes.len();
+        // Mode-count axis: the full mixture and a single-mode slice of it
+        // (same covariance structure, no softmax mixing work).
+        for n_modes in [1usize, all_modes] {
+            let model = AnalyticEps::new(
+                format!("{ds_name}[m{n_modes}]"),
+                ds.spec.modes[..n_modes].to_vec(),
+            );
+            for n in [64usize, 1024] {
+                let mut rng = Pcg64::seed(3);
+                let x = sample_prior(&mut rng, n, dim, 10.0);
+                let mut out = vec![0.0; n * dim];
+                let blocked = harness::bench(
+                    &format!("{ds_name} d{dim} m{n_modes} b{n} blocked"),
+                    3,
+                    20,
+                    0.4,
+                    || {
+                        model.eval_batch(&x, n, 2.0, &mut out);
+                        harness::black_box(&out);
+                    },
+                );
+                let scalar = harness::bench(
+                    &format!("{ds_name} d{dim} m{n_modes} b{n} per-sample"),
+                    3,
+                    20,
+                    0.4,
+                    || {
+                        model.eval_batch_per_sample(&x, n, 2.0, &mut out);
+                        harness::black_box(&out);
+                    },
+                );
+                let rows_blocked = n as f64 / blocked.median_s;
+                let rows_scalar = n as f64 / scalar.median_s;
+                let speedup = rows_blocked / rows_scalar;
+                println!(
+                    "  -> {rows_blocked:.3e} rows/s blocked vs {rows_scalar:.3e} per-sample ({speedup:.2}x)"
+                );
+                let mut cell = Json::obj();
+                cell.set("dataset", Json::Str(ds_name.into()))
+                    .set("dim", Json::Num(dim as f64))
+                    .set("modes", Json::Num(n_modes as f64))
+                    .set("batch", Json::Num(n as f64))
+                    .set("rows_per_s_blocked", Json::Num(rows_blocked))
+                    .set("rows_per_s_per_sample", Json::Num(rows_scalar))
+                    .set("speedup", Json::Num(speedup));
+                cells.push(cell);
+            }
+        }
+    }
+    let mut top = Json::obj();
+    top.set("bench", Json::Str("eval_throughput".into()))
+        .set("threads", Json::Num(threads as f64))
+        .set("results", Json::Arr(cells));
+    match std::fs::write("BENCH_eval_batch.json", top.to_string()) {
+        Ok(()) => println!("\nwrote BENCH_eval_batch.json"),
+        Err(e) => eprintln!("\ncould not write BENCH_eval_batch.json: {e}"),
+    }
+}

@@ -3,7 +3,8 @@
 //! trick (tailored to PAS's "few rows, huge columns" trajectory matrices),
 //! modified Gram–Schmidt, Cholesky and PSD matrix square root.
 
-use crate::tensor::{dot, matmul_into, norm2};
+use crate::tensor::gemm::{gemm_nt_dot_into, gemm_tn_acc};
+use crate::tensor::{dot, norm2};
 
 /// Symmetric eigendecomposition via cyclic Jacobi rotations.
 ///
@@ -67,7 +68,7 @@ pub fn eigh(a: &mut [f64], n: usize) -> (Vec<f64>, Vec<f64>) {
             }
         }
     }
-    let mut vals: Vec<f64> = (0..n).map(|i| a[i * n + i]).collect();
+    let vals: Vec<f64> = (0..n).map(|i| a[i * n + i]).collect();
     // Sort descending, carrying eigenvectors (rows of v).
     let mut order: Vec<usize> = (0..n).collect();
     order.sort_by(|&i, &j| vals[j].partial_cmp(&vals[i]).unwrap());
@@ -77,7 +78,6 @@ pub fn eigh(a: &mut [f64], n: usize) -> (Vec<f64>, Vec<f64>) {
         sorted_vals[new_i] = vals[old_i];
         sorted_vecs[new_i * n..(new_i + 1) * n].copy_from_slice(&v[old_i * n..(old_i + 1) * n]);
     }
-    vals.clear();
     (sorted_vals, sorted_vecs)
 }
 
@@ -92,21 +92,21 @@ fn frob(a: &[f64]) -> f64 {
 /// `k = min(r, top_k)` after dropping numerically-zero singular values.
 pub fn svd_right_vectors(x: &[f64], r: usize, d: usize, top_k: usize) -> (Vec<f64>, Vec<f64>) {
     assert_eq!(x.len(), r * d);
-    // G = X Xᵀ, r×r.
+    // G = X Xᵀ, r×r: one register-tiled Gram product. Each entry is
+    // reduced in `dot` order, so bits match the former per-pair loop
+    // (dot is exactly symmetric, so computing both triangles directly
+    // equals the old mirror-assignment).
     let mut g = vec![0.0; r * r];
-    for i in 0..r {
-        for j in i..r {
-            let v = dot(&x[i * d..(i + 1) * d], &x[j * d..(j + 1) * d]);
-            g[i * r + j] = v;
-            g[j * r + i] = v;
-        }
-    }
+    gemm_nt_dot_into(x, r, x, r, d, &mut g);
     let (vals, w) = eigh(&mut g, r);
     let smax = vals.first().copied().unwrap_or(0.0).max(0.0).sqrt();
     let tol = smax * 1e-9;
+    let keep_max = r.min(top_k);
     let mut svals = Vec::new();
-    let mut vt = Vec::new();
-    for k in 0..r.min(top_k) {
+    // Right vectors accumulate directly into the output buffer — no
+    // per-vector staging allocation; unused tail rows are truncated off.
+    let mut vt = vec![0.0; keep_max * d];
+    for k in 0..keep_max {
         let s = vals[k].max(0.0).sqrt();
         if s <= tol || s == 0.0 {
             break;
@@ -114,7 +114,7 @@ pub fn svd_right_vectors(x: &[f64], r: usize, d: usize, top_k: usize) -> (Vec<f6
         svals.push(s);
         // v = Xᵀ w / s : accumulate rows of X weighted by w[k].
         let wk = &w[k * r..(k + 1) * r];
-        let mut v = vec![0.0; d];
+        let v = &mut vt[k * d..(k + 1) * d];
         for i in 0..r {
             let c = wk[i] / s;
             if c == 0.0 {
@@ -125,8 +125,8 @@ pub fn svd_right_vectors(x: &[f64], r: usize, d: usize, top_k: usize) -> (Vec<f6
                 *vj += c * xj;
             }
         }
-        vt.extend_from_slice(&v);
     }
+    vt.truncate(svals.len() * d);
     (svals, vt)
 }
 
@@ -206,15 +206,11 @@ pub fn sqrtm_psd(a: &[f64], n: usize) -> Vec<f64> {
             scaled[k * n + j] = s * vecs[k * n + j];
         }
     }
-    // out = vecsᵀ * scaled
-    let mut vt = vec![0.0; n * n];
-    for i in 0..n {
-        for k in 0..n {
-            vt[i * n + k] = vecs[k * n + i];
-        }
-    }
+    // out = vecsᵀ * scaled, straight through the tiled AᵀB kernel — the
+    // seed's explicit transpose staging is gone; per-entry ascending-k
+    // order is unchanged, so every output bit is too.
     let mut out = vec![0.0; n * n];
-    matmul_into(&vt, n, n, &scaled, n, &mut out);
+    gemm_tn_acc(&vecs, n, n, &scaled, n, &mut out);
     out
 }
 
@@ -272,6 +268,7 @@ pub fn solve_linear(a: &mut [f64], b: &mut [f64], n: usize) -> Result<(), String
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::tensor::matmul_into;
     use crate::util::rng::Pcg64;
 
     fn approx(a: f64, b: f64, eps: f64) -> bool {

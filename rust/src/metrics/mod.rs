@@ -44,12 +44,10 @@ pub fn sliced_w2(a: &[f64], na: usize, b: &[f64], nb: usize, dim: usize, n_proj:
         for v in dir.iter_mut() {
             *v /= norm;
         }
-        for (i, p) in pa.iter_mut().enumerate() {
-            *p = crate::tensor::dot(&a[i * dim..(i + 1) * dim], &dir);
-        }
-        for (i, p) in pb.iter_mut().enumerate() {
-            *p = crate::tensor::dot(&b[i * dim..(i + 1) * dim], &dir);
-        }
+        // Batch·direction matvecs through the tiled projection kernel
+        // (dot-order per row — same bits, row panels amortized).
+        crate::tensor::gemm::gemm_nt_dot_into(a, na, &dir, 1, dim, &mut pa);
+        crate::tensor::gemm::gemm_nt_dot_into(b, nb, &dir, 1, dim, &mut pb);
         pa.sort_by(|x, y| x.partial_cmp(y).unwrap());
         pb.sort_by(|x, y| x.partial_cmp(y).unwrap());
         // Quantile-matched squared differences.

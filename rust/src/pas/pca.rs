@@ -105,11 +105,22 @@ impl Basis {
         }
     }
 
+    /// Project a vector onto the basis, writing the `k` coordinates into
+    /// `out[..self.k]`. Routed through the register-tiled dot-order
+    /// kernel ([`crate::tensor::gemm::gemm_nt_dot_into`]) — bit-identical
+    /// to a per-row [`crate::tensor::dot`] loop, with the basis panel
+    /// loaded once per tile instead of once per coordinate.
+    pub fn project_into(&self, v: &[f64], out: &mut [f64]) {
+        debug_assert_eq!(v.len(), self.dim);
+        debug_assert!(out.len() >= self.k);
+        crate::tensor::gemm::gemm_nt_dot_into(&self.u, self.k, v, 1, self.dim, &mut out[..self.k]);
+    }
+
     /// Project a vector onto the basis: returns the `k` coordinates.
     pub fn project(&self, v: &[f64]) -> Vec<f64> {
-        (0..self.k)
-            .map(|k| crate::tensor::dot(self.row(k), v))
-            .collect()
+        let mut out = vec![0.0; self.k];
+        self.project_into(v, &mut out);
+        out
     }
 }
 

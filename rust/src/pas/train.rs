@@ -358,6 +358,7 @@ impl PasTrainer {
             let mut adam_v = vec![0.0; cfg.n_basis];
             let mut step_count = 0usize;
             let mut grad = vec![0.0; cfg.n_basis];
+            let mut proj = vec![0.0; cfg.n_basis];
             let mut dtilde = vec![0.0; dim];
             let mut resid = vec![0.0; dim];
             let mut gx = vec![0.0; dim];
@@ -382,9 +383,13 @@ impl PasTrainer {
                             resid[m] = bk[m] + gamma * dtilde[m] - gk[m];
                         }
                         le.grad(&resid, &mut gx);
+                        // ∇_C = gamma · s · U ∇_x loss — the U·g matvec
+                        // goes through the tiled projection kernel
+                        // (bit-identical to the former per-row dots).
                         let gs = gamma * s / chunk.len() as f64;
+                        b.project_into(&gx, &mut proj);
                         for (m, g) in grad.iter_mut().take(b.k).enumerate() {
-                            *g += gs * crate::tensor::dot(b.row(m), &gx);
+                            *g += gs * proj[m];
                         }
                     }
                     step_count += 1;

@@ -13,12 +13,46 @@
 //! costs two (d×d)·(d) products per mode — the analytic-model hot path that
 //! the `solver_step` bench profiles.
 //!
+//! # Sample-blocked evaluation
+//!
+//! `eval_batch` is **sample-blocked**: a tile of [`EVAL_TILE`] states is
+//! evaluated together, so the per-mode eigenbasis pass becomes matrix–
+//! matrix work (`Y = U_r Rᵀ` through the register-tiled kernels of
+//! [`crate::tensor::gemm`], then a tiled back-projection
+//! `S -= Uᵀ (Δ·Y)`) instead of one memory-bound O(r·d) dot-product sweep
+//! per sample. Each streamed row of `U` is amortized across the whole
+//! tile, which is where the throughput comes from
+//! (`benches/eval_throughput.rs` tracks it as rows/sec).
+//!
+//! **Determinism:** blocking only regroups *samples*; every per-sample
+//! reduction keeps the exact operation order of the scalar `eval_one`
+//! path (4-lane [`crate::tensor::dot`] order for the low-rank eigenbasis
+//! pass, single ascending chains elsewhere), so the blocked pipeline is
+//! bit-identical to the per-sample path for every batch size, tile
+//! alignment and pool thread count — enforced by
+//! `tests/eval_blocked_parity.rs`, `tests/engine_parity.rs` and the
+//! golden-trajectory fixtures.
+//!
 //! This is the same Gaussian(-score) family the paper's theory section
 //! (§3.4, Wang & Vastola 2023/2024) uses; it reproduces exactly the
 //! geometric trajectory structure PAS exploits.
 
 use super::EpsModel;
 use crate::data::{Dataset, GmmSpec, Mode};
+use crate::tensor::gemm::{gemm_nt_dot_into, gemm_nt_seq_into};
+
+/// Samples per evaluation tile of the blocked pipeline ([`AnalyticEps`]'s
+/// `eval_batch`). Each streamed eigenbasis panel (a row of `U_r`, the
+/// memory-bound operand of the eval) is reused across `EVAL_TILE` samples
+/// instead of once per sample, so the panel traffic per sample drops by
+/// the tile factor; 16 keeps the per-thread tile scratch
+/// (`modes × EVAL_TILE × d` for the per-mode precision-weighted
+/// residuals) within ~200 KiB for the largest registered dataset
+/// (latent256: 6 × 16 × 256 f64) — L2-resident, far from evicting the
+/// eigenbases it amortizes. Purely a throughput knob: per-sample results
+/// are bit-identical for every tile size and tile alignment
+/// (`tests/eval_blocked_parity.rs`).
+pub const EVAL_TILE: usize = 16;
 
 /// Internal per-mode evaluation representation. Dense covariances whose
 /// eigen-spectrum ends in a flat isotropic tail (all our synthetic
@@ -241,30 +275,88 @@ impl AnalyticEps {
         max_lp + z.ln()
     }
 
+    /// Internal evaluation representation chosen per mode (`"iso"`,
+    /// `"lowrank"` or `"full"`). Exposed so the blocked-eval parity tests
+    /// can assert a construction engages the variant it intends to
+    /// exercise.
+    pub fn mode_kinds(&self) -> Vec<&'static str> {
+        self.evals
+            .iter()
+            .map(|e| match e {
+                ModeEval::Iso { .. } => "iso",
+                ModeEval::LowRank { .. } => "lowrank",
+                ModeEval::Full { .. } => "full",
+            })
+            .collect()
+    }
+
     /// Log marginal density (up to the `−d/2·log 2π` constant). Exposed for
-    /// tests and for mode-interpolation experiments.
+    /// tests and for mode-interpolation experiments. Routed through the
+    /// thread-local [`SCRATCH`] like `eval_range`, so repeated calls (the
+    /// mode-interpolation sweeps, finite-difference tests) perform no
+    /// steady-state heap allocation.
     pub fn log_density(&self, x: &[f64], t: f64) -> f64 {
-        let mut out = vec![0.0; self.d];
-        let mut scratch = Scratch::new(self.modes.len(), self.d);
-        self.eval_one(x, t, &mut out, &mut scratch)
+        SCRATCH.with(|cell| {
+            let mut scratch = cell.borrow_mut();
+            scratch.ensure(self.modes.len(), self.d);
+            // The output row lives in the scratch too; `take` it out so
+            // `eval_one` can borrow the rest of the scratch mutably, and
+            // size it here (not in `ensure`, which `eval_one` re-runs
+            // while the buffer is taken out).
+            let mut outbuf = std::mem::take(&mut scratch.outbuf);
+            if outbuf.len() < self.d {
+                outbuf.resize(self.d, 0.0);
+            }
+            let ld = self.eval_one(x, t, &mut outbuf[..self.d], &mut scratch);
+            scratch.outbuf = outbuf;
+            ld
+        })
     }
 }
 
+/// Per-thread evaluation scratch. The first four buffers serve the scalar
+/// `eval_one` path; the `*_tile` buffers stage one [`EVAL_TILE`]-sample
+/// block of the blocked pipeline (residuals, eigen coordinates,
+/// per-mode×sample coefficients/log-densities and the per-mode
+/// precision-weighted residual rows awaiting the softmax combine).
 struct Scratch {
     lp: Vec<f64>,
     smat: Vec<f64>,
     y: Vec<f64>,
     z: Vec<f64>,
+    /// Residual tile `R = X − mu_k`, (EVAL_TILE, d).
+    resid: Vec<f64>,
+    /// Eigen-coordinate tile `Y`, (r, tile) with r ≤ d.
+    ytile: Vec<f64>,
+    /// Back-projection coefficient tile `Δ·Y` (resp. `z`), (r, tile).
+    coef: Vec<f64>,
+    /// Per-sample isotropic quadratic forms, (tile).
+    q0: Vec<f64>,
+    /// Per-mode per-sample log densities, (modes, EVAL_TILE).
+    lp_tile: Vec<f64>,
+    /// Per-mode `s_k` rows for the tile, (modes, EVAL_TILE, d).
+    stile: Vec<f64>,
+    /// Output row for the single-sample entry points (`log_density`).
+    outbuf: Vec<f64>,
 }
 
 impl Scratch {
     fn new(k: usize, d: usize) -> Scratch {
-        Scratch {
-            lp: vec![0.0; k],
-            smat: vec![0.0; k * d],
-            y: vec![0.0; d],
-            z: vec![0.0; d],
-        }
+        let mut s = Scratch {
+            lp: Vec::new(),
+            smat: Vec::new(),
+            y: Vec::new(),
+            z: Vec::new(),
+            resid: Vec::new(),
+            ytile: Vec::new(),
+            coef: Vec::new(),
+            q0: Vec::new(),
+            lp_tile: Vec::new(),
+            stile: Vec::new(),
+            outbuf: Vec::new(),
+        };
+        s.ensure(k, d);
+        s
     }
 
     fn ensure(&mut self, k: usize, d: usize) {
@@ -278,6 +370,24 @@ impl Scratch {
             self.y.resize(d, 0.0);
             self.z.resize(d, 0.0);
         }
+        if self.resid.len() < EVAL_TILE * d {
+            self.resid.resize(EVAL_TILE * d, 0.0);
+            self.ytile.resize(EVAL_TILE * d, 0.0);
+            self.coef.resize(EVAL_TILE * d, 0.0);
+        }
+        if self.q0.len() < EVAL_TILE {
+            self.q0.resize(EVAL_TILE, 0.0);
+        }
+        if self.lp_tile.len() < k * EVAL_TILE {
+            self.lp_tile.resize(k * EVAL_TILE, 0.0);
+        }
+        if self.stile.len() < k * EVAL_TILE * d {
+            self.stile.resize(k * EVAL_TILE * d, 0.0);
+        }
+        // `outbuf` is deliberately NOT grown here: `log_density` takes it
+        // out of the scratch before calling `eval_one` (which re-runs
+        // `ensure`), so growing it from `ensure` would allocate a fresh
+        // buffer per call only for the restore to drop it.
     }
 }
 
@@ -290,7 +400,231 @@ thread_local! {
 }
 
 impl AnalyticEps {
+    /// Evaluate one tile of `nb <= EVAL_TILE` samples through the blocked
+    /// GEMM pipeline. Per-sample operation order is **exactly** that of
+    /// [`Self::eval_one`] — blocking only regroups which sample is worked
+    /// on when — so outputs are bit-identical to the scalar path.
+    fn eval_tile(&self, x: &[f64], nb: usize, t: f64, out: &mut [f64], scratch: &mut Scratch) {
+        let d = self.d;
+        let t2 = t * t;
+        let k_modes = self.modes.len();
+        debug_assert!(nb >= 1 && nb <= EVAL_TILE);
+        debug_assert_eq!(x.len(), nb * d);
+        debug_assert_eq!(out.len(), nb * d);
+        let Scratch {
+            lp,
+            resid,
+            ytile,
+            coef,
+            q0,
+            lp_tile,
+            stile,
+            ..
+        } = scratch;
+        // Pass 1: per mode, the whole tile — log densities into `lp_tile`
+        // and precision-weighted residuals s_k into `stile`.
+        for (k, mode) in self.modes.iter().enumerate() {
+            let sk = &mut stile[k * EVAL_TILE * d..k * EVAL_TILE * d + nb * d];
+            let lps = &mut lp_tile[k * EVAL_TILE..k * EVAL_TILE + nb];
+            match &self.evals[k] {
+                ModeEval::Iso { var } => {
+                    // Isotropic: no basis to amortize; the scalar loop per
+                    // sample, verbatim.
+                    let denom = var + t2;
+                    for b in 0..nb {
+                        let xb = &x[b * d..(b + 1) * d];
+                        let skb = &mut sk[b * d..(b + 1) * d];
+                        let mut q = 0.0;
+                        for j in 0..d {
+                            let r = mode.mean[j] - xb[j];
+                            skb[j] = r / denom;
+                            q += r * r;
+                        }
+                        lps[b] = self.logw[k] - 0.5 * (q / denom + d as f64 * denom.ln());
+                    }
+                }
+                ModeEval::LowRank { tail, lam, u_r, r } => {
+                    let base = 1.0 / (tail + t2);
+                    // Residual tile R = X − mu (plus the isotropic parts
+                    // of q and s, per sample as in the scalar path).
+                    for b in 0..nb {
+                        let xb = &x[b * d..(b + 1) * d];
+                        let rb = &mut resid[b * d..(b + 1) * d];
+                        let skb = &mut sk[b * d..(b + 1) * d];
+                        let mut q0b = 0.0;
+                        for j in 0..d {
+                            let rj = xb[j] - mode.mean[j];
+                            rb[j] = rj;
+                            q0b += rj * rj;
+                            skb[j] = -base * rj;
+                        }
+                        q0[b] = q0b;
+                    }
+                    // Y = U_r Rᵀ: each entry in the 4-lane `dot` order of
+                    // the scalar pass, each U row streamed once per tile.
+                    gemm_nt_dot_into(u_r, *r, &resid[..nb * d], nb, d, &mut ytile[..r * nb]);
+                    // log|Sigma + t²I| is sample-independent: computed
+                    // once, with the scalar pass's op order.
+                    let mut logdet = (d - r) as f64 * (tail + t2).ln();
+                    for c in 0..*r {
+                        logdet += (lam[c] + t2).ln();
+                    }
+                    // Quadratic forms + back-projection coefficients.
+                    for b in 0..nb {
+                        let mut q = base * q0[b];
+                        for c in 0..*r {
+                            let yc = ytile[c * nb + b];
+                            let denom = lam[c] + t2;
+                            let delta = 1.0 / denom - base;
+                            q += yc * yc * delta;
+                            coef[c * nb + b] = yc * delta;
+                        }
+                        lps[b] = self.logw[k] - 0.5 * (q + logdet);
+                    }
+                    // Back-projection S -= U_rᵀ (Δ·Y), c-outer so each
+                    // eigen row streams once per tile; per-sample update
+                    // order (ascending c, sequential j, zero-coef skip)
+                    // equals the scalar interleaved loop.
+                    for c in 0..*r {
+                        let row = &u_r[c * d..(c + 1) * d];
+                        for b in 0..nb {
+                            let cf = coef[c * nb + b];
+                            if cf != 0.0 {
+                                let skb = &mut sk[b * d..(b + 1) * d];
+                                for j in 0..d {
+                                    skb[j] -= cf * row[j];
+                                }
+                            }
+                        }
+                    }
+                }
+                ModeEval::Full { lam, u } => {
+                    for b in 0..nb {
+                        let xb = &x[b * d..(b + 1) * d];
+                        let rb = &mut resid[b * d..(b + 1) * d];
+                        for j in 0..d {
+                            rb[j] = xb[j] - mode.mean[j];
+                        }
+                    }
+                    // y = U (x − mu): the scalar Full pass reduces each
+                    // coordinate with a single ascending chain, so the
+                    // sequential-order kernel (not the dot-order one).
+                    gemm_nt_seq_into(u, d, &resid[..nb * d], nb, d, &mut ytile[..d * nb]);
+                    let mut logdet = 0.0;
+                    for c in 0..d {
+                        logdet += (lam[c] + t2).ln();
+                    }
+                    for b in 0..nb {
+                        let mut q = 0.0;
+                        for c in 0..d {
+                            let denom = lam[c] + t2;
+                            let yc = ytile[c * nb + b];
+                            let zc = yc / denom;
+                            coef[c * nb + b] = zc;
+                            q += yc * zc;
+                        }
+                        lps[b] = self.logw[k] - 0.5 * (q + logdet);
+                    }
+                    // s = −Uᵀ z, tiled like the low-rank back-projection.
+                    sk.fill(0.0);
+                    for c in 0..d {
+                        let row = &u[c * d..(c + 1) * d];
+                        for b in 0..nb {
+                            let zc = coef[c * nb + b];
+                            if zc == 0.0 {
+                                continue;
+                            }
+                            let skb = &mut sk[b * d..(b + 1) * d];
+                            for j in 0..d {
+                                skb[j] -= zc * row[j];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        // Pass 2: softmax-combine, per sample, in the scalar pass's mode
+        // order (running max, then exp/sum, then the r_k-weighted combine
+        // with its small-responsibility skip).
+        for b in 0..nb {
+            let mut max_lp = f64::NEG_INFINITY;
+            for k in 0..k_modes {
+                let v = lp_tile[k * EVAL_TILE + b];
+                if v > max_lp {
+                    max_lp = v;
+                }
+            }
+            let mut z = 0.0;
+            for k in 0..k_modes {
+                lp[k] = (lp_tile[k * EVAL_TILE + b] - max_lp).exp();
+                z += lp[k];
+            }
+            let ob = &mut out[b * d..(b + 1) * d];
+            ob.fill(0.0);
+            for k in 0..k_modes {
+                let r = lp[k] / z;
+                if r < 1e-300 {
+                    continue;
+                }
+                let skb = &stile[k * EVAL_TILE * d + b * d..k * EVAL_TILE * d + (b + 1) * d];
+                for j in 0..d {
+                    ob[j] += r * skb[j];
+                }
+            }
+            for v in ob.iter_mut() {
+                *v *= -t;
+            }
+        }
+    }
+
+    /// Blocked evaluation of a row range: tiles of [`EVAL_TILE`] samples
+    /// through [`Self::eval_tile`].
     fn eval_range(&self, x: &[f64], t: f64, out: &mut [f64]) {
+        let d = self.d;
+        let n = x.len() / d;
+        SCRATCH.with(|cell| {
+            let mut scratch = cell.borrow_mut();
+            scratch.ensure(self.modes.len(), d);
+            let mut i = 0;
+            while i < n {
+                let nb = EVAL_TILE.min(n - i);
+                self.eval_tile(
+                    &x[i * d..(i + nb) * d],
+                    nb,
+                    t,
+                    &mut out[i * d..(i + nb) * d],
+                    &mut scratch,
+                );
+                i += nb;
+            }
+        });
+    }
+
+    /// The pre-blocking per-sample path (one [`Self::eval_one`] per row,
+    /// same pool fan-out as `eval_batch`). Kept as the bit-exactness
+    /// oracle for `tests/eval_blocked_parity.rs` and the baseline that
+    /// `benches/eval_throughput.rs` reports speedups against.
+    pub fn eval_batch_per_sample(&self, x: &[f64], n: usize, t: f64, out: &mut [f64]) {
+        assert_eq!(x.len(), n * self.d);
+        assert_eq!(out.len(), n * self.d);
+        let pool = crate::util::pool::Pool::global();
+        let threads = pool.size();
+        if threads > 1 && n >= 4 * threads && n * self.d >= 4096 {
+            let d = self.d;
+            let out_ptr = crate::util::pool::SendPtr::new(out.as_mut_ptr());
+            pool.par_rows(n, threads, 1, |r0, r1| {
+                // SAFETY: pool row ranges are disjoint.
+                let o = unsafe {
+                    std::slice::from_raw_parts_mut(out_ptr.get().add(r0 * d), (r1 - r0) * d)
+                };
+                self.eval_range_per_sample(&x[r0 * d..r1 * d], t, o);
+            });
+        } else {
+            self.eval_range_per_sample(x, t, out);
+        }
+    }
+
+    fn eval_range_per_sample(&self, x: &[f64], t: f64, out: &mut [f64]) {
         let d = self.d;
         let n = x.len() / d;
         SCRATCH.with(|cell| {
@@ -320,13 +654,16 @@ impl EpsModel for AnalyticEps {
         // (perf pass, EXPERIMENTS.md §Perf: the analytic eps eval is the
         // whole-stack bottleneck on every table). Rows are independent, so
         // sharding over the persistent pool is bit-identical to the
-        // sequential loop for every thread count.
+        // sequential loop for every thread count — and per-sample results
+        // do not depend on tile membership, so chunk boundaries are free
+        // to fall anywhere; `EVAL_TILE` as the minimum chunk size just
+        // keeps every shard's tiles full-width.
         let pool = crate::util::pool::Pool::global();
         let threads = pool.size();
         if threads > 1 && n >= 4 * threads && n * self.d >= 4096 {
             let d = self.d;
             let out_ptr = crate::util::pool::SendPtr::new(out.as_mut_ptr());
-            pool.par_rows(n, threads, 1, |r0, r1| {
+            pool.par_rows(n, threads, EVAL_TILE, |r0, r1| {
                 // SAFETY: pool row ranges are disjoint.
                 let o = unsafe {
                     std::slice::from_raw_parts_mut(out_ptr.get().add(r0 * d), (r1 - r0) * d)
@@ -336,6 +673,10 @@ impl EpsModel for AnalyticEps {
         } else {
             self.eval_range(x, t, out);
         }
+    }
+
+    fn preferred_tile(&self) -> usize {
+        EVAL_TILE
     }
 
     fn name(&self) -> &str {

@@ -11,6 +11,33 @@
 //! models — exactly the regime where the paper shows PAS helps DDIM most.
 
 use super::EpsModel;
+use std::cell::RefCell;
+
+thread_local! {
+    /// Per-thread staging for the CFG wrappers: the conditional/
+    /// unconditional eval buffers plus [`RowCfgEps`]'s class-grouped
+    /// gather/scatter rows. Buffers are `take`n out of the cell for the
+    /// duration of a call and restored afterwards, so a wrapper whose
+    /// submodels are plain eps models (every construction in this crate)
+    /// performs **zero steady-state heap allocations** per call. A CFG
+    /// wrapper nested inside another CFG wrapper stays *correct* — the
+    /// inner call just finds an empty slot and sizes its own buffer,
+    /// which the outer restore then drops — so the zero-alloc guarantee
+    /// is scoped to non-nested wrappers.
+    static CFG_SCRATCH: RefCell<CfgScratch> = RefCell::new(CfgScratch::default());
+}
+
+#[derive(Default)]
+struct CfgScratch {
+    /// Conditional eps staging ([`CfgEps`]).
+    ec: Vec<f64>,
+    /// Unconditional eps staging ([`RowCfgEps`]).
+    eu: Vec<f64>,
+    /// Gathered per-class input rows ([`RowCfgEps`]).
+    x_gather: Vec<f64>,
+    /// Per-class eval output rows ([`RowCfgEps`]).
+    e_gather: Vec<f64>,
+}
 
 pub struct CfgEps {
     pub cond: Box<dyn EpsModel>,
@@ -41,17 +68,26 @@ impl EpsModel for CfgEps {
         self.cond.rows_independent() && self.uncond.rows_independent()
     }
 
+    fn preferred_tile(&self) -> usize {
+        self.cond.preferred_tile().max(self.uncond.preferred_tile())
+    }
+
     fn eval_batch(&self, x: &[f64], n: usize, t: f64, out: &mut [f64]) {
         // eps_u + s (eps_c − eps_u). Both nets evaluated per call — in NFE
         // accounting terms this is the standard "1 NFE = 1 guided eval"
-        // convention the paper's Stable Diffusion tables use.
-        let mut ec = vec![0.0; out.len()];
-        self.cond.eval_batch(x, n, t, &mut ec);
+        // convention the paper's Stable Diffusion tables use. The staging
+        // buffer comes from the thread-local scratch (no per-call alloc).
+        let mut ec = CFG_SCRATCH.with(|c| std::mem::take(&mut c.borrow_mut().ec));
+        if ec.len() < out.len() {
+            ec.resize(out.len(), 0.0);
+        }
+        self.cond.eval_batch(x, n, t, &mut ec[..out.len()]);
         self.uncond.eval_batch(x, n, t, out);
         let s = self.scale;
         for i in 0..out.len() {
             out[i] += s * (ec[i] - out[i]);
         }
+        CFG_SCRATCH.with(|c| c.borrow_mut().ec = ec);
     }
 
     fn name(&self) -> &str {
@@ -105,20 +141,79 @@ impl EpsModel for RowCfgEps {
         false
     }
 
+    fn preferred_tile(&self) -> usize {
+        self.uncond.preferred_tile()
+    }
+
     fn eval_batch(&self, x: &[f64], n: usize, t: f64, out: &mut [f64]) {
         let d = self.dim();
-        let mut eu = vec![0.0; n * d];
-        self.uncond.eval_batch(x, n, t, &mut eu);
-        let mut row = vec![0.0; d];
-        for k in 0..n {
-            let model = &self.class_models[k % self.class_models.len()];
-            model.eval_batch(&x[k * d..(k + 1) * d], 1, t, &mut row);
-            let o = &mut out[k * d..(k + 1) * d];
-            let u = &eu[k * d..(k + 1) * d];
-            for j in 0..d {
-                o[j] = u[j] + self.scale * (row[j] - u[j]);
+        let nc = self.class_models.len();
+        // Batched (tile-aware) path: gather the rows of each class into a
+        // contiguous sub-batch, evaluate that class model **once**, and
+        // scatter through the CFG blend. One n-row eval plus `nc` batched
+        // evals replaces the former n single-row evals, so the class
+        // models' sample-blocked pipelines see full tiles. Row values are
+        // identical to the per-row loop because every submodel computes
+        // rows independently; submodels that key on batch composition get
+        // the per-row fallback.
+        let batchable = self.uncond.rows_independent()
+            && self.class_models.iter().all(|m| m.rows_independent());
+        if !batchable {
+            let mut eu = vec![0.0; n * d];
+            self.uncond.eval_batch(x, n, t, &mut eu);
+            let mut row = vec![0.0; d];
+            for k in 0..n {
+                let model = &self.class_models[k % nc];
+                model.eval_batch(&x[k * d..(k + 1) * d], 1, t, &mut row);
+                let o = &mut out[k * d..(k + 1) * d];
+                let u = &eu[k * d..(k + 1) * d];
+                for j in 0..d {
+                    o[j] = u[j] + self.scale * (row[j] - u[j]);
+                }
+            }
+            return;
+        }
+        let (mut eu, mut xg, mut eg) = CFG_SCRATCH.with(|c| {
+            let mut s = c.borrow_mut();
+            (
+                std::mem::take(&mut s.eu),
+                std::mem::take(&mut s.x_gather),
+                std::mem::take(&mut s.e_gather),
+            )
+        });
+        if eu.len() < n * d {
+            eu.resize(n * d, 0.0);
+        }
+        self.uncond.eval_batch(x, n, t, &mut eu[..n * d]);
+        for c in 0..nc {
+            // Rows c, c + nc, c + 2·nc, … — the class-c slice of the batch.
+            let cnt = if n > c { (n - c).div_ceil(nc) } else { 0 };
+            if cnt == 0 {
+                continue;
+            }
+            if xg.len() < cnt * d {
+                xg.resize(cnt * d, 0.0);
+                eg.resize(cnt * d, 0.0);
+            }
+            for (i, k) in (c..n).step_by(nc).enumerate() {
+                xg[i * d..(i + 1) * d].copy_from_slice(&x[k * d..(k + 1) * d]);
+            }
+            self.class_models[c].eval_batch(&xg[..cnt * d], cnt, t, &mut eg[..cnt * d]);
+            for (i, k) in (c..n).step_by(nc).enumerate() {
+                let o = &mut out[k * d..(k + 1) * d];
+                let u = &eu[k * d..(k + 1) * d];
+                let e = &eg[i * d..(i + 1) * d];
+                for j in 0..d {
+                    o[j] = u[j] + self.scale * (e[j] - u[j]);
+                }
             }
         }
+        CFG_SCRATCH.with(|cell| {
+            let mut s = cell.borrow_mut();
+            s.eu = eu;
+            s.x_gather = xg;
+            s.e_gather = eg;
+        });
     }
 
     fn name(&self) -> &str {
@@ -164,6 +259,39 @@ mod tests {
         let b = uncond.eval(&x, 1, 5.0);
         for j in 0..64 {
             assert!((a[j] - b[j]).abs() < 1e-12);
+        }
+    }
+
+    /// The class-grouped gather/scatter path must reproduce the per-row
+    /// loop's bits exactly, for batch sizes straddling multiples of
+    /// n_classes (empty classes, partial last class, single row).
+    #[test]
+    fn rowcfg_batched_matches_per_row() {
+        let spec = cond_gmm64();
+        let cfg = RowCfgEps::from_spec(&spec, 7.5);
+        let nc = cfg.n_classes();
+        let uncond = AnalyticEps::from_spec(&spec);
+        let class_models: Vec<Box<dyn EpsModel>> = (0..nc)
+            .map(|c| AnalyticEps::conditional(&spec, c) as Box<dyn EpsModel>)
+            .collect();
+        let d = 64;
+        let mut rng = Pcg64::seed(9);
+        let t = 2.3;
+        for n in [1usize, nc - 1, nc, nc + 1, 3 * nc + 2] {
+            let x = rng.normal_vec(n * d);
+            let got = cfg.eval(&x, n, t);
+            // Reference: the former per-row loop, verbatim.
+            let mut eu = vec![0.0; n * d];
+            uncond.eval_batch(&x, n, t, &mut eu);
+            let mut row = vec![0.0; d];
+            let mut want = vec![0.0; n * d];
+            for k in 0..n {
+                class_models[k % nc].eval_batch(&x[k * d..(k + 1) * d], 1, t, &mut row);
+                for j in 0..d {
+                    want[k * d + j] = eu[k * d + j] + 7.5 * (row[j] - eu[k * d + j]);
+                }
+            }
+            assert_eq!(got, want, "batched RowCfgEps diverged at n={n}");
         }
     }
 

@@ -67,6 +67,10 @@ impl EpsModel for CountingEps<'_> {
         self.inner.rows_independent()
     }
 
+    fn preferred_tile(&self) -> usize {
+        self.inner.preferred_tile()
+    }
+
     fn eval_batch(&self, x: &[f64], n: usize, t: f64, out: &mut [f64]) {
         self.count.fetch_add(1, Ordering::Relaxed);
         self.rows.fetch_add(n, Ordering::Relaxed);

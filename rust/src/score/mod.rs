@@ -45,6 +45,18 @@ pub trait EpsModel: Sync {
         true
     }
 
+    /// Preferred row-tile granularity of `eval_batch`: callers that split
+    /// a batch into chunks (the engine's row-sharded stepping, sub-batch
+    /// staging) get the best throughput when chunks are at least — ideally
+    /// multiples of — this many rows, because the model's blocked
+    /// evaluation pipeline amortizes streamed operands across tiles of
+    /// this size ([`analytic::EVAL_TILE`]). Purely a performance hint:
+    /// for a rows-independent model, results are bit-identical for every
+    /// chunking. Wrappers should delegate to their inner model(s).
+    fn preferred_tile(&self) -> usize {
+        1
+    }
+
     /// Convenience: allocate-and-return variant.
     fn eval(&self, x: &[f64], n: usize, t: f64) -> Vec<f64> {
         let mut out = vec![0.0; x.len()];

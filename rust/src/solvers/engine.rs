@@ -387,7 +387,19 @@ fn step_rows(
     // the dispatch uses) so each chunk's scratch slice can be located by
     // arithmetic: chunk c covers rows [c*chunk, (c+1)*chunk) and its
     // scratch starts at per_row * c * chunk + flat * c.
-    let (chunk, n_chunks) = pool.partition(n, max_parts, 1);
+    //
+    // Multi-eval solvers route their internal model evaluations through
+    // per-chunk `eval_batch` calls, so their chunks are floored at the
+    // model's preferred eval tile ([`EpsModel::preferred_tile`]) — a
+    // sub-tile chunk would waste the blocked eval pipeline's panel
+    // amortization. Purely a throughput knob: results are bit-identical
+    // for every chunk layout (engine parity tests).
+    let min_rows = if solver.evals_per_step() > 1 {
+        model.preferred_tile().max(1)
+    } else {
+        1
+    };
+    let (chunk, n_chunks) = pool.partition(n, max_parts, min_rows);
     if max_parts <= 1
         || !solver.row_independent()
         || (solver.evals_per_step() != 1 && !model.rows_independent())

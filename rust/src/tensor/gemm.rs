@@ -1,0 +1,485 @@
+//! Register-tiled, cache-blocked matmul micro-kernels.
+//!
+//! Every dense product on the hot paths — the analytic model's
+//! sample-blocked evaluation ([`crate::score::analytic`]), the Gram
+//! matrices of the thin SVD ([`crate::linalg::svd_right_vectors`]), PSD
+//! square roots, batch covariances and the gFID metric — routes through
+//! this family instead of per-row `dot` loops. The payoff is classical:
+//! an MR×NR register tile amortizes every loaded element of one operand
+//! across NR (resp. MR) multiply-adds, so arithmetic intensity rises from
+//! ~1 FLOP/byte (stream one row, dot it, stream the next) to
+//! ~MR·NR/(MR+NR) FLOPs per loaded element, and the k-panel loop keeps
+//! the working set inside L1/L2 instead of re-streaming panels from
+//! memory once per output row.
+//!
+//! # Determinism contract
+//!
+//! These kernels are **bit-compatible replacements**, not merely
+//! numerically close ones. Tiling only reorders *which entry* is worked
+//! on when; the reduction order *within each output entry* is pinned to
+//! the exact sequence of the scalar code each kernel replaces:
+//!
+//! * [`gemm_nn_acc`] / [`gemm_tn_acc`] accumulate each entry strictly in
+//!   ascending-k order — the order of the seed `matmul_acc` (and of every
+//!   `c[i][j] += a· b` textbook loop in this crate). k-panel blocking is
+//!   sound here because partial sums are carried in `c` between panels,
+//!   which extends the same ascending chain.
+//! * [`gemm_nt_dot_acc`] computes each entry with the 4-lane unrolled
+//!   order of [`crate::tensor::dot`] (four independent accumulators over
+//!   `k & !3`, combined as `(s0+s1)+(s2+s3)`, sequential tail). No
+//!   k-blocking: the lane combine happens once per entry, so the lanes
+//!   must span the whole reduction — our k never exceeds the data
+//!   dimension (≤ a few hundred), so the a-panel stays cache-resident
+//!   anyway.
+//! * [`gemm_nt_seq_into`] accumulates each entry with a single
+//!   ascending-k chain (the order of the dense eigenbasis pass in
+//!   `ModeEval::Full`).
+//!
+//! The engine-parity and golden-trajectory suites (and
+//! `tests/eval_blocked_parity.rs`) pin this bitwise; the in-module tests
+//! below pin each kernel against a scalar reference with `assert_eq!`.
+//!
+//! # Tile sizes
+//!
+//! `MR=4 × NR=8` for the k-sequential kernels: 32 f64 accumulators fill
+//! half the 16 × 256-bit vector registers of the baseline x86-64 target
+//! (4 ymm), leaving room for the broadcast `a` value and a streamed `b`
+//! row; the inner loop is a textbook broadcast-FMA that autovectorizes
+//! over the NR columns. The dot-ordered kernel uses `MR=2 × NR=4` with a
+//! 4-wide lane accumulator per entry (8 ymm total) — lanes map onto one
+//! vector register each, and the per-entry horizontal combine happens
+//! once at the end. `KC=256` k-panels keep an MR×KC `a` slab (8 KiB) and
+//! a KC×NR `b` slab (16 KiB) simultaneously L1/L2-resident. Edge tiles
+//! fall back to the same loops with clamped bounds — order per entry is
+//! unchanged, only fewer entries are in flight.
+//!
+//! All kernels write into caller-owned output (and read caller-owned
+//! inputs) with **zero heap allocations** — `tests/alloc_audit.rs`
+//! asserts this under a counting global allocator.
+
+/// Register-tile rows of the ascending-k kernels.
+pub const MR: usize = 4;
+/// Register-tile columns of the ascending-k kernels.
+pub const NR: usize = 8;
+/// k-panel depth (cache block) of the ascending-k kernels.
+pub const KC: usize = 256;
+
+/// Register-tile rows of the dot-ordered kernel.
+pub const MR_DOT: usize = 2;
+/// Register-tile columns of the dot-ordered kernel.
+pub const NR_DOT: usize = 4;
+
+/// `c[m,n] += a[m,k] * b[k,n]`, all row-major. Bit-identical to the seed
+/// `matmul_acc` loop nest: each output entry accumulates in ascending-k
+/// order.
+pub fn gemm_nn_acc(a: &[f64], m: usize, k: usize, b: &[f64], n: usize, c: &mut [f64]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    let mut p0 = 0;
+    while p0 < k {
+        let pc = KC.min(k - p0);
+        let mut i0 = 0;
+        while i0 < m {
+            let mr = MR.min(m - i0);
+            let mut j0 = 0;
+            while j0 < n {
+                let nr = NR.min(n - j0);
+                nn_micro(a, k, b, n, c, i0, j0, p0, pc, mr, nr);
+                j0 += NR;
+            }
+            i0 += MR;
+        }
+        p0 += KC;
+    }
+}
+
+/// `c = a * b` (zeroes `c`, then [`gemm_nn_acc`]).
+pub fn gemm_nn_into(a: &[f64], m: usize, k: usize, b: &[f64], n: usize, c: &mut [f64]) {
+    c.fill(0.0);
+    gemm_nn_acc(a, m, k, b, n, c);
+}
+
+/// MR×NR block of `c += a·b`, k-panel `[p0, p0+pc)`. Partial sums are
+/// carried in `c` across panels, so per-entry addition order stays a
+/// single ascending-k chain.
+#[inline(always)]
+fn nn_micro(
+    a: &[f64],
+    k: usize,
+    b: &[f64],
+    n: usize,
+    c: &mut [f64],
+    i0: usize,
+    j0: usize,
+    p0: usize,
+    pc: usize,
+    mr: usize,
+    nr: usize,
+) {
+    if mr == MR && nr == NR {
+        // Full tile: constant bounds so the column loop vectorizes.
+        let mut acc = [[0.0f64; NR]; MR];
+        for (ir, row) in acc.iter_mut().enumerate() {
+            let crow = &c[(i0 + ir) * n + j0..(i0 + ir) * n + j0 + NR];
+            row.copy_from_slice(crow);
+        }
+        for p in p0..p0 + pc {
+            let brow = &b[p * n + j0..p * n + j0 + NR];
+            for (ir, row) in acc.iter_mut().enumerate() {
+                let av = a[(i0 + ir) * k + p];
+                for (jr, cv) in row.iter_mut().enumerate() {
+                    *cv += av * brow[jr];
+                }
+            }
+        }
+        for (ir, row) in acc.iter().enumerate() {
+            let crow = &mut c[(i0 + ir) * n + j0..(i0 + ir) * n + j0 + NR];
+            crow.copy_from_slice(row);
+        }
+    } else {
+        // Edge tile: same loops, clamped bounds.
+        let mut acc = [[0.0f64; NR]; MR];
+        for ir in 0..mr {
+            for jr in 0..nr {
+                acc[ir][jr] = c[(i0 + ir) * n + j0 + jr];
+            }
+        }
+        for p in p0..p0 + pc {
+            let brow = &b[p * n + j0..p * n + j0 + nr];
+            for (ir, row) in acc.iter_mut().enumerate().take(mr) {
+                let av = a[(i0 + ir) * k + p];
+                for jr in 0..nr {
+                    row[jr] += av * brow[jr];
+                }
+            }
+        }
+        for ir in 0..mr {
+            for jr in 0..nr {
+                c[(i0 + ir) * n + j0 + jr] = acc[ir][jr];
+            }
+        }
+    }
+}
+
+/// `c[m,n] += a[m,k] * b[n,k]ᵀ` — i.e. `c[i][j] += dot(a_i, b_j)` with
+/// each entry reduced in **exactly** the 4-lane order of
+/// [`crate::tensor::dot`]. This is the Gram-matrix / projection /
+/// eigenbasis-forward kernel: the register tile loads each `a` panel once
+/// for [`NR_DOT`] columns and each `b` panel once for [`MR_DOT`] rows.
+pub fn gemm_nt_dot_acc(a: &[f64], m: usize, b: &[f64], n: usize, k: usize, c: &mut [f64]) {
+    nt_dot_kernel::<true>(a, m, b, n, k, c);
+}
+
+/// `c[m,n] = a[m,k] * b[n,k]ᵀ` in [`crate::tensor::dot`] order — assign
+/// semantics, bit-identical to `c[i][j] = dot(a_i, b_j)` per entry
+/// (including a `-0.0` dot result, which `0.0 + s` would lose).
+pub fn gemm_nt_dot_into(a: &[f64], m: usize, b: &[f64], n: usize, k: usize, c: &mut [f64]) {
+    nt_dot_kernel::<false>(a, m, b, n, k, c);
+}
+
+/// Shared dot-order micro-kernel; `ACC` selects accumulate (`+=`) vs
+/// assign (`=`) on the final per-entry store — everything else, including
+/// the debug shape checks, lives here once.
+fn nt_dot_kernel<const ACC: bool>(
+    a: &[f64],
+    m: usize,
+    b: &[f64],
+    n: usize,
+    k: usize,
+    c: &mut [f64],
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    debug_assert_eq!(c.len(), m * n);
+    let k4 = k & !3;
+    let mut i0 = 0;
+    while i0 < m {
+        let mr = MR_DOT.min(m - i0);
+        let mut j0 = 0;
+        while j0 < n {
+            let nr = NR_DOT.min(n - j0);
+            // One 4-wide lane accumulator per entry: lane l holds the
+            // partial sum over indices ≡ l (mod 4), exactly dot's s0..s3.
+            let mut lanes = [[[0.0f64; 4]; NR_DOT]; MR_DOT];
+            let mut p = 0;
+            while p < k4 {
+                for (ir, lrow) in lanes.iter_mut().enumerate().take(mr) {
+                    let ap = &a[(i0 + ir) * k + p..(i0 + ir) * k + p + 4];
+                    for (jr, lv) in lrow.iter_mut().enumerate().take(nr) {
+                        let bp = &b[(j0 + jr) * k + p..(j0 + jr) * k + p + 4];
+                        for l in 0..4 {
+                            lv[l] += ap[l] * bp[l];
+                        }
+                    }
+                }
+                p += 4;
+            }
+            for ir in 0..mr {
+                let arow = &a[(i0 + ir) * k..(i0 + ir) * k + k];
+                for jr in 0..nr {
+                    let brow = &b[(j0 + jr) * k..(j0 + jr) * k + k];
+                    let lv = &lanes[ir][jr];
+                    let mut s = (lv[0] + lv[1]) + (lv[2] + lv[3]);
+                    let mut p = k4;
+                    while p < k {
+                        s += arow[p] * brow[p];
+                        p += 1;
+                    }
+                    if ACC {
+                        c[(i0 + ir) * n + j0 + jr] += s;
+                    } else {
+                        c[(i0 + ir) * n + j0 + jr] = s;
+                    }
+                }
+            }
+            j0 += NR_DOT;
+        }
+        i0 += MR_DOT;
+    }
+}
+
+/// `c[m,n] = a[m,k] * b[n,k]ᵀ` with each entry reduced by a **single
+/// ascending-k chain** (`s += a[i][p] * b[j][p]`, p = 0..k) — the order
+/// of the dense `ModeEval::Full` eigenbasis pass. MR×NR = 4×4 register
+/// tile: 16 independent scalar chains pipeline the FP-add latency even
+/// though each chain is serial.
+pub fn gemm_nt_seq_into(a: &[f64], m: usize, b: &[f64], n: usize, k: usize, c: &mut [f64]) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    debug_assert_eq!(c.len(), m * n);
+    const MS: usize = 4;
+    const NS: usize = 4;
+    let mut i0 = 0;
+    while i0 < m {
+        let mr = MS.min(m - i0);
+        let mut j0 = 0;
+        while j0 < n {
+            let nr = NS.min(n - j0);
+            let mut acc = [[0.0f64; NS]; MS];
+            for p in 0..k {
+                for (ir, row) in acc.iter_mut().enumerate().take(mr) {
+                    let av = a[(i0 + ir) * k + p];
+                    for (jr, cv) in row.iter_mut().enumerate().take(nr) {
+                        *cv += av * b[(j0 + jr) * k + p];
+                    }
+                }
+            }
+            for ir in 0..mr {
+                for jr in 0..nr {
+                    c[(i0 + ir) * n + j0 + jr] = acc[ir][jr];
+                }
+            }
+            j0 += NS;
+        }
+        i0 += MS;
+    }
+}
+
+/// `c[m,n] += a[k,m]ᵀ * b[k,n]` — the rank-k update kernel (batch
+/// covariance `Cᵀ C`, eigen reconstruction `Vᵀ diag(s) V`). Each entry
+/// accumulates in ascending-k order; the register tile turns the
+/// per-sample rank-1 update loop into MR×NR outer-product FMAs per loaded
+/// panel.
+pub fn gemm_tn_acc(a: &[f64], k: usize, m: usize, b: &[f64], n: usize, c: &mut [f64]) {
+    debug_assert_eq!(a.len(), k * m);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    let mut p0 = 0;
+    while p0 < k {
+        let pc = KC.min(k - p0);
+        let mut i0 = 0;
+        while i0 < m {
+            let mr = MR.min(m - i0);
+            let mut j0 = 0;
+            while j0 < n {
+                let nr = NR.min(n - j0);
+                let mut acc = [[0.0f64; NR]; MR];
+                for ir in 0..mr {
+                    for jr in 0..nr {
+                        acc[ir][jr] = c[(i0 + ir) * n + j0 + jr];
+                    }
+                }
+                for p in p0..p0 + pc {
+                    let brow = &b[p * n + j0..p * n + j0 + nr];
+                    for (ir, row) in acc.iter_mut().enumerate().take(mr) {
+                        let av = a[p * m + i0 + ir];
+                        for jr in 0..nr {
+                            row[jr] += av * brow[jr];
+                        }
+                    }
+                }
+                for ir in 0..mr {
+                    for jr in 0..nr {
+                        c[(i0 + ir) * n + j0 + jr] = acc[ir][jr];
+                    }
+                }
+                j0 += NR;
+            }
+            i0 += MR;
+        }
+        p0 += KC;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::dot;
+    use crate::util::rng::Pcg64;
+
+    /// The seed `matmul_acc` loop nest, verbatim: the bit-exactness
+    /// reference for the ascending-k kernels.
+    fn ref_nn_acc(a: &[f64], m: usize, k: usize, b: &[f64], n: usize, c: &mut [f64]) {
+        for i in 0..m {
+            for p in 0..k {
+                let av = a[i * k + p];
+                for j in 0..n {
+                    c[i * n + j] += av * b[p * n + j];
+                }
+            }
+        }
+    }
+
+    fn ref_tn_acc(a: &[f64], k: usize, m: usize, b: &[f64], n: usize, c: &mut [f64]) {
+        for p in 0..k {
+            for i in 0..m {
+                let av = a[p * m + i];
+                for j in 0..n {
+                    c[i * n + j] += av * b[p * n + j];
+                }
+            }
+        }
+    }
+
+    fn ref_nt_seq(a: &[f64], m: usize, b: &[f64], n: usize, k: usize, c: &mut [f64]) {
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = 0.0;
+                for p in 0..k {
+                    s += a[i * k + p] * b[j * k + p];
+                }
+                c[i * n + j] = s;
+            }
+        }
+    }
+
+    /// Shapes straddling every tile boundary: 1, MR-1, MR, MR+1, several
+    /// tiles plus a remainder, and k values around the 4-lane width and
+    /// the KC panel.
+    const SHAPES: &[(usize, usize, usize)] = &[
+        (1, 1, 1),
+        (1, 9, 3),
+        (3, 7, 5),
+        (4, 8, 4),
+        (5, 9, 17),
+        (8, 16, 64),
+        (13, 11, 257),
+        (16, 3, 300),
+    ];
+
+    #[test]
+    fn nn_bitwise_matches_seed_order() {
+        let mut rng = Pcg64::seed(1);
+        for &(m, k, n) in SHAPES {
+            let a: Vec<f64> = (0..m * k).map(|_| rng.normal()).collect();
+            let b: Vec<f64> = (0..k * n).map(|_| rng.normal()).collect();
+            let init: Vec<f64> = (0..m * n).map(|_| rng.normal()).collect();
+            let mut want = init.clone();
+            ref_nn_acc(&a, m, k, &b, n, &mut want);
+            let mut got = init.clone();
+            gemm_nn_acc(&a, m, k, &b, n, &mut got);
+            assert_eq!(want, got, "nn shape ({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn nt_dot_bitwise_matches_dot_per_entry() {
+        let mut rng = Pcg64::seed(2);
+        for &(m, k, n) in SHAPES {
+            let a: Vec<f64> = (0..m * k).map(|_| rng.normal()).collect();
+            let b: Vec<f64> = (0..n * k).map(|_| rng.normal()).collect();
+            let mut want = vec![0.0; m * n];
+            for i in 0..m {
+                for j in 0..n {
+                    want[i * n + j] = dot(&a[i * k..(i + 1) * k], &b[j * k..(j + 1) * k]);
+                }
+            }
+            let mut got = vec![0.0; m * n];
+            gemm_nt_dot_into(&a, m, &b, n, k, &mut got);
+            assert_eq!(want, got, "nt_dot shape ({m},{k},{n})");
+            // The accumulate variant over a random initial c.
+            let init: Vec<f64> = (0..m * n).map(|_| rng.normal()).collect();
+            let mut want_acc = init.clone();
+            for i in 0..m {
+                for j in 0..n {
+                    want_acc[i * n + j] +=
+                        dot(&a[i * k..(i + 1) * k], &b[j * k..(j + 1) * k]);
+                }
+            }
+            let mut got_acc = init.clone();
+            gemm_nt_dot_acc(&a, m, &b, n, k, &mut got_acc);
+            assert_eq!(want_acc, got_acc, "nt_dot_acc shape ({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn nt_seq_bitwise_matches_sequential_reduction() {
+        let mut rng = Pcg64::seed(3);
+        for &(m, k, n) in SHAPES {
+            let a: Vec<f64> = (0..m * k).map(|_| rng.normal()).collect();
+            let b: Vec<f64> = (0..n * k).map(|_| rng.normal()).collect();
+            let mut want = vec![0.0; m * n];
+            ref_nt_seq(&a, m, &b, n, k, &mut want);
+            let mut got = vec![0.0; m * n];
+            gemm_nt_seq_into(&a, m, &b, n, k, &mut got);
+            assert_eq!(want, got, "nt_seq shape ({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn tn_bitwise_matches_ascending_k() {
+        let mut rng = Pcg64::seed(4);
+        for &(m, k, n) in SHAPES {
+            let a: Vec<f64> = (0..k * m).map(|_| rng.normal()).collect();
+            let b: Vec<f64> = (0..k * n).map(|_| rng.normal()).collect();
+            let init: Vec<f64> = (0..m * n).map(|_| rng.normal()).collect();
+            let mut want = init.clone();
+            ref_tn_acc(&a, k, m, &b, n, &mut want);
+            let mut got = init.clone();
+            gemm_tn_acc(&a, k, m, &b, n, &mut got);
+            assert_eq!(want, got, "tn shape ({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn empty_and_degenerate_shapes() {
+        // k = 0: products are empty sums; into-variants must still zero /
+        // assign, acc-variants must leave c untouched.
+        let mut c = vec![1.0, 2.0];
+        gemm_nn_acc(&[], 1, 0, &[], 2, &mut c);
+        assert_eq!(c, vec![1.0, 2.0]);
+        gemm_nt_dot_into(&[], 1, &[], 2, 0, &mut c);
+        assert_eq!(c, vec![0.0, 0.0]);
+        let mut none: Vec<f64> = Vec::new();
+        gemm_nn_acc(&[], 0, 3, &[0.0; 6], 2, &mut none);
+        gemm_tn_acc(&[], 0, 0, &[], 4, &mut none);
+        assert!(none.is_empty());
+    }
+
+    #[test]
+    fn matvec_special_case_matches_dot() {
+        // n = 1 is the projection path (Basis::project_into).
+        let mut rng = Pcg64::seed(5);
+        for k in [1usize, 3, 4, 31, 64, 130] {
+            let m = 5;
+            let a: Vec<f64> = (0..m * k).map(|_| rng.normal()).collect();
+            let v: Vec<f64> = (0..k).map(|_| rng.normal()).collect();
+            let mut got = vec![0.0; m];
+            gemm_nt_dot_into(&a, m, &v, 1, k, &mut got);
+            for i in 0..m {
+                assert_eq!(got[i], dot(&a[i * k..(i + 1) * k], &v), "k={k} row {i}");
+            }
+        }
+    }
+}

@@ -4,6 +4,13 @@
 //! explicit `(rows, cols)` shapes — no generic tensor machinery, just the
 //! handful of dense ops the solvers, PCA and metrics need, written so the
 //! hot loops vectorize.
+//!
+//! Dense matrix products route through the register-tiled micro-kernel
+//! family in [`gemm`] (see that module's docs for the tile-size rationale
+//! and the bitwise determinism contract); the `matmul_*` entry points here
+//! are kept as the crate-wide API.
+
+pub mod gemm;
 
 /// A dense row-major matrix / batch of row vectors.
 #[derive(Clone, Debug, PartialEq)]
@@ -82,25 +89,13 @@ impl Mat {
 }
 
 /// `c[m,n] += a[m,k] * b[k,n]` over flat row-major buffers (c must be zeroed
-/// by the caller when a fresh product is wanted).
+/// by the caller when a fresh product is wanted). Delegates to the
+/// register-tiled [`gemm::gemm_nn_acc`], which accumulates every output
+/// entry in the same ascending-k order as the seed loop nest — outputs are
+/// bit-identical, just with MR×NR-fold register reuse per loaded panel.
 #[inline]
 pub fn matmul_acc(a: &[f64], m: usize, k: usize, b: &[f64], n: usize, c: &mut [f64]) {
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(b.len(), k * n);
-    debug_assert_eq!(c.len(), m * n);
-    for i in 0..m {
-        let arow = &a[i * k..(i + 1) * k];
-        let crow = &mut c[i * n..(i + 1) * n];
-        for (p, &av) in arow.iter().enumerate() {
-            // No zero-skip here: the data-dependent branch defeated
-            // autovectorization of the dense inner loop, and `+= 0.0 * bv`
-            // is a no-op for the finite inputs this crate feeds it.
-            let brow = &b[p * n..(p + 1) * n];
-            for (cv, &bv) in crow.iter_mut().zip(brow.iter()) {
-                *cv += av * bv;
-            }
-        }
-    }
+    gemm::gemm_nn_acc(a, m, k, b, n, c);
 }
 
 /// `c = a * b` over flat buffers.
@@ -198,26 +193,34 @@ pub fn col_means(x: &[f64], n: usize, d: usize) -> Vec<f64> {
     mu
 }
 
+/// Rows centered per block before the covariance rank-k update; bounds the
+/// staging buffer while keeping each update panel cache-resident.
+const COV_BLOCK: usize = 32;
+
 /// Sample covariance (biased, 1/n) of an (n, d) batch; returns d*d row-major.
+///
+/// Blocked formulation: center [`COV_BLOCK`] rows at a time, then apply one
+/// `cov += Cᵀ C` rank-`nb` update through [`gemm::gemm_tn_acc`]. Each entry
+/// still accumulates in ascending-sample order, but the per-sample rank-1
+/// loop (whose data-dependent `ca == 0.0` skip defeated autovectorization,
+/// the same defect PR 1 removed from `matmul_acc`) becomes a register-tiled
+/// outer-product kernel that amortizes every loaded panel across the tile.
 pub fn covariance(x: &[f64], n: usize, d: usize) -> Vec<f64> {
     let mu = col_means(x, n, d);
     let mut cov = vec![0.0; d * d];
-    let mut cent = vec![0.0; d];
-    for i in 0..n {
-        let row = &x[i * d..(i + 1) * d];
-        for j in 0..d {
-            cent[j] = row[j] - mu[j];
-        }
-        for a in 0..d {
-            let ca = cent[a];
-            if ca == 0.0 {
-                continue;
-            }
-            let out = &mut cov[a * d..(a + 1) * d];
-            for b in 0..d {
-                out[b] += ca * cent[b];
+    let mut cent = vec![0.0; COV_BLOCK * d];
+    let mut i = 0;
+    while i < n {
+        let nb = COV_BLOCK.min(n - i);
+        for r in 0..nb {
+            let row = &x[(i + r) * d..(i + r + 1) * d];
+            let crow = &mut cent[r * d..(r + 1) * d];
+            for j in 0..d {
+                crow[j] = row[j] - mu[j];
             }
         }
+        gemm::gemm_tn_acc(&cent[..nb * d], nb, d, &cent[..nb * d], d, &mut cov);
+        i += nb;
     }
     scale(1.0 / n.max(1) as f64, &mut cov);
     cov

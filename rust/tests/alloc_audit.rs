@@ -11,6 +11,11 @@
 //! (Heun, DPM-Solver-2) and history-hungry (DPM++, UniPC, DEIS) solvers
 //! that previously allocated inside `step`.
 //!
+//! Also audited here (same single test, same counter): the sample-blocked
+//! GEMM eval pipeline of `AnalyticEps::eval_batch` on its own, and the
+//! register-tiled matmul kernels (`pas::tensor::gemm`), which work
+//! entirely in caller-owned buffers and must never allocate.
+//!
 //! This file contains exactly one `#[test]` so the process-wide
 //! allocation counter is never polluted by a concurrently running test.
 
@@ -20,8 +25,10 @@ mod counting_alloc;
 use counting_alloc::{CountingAlloc, ALLOC_COUNT};
 use pas::schedule::default_schedule;
 use pas::score::analytic::AnalyticEps;
+use pas::score::EpsModel;
 use pas::solvers::engine::{EngineConfig, Record, SamplerEngine};
 use pas::solvers::registry;
+use pas::tensor::gemm::{gemm_nn_acc, gemm_nt_dot_into, gemm_nt_seq_into, gemm_tn_acc};
 use pas::traj::sample_prior;
 use pas::util::rng::Pcg64;
 use std::sync::atomic::Ordering;
@@ -101,6 +108,78 @@ fn zero_steady_state_allocs_every_solver_both_record_modes() {
             }
         }
     }
+    // The sample-blocked eval pipeline on its own (the tentpole path):
+    // after warm-up sizes every pool worker's thread-local tile scratch,
+    // repeated batch evaluations must allocate nothing.
+    {
+        let ds = pas::data::registry::get("latent256").unwrap();
+        let model = AnalyticEps::from_dataset(&ds);
+        let n = 256;
+        let dim = ds.dim();
+        let x = sample_prior(&mut rng, n, dim, 10.0);
+        let mut out = vec![0.0; n * dim];
+        for _ in 0..3 {
+            model.eval_batch(&x, n, 2.0, &mut out);
+        }
+        let mut allocs = {
+            let before = ALLOC_COUNT.load(Ordering::SeqCst);
+            for _ in 0..5 {
+                model.eval_batch(&x, n, 2.0, &mut out);
+            }
+            ALLOC_COUNT.load(Ordering::SeqCst) - before
+        };
+        if allocs > 0 {
+            // Same one-retry shield as above (a pool worker that raced
+            // out of every warm-up dispatch initializes its scratch once).
+            let before = ALLOC_COUNT.load(Ordering::SeqCst);
+            for _ in 0..5 {
+                model.eval_batch(&x, n, 2.0, &mut out);
+            }
+            allocs = ALLOC_COUNT.load(Ordering::SeqCst) - before;
+        }
+        if allocs > 0 {
+            failures.push(format!(
+                "blocked eval_batch (latent256 b256): {allocs} allocs over 5 runs"
+            ));
+        }
+
+        // `log_density` rides the same thread-local scratch (its output
+        // row included): after one warm call sizes the buffer, repeated
+        // calls must not allocate either.
+        let mut acc = model.log_density(&x[..dim], 2.0);
+        let before = ALLOC_COUNT.load(Ordering::SeqCst);
+        for _ in 0..5 {
+            acc += model.log_density(&x[..dim], 2.0);
+        }
+        let ld_allocs = ALLOC_COUNT.load(Ordering::SeqCst) - before;
+        std::hint::black_box(acc);
+        if ld_allocs > 0 {
+            failures.push(format!("log_density: {ld_allocs} allocs over 5 calls"));
+        }
+    }
+
+    // The tiled matmul kernels work entirely in caller-owned buffers:
+    // zero allocations from the first call, no warm-up needed.
+    {
+        let (m, k, n2) = (13usize, 37usize, 11usize);
+        let a: Vec<f64> = (0..m * k).map(|i| i as f64 * 0.25).collect();
+        let bt: Vec<f64> = (0..n2 * k).map(|i| 1.0 - i as f64 * 0.125).collect();
+        let b: Vec<f64> = (0..k * n2).map(|i| 0.5 + i as f64 * 0.0625).collect();
+        let mut c = vec![0.0; m * n2];
+        let mut c2 = vec![0.0; n2 * n2];
+        let before = ALLOC_COUNT.load(Ordering::SeqCst);
+        gemm_nn_acc(&a, m, k, &b, n2, &mut c);
+        gemm_nt_dot_into(&a, m, &bt, n2, k, &mut c);
+        gemm_nt_seq_into(&a, m, &bt, n2, k, &mut c);
+        gemm_tn_acc(&b, k, n2, &b, n2, &mut c2);
+        let kernel_allocs = ALLOC_COUNT.load(Ordering::SeqCst) - before;
+        std::hint::black_box(&c);
+        std::hint::black_box(&c2);
+        if kernel_allocs > 0 {
+            failures.push(format!("tiled kernels allocated: {kernel_allocs}"));
+        }
+    }
+
     assert!(
         failures.is_empty(),
         "steady-state heap allocations detected:\n  {}",

