@@ -79,7 +79,7 @@ fn main() {
     // Ground truth endpoint for trajectory metrics (teacher on PJRT model).
     let teacher = pas::solvers::registry::get("heun").unwrap();
     let gt = ground_truth(teacher.as_ref(), &model, &x_t, n, &sched, 100);
-    let gt0 = gt.xs.last().unwrap();
+    let gt0 = gt.node(gt.n_nodes() - 1);
 
     // Reference = the model's own flow: teacher samples from independent
     // priors. (The paper compares against data because its pre-trained

@@ -1,9 +1,6 @@
 //! Bench: sampling-service throughput and batching efficiency under a
 //! concurrent open loop (L3 serving path).
 
-#[path = "harness.rs"]
-mod harness;
-
 use pas::server::{SamplingRequest, Service, ServiceConfig};
 use std::sync::atomic::Ordering;
 use std::time::{Duration, Instant};

@@ -1,0 +1,145 @@
+//! Bench: PAS training wall-clock — the paper's "sub-minute training"
+//! practicality claim, tracked per PR.
+//!
+//! Compares the workspace-pooled, sharded [`TrainSession`] against
+//! [`PasTrainer::train_tp_reference`] — the pre-session sequential
+//! monolith kept as the bitwise oracle (nested rollout rows, a fresh
+//! allocating `Basis` per sample per step, single-threaded SGD). Reports
+//! total train time for both paths plus the session's wall-clock **per
+//! time point**, and writes `BENCH_train.json` (uploaded as a CI artifact
+//! from both `PAS_THREADS` matrix legs; the multi-core leg is the
+//! acceptance cell — the session must hold ≥ 2× total).
+//!
+//! The two paths train bit-identical dictionaries (asserted here too, so
+//! the speedup is never quoted over diverging work).
+
+// Only `fmt` is used from the shared harness (runs here are one-shot
+// wall-clock measurements, not repeated micro-iterations).
+#[path = "harness.rs"]
+#[allow(dead_code)]
+mod harness;
+
+use pas::pas::train::{PasTrainer, TrainConfig, TrainSession};
+use pas::schedule::default_schedule;
+use pas::score::analytic::AnalyticEps;
+use pas::util::json::Json;
+use pas::util::timer::Timer;
+
+struct Case {
+    dataset: &'static str,
+    solver: &'static str,
+    n_steps: usize,
+    n_traj: usize,
+    epochs: usize,
+    minibatch: usize,
+}
+
+fn main() {
+    let threads = pas::util::pool::Pool::global().size();
+    println!("== PAS training wall-clock: TrainSession vs sequential reference (threads = {threads}) ==");
+    let cases = [
+        Case {
+            dataset: "gmm-hd64",
+            solver: "ddim",
+            n_steps: 8,
+            n_traj: 512,
+            epochs: 48,
+            minibatch: 128,
+        },
+        Case {
+            dataset: "latent256",
+            solver: "ddim",
+            n_steps: 6,
+            n_traj: 128,
+            epochs: 24,
+            minibatch: 64,
+        },
+    ];
+    let mut cells: Vec<Json> = Vec::new();
+    for case in &cases {
+        let ds = pas::data::registry::get(case.dataset).unwrap();
+        let model = AnalyticEps::from_dataset(&ds);
+        let solver = pas::solvers::registry::get(case.solver).unwrap();
+        let sched = default_schedule(case.n_steps);
+        let cfg = TrainConfig {
+            n_traj: case.n_traj,
+            epochs: case.epochs,
+            minibatch: case.minibatch,
+            teacher_nfe: 100,
+            ..TrainConfig::default()
+        };
+
+        // Session: one cold run to size the workspaces, then the measured
+        // steady-state run with per-time-point instrumentation.
+        let mut session = TrainSession::new(cfg.clone());
+        session
+            .train(solver.as_ref(), model.as_ref(), &sched, case.dataset, false, None)
+            .expect("warm-up training run");
+        let t_total = Timer::start();
+        session
+            .begin(solver.as_ref(), model.as_ref(), &sched, case.dataset, false, None)
+            .expect("begin");
+        let mut per_tp = Vec::with_capacity(case.n_steps);
+        for j in 0..case.n_steps {
+            let t = Timer::start();
+            session
+                .train_step(solver.as_ref(), model.as_ref(), &sched, j)
+                .expect("train_step");
+            per_tp.push(t.elapsed_s());
+        }
+        let session_result = session.finish();
+        let s_session = t_total.elapsed_s();
+
+        // Reference: the pre-refactor sequential path.
+        let t_ref = Timer::start();
+        let ref_result = PasTrainer::new(cfg)
+            .train_tp_reference(solver.as_ref(), model.as_ref(), &sched, case.dataset, false, None)
+            .expect("reference training run");
+        let s_ref = t_ref.elapsed_s();
+
+        assert_eq!(
+            session_result.dict.steps, ref_result.dict.steps,
+            "{}: session and reference must train identical dicts",
+            case.dataset
+        );
+
+        let speedup = s_ref / s_session;
+        println!(
+            "{:<28} session {:>9}  reference {:>9}  ({speedup:.2}x, {} corrected steps)",
+            format!("{} {}@{}", case.dataset, case.solver, case.n_steps),
+            harness::fmt(s_session),
+            harness::fmt(s_ref),
+            session_result.dict.steps.len(),
+        );
+        for (j, s) in per_tp.iter().enumerate() {
+            println!("    t{:<2} {:>9}/tp", case.n_steps - j, harness::fmt(*s));
+        }
+        if threads > 1 && speedup < 2.0 {
+            println!(
+                "    WARNING: speedup {speedup:.2}x below the 2x multi-core target \
+                 (machine-dependent; see BENCH_train.json artifact)"
+            );
+        }
+
+        let mut cell = Json::obj();
+        cell.set("dataset", Json::Str(case.dataset.into()))
+            .set("solver", Json::Str(case.solver.into()))
+            .set("n_steps", Json::Num(case.n_steps as f64))
+            .set("n_traj", Json::Num(case.n_traj as f64))
+            .set("epochs", Json::Num(case.epochs as f64))
+            .set("minibatch", Json::Num(case.minibatch as f64))
+            .set("seconds_session_total", Json::Num(s_session))
+            .set("seconds_reference_total", Json::Num(s_ref))
+            .set("speedup", Json::Num(speedup))
+            .set("seconds_per_time_point", Json::from_f64_slice(&per_tp));
+        cells.push(cell);
+    }
+    let mut top = Json::obj();
+    top.set("bench", Json::Str("train_time".into()))
+        .set("threads", Json::Num(threads as f64))
+        .set("results", Json::Arr(cells));
+    match std::fs::write("BENCH_train.json", top.to_string()) {
+        Ok(()) => println!("\nwrote BENCH_train.json"),
+        Err(e) => eprintln!("\ncould not write BENCH_train.json: {e}"),
+    }
+}

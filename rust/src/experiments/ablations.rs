@@ -318,7 +318,7 @@ pub fn table11(opts: &ExpOpts) -> Vec<Table> {
             n,
             &sched,
         );
-        let gt0 = gt.xs.last().unwrap();
+        let gt0 = gt.node(gt.n_nodes() - 1);
         rows[0].1.push(format!("{:.5}", mean_l2(&plain.x0, gt0, n, dim)));
         rows[1].1.push(format!("{:.5}", mean_l2(&corr.x0, gt0, n, dim)));
         rows[2].1.push(format!("{:.5}", mean_l1(&plain.x0, gt0, n, dim)));

@@ -39,7 +39,7 @@ pub mod prelude {
     pub use crate::data::Dataset;
     pub use crate::pas::coords::CoordinateDict;
     pub use crate::pas::correct::CorrectedSampler;
-    pub use crate::pas::train::{PasTrainer, TrainConfig};
+    pub use crate::pas::train::{PasTrainer, TrainConfig, TrainSession};
     pub use crate::schedule::Schedule;
     pub use crate::score::EpsModel;
     pub use crate::solvers::engine::{EngineConfig, Record, SamplerEngine};

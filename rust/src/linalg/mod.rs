@@ -11,9 +11,56 @@ use crate::tensor::{dot, norm2};
 /// `a` is n×n row-major symmetric (destroyed). Returns `(eigvals, eigvecs)`
 /// with eigenvalues **descending** and eigenvectors as rows of the returned
 /// matrix (`eigvecs[k*n..][..n]` is the k-th eigenvector).
+///
+/// Allocating convenience over [`eigh_into`]; hot-path callers (the PAS
+/// basis extraction) hold an [`EighScratch`] instead.
 pub fn eigh(a: &mut [f64], n: usize) -> (Vec<f64>, Vec<f64>) {
+    let mut vals = vec![0.0; n];
+    let mut vecs = vec![0.0; n * n];
+    let mut scratch = EighScratch::default();
+    eigh_into(a, n, &mut vals, &mut vecs, &mut scratch);
+    (vals, vecs)
+}
+
+/// Reusable workspace for [`eigh_into`] / [`svd_right_vectors_into`]:
+/// the unsorted rotation accumulator and the sort permutation. Buffers
+/// grow on demand and are never shrunk, so steady-state reuse performs
+/// zero heap allocations.
+#[derive(Default)]
+pub struct EighScratch {
+    rot: Vec<f64>,
+    order: Vec<usize>,
+}
+
+impl EighScratch {
+    fn ensure(&mut self, n: usize) {
+        if self.rot.len() < n * n {
+            self.rot.resize(n * n, 0.0);
+        }
+        if self.order.len() < n {
+            self.order.resize(n, 0);
+        }
+    }
+}
+
+/// [`eigh`] into caller-owned buffers: `vals` (≥ n) and `vecs` (≥ n·n)
+/// receive the descending eigenvalues / eigenvector rows; temporaries come
+/// from `scratch`. Bit-identical to [`eigh`] — same rotation sequence, and
+/// the descending sort is a stable insertion sort, which reproduces the
+/// stable `sort_by` of the allocating form exactly (equal eigenvalues keep
+/// their pre-sort order).
+pub fn eigh_into(
+    a: &mut [f64],
+    n: usize,
+    vals: &mut [f64],
+    vecs: &mut [f64],
+    scratch: &mut EighScratch,
+) {
     assert_eq!(a.len(), n * n);
-    let mut v = vec![0.0; n * n];
+    assert!(vals.len() >= n && vecs.len() >= n * n);
+    scratch.ensure(n);
+    let v = &mut scratch.rot[..n * n];
+    v.fill(0.0);
     for i in 0..n {
         v[i * n + i] = 1.0;
     }
@@ -68,17 +115,29 @@ pub fn eigh(a: &mut [f64], n: usize) -> (Vec<f64>, Vec<f64>) {
             }
         }
     }
-    let vals: Vec<f64> = (0..n).map(|i| a[i * n + i]).collect();
-    // Sort descending, carrying eigenvectors (rows of v).
-    let mut order: Vec<usize> = (0..n).collect();
-    order.sort_by(|&i, &j| vals[j].partial_cmp(&vals[i]).unwrap());
-    let mut sorted_vals = vec![0.0; n];
-    let mut sorted_vecs = vec![0.0; n * n];
-    for (new_i, &old_i) in order.iter().enumerate() {
-        sorted_vals[new_i] = vals[old_i];
-        sorted_vecs[new_i * n..(new_i + 1) * n].copy_from_slice(&v[old_i * n..(old_i + 1) * n]);
+    // Sort descending, carrying eigenvectors (rows of v). Stable insertion
+    // sort over the index permutation: for a total-order comparator a
+    // stable sort's output is unique, so this matches the previous
+    // `Vec::sort_by` bit for bit.
+    let order = &mut scratch.order[..n];
+    for (i, o) in order.iter_mut().enumerate() {
+        *o = i;
     }
-    (sorted_vals, sorted_vecs)
+    let diag = |i: usize| a[i * n + i];
+    for i in 1..n {
+        let oi = order[i];
+        let key = diag(oi);
+        let mut j = i;
+        while j > 0 && diag(order[j - 1]) < key {
+            order[j] = order[j - 1];
+            j -= 1;
+        }
+        order[j] = oi;
+    }
+    for (new_i, &old_i) in order.iter().enumerate() {
+        vals[new_i] = diag(old_i);
+        vecs[new_i * n..(new_i + 1) * n].copy_from_slice(&v[old_i * n..(old_i + 1) * n]);
+    }
 }
 
 fn frob(a: &[f64]) -> f64 {
@@ -90,28 +149,84 @@ fn frob(a: &[f64]) -> f64 {
 /// `v_k = Xᵀ w_k / s_k`. Returns `(singular_values_desc, right_vectors)`
 /// where right vectors are rows of the returned (k, d) buffer, and
 /// `k = min(r, top_k)` after dropping numerically-zero singular values.
+///
+/// Allocating convenience over [`svd_right_vectors_into`].
 pub fn svd_right_vectors(x: &[f64], r: usize, d: usize, top_k: usize) -> (Vec<f64>, Vec<f64>) {
+    let keep_max = r.min(top_k);
+    let mut svals = vec![0.0; keep_max];
+    let mut vt = vec![0.0; keep_max * d];
+    let mut scratch = SvdScratch::default();
+    let kept = svd_right_vectors_into(x, r, d, top_k, &mut scratch, &mut svals, &mut vt);
+    svals.truncate(kept);
+    vt.truncate(kept * d);
+    (svals, vt)
+}
+
+/// Reusable workspace for [`svd_right_vectors_into`]: the Gram matrix,
+/// its eigendecomposition outputs, and the [`EighScratch`] underneath.
+/// Grows on demand, never shrinks — steady-state reuse allocates nothing.
+#[derive(Default)]
+pub struct SvdScratch {
+    g: Vec<f64>,
+    w: Vec<f64>,
+    vals: Vec<f64>,
+    eigh: EighScratch,
+}
+
+impl SvdScratch {
+    fn ensure(&mut self, r: usize) {
+        if self.g.len() < r * r {
+            self.g.resize(r * r, 0.0);
+        }
+        if self.w.len() < r * r {
+            self.w.resize(r * r, 0.0);
+        }
+        if self.vals.len() < r {
+            self.vals.resize(r, 0.0);
+        }
+    }
+}
+
+/// [`svd_right_vectors`] into caller-owned buffers: `svals` (≥ min(r,
+/// top_k)) and `vt` (≥ min(r, top_k)·d) receive the kept singular values /
+/// right-vector rows; returns how many were kept. Bit-identical to the
+/// allocating form (same Gram kernel, same [`eigh_into`], same per-vector
+/// accumulation order).
+pub fn svd_right_vectors_into(
+    x: &[f64],
+    r: usize,
+    d: usize,
+    top_k: usize,
+    scratch: &mut SvdScratch,
+    svals: &mut [f64],
+    vt: &mut [f64],
+) -> usize {
     assert_eq!(x.len(), r * d);
+    let keep_max = r.min(top_k);
+    assert!(svals.len() >= keep_max && vt.len() >= keep_max * d);
+    scratch.ensure(r);
     // G = X Xᵀ, r×r: one register-tiled Gram product. Each entry is
     // reduced in `dot` order, so bits match the former per-pair loop
     // (dot is exactly symmetric, so computing both triangles directly
     // equals the old mirror-assignment).
-    let mut g = vec![0.0; r * r];
-    gemm_nt_dot_into(x, r, x, r, d, &mut g);
-    let (vals, w) = eigh(&mut g, r);
+    let g = &mut scratch.g[..r * r];
+    gemm_nt_dot_into(x, r, x, r, d, g);
+    let vals = &mut scratch.vals[..r];
+    let w = &mut scratch.w[..r * r];
+    eigh_into(g, r, vals, w, &mut scratch.eigh);
     let smax = vals.first().copied().unwrap_or(0.0).max(0.0).sqrt();
     let tol = smax * 1e-9;
-    let keep_max = r.min(top_k);
-    let mut svals = Vec::new();
-    // Right vectors accumulate directly into the output buffer — no
-    // per-vector staging allocation; unused tail rows are truncated off.
-    let mut vt = vec![0.0; keep_max * d];
+    // Right vectors accumulate directly into the output buffer; unused
+    // tail rows stay untouched (the caller sizes reads by the count).
+    vt[..keep_max * d].fill(0.0);
+    let mut kept = 0usize;
     for k in 0..keep_max {
         let s = vals[k].max(0.0).sqrt();
         if s <= tol || s == 0.0 {
             break;
         }
-        svals.push(s);
+        svals[kept] = s;
+        kept += 1;
         // v = Xᵀ w / s : accumulate rows of X weighted by w[k].
         let wk = &w[k * r..(k + 1) * r];
         let v = &mut vt[k * d..(k + 1) * d];
@@ -126,8 +241,7 @@ pub fn svd_right_vectors(x: &[f64], r: usize, d: usize, top_k: usize) -> (Vec<f6
             }
         }
     }
-    vt.truncate(svals.len() * d);
-    (svals, vt)
+    kept
 }
 
 /// Modified Gram–Schmidt over row vectors of dimension `d`.
@@ -138,35 +252,70 @@ pub fn svd_right_vectors(x: &[f64], r: usize, d: usize, top_k: usize) -> (Vec<f6
 /// `Schmidt(v1, v1', v2', v3')` where `v1'` is often collinear with `v1`.
 /// To always return `want` vectors, pass deterministic fallback directions;
 /// here the caller (pas::pca) completes the basis with coordinate axes.
+///
+/// Allocating convenience over [`gram_schmidt_into`].
 pub fn gram_schmidt(cands: &[Vec<f64>], want: usize, tol: f64) -> Vec<Vec<f64>> {
-    let mut basis: Vec<Vec<f64>> = Vec::with_capacity(want);
-    for cand in cands {
-        if basis.len() >= want {
+    let d = cands.first().map_or(0, |c| c.len());
+    let mut flat = Vec::with_capacity(cands.len() * d);
+    for c in cands {
+        assert_eq!(c.len(), d, "gram_schmidt: ragged candidates");
+        flat.extend_from_slice(c);
+    }
+    let mut out = vec![0.0; want * d];
+    let mut work = vec![0.0; d];
+    let k = gram_schmidt_into(&flat, cands.len(), d, want, tol, &mut out, &mut work);
+    (0..k).map(|i| out[i * d..(i + 1) * d].to_vec()).collect()
+}
+
+/// [`gram_schmidt`] over a flat `(n_cands, d)` candidate matrix, writing
+/// the accepted orthonormal rows into `out` (≥ want·d) and using `work`
+/// (≥ d) as the residual buffer. Returns the number of rows written.
+/// Bit-identical to the allocating form: per candidate the same copy, the
+/// same two MGS passes against the accepted rows in order, the same
+/// norm/tolerance arithmetic.
+pub fn gram_schmidt_into(
+    cands: &[f64],
+    n_cands: usize,
+    d: usize,
+    want: usize,
+    tol: f64,
+    out: &mut [f64],
+    work: &mut [f64],
+) -> usize {
+    assert_eq!(cands.len(), n_cands * d);
+    assert!(out.len() >= want * d && work.len() >= d);
+    let v = &mut work[..d];
+    let mut kb = 0usize;
+    for ci in 0..n_cands {
+        if kb >= want {
             break;
         }
+        let cand = &cands[ci * d..(ci + 1) * d];
         let cn = norm2(cand);
         if cn == 0.0 {
             continue;
         }
-        let mut v = cand.clone();
+        v.copy_from_slice(cand);
         // Two MGS passes for numerical orthogonality.
         for _ in 0..2 {
-            for b in &basis {
-                let c = dot(&v, b);
-                for (vi, bi) in v.iter_mut().zip(b.iter()) {
-                    *vi -= c * bi;
+            for bi in 0..kb {
+                let b = &out[bi * d..(bi + 1) * d];
+                let c = dot(v, b);
+                for (vi, bv) in v.iter_mut().zip(b.iter()) {
+                    *vi -= c * bv;
                 }
             }
         }
-        let n = norm2(&v);
+        let n = norm2(v);
         if n > tol * cn {
             for vi in v.iter_mut() {
                 *vi /= n;
             }
-            basis.push(v);
+            out[kb * d..(kb + 1) * d].copy_from_slice(v);
+            kb += 1;
         }
     }
-    basis
+    kb
 }
 
 /// Cholesky factorization of a PSD matrix (n×n row-major): returns lower
@@ -354,6 +503,59 @@ mod tests {
         // Energy preserved: Σ s² = ||X||_F².
         let e: f64 = svals.iter().map(|s| s * s).sum();
         assert!(approx(e, dot(&x, &x), 1e-8));
+    }
+
+    /// The `_into` forms are bit-identical to the allocating ones, and
+    /// their scratch is cleanly reusable across different shapes.
+    #[test]
+    fn into_forms_match_allocating_bitwise() {
+        let mut rng = Pcg64::seed(23);
+        let mut eigh_scratch = EighScratch::default();
+        let mut svd_scratch = SvdScratch::default();
+        for &(r, d) in &[(6usize, 40usize), (3, 9), (8, 17)] {
+            // eigh vs eigh_into on a random symmetric matrix.
+            let b: Vec<f64> = (0..r * r).map(|_| rng.normal()).collect();
+            let mut a = vec![0.0; r * r];
+            for i in 0..r {
+                for j in 0..r {
+                    a[i * r + j] = dot(&b[i * r..(i + 1) * r], &b[j * r..(j + 1) * r]);
+                }
+            }
+            let mut a2 = a.clone();
+            let (vals, vecs) = eigh(&mut a, r);
+            let mut vals2 = vec![0.0; r];
+            let mut vecs2 = vec![0.0; r * r];
+            eigh_into(&mut a2, r, &mut vals2, &mut vecs2, &mut eigh_scratch);
+            assert_eq!(vals, vals2);
+            assert_eq!(vecs, vecs2);
+
+            // svd vs svd_into on a random short-fat matrix.
+            let x: Vec<f64> = (0..r * d).map(|_| rng.normal()).collect();
+            let (svals, vt) = svd_right_vectors(&x, r, d, r);
+            let mut svals2 = vec![0.0; r];
+            let mut vt2 = vec![0.0; r * d];
+            let kept = svd_right_vectors_into(&x, r, d, r, &mut svd_scratch, &mut svals2, &mut vt2);
+            assert_eq!(kept, svals.len());
+            assert_eq!(&svals2[..kept], &svals[..]);
+            assert_eq!(&vt2[..kept * d], &vt[..]);
+        }
+    }
+
+    #[test]
+    fn gram_schmidt_into_matches_allocating() {
+        let mut rng = Pcg64::seed(29);
+        let d = 12;
+        let cands: Vec<Vec<f64>> = (0..5).map(|_| rng.normal_vec(d)).collect();
+        let want = 4;
+        let basis = gram_schmidt(&cands, want, 1e-7);
+        let flat: Vec<f64> = cands.iter().flatten().copied().collect();
+        let mut out = vec![0.0; want * d];
+        let mut work = vec![0.0; d];
+        let k = gram_schmidt_into(&flat, cands.len(), d, want, 1e-7, &mut out, &mut work);
+        assert_eq!(k, basis.len());
+        for (i, b) in basis.iter().enumerate() {
+            assert_eq!(&out[i * d..(i + 1) * d], &b[..]);
+        }
     }
 
     #[test]

@@ -53,6 +53,14 @@ pub struct AdaptiveTrace {
 }
 
 impl AdaptiveTrace {
+    /// Clear for a new run, pre-reserving one decision slot per time
+    /// point so the per-step `push` never allocates (the training
+    /// session's zero-steady-state-allocation discipline).
+    pub fn reset_with_capacity(&mut self, n_steps: usize) {
+        self.decisions.clear();
+        self.decisions.reserve(n_steps);
+    }
+
     pub fn corrected_steps(&self) -> Vec<usize> {
         self.decisions
             .iter()

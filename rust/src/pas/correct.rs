@@ -8,11 +8,20 @@
 //! update *and* the buffer / multistep history (Alg. 2 line 9).
 
 use super::coords::{CoordinateDict, ScaleMode};
-use super::pca::{pca_basis, TrajBuffer};
+use super::pca::{pca_basis_into, BasisRef, PcaScratch, TrajBuffer};
 use crate::schedule::Schedule;
 use crate::score::EpsModel;
 use crate::solvers::{run_solver, DirectionHook, SolveRun, Solver, StepCtx};
 use crate::util::pool::{Pool, SendPtr};
+
+thread_local! {
+    /// Per-worker PCA workspace for the correction hot path: the scratch
+    /// holds the candidate/Gram temporaries, the `Vec` the transient
+    /// basis rows. Sized on first use per thread; afterwards a correction
+    /// step performs zero heap allocations per sample.
+    static PCA_TLS: std::cell::RefCell<(PcaScratch, Vec<f64>)> =
+        std::cell::RefCell::new((PcaScratch::new(), Vec::new()));
+}
 
 pub struct CorrectedSampler<'a> {
     pub dict: &'a CoordinateDict,
@@ -74,31 +83,52 @@ impl DirectionHook for CorrectedSampler<'_> {
         let d_ptr = SendPtr::new(d.as_mut_ptr());
         let min_rows = if coords.is_some() { 1 } else { 64 };
         Pool::global().par_rows(n, usize::MAX, min_rows, |r0, r1| {
-            for k in r0..r1 {
-                // SAFETY: pool row ranges are disjoint, so each sample's
-                // buffer and direction row are touched by one task only.
-                let buf = unsafe { &mut *bufs.get().add(k) };
-                let dk =
-                    unsafe { std::slice::from_raw_parts_mut(d_ptr.get().add(k * dim), dim) };
-                if let Some(c) = coords {
-                    let basis = pca_basis(buf, dk, n_basis);
-                    if basis.k > 0 {
-                        let scale = match scale_mode {
-                            ScaleMode::Absolute => 1.0,
-                            ScaleMode::Relative => basis.d_norm,
-                        };
-                        // `d = U Cᵀ` reconstructed straight into the
-                        // direction row (same f64 op order as the legacy
-                        // allocate-and-copy path).
-                        basis.direction_into(c, dk);
-                        for v in dk.iter_mut() {
-                            *v *= scale;
+            // Basis extraction works entirely in this worker's
+            // thread-local scratch (candidate matrix, Gram temporaries,
+            // transient basis rows) — zero allocations per sample once
+            // the workspace is warm. Bit-identical to the former
+            // allocate-a-`Basis`-per-sample path.
+            PCA_TLS.with(|tls| {
+                let (scratch, u_buf) = &mut *tls.borrow_mut();
+                if coords.is_some() && u_buf.len() < n_basis * dim {
+                    u_buf.resize(n_basis * dim, 0.0);
+                }
+                for k in r0..r1 {
+                    // SAFETY: pool row ranges are disjoint, so each
+                    // sample's buffer and direction row are touched by
+                    // one task only.
+                    let buf = unsafe { &mut *bufs.get().add(k) };
+                    let dk = unsafe {
+                        std::slice::from_raw_parts_mut(d_ptr.get().add(k * dim), dim)
+                    };
+                    if let Some(c) = coords {
+                        scratch.clear_q(dim);
+                        scratch.extend_q(buf.as_slice(), buf.len());
+                        let (bk, d_norm) = pca_basis_into(scratch, dk, n_basis, u_buf);
+                        if bk > 0 {
+                            let basis = BasisRef {
+                                dim,
+                                u: &u_buf[..bk * dim],
+                                k: bk,
+                                d_norm,
+                            };
+                            let scale = match scale_mode {
+                                ScaleMode::Absolute => 1.0,
+                                ScaleMode::Relative => basis.d_norm,
+                            };
+                            // `d = U Cᵀ` reconstructed straight into the
+                            // direction row (same f64 op order as the
+                            // legacy allocate-and-copy path).
+                            basis.direction_into(c, dk);
+                            for v in dk.iter_mut() {
+                                *v *= scale;
+                            }
                         }
                     }
+                    // Buffer the direction as used (corrected or not).
+                    buf.push(dk);
                 }
-                // Buffer the direction as used (corrected or not).
-                buf.push(dk);
-            }
+            });
         });
         if coords.is_some() {
             self.corrections_applied += 1;
@@ -116,7 +146,7 @@ mod tests {
     use crate::pas::train::{PasTrainer, TrainConfig};
     use crate::schedule::default_schedule;
     use crate::score::analytic::AnalyticEps;
-    use crate::solvers::registry as solvers;
+    use crate::solvers::{registry as solvers, NodeView};
     use crate::traj::{ground_truth, sample_prior, truncation_error_curve};
     use crate::util::rng::Pcg64;
 
@@ -166,8 +196,12 @@ mod tests {
         let plain = run_solver(solver.as_ref(), model.as_ref(), &x_t, n, &sched, None);
         let corr =
             CorrectedSampler::sample(&tr.dict, solver.as_ref(), model.as_ref(), &x_t, n, &sched);
-        let e_plain = *truncation_error_curve(&plain.xs, &gt).last().unwrap();
-        let e_corr = *truncation_error_curve(&corr.xs, &gt).last().unwrap();
+        let e_plain = *truncation_error_curve(NodeView::nested(&plain.xs), &gt)
+            .last()
+            .unwrap();
+        let e_corr = *truncation_error_curve(NodeView::nested(&corr.xs), &gt)
+            .last()
+            .unwrap();
         assert!(
             e_corr < e_plain,
             "correction must generalize: plain {e_plain} vs corrected {e_corr}"

@@ -3,8 +3,11 @@
 //! * [`pca`] — trajectory buffers and the pinned-first-vector PCA basis
 //!   (Algorithm 1 lines 2–6).
 //! * [`coords`] — the learned "~10 parameters" and their on-disk format.
-//! * [`train`] — Algorithm 1: sequential per-step coordinate training
-//!   against teacher trajectories with analytic gradients.
+//! * [`train`] — Algorithm 1 as the engine-backed, workspace-pooled
+//!   [`train::TrainSession`]: sequential per-time-point coordinate
+//!   training against teacher trajectories with analytic gradients, flat
+//!   node-store rollouts, pooled basis extraction and sharded (but
+//!   bit-deterministic) minibatch gradients.
 //! * [`adaptive`] — the tolerance rule that keeps only high-curvature
 //!   steps (§3.3).
 //! * [`correct`] — Algorithm 2: the corrected sampler as a

@@ -11,12 +11,24 @@
 //! direction, so the first learned coordinate is a pure rescaling of
 //! `d_{t_i}` (Eq. 15).
 //!
-//! SVD uses the Gram trick ([`crate::linalg::svd_right_vectors`]):
+//! SVD uses the Gram trick ([`crate::linalg::svd_right_vectors_into`]):
 //! the buffer is short-fat (≤ NFE+2 rows, D columns), so the cost is
 //! `O(r² D)` with r ≈ 12 — the "negligible vs one NFE" cost claim of
 //! §3.5, which `benches/pas_overhead.rs` measures.
+//!
+//! # Allocation discipline
+//!
+//! The hot entry point is [`pca_basis_into`]: candidate matrix, Gram
+//! temporaries and Gram–Schmidt residuals all live in a caller-owned
+//! [`PcaScratch`] (grown on first use, never shrunk), and the basis rows
+//! are written into caller-owned storage — a [`BasisStore`] row in the
+//! trainer, a thread-local buffer in the corrected sampler. In steady
+//! state one basis extraction performs **zero** heap allocations
+//! (`tests/alloc_audit.rs` pins this across a full training step). The
+//! allocating [`pca_basis`] / [`Basis`] forms remain as thin conveniences
+//! for tests and benches.
 
-use crate::linalg::{gram_schmidt, svd_right_vectors};
+use crate::linalg::{gram_schmidt_into, svd_right_vectors_into, SvdScratch};
 use crate::tensor::norm2;
 
 /// Per-sample trajectory buffer: row 0 is `x_T`, then one row per used
@@ -67,31 +79,28 @@ impl TrajBuffer {
     }
 }
 
-/// Orthonormal basis for one sample's correction subspace.
-#[derive(Clone, Debug)]
-pub struct Basis {
+/// Borrowed view of one sample's correction subspace: `k` orthonormal
+/// rows of length `dim` (row 0 is `d/||d||`) living in caller-owned
+/// storage — a [`BasisStore`] row or a scratch buffer. All hot-path
+/// consumers (trainer SGD, corrected sampler) work through this.
+#[derive(Clone, Copy)]
+pub struct BasisRef<'a> {
     pub dim: usize,
-    /// `k * dim` row-major; row 0 is `d/||d||`.
-    pub u: Vec<f64>,
+    /// `k * dim` row-major basis rows.
+    pub u: &'a [f64],
     pub k: usize,
     /// `||d_{t_i}||` — used to initialize `c_1` (absolute mode) or to
     /// rescale learned coordinates (relative mode).
     pub d_norm: f64,
 }
 
-impl Basis {
+impl BasisRef<'_> {
     pub fn row(&self, k: usize) -> &[f64] {
         &self.u[k * self.dim..(k + 1) * self.dim]
     }
 
-    /// Reconstruct a direction from coordinates: `d = Uᵀ C` (uses the
-    /// first `min(k, coords.len())` coordinates).
-    pub fn direction(&self, coords: &[f64]) -> Vec<f64> {
-        let mut d = vec![0.0; self.dim];
-        self.direction_into(coords, &mut d);
-        d
-    }
-
+    /// Reconstruct a direction from coordinates into `out`: `d = Uᵀ C`
+    /// (uses the first `min(k, coords.len())` coordinates).
     pub fn direction_into(&self, coords: &[f64], out: &mut [f64]) {
         out.fill(0.0);
         for (k, &c) in coords.iter().take(self.k).enumerate() {
@@ -113,10 +122,63 @@ impl Basis {
     pub fn project_into(&self, v: &[f64], out: &mut [f64]) {
         debug_assert_eq!(v.len(), self.dim);
         debug_assert!(out.len() >= self.k);
-        crate::tensor::gemm::gemm_nt_dot_into(&self.u, self.k, v, 1, self.dim, &mut out[..self.k]);
+        crate::tensor::gemm::gemm_nt_dot_into(
+            &self.u[..self.k * self.dim],
+            self.k,
+            v,
+            1,
+            self.dim,
+            &mut out[..self.k],
+        );
+    }
+}
+
+/// Owning orthonormal basis for one sample's correction subspace.
+///
+/// The owning form (and its allocating [`Basis::direction`] /
+/// [`Basis::project`] helpers) is a **test/bench convenience** — every
+/// hot path holds bases in a [`BasisStore`] and works on [`BasisRef`]s.
+#[derive(Clone, Debug)]
+pub struct Basis {
+    pub dim: usize,
+    /// `k * dim` row-major; row 0 is `d/||d||`.
+    pub u: Vec<f64>,
+    pub k: usize,
+    /// See [`BasisRef::d_norm`].
+    pub d_norm: f64,
+}
+
+impl Basis {
+    /// Borrowed view (the form the hot-path kernels take).
+    pub fn as_basis_ref(&self) -> BasisRef<'_> {
+        BasisRef {
+            dim: self.dim,
+            u: &self.u,
+            k: self.k,
+            d_norm: self.d_norm,
+        }
     }
 
-    /// Project a vector onto the basis: returns the `k` coordinates.
+    pub fn row(&self, k: usize) -> &[f64] {
+        &self.u[k * self.dim..(k + 1) * self.dim]
+    }
+
+    /// Allocating [`BasisRef::direction_into`] (test convenience).
+    pub fn direction(&self, coords: &[f64]) -> Vec<f64> {
+        let mut d = vec![0.0; self.dim];
+        self.direction_into(coords, &mut d);
+        d
+    }
+
+    pub fn direction_into(&self, coords: &[f64], out: &mut [f64]) {
+        self.as_basis_ref().direction_into(coords, out);
+    }
+
+    pub fn project_into(&self, v: &[f64], out: &mut [f64]) {
+        self.as_basis_ref().project_into(v, out);
+    }
+
+    /// Allocating [`BasisRef::project_into`] (test convenience).
     pub fn project(&self, v: &[f64]) -> Vec<f64> {
         let mut out = vec![0.0; self.k];
         self.project_into(v, &mut out);
@@ -124,51 +186,214 @@ impl Basis {
     }
 }
 
-/// The paper's `PCA(Q, d_{t_i})` routine. `n_basis` is the total number of
+/// Preallocated per-sample basis storage for a whole training batch: one
+/// flat `n × n_basis × dim` row-major buffer plus per-sample `k` / `d_norm`
+/// metadata. Rows are written in place by [`pca_basis_into`] (disjoint
+/// per sample, so the trainer shards extraction over the pool) and read
+/// back as [`BasisRef`]s.
+#[derive(Default)]
+pub struct BasisStore {
+    dim: usize,
+    n_basis: usize,
+    n: usize,
+    u: Vec<f64>,
+    k: Vec<usize>,
+    d_norm: Vec<f64>,
+}
+
+impl BasisStore {
+    pub fn new() -> BasisStore {
+        BasisStore::default()
+    }
+
+    /// Re-shape for a batch of `n` samples; never shrinks the backing
+    /// buffers, so repeated training runs of one shape allocate nothing.
+    pub fn reset(&mut self, n: usize, dim: usize, n_basis: usize) {
+        assert!(dim > 0 && n_basis >= 1);
+        self.dim = dim;
+        self.n_basis = n_basis;
+        self.n = n;
+        let need = n * n_basis * dim;
+        if self.u.len() < need {
+            self.u.resize(need, 0.0);
+        }
+        if self.k.len() < n {
+            self.k.resize(n, 0);
+        }
+        if self.d_norm.len() < n {
+            self.d_norm.resize(n, 0.0);
+        }
+    }
+
+    /// Samples currently stored.
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Elements per sample row in the flat `u` buffer.
+    pub fn stride(&self) -> usize {
+        self.n_basis * self.dim
+    }
+
+    /// Basis view for sample `i`.
+    pub fn basis(&self, i: usize) -> BasisRef<'_> {
+        assert!(i < self.n);
+        let s = self.stride();
+        let k = self.k[i];
+        BasisRef {
+            dim: self.dim,
+            u: &self.u[i * s..i * s + k * self.dim],
+            k,
+            d_norm: self.d_norm[i],
+        }
+    }
+
+    /// Mutable flat parts `(u, k, d_norm)` for parallel per-sample fills:
+    /// sample `i` owns `u[i*stride .. (i+1)*stride]`, `k[i]`, `d_norm[i]`.
+    pub fn raw_parts_mut(&mut self) -> (&mut [f64], &mut [usize], &mut [f64]) {
+        let need = self.n * self.n_basis * self.dim;
+        (
+            &mut self.u[..need],
+            &mut self.k[..self.n],
+            &mut self.d_norm[..self.n],
+        )
+    }
+}
+
+/// Reusable workspace for [`pca_basis_into`]: the gathered candidate
+/// matrix `X' = Concat(Q, d)`, the SVD temporaries, the singular-vector
+/// staging rows and the Gram–Schmidt residual. Grows on demand, never
+/// shrinks.
+#[derive(Default)]
+pub struct PcaScratch {
+    dim: usize,
+    q: Vec<f64>,
+    q_rows: usize,
+    svd: SvdScratch,
+    svals: Vec<f64>,
+    vt: Vec<f64>,
+    cands: Vec<f64>,
+    gs_work: Vec<f64>,
+}
+
+impl PcaScratch {
+    pub fn new() -> PcaScratch {
+        PcaScratch::default()
+    }
+
+    /// Start gathering a fresh `Q` of `dim`-length rows.
+    pub fn clear_q(&mut self, dim: usize) {
+        assert!(dim > 0);
+        self.dim = dim;
+        self.q.clear();
+        self.q_rows = 0;
+    }
+
+    /// Append one row of `Q` (amortized allocation-free).
+    pub fn push_q_row(&mut self, row: &[f64]) {
+        debug_assert_eq!(row.len(), self.dim);
+        self.q.extend_from_slice(row);
+        self.q_rows += 1;
+    }
+
+    /// Append `n_rows` contiguous rows at once (e.g. a whole
+    /// [`TrajBuffer`]).
+    pub fn extend_q(&mut self, rows: &[f64], n_rows: usize) {
+        debug_assert_eq!(rows.len(), n_rows * self.dim);
+        self.q.extend_from_slice(rows);
+        self.q_rows += n_rows;
+    }
+}
+
+/// The paper's `PCA(Q, d_{t_i})` routine, zero-allocation form: `Q` was
+/// gathered into `scratch` (see [`PcaScratch::push_q_row`]); the up-to
+/// `n_basis` orthonormal rows are written into `u_out` (≥ n_basis · dim).
+/// Returns `(k, ||d||)`. Bit-identical to the original allocating
+/// routine: same candidate matrix, same Gram-trick SVD, same pinned-`v1`
+/// Gram–Schmidt with tolerance 1e-7.
+pub fn pca_basis_into(
+    scratch: &mut PcaScratch,
+    d: &[f64],
+    n_basis: usize,
+    u_out: &mut [f64],
+) -> (usize, f64) {
+    let dim = scratch.dim;
+    assert_eq!(d.len(), dim);
+    assert!(n_basis >= 1);
+    assert!(u_out.len() >= n_basis * dim);
+    let d_norm = norm2(d);
+    if d_norm == 0.0 {
+        // Degenerate: no direction to correct; an empty basis
+        // reconstructs the zero vector.
+        return (0, d_norm);
+    }
+    if n_basis == 1 || scratch.q_rows == 0 {
+        for (o, &x) in u_out.iter_mut().zip(d.iter()) {
+            *o = x / d_norm;
+        }
+        return (1, d_norm);
+    }
+    // X' = Concat(Q, d)  (Eq. 13) — `d` appended in place.
+    scratch.q.extend_from_slice(d);
+    let r = scratch.q_rows + 1;
+    let keep_max = r.min(n_basis - 1);
+    if scratch.svals.len() < keep_max {
+        scratch.svals.resize(keep_max, 0.0);
+    }
+    if scratch.vt.len() < keep_max * dim {
+        scratch.vt.resize(keep_max * dim, 0.0);
+    }
+    let n_sv = svd_right_vectors_into(
+        &scratch.q[..r * dim],
+        r,
+        dim,
+        n_basis - 1,
+        &mut scratch.svd,
+        &mut scratch.svals,
+        &mut scratch.vt,
+    );
+    // Undo the append so the scratch can be regathered cleanly.
+    scratch.q.truncate(scratch.q_rows * dim);
+    // Candidates: v1 first (pinned), then the singular vectors.
+    let n_cands = 1 + n_sv;
+    if scratch.cands.len() < n_cands * dim {
+        scratch.cands.resize(n_cands * dim, 0.0);
+    }
+    for (o, &x) in scratch.cands[..dim].iter_mut().zip(d.iter()) {
+        *o = x / d_norm;
+    }
+    scratch.cands[dim..n_cands * dim].copy_from_slice(&scratch.vt[..n_sv * dim]);
+    if scratch.gs_work.len() < dim {
+        scratch.gs_work.resize(dim, 0.0);
+    }
+    let k = gram_schmidt_into(
+        &scratch.cands[..n_cands * dim],
+        n_cands,
+        dim,
+        n_basis,
+        1e-7,
+        u_out,
+        &mut scratch.gs_work,
+    );
+    (k, d_norm)
+}
+
+/// Allocating convenience over [`pca_basis_into`] (tests, benches, and
+/// the legacy-oracle training path). `n_basis` is the total number of
 /// basis vectors wanted (paper default 4, ablated 1–4 in Fig. 6c).
 pub fn pca_basis(q: &TrajBuffer, d: &[f64], n_basis: usize) -> Basis {
     let dim = q.dim;
     assert_eq!(d.len(), dim);
-    assert!(n_basis >= 1);
-    let d_norm = norm2(d);
-    if d_norm == 0.0 {
-        // Degenerate: no direction to correct; return an empty basis that
-        // reconstructs the zero vector.
-        return Basis {
-            dim,
-            u: Vec::new(),
-            k: 0,
-            d_norm,
-        };
-    }
-    let v1: Vec<f64> = d.iter().map(|x| x / d_norm).collect();
-    if n_basis == 1 || q.is_empty() {
-        return Basis {
-            dim,
-            u: v1,
-            k: 1,
-            d_norm,
-        };
-    }
-    // X' = Concat(Q, d)  (Eq. 13).
-    let r = q.len() + 1;
-    let mut x = Vec::with_capacity(r * dim);
-    x.extend_from_slice(q.as_slice());
-    x.extend_from_slice(d);
-    let (_svals, vt) = svd_right_vectors(&x, r, dim, n_basis - 1);
-    let n_sv = vt.len() / dim;
-    // Candidates: v1 first (pinned), then the singular vectors.
-    let mut cands: Vec<Vec<f64>> = Vec::with_capacity(1 + n_sv);
-    cands.push(v1);
-    for k in 0..n_sv {
-        cands.push(vt[k * dim..(k + 1) * dim].to_vec());
-    }
-    let basis = gram_schmidt(&cands, n_basis, 1e-7);
-    let k = basis.len();
-    let mut u = Vec::with_capacity(k * dim);
-    for b in basis {
-        u.extend_from_slice(&b);
-    }
+    let mut scratch = PcaScratch::new();
+    scratch.clear_q(dim);
+    scratch.extend_q(q.as_slice(), q.len());
+    let mut u = vec![0.0; n_basis * dim];
+    let (k, d_norm) = pca_basis_into(&mut scratch, d, n_basis, &mut u);
+    u.truncate(k * dim);
     Basis { dim, u, k, d_norm }
 }
 
@@ -188,7 +413,7 @@ pub fn cumulative_percent_variance(x: &[f64], rows: usize, dim: usize, top_k: us
     if total == 0.0 {
         return vec![100.0; top_k];
     }
-    let (svals, _) = svd_right_vectors(&c, rows, dim, top_k.min(rows));
+    let (svals, _) = crate::linalg::svd_right_vectors(&c, rows, dim, top_k.min(rows));
     let mut out = Vec::with_capacity(top_k);
     let mut acc = 0.0;
     for k in 0..top_k {
@@ -229,6 +454,53 @@ mod tests {
                 let want = if a == c { 1.0 } else { 0.0 };
                 assert!((g - want).abs() < 1e-8, "g[{a}{c}]={g}");
             }
+        }
+    }
+
+    /// A reused scratch + store must reproduce the one-shot allocating
+    /// path bit for bit, including across samples of varying `k`.
+    #[test]
+    fn store_extraction_matches_allocating_bitwise() {
+        let dim = 24;
+        let n_basis = 4;
+        let n = 6;
+        let mut rng = Pcg64::seed(77);
+        let mut bufs: Vec<TrajBuffer> = Vec::new();
+        let mut ds: Vec<Vec<f64>> = Vec::new();
+        for i in 0..n {
+            let mut q = TrajBuffer::new(dim);
+            for _ in 0..(i % 4) {
+                // varying row counts, incl. empty
+                q.push(&rng.normal_vec(dim));
+            }
+            bufs.push(q);
+            if i == 3 {
+                ds.push(vec![0.0; dim]); // degenerate direction
+            } else {
+                ds.push(rng.normal_vec(dim));
+            }
+        }
+        let mut store = BasisStore::new();
+        store.reset(n, dim, n_basis);
+        let mut scratch = PcaScratch::new();
+        let stride = store.stride();
+        {
+            let (u, ks, dns) = store.raw_parts_mut();
+            for i in 0..n {
+                scratch.clear_q(dim);
+                scratch.extend_q(bufs[i].as_slice(), bufs[i].len());
+                let (k, dn) =
+                    pca_basis_into(&mut scratch, &ds[i], n_basis, &mut u[i * stride..(i + 1) * stride]);
+                ks[i] = k;
+                dns[i] = dn;
+            }
+        }
+        for i in 0..n {
+            let want = pca_basis(&bufs[i], &ds[i], n_basis);
+            let got = store.basis(i);
+            assert_eq!(got.k, want.k, "sample {i}");
+            assert_eq!(got.d_norm.to_bits(), want.d_norm.to_bits(), "sample {i}");
+            assert_eq!(got.u, &want.u[..], "sample {i}");
         }
     }
 

@@ -52,6 +52,21 @@ impl Teleporter {
 
     /// Exact Gaussian-score PF-ODE transport of a batch from time
     /// `from_t` to `to_t` (in place). Works in either direction.
+    ///
+    /// Batched through the register-tiled kernels: one `R Uᵀ` projection
+    /// and one `Y U` back-projection for the whole batch instead of 2·n
+    /// per-sample matvecs — the same blocking win as the model-eval
+    /// pipeline, which matters for the d=256 `+TP` rows. Called once per
+    /// training/sampling run (not per step), so the transient `R`/`Y`
+    /// staging buffers are allocated per call.
+    ///
+    /// Numerics note: the projection now reduces each entry in the
+    /// 4-lane `dot` order (and the back-projection no longer zero-skips),
+    /// so teleported outputs differ from the pre-kernel loop in the last
+    /// bits. No fixture pins `+TP` outputs — the golden trajectory and
+    /// golden training pins are TP-free — and every TP consumer is
+    /// tolerance-based; if a `+TP` fixture is ever added, it pins *this*
+    /// kernel order.
     pub fn teleport(&self, x: &mut [f64], n: usize, from_t: f64, to_t: f64) {
         let d = self.dim;
         assert_eq!(x.len(), n * d);
@@ -61,31 +76,30 @@ impl Teleporter {
             .iter()
             .map(|&l| ((l + to_t * to_t) / (l + from_t * from_t)).sqrt())
             .collect();
-        let mut y = vec![0.0; d];
+        // R = X − mu (n, d).
+        let mut r = vec![0.0; n * d];
         for k in 0..n {
-            let xk = &mut x[k * d..(k + 1) * d];
-            // y = U (x − mu), row-eigvec convention.
-            for (c, yc) in y.iter_mut().enumerate() {
-                let row = &self.u[c * d..(c + 1) * d];
-                let mut s = 0.0;
-                for j in 0..d {
-                    s += row[j] * (xk[j] - self.mu[j]);
-                }
-                *yc = s * scale[c];
-            }
-            // x = mu + Uᵀ y.
-            xk.copy_from_slice(&self.mu);
-            for c in 0..d {
-                let yc = y[c];
-                if yc == 0.0 {
-                    continue;
-                }
-                let row = &self.u[c * d..(c + 1) * d];
-                for j in 0..d {
-                    xk[j] += yc * row[j];
-                }
+            let xk = &x[k * d..(k + 1) * d];
+            let rk = &mut r[k * d..(k + 1) * d];
+            for j in 0..d {
+                rk[j] = xk[j] - self.mu[j];
             }
         }
+        // Y = R Uᵀ (row-eigvec convention), then scale per eigendirection.
+        let mut y = vec![0.0; n * d];
+        crate::tensor::gemm::gemm_nt_dot_into(&r, n, &self.u, d, d, &mut y);
+        for k in 0..n {
+            let yk = &mut y[k * d..(k + 1) * d];
+            for (yc, &s) in yk.iter_mut().zip(scale.iter()) {
+                *yc *= s;
+            }
+        }
+        // X = mu + Y U (ascending-eigendirection accumulation, the order
+        // of the former per-sample back-projection loop).
+        for k in 0..n {
+            x[k * d..(k + 1) * d].copy_from_slice(&self.mu);
+        }
+        crate::tensor::gemm::gemm_nn_acc(&y, n, d, &self.u, d, x);
     }
 }
 

@@ -1,4 +1,5 @@
-//! PAS training — Algorithm 1.
+//! PAS training — Algorithm 1, as an engine-backed, workspace-pooled
+//! [`TrainSession`].
 //!
 //! Time points are trained **sequentially** (correcting step `i` shifts
 //! every later state), sharing one coordinate vector `C` across all
@@ -16,14 +17,48 @@
 //! `tau` transfers across datasets of different dimension; this is the one
 //! normalization choice we add on top of the paper (documented in
 //! DESIGN.md §3).
+//!
+//! # TrainSession architecture
+//!
+//! [`TrainSession`] owns every workspace the whole run needs and reuses it
+//! across runs (nothing is ever shrunk), mirroring the sampling engine's
+//! lifecycle:
+//!
+//! * **Flat trajectory state.** The corrected rollout (`xs`, `ds`) and the
+//!   teacher ground truth live in [`NodeStore`]s — one flat `(node, n·dim)`
+//!   row per node — read back through [`crate::solvers::NodeView`]s. The
+//!   teacher and the uncorrected student both roll out through one reused
+//!   [`SamplerEngine`] (`Record::Full`); no nested `Vec<Vec<f64>>` anywhere.
+//! * **Pooled basis extraction.** Per-sample bases live in one
+//!   [`BasisStore`] (`n × n_basis × dim` flat + per-sample `k`/`d_norm`);
+//!   extraction shards samples over the process [`Pool`], each chunk
+//!   working in its own [`PcaScratch`] — zero heap allocations per
+//!   training step in steady state (`tests/alloc_audit.rs`).
+//! * **Sharded coordinate optimization.** The minibatch gradient is
+//!   computed as independent per-sample terms in parallel, then reduced
+//!   **sequentially in minibatch order** — so the trained coordinates are
+//!   bit-identical to the sequential reference path for every thread
+//!   count (`tests/golden_training.rs` pins this for caps {1, 2, 16}).
+//!   The affine-base and uncorrected solver steps go through the engine's
+//!   row-sharded dispatch, and the adaptive-decision losses are computed
+//!   per sample in parallel with a sequential ascending-`k` reduction.
+//!
+//! [`PasTrainer::train_tp_reference`] keeps the pre-session sequential
+//! monolith as the bitwise oracle (the same role
+//! [`crate::solvers::run_solver_legacy`] plays for the engine);
+//! `benches/train_time.rs` reports the session's speedup against it.
 
 use super::adaptive::{decide, AdaptiveDecision, AdaptiveTrace};
 use super::coords::{CoordinateDict, ScaleMode};
-use super::pca::{pca_basis, Basis, TrajBuffer};
+use super::pca::{pca_basis, pca_basis_into, Basis, BasisStore, PcaScratch, TrajBuffer};
 use crate::schedule::Schedule;
 use crate::score::EpsModel;
+use crate::solvers::engine::{step_rows, EngineConfig, NodeStore, Record, SamplerEngine};
 use crate::solvers::{NodeView, Solver, StepCtx, StepScratch};
-use crate::traj::{ground_truth, sample_prior, truncation_error_curve, GroundTruth};
+use crate::traj::{
+    ground_truth, ground_truth_into, sample_prior, sample_prior_into, truncation_error_curve,
+    GroundTruth,
+};
 use crate::util::pool::{Pool, SendPtr};
 use crate::util::rng::Pcg64;
 use crate::util::timer::Timer;
@@ -207,6 +242,705 @@ pub struct TrainResult {
     pub teacher_nfe_spent: usize,
 }
 
+/// Per-sample gradient work below this many `f64` elements per shard runs
+/// inline — pool dispatch would outweigh the math (cf. the engine's
+/// `MIN_SHARD_ELEMS`).
+const MIN_SGD_SHARD_ELEMS: usize = 2048;
+
+/// Reusable, workspace-pooled Algorithm-1 driver. Create once, call
+/// [`TrainSession::train`] per (solver, schedule, dataset) — after the
+/// first run of a shape, a training step performs **zero** heap
+/// allocations (basis extraction + SGD epochs included).
+///
+/// The phase methods ([`TrainSession::begin`] /
+/// [`TrainSession::train_step`] / [`TrainSession::finish`]) are public so
+/// the allocation audit and the training bench can instrument individual
+/// time points; `train` is the composition every product caller uses.
+pub struct TrainSession {
+    pub cfg: TrainConfig,
+    /// Row-shard cap for every parallel phase (0 = pool size). Outputs
+    /// are bit-identical for any value — `tests/golden_training.rs`.
+    threads: usize,
+    engine: SamplerEngine,
+    gt: GroundTruth,
+    xs: NodeStore,
+    ds: NodeStore,
+    bases: BasisStore,
+    pca: Vec<PcaScratch>,
+    rng: Pcg64,
+    timer: Timer,
+    le: Option<LossEval>,
+    trace: AdaptiveTrace,
+    curve_uncorrected: Vec<f64>,
+    // Run shape (set by `begin`).
+    n: usize,
+    dim: usize,
+    n_steps: usize,
+    force_all: bool,
+    dataset: String,
+    solver_name: String,
+    // Flat step workspaces, all `n * dim`.
+    x_t: Vec<f64>,
+    x0_tmp: Vec<f64>,
+    d_all: Vec<f64>,
+    base: Vec<f64>,
+    x_next_unc: Vec<f64>,
+    x_next_cor: Vec<f64>,
+    d_used: Vec<f64>,
+    zeros: Vec<f64>,
+    step_scratch: Vec<f64>,
+    // SGD workspaces.
+    perm: Vec<usize>,
+    terms: Vec<f64>,
+    term_k: Vec<usize>,
+    /// Per-chunk `[dtilde | resid | gx | proj]` rows, one per shard slot.
+    chunk_scratch: Vec<f64>,
+    c: Vec<f64>,
+    grad: Vec<f64>,
+    adam_m: Vec<f64>,
+    adam_v: Vec<f64>,
+    // Per-sample loss staging for the adaptive decision.
+    l_unc_s: Vec<f64>,
+    l_cor_s: Vec<f64>,
+    // Per-step outcome, assembled into the dict at `finish`.
+    kept: Vec<bool>,
+    kept_coords: Vec<f64>,
+    // Partitions fixed per run: (chunk_rows, n_chunks) over the batch for
+    // the PCA pass (min 1 row) and the light per-sample passes.
+    part_pca: (usize, usize),
+    part_light: (usize, usize),
+}
+
+impl TrainSession {
+    pub fn new(cfg: TrainConfig) -> TrainSession {
+        TrainSession::with_threads(cfg, 0)
+    }
+
+    /// Session with an explicit shard cap (`0` = pool size, `1` = fully
+    /// sequential). Any value produces bit-identical results; the cap
+    /// exists for the determinism tests and for capacity isolation.
+    pub fn with_threads(cfg: TrainConfig, threads: usize) -> TrainSession {
+        TrainSession {
+            cfg,
+            threads,
+            engine: SamplerEngine::new(EngineConfig {
+                record: Record::Full,
+                threads,
+            }),
+            gt: GroundTruth::empty(),
+            xs: NodeStore::new(),
+            ds: NodeStore::new(),
+            bases: BasisStore::new(),
+            pca: Vec::new(),
+            rng: Pcg64::seed(0),
+            timer: Timer::start(),
+            le: None,
+            trace: AdaptiveTrace::default(),
+            curve_uncorrected: Vec::new(),
+            n: 0,
+            dim: 0,
+            n_steps: 0,
+            force_all: false,
+            dataset: String::new(),
+            solver_name: String::new(),
+            x_t: Vec::new(),
+            x0_tmp: Vec::new(),
+            d_all: Vec::new(),
+            base: Vec::new(),
+            x_next_unc: Vec::new(),
+            x_next_cor: Vec::new(),
+            d_used: Vec::new(),
+            zeros: Vec::new(),
+            step_scratch: Vec::new(),
+            perm: Vec::new(),
+            terms: Vec::new(),
+            term_k: Vec::new(),
+            chunk_scratch: Vec::new(),
+            c: Vec::new(),
+            grad: Vec::new(),
+            adam_m: Vec::new(),
+            adam_v: Vec::new(),
+            l_unc_s: Vec::new(),
+            l_cor_s: Vec::new(),
+            kept: Vec::new(),
+            kept_coords: Vec::new(),
+            part_pca: (0, 0),
+            part_light: (0, 0),
+        }
+    }
+
+    /// Steps of the schedule `begin` was called with.
+    pub fn n_steps(&self) -> usize {
+        self.n_steps
+    }
+
+    fn max_parts(&self) -> usize {
+        if self.threads == 0 {
+            Pool::global().size()
+        } else {
+            self.threads
+        }
+    }
+
+    /// Run Algorithm 1 end to end: [`Self::begin`], one
+    /// [`Self::train_step`] per time point, [`Self::finish`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn train(
+        &mut self,
+        solver: &dyn Solver,
+        model: &dyn EpsModel,
+        sched: &Schedule,
+        dataset_name: &str,
+        force_all_steps: bool,
+        teleport: Option<(&crate::pas::teleport::Teleporter, f64)>,
+    ) -> Result<TrainResult, String> {
+        self.begin(solver, model, sched, dataset_name, force_all_steps, teleport)?;
+        for j in 0..sched.n_steps() {
+            self.train_step(solver, model, sched, j)?;
+        }
+        Ok(self.finish())
+    }
+
+    /// Phase 1: draw (and optionally teleport) priors, roll out the
+    /// teacher ground truth and the uncorrected student through the
+    /// reused engine, and (re)shape every workspace. Allocates only on
+    /// shape growth; the per-step phases after it allocate nothing.
+    #[allow(clippy::too_many_arguments)]
+    pub fn begin(
+        &mut self,
+        solver: &dyn Solver,
+        model: &dyn EpsModel,
+        sched: &Schedule,
+        dataset_name: &str,
+        force_all_steps: bool,
+        teleport: Option<(&crate::pas::teleport::Teleporter, f64)>,
+    ) -> Result<(), String> {
+        let cfg = &self.cfg;
+        if cfg.minibatch == 0 {
+            // The epoch loop advances by whole minibatches; 0 would spin
+            // forever (the pre-session path panicked in `chunks(0)`).
+            return Err("minibatch must be >= 1".into());
+        }
+        let dim = model.dim();
+        let n = cfg.n_traj;
+        let n_basis = cfg.n_basis;
+        let n_steps = sched.n_steps();
+        self.timer = Timer::start();
+        self.rng = Pcg64::seed_stream(cfg.seed, 0x7a5);
+        self.n = n;
+        self.dim = dim;
+        self.n_steps = n_steps;
+        self.force_all = force_all_steps;
+        self.dataset.clear();
+        self.dataset.push_str(dataset_name);
+        self.solver_name.clear();
+        self.solver_name.push_str(solver.name());
+
+        // Priors (teleportation warm start draws at t_gen and transports
+        // analytically to the schedule's t_max — the `+TP+PAS` rows).
+        resize_min(&mut self.x_t, n * dim);
+        match teleport {
+            None => sample_prior_into(&mut self.rng, sched.t_max(), &mut self.x_t[..n * dim]),
+            Some((tp, t_gen)) => {
+                sample_prior_into(&mut self.rng, t_gen, &mut self.x_t[..n * dim]);
+                tp.teleport(&mut self.x_t[..n * dim], n, t_gen, sched.t_max());
+            }
+        }
+
+        // Teacher ground truth through the reused engine.
+        let teacher = crate::solvers::registry::get(&cfg.teacher)
+            .ok_or_else(|| format!("unknown teacher solver {}", cfg.teacher))?;
+        ground_truth_into(
+            &mut self.gt,
+            &mut self.engine,
+            teacher.as_ref(),
+            model,
+            &self.x_t[..n * dim],
+            n,
+            sched,
+            cfg.teacher_nfe,
+        );
+
+        // Uncorrected student run for the Figure-3a curve.
+        resize_min(&mut self.x0_tmp, n * dim);
+        self.engine.run_into(
+            solver,
+            model,
+            &self.x_t[..n * dim],
+            n,
+            sched,
+            None,
+            &mut self.x0_tmp[..n * dim],
+        );
+        self.curve_uncorrected = truncation_error_curve(self.engine.xs().view(), &self.gt);
+
+        // Rollout stores: node 0 is the prior draw.
+        self.xs.reset(n * dim, n_steps + 1);
+        self.xs.push_row(&self.x_t[..n * dim]);
+        self.ds.reset(n * dim, n_steps.max(1));
+
+        // Basis storage + per-chunk PCA scratch.
+        self.bases.reset(n, dim, n_basis);
+        let pool = Pool::global();
+        let max_parts = self.max_parts();
+        self.part_pca = pool.partition(n, max_parts, 1);
+        let light_rows = (MIN_SGD_SHARD_ELEMS / dim.max(1)).max(1);
+        self.part_light = pool.partition(n, max_parts, light_rows);
+        while self.pca.len() < self.part_pca.1 {
+            self.pca.push(PcaScratch::new());
+        }
+
+        // Step workspaces.
+        for buf in [
+            &mut self.d_all,
+            &mut self.base,
+            &mut self.x_next_unc,
+            &mut self.x_next_cor,
+            &mut self.d_used,
+        ] {
+            resize_min(buf, n * dim);
+        }
+        resize_min(&mut self.zeros, n * dim);
+        self.zeros[..n * dim].fill(0.0);
+        let spec = solver.scratch_spec(dim, n);
+        resize_min(
+            &mut self.step_scratch,
+            spec.per_row * n + spec.flat * max_parts.max(1),
+        );
+
+        // SGD + decision workspaces.
+        let mb_max = cfg.minibatch.min(n).max(1);
+        resize_min(&mut self.terms, mb_max * n_basis);
+        if self.term_k.len() < mb_max {
+            self.term_k.resize(mb_max, 0);
+        }
+        resize_min(&mut self.chunk_scratch, max_parts.max(1) * (3 * dim + n_basis));
+        for buf in [
+            &mut self.c,
+            &mut self.grad,
+            &mut self.adam_m,
+            &mut self.adam_v,
+        ] {
+            resize_min(buf, n_basis);
+        }
+        resize_min(&mut self.l_unc_s, n);
+        resize_min(&mut self.l_cor_s, n);
+        if self.kept.len() < n_steps {
+            self.kept.resize(n_steps, false);
+        }
+        self.kept[..n_steps].fill(false);
+        resize_min(&mut self.kept_coords, n_steps.max(1) * n_basis);
+
+        self.le = Some(LossEval::new(&cfg.loss, dim));
+        self.trace.reset_with_capacity(n_steps);
+        Ok(())
+    }
+
+    /// Phase 2: train time point `j` (0-based; paper index `N - j`) and
+    /// advance the rollout. Zero heap allocations in steady state.
+    pub fn train_step(
+        &mut self,
+        solver: &dyn Solver,
+        model: &dyn EpsModel,
+        sched: &Schedule,
+        j: usize,
+    ) -> Result<(), String> {
+        let (n, dim, n_steps) = (self.n, self.dim, self.n_steps);
+        assert_eq!(
+            self.xs.len(),
+            j + 1,
+            "train_step({j}) called out of order (rollout at node {})",
+            self.xs.len()
+        );
+        let n_basis = self.cfg.n_basis;
+        let scale_mode = self.cfg.scale_mode;
+        let i_paper = n_steps - j;
+        let t = sched.ts[j];
+        let t_next = sched.ts[j + 1];
+        let pool = Pool::global();
+
+        // Primary evaluation at the current (corrected) rollout state.
+        let x_cur = self.xs.view().row(j);
+        model.eval_batch(x_cur, n, t, &mut self.d_all[..n * dim]);
+        let ctx = StepCtx {
+            j,
+            i_paper,
+            t,
+            t_next,
+            sched,
+            xs: self.xs.view(),
+            ds: self.ds.view(),
+        };
+        let gamma = solver
+            .gamma(&ctx)
+            .ok_or_else(|| format!("solver {} does not support PAS", solver.name()))?;
+        let spec = solver.scratch_spec(dim, n);
+        // Affine base (step with d = 0) and uncorrected next state, both
+        // through the engine's row-sharded dispatch.
+        step_rows(
+            self.threads,
+            solver,
+            model,
+            &ctx,
+            x_cur,
+            &self.zeros[..n * dim],
+            n,
+            dim,
+            spec,
+            &mut self.step_scratch,
+            &mut self.base[..n * dim],
+        );
+        step_rows(
+            self.threads,
+            solver,
+            model,
+            &ctx,
+            x_cur,
+            &self.d_all[..n * dim],
+            n,
+            dim,
+            spec,
+            &mut self.step_scratch,
+            &mut self.x_next_unc[..n * dim],
+        );
+
+        // Per-sample bases into the store, sharded over the pool with
+        // per-chunk scratch (samples are independent: bit-identical to
+        // the sequential loop for every thread count).
+        let (pchunk, pchunks) = self.part_pca;
+        {
+            let xs_view = self.xs.view();
+            let ds_view = self.ds.view();
+            let d_all = &self.d_all[..n * dim];
+            let stride = self.bases.stride();
+            let (u, ks, dns) = self.bases.raw_parts_mut();
+            let u_ptr = SendPtr::new(u.as_mut_ptr());
+            let k_ptr = SendPtr::new(ks.as_mut_ptr());
+            let dn_ptr = SendPtr::new(dns.as_mut_ptr());
+            let pca_ptr = SendPtr::new(self.pca.as_mut_ptr());
+            pool.run(pchunks, &|ci| {
+                let r0 = ci * pchunk;
+                let r1 = ((ci + 1) * pchunk).min(n);
+                // SAFETY: chunk indices are distinct, so the scratch slot
+                // and every per-sample output range are touched by this
+                // task only.
+                let scratch = unsafe { &mut *pca_ptr.get().add(ci) };
+                for s in r0..r1 {
+                    scratch.clear_q(dim);
+                    scratch.push_q_row(&xs_view.row(0)[s * dim..(s + 1) * dim]);
+                    for jj in 0..j {
+                        scratch.push_q_row(&ds_view.row(jj)[s * dim..(s + 1) * dim]);
+                    }
+                    let u_row = unsafe {
+                        std::slice::from_raw_parts_mut(u_ptr.get().add(s * stride), stride)
+                    };
+                    let (kk, dn) =
+                        pca_basis_into(scratch, &d_all[s * dim..(s + 1) * dim], n_basis, u_row);
+                    unsafe {
+                        *k_ptr.get().add(s) = kk;
+                        *dn_ptr.get().add(s) = dn;
+                    }
+                }
+            });
+        }
+
+        // Initialize coordinates (Eq. 15): c1 anchors the identity
+        // reconstruction; shared across samples, so absolute mode uses
+        // the mean direction norm.
+        self.c[..n_basis].fill(0.0);
+        self.c[0] = match scale_mode {
+            ScaleMode::Absolute => {
+                let mut s = 0.0;
+                for i in 0..n {
+                    s += self.bases.basis(i).d_norm;
+                }
+                s / n as f64
+            }
+            ScaleMode::Relative => 1.0,
+        };
+
+        // SGD/Adam over shared coordinates. Per-sample gradient terms are
+        // computed in parallel, then reduced sequentially in minibatch
+        // order — the reduction is the exact floating-point sum the
+        // sequential reference performs.
+        let gt_node = self.gt.node(j + 1);
+        let slot_len = 3 * dim + n_basis;
+        let sgd_rows = (MIN_SGD_SHARD_ELEMS / dim.max(1)).max(1);
+        let max_parts = self.max_parts();
+        self.adam_m[..n_basis].fill(0.0);
+        self.adam_v[..n_basis].fill(0.0);
+        let mut step_count = 0usize;
+        let (lr, tau) = (self.cfg.lr, self.cfg.tau);
+        let (epochs, minibatch, optimizer) = (self.cfg.epochs, self.cfg.minibatch, self.cfg.optimizer);
+        for _epoch in 0..epochs {
+            self.rng.permutation_into(n, &mut self.perm);
+            let mut mb0 = 0usize;
+            while mb0 < n {
+                let mb1 = (mb0 + minibatch).min(n);
+                let mb = &self.perm[mb0..mb1];
+                let mb_len = mb.len();
+                // Parallel phase: independent per-sample terms
+                // `gs · (U ∇_x loss)` into the staging buffer.
+                {
+                    let le = self.le.as_ref().unwrap();
+                    let bases = &self.bases;
+                    let coords = &self.c[..n_basis];
+                    let base = &self.base[..n * dim];
+                    let terms_ptr = SendPtr::new(self.terms.as_mut_ptr());
+                    let termk_ptr = SendPtr::new(self.term_k.as_mut_ptr());
+                    let slot_ptr = SendPtr::new(self.chunk_scratch.as_mut_ptr());
+                    let (mchunk, mchunks) = pool.partition(mb_len, max_parts, sgd_rows);
+                    pool.run(mchunks, &|ci| {
+                        let r0 = ci * mchunk;
+                        let r1 = ((ci + 1) * mchunk).min(mb_len);
+                        // SAFETY: chunk indices are distinct → disjoint
+                        // scratch slots and term rows.
+                        let slot = unsafe {
+                            std::slice::from_raw_parts_mut(
+                                slot_ptr.get().add(ci * slot_len),
+                                slot_len,
+                            )
+                        };
+                        let (dtilde, rest) = slot.split_at_mut(dim);
+                        let (resid, rest) = rest.split_at_mut(dim);
+                        let (gx, rest) = rest.split_at_mut(dim);
+                        let proj = &mut rest[..n_basis];
+                        for idx in r0..r1 {
+                            let sk = mb[idx];
+                            let b = bases.basis(sk);
+                            unsafe { *termk_ptr.get().add(idx) = b.k };
+                            if b.k == 0 {
+                                continue;
+                            }
+                            let s = match scale_mode {
+                                ScaleMode::Absolute => 1.0,
+                                ScaleMode::Relative => b.d_norm,
+                            };
+                            b.direction_into(coords, dtilde);
+                            for v in dtilde.iter_mut() {
+                                *v *= s;
+                            }
+                            // x' = base + gamma d~ ; residual vs ground truth.
+                            let bk = &base[sk * dim..(sk + 1) * dim];
+                            let gk = &gt_node[sk * dim..(sk + 1) * dim];
+                            for m in 0..dim {
+                                resid[m] = bk[m] + gamma * dtilde[m] - gk[m];
+                            }
+                            le.grad(resid, gx);
+                            // ∇_C = gamma · s · U ∇_x loss — the U·g
+                            // matvec goes through the tiled projection
+                            // kernel.
+                            let gs = gamma * s / mb_len as f64;
+                            b.project_into(gx, proj);
+                            let trow = unsafe {
+                                std::slice::from_raw_parts_mut(
+                                    terms_ptr.get().add(idx * n_basis),
+                                    n_basis,
+                                )
+                            };
+                            for (m, p) in proj.iter().take(b.k).enumerate() {
+                                trow[m] = gs * p;
+                            }
+                        }
+                    });
+                }
+                // Sequential reduction in minibatch order: identical
+                // addition chain to the reference inner loop.
+                self.grad[..n_basis].fill(0.0);
+                for idx in 0..mb_len {
+                    let kk = self.term_k[idx];
+                    for m in 0..kk {
+                        self.grad[m] += self.terms[idx * n_basis + m];
+                    }
+                }
+                step_count += 1;
+                match optimizer {
+                    Optimizer::Sgd => {
+                        for (cm, g) in self.c[..n_basis].iter_mut().zip(self.grad.iter()) {
+                            *cm -= lr * g;
+                        }
+                    }
+                    Optimizer::Adam => {
+                        let (b1, b2, eps) = (0.9, 0.999, 1e-8);
+                        let t_ = step_count as f64;
+                        for m in 0..n_basis {
+                            self.adam_m[m] = b1 * self.adam_m[m] + (1.0 - b1) * self.grad[m];
+                            self.adam_v[m] =
+                                b2 * self.adam_v[m] + (1.0 - b2) * self.grad[m] * self.grad[m];
+                            let mh = self.adam_m[m] / (1.0 - b1.powf(t_));
+                            let vh = self.adam_v[m] / (1.0 - b2.powf(t_));
+                            self.c[m] -= lr * mh / (vh.sqrt() + eps);
+                        }
+                    }
+                }
+                mb0 = mb1;
+            }
+        }
+
+        // Adaptive decision (Eq. 20): per-sample losses in parallel, mean
+        // reduced sequentially in ascending sample order.
+        let (lchunk, lchunks) = self.part_light;
+        {
+            let le = self.le.as_ref().unwrap();
+            let bases = &self.bases;
+            let coords = &self.c[..n_basis];
+            let base = &self.base[..n * dim];
+            let x_unc = &self.x_next_unc[..n * dim];
+            let xc_ptr = SendPtr::new(self.x_next_cor.as_mut_ptr());
+            let lu_ptr = SendPtr::new(self.l_unc_s.as_mut_ptr());
+            let lc_ptr = SendPtr::new(self.l_cor_s.as_mut_ptr());
+            let slot_ptr = SendPtr::new(self.chunk_scratch.as_mut_ptr());
+            pool.run(lchunks, &|ci| {
+                let r0 = ci * lchunk;
+                let r1 = ((ci + 1) * lchunk).min(n);
+                // SAFETY: disjoint chunk → disjoint scratch slot and
+                // per-sample output ranges.
+                let slot = unsafe {
+                    std::slice::from_raw_parts_mut(slot_ptr.get().add(ci * slot_len), slot_len)
+                };
+                let (dtilde, rest) = slot.split_at_mut(dim);
+                let resid = &mut rest[..dim];
+                for s in r0..r1 {
+                    let b = bases.basis(s);
+                    let sc = match scale_mode {
+                        ScaleMode::Absolute => 1.0,
+                        ScaleMode::Relative => b.d_norm,
+                    };
+                    b.direction_into(coords, dtilde);
+                    for v in dtilde.iter_mut() {
+                        *v *= sc;
+                    }
+                    let bk = &base[s * dim..(s + 1) * dim];
+                    let gk = &gt_node[s * dim..(s + 1) * dim];
+                    let xc = unsafe {
+                        std::slice::from_raw_parts_mut(xc_ptr.get().add(s * dim), dim)
+                    };
+                    for m in 0..dim {
+                        xc[m] = bk[m] + gamma * dtilde[m];
+                        resid[m] = xc[m] - gk[m];
+                    }
+                    let lc = le.value(resid);
+                    let xu = &x_unc[s * dim..(s + 1) * dim];
+                    for m in 0..dim {
+                        resid[m] = xu[m] - gk[m];
+                    }
+                    let lu = le.value(resid);
+                    unsafe {
+                        *lc_ptr.get().add(s) = lc;
+                        *lu_ptr.get().add(s) = lu;
+                    }
+                }
+            });
+        }
+        let mut l_unc = 0.0;
+        let mut l_cor = 0.0;
+        for s in 0..n {
+            l_cor += self.l_cor_s[s];
+            l_unc += self.l_unc_s[s];
+        }
+        l_unc /= n as f64;
+        l_cor /= n as f64;
+        let keep = if self.force_all {
+            // PAS(-AS): always store unless training completely diverged
+            // into non-finite territory.
+            self.c[..n_basis].iter().all(|v| v.is_finite())
+        } else {
+            decide(l_unc, l_cor, tau)
+        };
+        self.trace
+            .decisions
+            .push(AdaptiveDecision::evaluate(i_paper, l_unc, l_cor, tau));
+        if self.force_all {
+            self.trace.decisions.last_mut().unwrap().corrected = keep;
+        }
+
+        // Advance the rollout with the kept direction (Alg 1 lines 16–19).
+        if keep {
+            self.kept[j] = true;
+            self.kept_coords[j * n_basis..(j + 1) * n_basis].copy_from_slice(&self.c[..n_basis]);
+            {
+                let bases = &self.bases;
+                let coords = &self.c[..n_basis];
+                let d_all = &self.d_all[..n * dim];
+                let du_ptr = SendPtr::new(self.d_used.as_mut_ptr());
+                let slot_ptr = SendPtr::new(self.chunk_scratch.as_mut_ptr());
+                pool.run(lchunks, &|ci| {
+                    let r0 = ci * lchunk;
+                    let r1 = ((ci + 1) * lchunk).min(n);
+                    // SAFETY: disjoint chunk → disjoint scratch slot and
+                    // direction rows.
+                    let slot = unsafe {
+                        std::slice::from_raw_parts_mut(slot_ptr.get().add(ci * slot_len), slot_len)
+                    };
+                    let dtilde = &mut slot[..dim];
+                    for s in r0..r1 {
+                        let b = bases.basis(s);
+                        let sc = match scale_mode {
+                            ScaleMode::Absolute => 1.0,
+                            ScaleMode::Relative => b.d_norm,
+                        };
+                        b.direction_into(coords, dtilde);
+                        let du = unsafe {
+                            std::slice::from_raw_parts_mut(du_ptr.get().add(s * dim), dim)
+                        };
+                        for (m, v) in dtilde.iter().enumerate() {
+                            du[m] = sc * v;
+                        }
+                        // Guard: an empty basis falls back to the raw
+                        // direction.
+                        if b.k == 0 {
+                            du.copy_from_slice(&d_all[s * dim..(s + 1) * dim]);
+                        }
+                    }
+                });
+            }
+            self.xs.push_row(&self.x_next_cor[..n * dim]);
+            self.ds.push_row(&self.d_used[..n * dim]);
+        } else {
+            // Revert to the plain solver step; discard trained coords.
+            self.xs.push_row(&self.x_next_unc[..n * dim]);
+            self.ds.push_row(&self.d_all[..n * dim]);
+        }
+        Ok(())
+    }
+
+    /// Phase 3: materialize the [`TrainResult`] (dict, curves, trace).
+    pub fn finish(&mut self) -> TrainResult {
+        let (n_steps, n_basis) = (self.n_steps, self.cfg.n_basis);
+        let curve_corrected = truncation_error_curve(self.xs.view(), &self.gt);
+        let mut dict = CoordinateDict::new(
+            n_basis,
+            self.cfg.scale_mode,
+            &self.solver_name,
+            &self.dataset,
+            n_steps,
+        );
+        for j in 0..n_steps {
+            if self.kept[j] {
+                dict.steps.insert(
+                    n_steps - j,
+                    self.kept_coords[j * n_basis..(j + 1) * n_basis].to_vec(),
+                );
+            }
+        }
+        TrainResult {
+            dict,
+            trace: std::mem::take(&mut self.trace),
+            curve_uncorrected: std::mem::take(&mut self.curve_uncorrected),
+            curve_corrected,
+            train_seconds: self.timer.elapsed_s(),
+            teacher_nfe_spent: self.gt.teacher_nfe,
+        }
+    }
+}
+
+/// Grow-only resize (the session's workspace discipline).
+fn resize_min(buf: &mut Vec<f64>, len: usize) {
+    if buf.len() < len {
+        buf.resize(len, 0.0);
+    }
+}
+
 pub struct PasTrainer {
     pub cfg: TrainConfig,
 }
@@ -234,7 +968,37 @@ impl PasTrainer {
     /// [`Self::train`] with an optional teleportation warm start: priors
     /// are drawn at `t_gen` and transported analytically to the schedule's
     /// `t_max` (= `sigma_skip`) before training — the `+TP+PAS` rows.
+    ///
+    /// One-shot wrapper over [`TrainSession`]; long-lived callers (the
+    /// serving-side online trainer, sweeps) hold a session to reuse its
+    /// workspaces across runs.
     pub fn train_tp(
+        &self,
+        solver: &dyn Solver,
+        model: &dyn EpsModel,
+        sched: &Schedule,
+        dataset_name: &str,
+        force_all_steps: bool,
+        teleport: Option<(&crate::pas::teleport::Teleporter, f64)>,
+    ) -> Result<TrainResult, String> {
+        TrainSession::new(self.cfg.clone()).train(
+            solver,
+            model,
+            sched,
+            dataset_name,
+            force_all_steps,
+            teleport,
+        )
+    }
+
+    /// The pre-`TrainSession` sequential monolith, kept verbatim as the
+    /// **bitwise oracle**: `tests/golden_training.rs` asserts the session
+    /// reproduces its trained dict and curves exactly (for every thread
+    /// cap), and `benches/train_time.rs` reports the session's speedup
+    /// over it. Allocates per sample per step (nested rollout rows,
+    /// `TrajBuffer`s, a fresh `Basis` per extraction) — do not use on a
+    /// hot path.
+    pub fn train_tp_reference(
         &self,
         solver: &dyn Solver,
         model: &dyn EpsModel,
@@ -267,7 +1031,7 @@ impl PasTrainer {
 
         // Uncorrected student run for the Figure-3a curve.
         let unc = crate::solvers::run_solver(solver, model, &x_t, n, sched, None);
-        let curve_uncorrected = truncation_error_curve(&unc.xs, &gt);
+        let curve_uncorrected = truncation_error_curve(NodeView::nested(&unc.xs), &gt);
 
         // Live (corrected) rollout state.
         let mut xs: Vec<Vec<f64>> = vec![x_t.clone()];
@@ -319,30 +1083,16 @@ impl PasTrainer {
             let mut sc = StepScratch::new(&mut step_scratch);
             solver.step(model, &ctx, &xs[j], &d_all, n, &mut x_next_unc, &mut sc);
 
-            // Per-sample bases, sharded row-wise over the pool (samples
-            // are independent; same values as the sequential loop).
-            let mut bases: Vec<Option<Basis>> = vec![None; n];
-            {
-                let out = SendPtr::new(bases.as_mut_ptr());
-                let bufs = &buffers;
-                let d_ref = &d_all;
-                Pool::global().par_rows(n, usize::MAX, 1, |r0, r1| {
-                    for k in r0..r1 {
-                        let b = pca_basis(&bufs[k], &d_ref[k * dim..(k + 1) * dim], cfg.n_basis);
-                        // SAFETY: pool row ranges are disjoint.
-                        unsafe { *out.get().add(k) = Some(b) };
-                    }
-                });
-            }
-            let bases: Vec<Basis> = bases.into_iter().map(|b| b.unwrap()).collect();
+            // Per-sample bases (sequential allocating path — the oracle).
+            let bases: Vec<Basis> = (0..n)
+                .map(|k| pca_basis(&buffers[k], &d_all[k * dim..(k + 1) * dim], cfg.n_basis))
+                .collect();
             let scale_of = |b: &Basis| match cfg.scale_mode {
                 ScaleMode::Absolute => 1.0,
                 ScaleMode::Relative => b.d_norm,
             };
 
-            // Initialize coordinates (Eq. 15): c1 anchors the identity
-            // reconstruction; shared across samples, so absolute mode uses
-            // the mean direction norm.
+            // Initialize coordinates (Eq. 15).
             let mut c = vec![0.0; cfg.n_basis];
             c[0] = match cfg.scale_mode {
                 ScaleMode::Absolute => {
@@ -350,10 +1100,9 @@ impl PasTrainer {
                 }
                 ScaleMode::Relative => 1.0,
             };
-            let c_init = c.clone();
 
             // SGD/Adam over shared coordinates.
-            let gt_node = &gt.xs[j + 1];
+            let gt_node = gt.node(j + 1);
             let mut adam_m = vec![0.0; cfg.n_basis];
             let mut adam_v = vec![0.0; cfg.n_basis];
             let mut step_count = 0usize;
@@ -383,9 +1132,7 @@ impl PasTrainer {
                             resid[m] = bk[m] + gamma * dtilde[m] - gk[m];
                         }
                         le.grad(&resid, &mut gx);
-                        // ∇_C = gamma · s · U ∇_x loss — the U·g matvec
-                        // goes through the tiled projection kernel
-                        // (bit-identical to the former per-row dots).
+                        // ∇_C = gamma · s · U ∇_x loss.
                         let gs = gamma * s / chunk.len() as f64;
                         b.project_into(&gx, &mut proj);
                         for (m, g) in grad.iter_mut().take(b.k).enumerate() {
@@ -442,8 +1189,6 @@ impl PasTrainer {
             l_unc /= n as f64;
             l_cor /= n as f64;
             let keep = if force_all_steps {
-                // PAS(-AS): always store unless training completely
-                // diverged into non-finite territory.
                 c.iter().all(|v| v.is_finite())
             } else {
                 decide(l_unc, l_cor, cfg.tau)
@@ -478,8 +1223,6 @@ impl PasTrainer {
                 }
                 ds.push(d_used);
             } else {
-                // Revert to the plain solver step; discard trained coords.
-                let _ = c_init;
                 xs.push(x_next_unc.clone());
                 for k in 0..n {
                     buffers[k].push(&d_all[k * dim..(k + 1) * dim]);
@@ -488,7 +1231,7 @@ impl PasTrainer {
             }
         }
 
-        let curve_corrected = truncation_error_curve(&xs, &gt);
+        let curve_corrected = truncation_error_curve(NodeView::nested(&xs), &gt);
         Ok(TrainResult {
             dict,
             trace,
@@ -565,6 +1308,42 @@ mod tests {
             .train(heun.as_ref(), model.as_ref(), &sched, "gmm2d", false)
             .unwrap_err();
         assert!(err.contains("does not support PAS"), "{err}");
+    }
+
+    /// The session must reproduce the sequential reference monolith
+    /// bitwise — dict coordinates, adaptive trace, and both curves — and
+    /// its workspaces must be cleanly reusable across runs (second run of
+    /// a different shape still matches).
+    #[test]
+    fn session_matches_reference_bitwise_and_reuses_cleanly() {
+        let ds = get("gmm-hd64").unwrap();
+        let model = AnalyticEps::from_dataset(&ds);
+        let solver = solvers::get("ddim").unwrap();
+        let mut session = TrainSession::new(quick_cfg());
+        for (steps, force_all) in [(6usize, false), (4, true), (6, false)] {
+            let sched = default_schedule(steps);
+            let got = session
+                .train(solver.as_ref(), model.as_ref(), &sched, "gmm-hd64", force_all, None)
+                .unwrap();
+            let want = PasTrainer::new(quick_cfg())
+                .train_tp_reference(
+                    solver.as_ref(),
+                    model.as_ref(),
+                    &sched,
+                    "gmm-hd64",
+                    force_all,
+                    None,
+                )
+                .unwrap();
+            assert_eq!(
+                got.dict.steps, want.dict.steps,
+                "dict mismatch (steps={steps}, force_all={force_all})"
+            );
+            assert_eq!(got.curve_uncorrected, want.curve_uncorrected);
+            assert_eq!(got.curve_corrected, want.curve_corrected);
+            assert_eq!(got.trace.corrected_steps(), want.trace.corrected_steps());
+            assert_eq!(got.teacher_nfe_spent, want.teacher_nfe_spent);
+        }
     }
 
     #[test]

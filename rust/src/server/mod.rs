@@ -10,4 +10,4 @@
 pub mod protocol;
 pub mod service;
 
-pub use service::{Service, ServiceConfig, SamplingRequest, SamplingResponse};
+pub use service::{PasTrainStats, Service, ServiceConfig, SamplingRequest, SamplingResponse};

@@ -1,9 +1,18 @@
 //! In-process sampling service: dynamic batching + worker pool +
-//! backpressure. The TCP front-end in [`super::protocol`] is a thin shim
-//! over this, and examples/serve_batch.rs drives it directly.
+//! backpressure + **online PAS training**. The TCP front-end in
+//! [`super::protocol`] is a thin shim over this, and
+//! examples/serve_batch.rs drives it directly.
+//!
+//! Dictionaries are held behind an `RwLock` so [`Service::train_pas`] can
+//! train (or retrain) a `(dataset, solver, nfe)` correction **while
+//! serving traffic** — workers take a cheap read-lock snapshot per batch
+//! (a dict is ≤ ~40 f64s) and are never blocked by an in-flight training
+//! run, which executes on the caller's thread against the service's
+//! persistent, workspace-pooled [`TrainSession`].
 
 use crate::pas::coords::CoordinateDict;
 use crate::pas::correct::CorrectedSampler;
+use crate::pas::train::{TrainConfig, TrainSession};
 use crate::schedule::default_schedule;
 use crate::score::analytic::AnalyticEps;
 use crate::score::EpsModel;
@@ -14,9 +23,12 @@ use crate::util::rng::Pcg64;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, RwLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
+
+/// Shared dictionary registry: `(dataset, solver, nfe) -> dict`.
+type DictMap = HashMap<(String, String, usize), CoordinateDict>;
 
 /// One client request.
 #[derive(Clone, Debug)]
@@ -90,6 +102,20 @@ pub struct Metrics {
     pub rejected: AtomicU64,
     pub batches: AtomicU64,
     pub fused_requests: AtomicU64,
+    /// Dictionaries trained online via [`Service::train_pas`].
+    pub dicts_trained: AtomicU64,
+}
+
+/// Summary of one online [`Service::train_pas`] run.
+#[derive(Clone, Debug)]
+pub struct PasTrainStats {
+    pub n_params: usize,
+    pub corrected_steps: Vec<usize>,
+    pub train_seconds: f64,
+    /// Final-node truncation error of the uncorrected / corrected
+    /// training rollout (the Figure-3 endpoints).
+    pub final_error_uncorrected: f64,
+    pub final_error_corrected: f64,
 }
 
 pub struct Service {
@@ -98,6 +124,11 @@ pub struct Service {
     pub metrics: Arc<Metrics>,
     stop: Arc<AtomicBool>,
     threads: Vec<JoinHandle<()>>,
+    dicts: Arc<RwLock<DictMap>>,
+    /// Persistent training session for [`Service::train_pas`]: its
+    /// workspaces (engine, node stores, basis store, SGD scratch) are
+    /// reused across online training runs.
+    trainer: Mutex<TrainSession>,
 }
 
 impl Service {
@@ -122,7 +153,7 @@ impl Service {
             }));
         }
         // Worker threads.
-        let dicts = Arc::new(index_dicts(dicts));
+        let dicts = Arc::new(RwLock::new(index_dicts(dicts)));
         for w in 0..cfg.workers {
             let wrx = wrx.clone();
             let metrics = metrics.clone();
@@ -138,7 +169,54 @@ impl Service {
             metrics,
             stop,
             threads,
+            dicts,
+            trainer: Mutex::new(TrainSession::new(TrainConfig::default())),
         }
+    }
+
+    /// Train (or retrain) a PAS dictionary for `(dataset, solver, nfe)`
+    /// **online** and register it for `use_pas` requests. Runs on the
+    /// caller's thread against the service's persistent
+    /// [`TrainSession`] — serving workers keep draining batches (they
+    /// only take read-lock snapshots of the dict registry). Concurrent
+    /// `train_pas` calls serialize on the session mutex.
+    pub fn train_pas(
+        &self,
+        dataset: &str,
+        solver_name: &str,
+        nfe: usize,
+        overrides: Option<TrainConfig>,
+    ) -> Result<PasTrainStats, String> {
+        let ds = crate::data::registry::get(dataset)
+            .ok_or_else(|| format!("unknown dataset {dataset}"))?;
+        let solver: Box<dyn Solver> = crate::solvers::registry::get(solver_name)
+            .ok_or_else(|| format!("unknown solver {solver_name}"))?;
+        let steps = solver
+            .steps_for_nfe(nfe)
+            .ok_or_else(|| format!("{solver_name} cannot hit NFE={nfe}"))?;
+        let model = AnalyticEps::from_dataset(&ds);
+        let sched = default_schedule(steps);
+        let tr = {
+            let mut session = self.trainer.lock().unwrap();
+            // Overrides apply to this call only: a `None` call always
+            // trains with the service default config, never a previous
+            // caller's leftover overrides.
+            session.cfg = overrides.unwrap_or_default();
+            session.train(solver.as_ref(), model.as_ref(), &sched, ds.name(), false, None)?
+        };
+        let stats = PasTrainStats {
+            n_params: tr.dict.n_params(),
+            corrected_steps: tr.trace.corrected_steps(),
+            train_seconds: tr.train_seconds,
+            final_error_uncorrected: tr.curve_uncorrected.last().copied().unwrap_or(0.0),
+            final_error_corrected: tr.curve_corrected.last().copied().unwrap_or(0.0),
+        };
+        self.dicts
+            .write()
+            .unwrap()
+            .insert((dataset.to_string(), solver_name.to_string(), nfe), tr.dict);
+        self.metrics.dicts_trained.fetch_add(1, Ordering::Relaxed);
+        Ok(stats)
     }
 
     /// Submit a request; returns a receiver for the response, or an error
@@ -181,7 +259,7 @@ impl Service {
     }
 }
 
-fn index_dicts(dicts: Vec<CoordinateDict>) -> HashMap<(String, String, usize), CoordinateDict> {
+fn index_dicts(dicts: Vec<CoordinateDict>) -> DictMap {
     dicts
         .into_iter()
         .map(|d| ((d.dataset.clone(), d.solver.clone(), d.nfe), d))
@@ -257,7 +335,7 @@ fn worker_loop(
     _id: usize,
     wrx: Arc<Mutex<Receiver<Vec<Pending>>>>,
     metrics: Arc<Metrics>,
-    dicts: Arc<HashMap<(String, String, usize), CoordinateDict>>,
+    dicts: Arc<RwLock<DictMap>>,
     stop: Arc<AtomicBool>,
 ) {
     // One long-lived engine per worker: the serving path never records
@@ -300,7 +378,7 @@ fn fail_all(batch: Vec<Pending>, msg: &str) {
 fn run_batch(
     batch: Vec<Pending>,
     metrics: &Metrics,
-    dicts: &HashMap<(String, String, usize), CoordinateDict>,
+    dicts: &RwLock<DictMap>,
     engine: &mut SamplerEngine,
 ) {
     let req0 = &batch[0].req;
@@ -326,13 +404,19 @@ fn run_batch(
         let mut rng = Pcg64::seed_stream(p.req.seed, p.req.id);
         x_t.extend(sample_prior(&mut rng, p.req.n_samples, dim, sched.t_max()));
     }
+    // Snapshot the dict under a short read lock so an online `train_pas`
+    // never blocks on (or is blocked by) an in-flight solver run.
     let dict = if req0.use_pas {
-        dicts.get(&(req0.dataset.clone(), req0.solver.clone(), req0.nfe))
+        dicts
+            .read()
+            .unwrap()
+            .get(&(req0.dataset.clone(), req0.solver.clone(), req0.nfe))
+            .cloned()
     } else {
         None
     };
     let mut x0 = vec![0.0; n_total * dim];
-    let nfe = match dict {
+    let nfe = match &dict {
         Some(d) => {
             let mut hook = CorrectedSampler::new(d, dim);
             engine.run_into(
@@ -443,6 +527,55 @@ mod tests {
         r.nfe = 5; // odd: not representable
         let resp = svc.call(r).unwrap();
         assert!(resp.error.is_some());
+        svc.shutdown();
+    }
+
+    /// Online training: an empty-dict service trains a correction while
+    /// running, registers it, and subsequent `use_pas` requests pick it
+    /// up (different samples than the uncorrected path, no errors).
+    #[test]
+    fn online_training_registers_dict_and_serves_it() {
+        let svc = Service::start(ServiceConfig::default(), Vec::new());
+        // use_pas before training: silently uncorrected (no dict yet).
+        let mut pas_req = req(16, 9);
+        pas_req.nfe = 8;
+        pas_req.use_pas = true;
+        let before = svc.call(pas_req.clone()).unwrap();
+        assert!(before.error.is_none());
+
+        let stats = svc
+            .train_pas(
+                "gmm2d",
+                "ddim",
+                8,
+                Some(TrainConfig {
+                    n_traj: 48,
+                    epochs: 16,
+                    minibatch: 16,
+                    teacher_nfe: 60,
+                    lr: 5e-2,
+                    scale_mode: crate::pas::coords::ScaleMode::Relative,
+                    ..TrainConfig::default()
+                }),
+            )
+            .unwrap();
+        assert!(stats.n_params > 0, "training must store parameters");
+        assert!(
+            stats.final_error_corrected < stats.final_error_uncorrected,
+            "online training must reduce truncation error: {} -> {}",
+            stats.final_error_uncorrected,
+            stats.final_error_corrected
+        );
+        assert_eq!(svc.metrics.dicts_trained.load(Ordering::Relaxed), 1);
+
+        let after = svc.call(pas_req).unwrap();
+        assert!(after.error.is_none());
+        assert_ne!(
+            before.samples, after.samples,
+            "registered dict must change the corrected samples"
+        );
+        // Unknown config still errors cleanly.
+        assert!(svc.train_pas("nope", "ddim", 8, None).is_err());
         svc.shutdown();
     }
 

@@ -93,6 +93,11 @@ const MIN_SHARD_ELEMS: usize = 4096;
 /// lives in slot `node % cap_rows`. With `cap_rows >= total rows` it is a
 /// plain dense matrix (Record::Full); smaller, it retains the trailing
 /// window only (Record::None).
+///
+/// Besides backing the engine's state/direction workspaces, this is the
+/// repo-wide flat `(node, n·dim)` trajectory container: the PAS trainer's
+/// rollout state and [`crate::traj::GroundTruth`] store nodes here instead
+/// of `Vec<Vec<f64>>`, reading them back through [`NodeView`]s.
 pub struct NodeStore {
     data: Vec<f64>,
     row_len: usize,
@@ -101,7 +106,7 @@ pub struct NodeStore {
 }
 
 impl NodeStore {
-    fn new() -> NodeStore {
+    pub fn new() -> NodeStore {
         NodeStore {
             data: Vec::new(),
             row_len: 0,
@@ -112,7 +117,7 @@ impl NodeStore {
 
     /// Re-shape for a new run; never shrinks the allocation, so repeated
     /// runs of the same shape allocate nothing.
-    fn reset(&mut self, row_len: usize, cap_rows: usize) {
+    pub fn reset(&mut self, row_len: usize, cap_rows: usize) {
         assert!(row_len > 0 && cap_rows > 0);
         self.row_len = row_len;
         self.cap_rows = cap_rows;
@@ -145,11 +150,28 @@ impl NodeStore {
         &self.data[slot * self.row_len..(slot + 1) * self.row_len]
     }
 
-    fn push_row(&mut self, row: &[f64]) {
+    /// Append one committed row (copying it into its slot).
+    pub fn push_row(&mut self, row: &[f64]) {
         assert_eq!(row.len(), self.row_len);
         let slot = self.len % self.cap_rows;
         self.data[slot * self.row_len..(slot + 1) * self.row_len].copy_from_slice(row);
         self.len += 1;
+    }
+
+    /// Read-only [`NodeView`] over the committed rows. With
+    /// `cap_rows >= len` (the dense configuration) every row is reachable;
+    /// ring-backed stores only expose the retained trailing window.
+    pub fn view(&self) -> NodeView<'_> {
+        // A dense store has no in-flight write row, so the view's strict
+        // eviction check (`node + cap_rows > len`) must admit every
+        // committed row — same `+ 1` convention as [`NodeView::flat`].
+        // Slot arithmetic is unaffected: dense rows live at slot == node.
+        let cap = if self.cap_rows >= self.len {
+            self.len + 1
+        } else {
+            self.cap_rows
+        };
+        NodeView::ring(self.data.as_ptr(), self.row_len, self.len, cap)
     }
 
     /// Split into (view of the committed rows, the uncommitted next-row
@@ -367,8 +389,12 @@ impl SamplerEngine {
 /// too: their internal model evaluations become per-chunk `eval_batch`
 /// calls, which is bit-preserving because (and only when) the model is
 /// row-independent — the `rows_independent` guard below.
+///
+/// `pub(crate)` so the PAS [`crate::pas::train::TrainSession`] can drive
+/// its gamma-path solver steps (affine base, uncorrected next state)
+/// through exactly the same sharded dispatch as the engine.
 #[allow(clippy::too_many_arguments)]
-fn step_rows(
+pub(crate) fn step_rows(
     threads: usize,
     solver: &dyn Solver,
     model: &dyn EpsModel,

@@ -1,39 +1,85 @@
 //! Trajectory generation: prior draws, teacher (ground-truth) runs, and
 //! the truncation-error analysis behind Figure 3 ("S"-shaped error).
+//!
+//! Since the training-stack refactor, trajectories live in **flat**
+//! `(node, n·dim)` storage: [`GroundTruth`] keeps its per-node states in a
+//! [`NodeStore`] and teacher rollouts run through a caller-reused
+//! [`SamplerEngine`] (`Record::Full`) instead of materializing a nested
+//! [`crate::solvers::SolveRun`] per call. [`truncation_error_curve`] reads
+//! any trajectory — flat store or legacy nested rows — through a
+//! [`NodeView`].
 
 use crate::schedule::Schedule;
 use crate::score::EpsModel;
-use crate::solvers::{run_solver, Solver};
+use crate::solvers::engine::{NodeStore, Record, SamplerEngine};
+use crate::solvers::{NodeView, Solver};
 use crate::tensor::l2_dist_sq;
 use crate::util::rng::Pcg64;
 
 /// Draw `n` prior samples `x_T ~ N(0, T^2 I)` (EDM prior).
 pub fn sample_prior(rng: &mut Pcg64, n: usize, dim: usize, t_max: f64) -> Vec<f64> {
-    let mut x = rng.normal_vec(n * dim);
-    crate::tensor::scale(t_max, &mut x);
+    let mut x = vec![0.0; n * dim];
+    sample_prior_into(rng, t_max, &mut x);
     x
+}
+
+/// [`sample_prior`] into a caller-owned buffer (already sized `n * dim`):
+/// the training session's zero-steady-state-allocation entry point.
+/// Consumes the RNG stream identically to the allocating form.
+pub fn sample_prior_into(rng: &mut Pcg64, t_max: f64, out: &mut [f64]) {
+    rng.fill_normal(out);
+    crate::tensor::scale(t_max, out);
 }
 
 /// Ground-truth trajectories for a student schedule (paper §3.3).
 ///
 /// The teacher runs `teacher_nfe` model evaluations on the refined grid
 /// that shares every student node; the ground-truth states are read off by
-/// indexing every `(M+1)`-th teacher state.
+/// indexing every `(M+1)`-th teacher state. States are stored flat, one
+/// `(n, dim)` row per student node.
 pub struct GroundTruth {
-    /// Per student node `ts[0..=N]`: states (n, d) flattened.
-    pub xs: Vec<Vec<f64>>,
+    /// Per student node `ts[0..=N]`: states `(n, dim)` flattened, one
+    /// [`NodeStore`] row per node.
+    pub xs: NodeStore,
     pub n: usize,
     pub dim: usize,
     /// NFE the teacher actually spent.
     pub teacher_nfe: usize,
 }
 
+impl GroundTruth {
+    /// Empty shell to be filled by [`ground_truth_into`] (lets a training
+    /// session own and reuse the storage across runs).
+    pub fn empty() -> GroundTruth {
+        GroundTruth {
+            xs: NodeStore::new(),
+            n: 0,
+            dim: 0,
+            teacher_nfe: 0,
+        }
+    }
+
+    /// Number of stored student nodes (`n_steps + 1`).
+    pub fn n_nodes(&self) -> usize {
+        self.xs.len()
+    }
+
+    /// Flat `(n, dim)` ground-truth state at student node `j`.
+    pub fn node(&self, j: usize) -> &[f64] {
+        self.xs.row(j)
+    }
+
+    /// View over all stored nodes.
+    pub fn view(&self) -> NodeView<'_> {
+        self.xs.view()
+    }
+}
+
 /// Generate ground-truth trajectories with an arbitrary teacher solver.
 ///
-/// `teacher_nfe` is a *budget* in model evaluations: the refined grid gets
-/// `N(M+1)` steps with `M` minimal so that `N(M+1) * evals_per_step >=
-/// teacher_nfe` is representable — in practice Heun/100 on a 10-step
-/// student grid refines by M=4 (50 steps × 2 evals).
+/// Convenience wrapper over [`ground_truth_into`] that allocates a
+/// one-shot engine and store; long-lived callers (the PAS
+/// [`crate::pas::train::TrainSession`]) reuse both across runs.
 pub fn ground_truth(
     teacher: &dyn Solver,
     model: &dyn EpsModel,
@@ -42,32 +88,69 @@ pub fn ground_truth(
     student: &Schedule,
     teacher_nfe: usize,
 ) -> GroundTruth {
+    let mut gt = GroundTruth::empty();
+    let mut engine = SamplerEngine::with_record(Record::Full);
+    ground_truth_into(&mut gt, &mut engine, teacher, model, x_t, n, student, teacher_nfe);
+    gt
+}
+
+/// Fill `gt` with ground-truth trajectories, running the teacher through
+/// `engine` (`Record::Full`; its workspace is reused — after the first
+/// run of a given shape the rollout performs no per-step allocation).
+///
+/// `teacher_nfe` is a *budget* in model evaluations: the refined grid gets
+/// `N(M+1)` steps with `M` minimal so that `N(M+1) * evals_per_step >=
+/// teacher_nfe` is representable — in practice Heun/100 on a 10-step
+/// student grid refines by M=4 (50 steps × 2 evals). Bit-identical to the
+/// seed's nested-rows path (the engine is pinned to the legacy driver by
+/// `tests/engine_parity.rs`).
+#[allow(clippy::too_many_arguments)]
+pub fn ground_truth_into(
+    gt: &mut GroundTruth,
+    engine: &mut SamplerEngine,
+    teacher: &dyn Solver,
+    model: &dyn EpsModel,
+    x_t: &[f64],
+    n: usize,
+    student: &Schedule,
+    teacher_nfe: usize,
+) {
     let steps_budget = teacher_nfe / teacher.evals_per_step();
     assert!(steps_budget >= student.n_steps(), "teacher budget too small");
+    assert_eq!(
+        engine.config().record,
+        Record::Full,
+        "ground truth needs the full teacher trajectory"
+    );
     let (m, fine) = student.teacher_for(steps_budget);
-    let run = run_solver(teacher, model, x_t, n, &fine, None);
+    let dim = model.dim();
+    let mut x0 = vec![0.0; n * dim];
+    let nfe = engine.run_into(teacher, model, x_t, n, &fine, None, &mut x0);
     let stride = m + 1;
-    let xs = (0..=student.n_steps())
-        .map(|j| run.xs[j * stride].clone())
-        .collect();
-    GroundTruth {
-        xs,
-        n,
-        dim: model.dim(),
-        teacher_nfe: run.nfe,
+    let teacher_xs = engine.xs().view();
+    gt.xs.reset(n * dim, student.n_steps() + 1);
+    for j in 0..=student.n_steps() {
+        gt.xs.push_row(teacher_xs.row(j * stride));
     }
+    gt.n = n;
+    gt.dim = dim;
+    gt.teacher_nfe = nfe;
 }
 
 /// Per-node mean L2 distance between a student run's states and the ground
 /// truth — the cumulative truncation-error curve of Figure 3. Entry `j`
 /// corresponds to node `ts[j]` (entry 0 is always 0: shared prior draw).
-pub fn truncation_error_curve(student_xs: &[Vec<f64>], gt: &GroundTruth) -> Vec<f64> {
-    assert_eq!(student_xs.len(), gt.xs.len());
+///
+/// `student_xs` is any node-indexed trajectory: wrap legacy nested rows
+/// with [`NodeView::nested`], or pass a flat store's
+/// [`NodeStore::view`] directly.
+pub fn truncation_error_curve(student_xs: NodeView<'_>, gt: &GroundTruth) -> Vec<f64> {
+    assert_eq!(student_xs.len(), gt.n_nodes());
     let (n, d) = (gt.n, gt.dim);
-    student_xs
-        .iter()
-        .zip(gt.xs.iter())
-        .map(|(a, b)| {
+    (0..student_xs.len())
+        .map(|j| {
+            let a = student_xs.row(j);
+            let b = gt.node(j);
             let mut s = 0.0;
             for i in 0..n {
                 s += l2_dist_sq(&a[i * d..(i + 1) * d], &b[i * d..(i + 1) * d]).sqrt();
@@ -109,7 +192,7 @@ mod tests {
     use crate::data::registry::get;
     use crate::schedule::default_schedule;
     use crate::score::analytic::AnalyticEps;
-    use crate::solvers::registry as solvers;
+    use crate::solvers::{registry as solvers, run_solver};
 
     #[test]
     fn prior_scale() {
@@ -117,6 +200,18 @@ mod tests {
         let x = sample_prior(&mut rng, 2000, 2, 80.0);
         let sd = crate::util::std_dev(&x);
         assert!((sd - 80.0).abs() < 2.0, "{sd}");
+    }
+
+    #[test]
+    fn prior_into_matches_allocating_form() {
+        let mut a = Pcg64::seed(7);
+        let mut b = Pcg64::seed(7);
+        let x = sample_prior(&mut a, 5, 3, 80.0);
+        let mut y = vec![0.0; 15];
+        sample_prior_into(&mut b, 80.0, &mut y);
+        assert_eq!(x, y);
+        // RNG streams advanced identically.
+        assert_eq!(a.next_u64(), b.next_u64());
     }
 
     #[test]
@@ -128,9 +223,33 @@ mod tests {
         let x_t = sample_prior(&mut rng, 8, 2, sched.t_max());
         let heun = solvers::get("heun").unwrap();
         let gt = ground_truth(heun.as_ref(), model.as_ref(), &x_t, 8, &sched, 100);
-        assert_eq!(gt.xs.len(), 6);
-        assert_eq!(gt.xs[0], x_t);
+        assert_eq!(gt.n_nodes(), 6);
+        assert_eq!(gt.node(0), &x_t[..]);
         assert!(gt.teacher_nfe >= 100);
+    }
+
+    #[test]
+    fn ground_truth_store_reuse_matches_fresh() {
+        let ds = get("gmm2d").unwrap();
+        let model = AnalyticEps::from_dataset(&ds);
+        let heun = solvers::get("heun").unwrap();
+        let mut gt = GroundTruth::empty();
+        let mut engine = SamplerEngine::with_record(Record::Full);
+        let mut rng = Pcg64::seed(8);
+        // Two runs of different shapes through the same store + engine:
+        // each must match a fresh one-shot computation exactly.
+        for (n, steps) in [(8usize, 5usize), (4, 7)] {
+            let sched = default_schedule(steps);
+            let x_t = sample_prior(&mut rng, n, 2, sched.t_max());
+            ground_truth_into(
+                &mut gt, &mut engine, heun.as_ref(), model.as_ref(), &x_t, n, &sched, 100,
+            );
+            let fresh = ground_truth(heun.as_ref(), model.as_ref(), &x_t, n, &sched, 100);
+            assert_eq!(gt.n_nodes(), fresh.n_nodes());
+            for j in 0..gt.n_nodes() {
+                assert_eq!(gt.node(j), fresh.node(j), "node {j} (n={n})");
+            }
+        }
     }
 
     #[test]
@@ -145,11 +264,11 @@ mod tests {
         // Student: Euler on the same grid.
         let ddim = solvers::get("ddim").unwrap();
         let run = run_solver(ddim.as_ref(), model.as_ref(), &x_t, 16, &sched, None);
-        let curve = truncation_error_curve(&run.xs, &gt);
+        let curve = truncation_error_curve(NodeView::nested(&run.xs), &gt);
         assert_eq!(curve[0], 0.0);
         assert!(curve.last().unwrap() > &0.01, "{curve:?}");
         // GT vs itself is identically zero.
-        let zero = truncation_error_curve(&gt.xs, &gt);
+        let zero = truncation_error_curve(gt.view(), &gt);
         assert!(zero.iter().all(|&v| v == 0.0));
     }
 

@@ -122,12 +122,22 @@ impl Pcg64 {
 
     /// Fisher–Yates shuffle of indices 0..n.
     pub fn permutation(&mut self, n: usize) -> Vec<usize> {
-        let mut idx: Vec<usize> = (0..n).collect();
+        let mut idx = Vec::new();
+        self.permutation_into(n, &mut idx);
+        idx
+    }
+
+    /// [`Self::permutation`] into a reused buffer (cleared and refilled):
+    /// identical RNG consumption and output, zero allocations once the
+    /// buffer's capacity has reached `n`. The PAS trainer draws one of
+    /// these per SGD epoch.
+    pub fn permutation_into(&mut self, n: usize, out: &mut Vec<usize>) {
+        out.clear();
+        out.extend(0..n);
         for i in (1..n).rev() {
             let j = self.below(i + 1);
-            idx.swap(i, j);
+            out.swap(i, j);
         }
-        idx
     }
 }
 

@@ -12,9 +12,12 @@
 //! that previously allocated inside `step`.
 //!
 //! Also audited here (same single test, same counter): the sample-blocked
-//! GEMM eval pipeline of `AnalyticEps::eval_batch` on its own, and the
+//! GEMM eval pipeline of `AnalyticEps::eval_batch` on its own, the
 //! register-tiled matmul kernels (`pas::tensor::gemm`), which work
-//! entirely in caller-owned buffers and must never allocate.
+//! entirely in caller-owned buffers and must never allocate, and the
+//! **PAS training inner loop** — with a warmed `TrainSession`, every
+//! `train_step` (per-sample basis extraction, the full SGD epoch stack,
+//! the adaptive decision and the rollout advance) must be zero-allocation.
 //!
 //! This file contains exactly one `#[test]` so the process-wide
 //! allocation counter is never polluted by a concurrently running test.
@@ -23,6 +26,7 @@
 mod counting_alloc;
 
 use counting_alloc::{CountingAlloc, ALLOC_COUNT};
+use pas::pas::train::{TrainConfig, TrainSession};
 use pas::schedule::default_schedule;
 use pas::score::analytic::AnalyticEps;
 use pas::score::EpsModel;
@@ -155,6 +159,59 @@ fn zero_steady_state_allocs_every_solver_both_record_modes() {
         std::hint::black_box(acc);
         if ld_allocs > 0 {
             failures.push(format!("log_density: {ld_allocs} allocs over 5 calls"));
+        }
+    }
+
+    // The PAS training inner loop: a warmed TrainSession must run every
+    // train_step — basis extraction into the BasisStore, all SGD epochs
+    // (permutation draws included), the adaptive decision and the rollout
+    // advance — without a single heap allocation. `begin`/`finish` are
+    // run-level and may allocate (curves, dict, result); they stay
+    // outside the measured window.
+    {
+        let ds = pas::data::registry::get("gmm-hd64").unwrap();
+        let model = AnalyticEps::from_dataset(&ds);
+        let solver = registry::get("ddim").unwrap();
+        let sched = default_schedule(5);
+        let cfg = TrainConfig {
+            n_traj: 48,
+            epochs: 8,
+            minibatch: 16,
+            teacher_nfe: 60,
+            ..TrainConfig::default()
+        };
+        let mut session = TrainSession::new(cfg);
+        // Warm-up: one full run sizes every workspace (engine node
+        // stores, basis store, per-chunk PCA scratch at its deepest
+        // trajectory, SGD staging, permutation buffer).
+        session
+            .train(solver.as_ref(), model.as_ref(), &sched, "gmm-hd64", false, None)
+            .unwrap();
+        let measure_steps = |session: &mut TrainSession| {
+            session
+                .begin(solver.as_ref(), model.as_ref(), &sched, "gmm-hd64", false, None)
+                .unwrap();
+            let before = ALLOC_COUNT.load(Ordering::SeqCst);
+            for j in 0..session.n_steps() {
+                session
+                    .train_step(solver.as_ref(), model.as_ref(), &sched, j)
+                    .unwrap();
+            }
+            let allocs = ALLOC_COUNT.load(Ordering::SeqCst) - before;
+            let _ = session.finish();
+            allocs
+        };
+        let mut allocs = measure_steps(&mut session);
+        if allocs > 0 {
+            // Same one-retry shield as above (a pool worker that raced
+            // out of every warm-up dispatch initializes its thread-local
+            // scratch once).
+            allocs = measure_steps(&mut session);
+        }
+        if allocs > 0 {
+            failures.push(format!(
+                "training inner loop (gmm-hd64, ddim@5): {allocs} allocs across 5 train_steps"
+            ));
         }
     }
 

@@ -1,0 +1,157 @@
+//! Golden training fixture: a fixed-seed trained [`CoordinateDict`] pinned
+//! **bitwise** against a checked-in fixture, across shard caps {1, 2, 16}
+//! — so refactors of the training stack cannot silently move a single bit
+//! of the learned coordinates, and the sharded `TrainSession` stays
+//! exactly deterministic for every thread count.
+//!
+//! Three pins, one config (DDIM @ 6 steps on gmm-hd64, quick
+//! hyperparameters):
+//!
+//! 1. **Thread invariance:** `TrainSession::with_threads(cfg, t)` for
+//!    t ∈ {1, 2, 16} produces identical dicts (coordinates compared by
+//!    f64 bits) and identical curves.
+//! 2. **Oracle parity:** the session reproduces
+//!    `PasTrainer::train_tp_reference` — the pre-refactor sequential
+//!    monolith — bit for bit.
+//! 3. **Fixture stability:** the dict matches
+//!    `tests/fixtures/golden_training.txt`. Like
+//!    `golden_trajectories.rs`, the fixture **self-bootstraps**: when the
+//!    file is missing it is written from the oracle and a reminder to
+//!    commit it is printed. Delete the file to intentionally re-pin.
+
+use pas::pas::coords::{CoordinateDict, ScaleMode};
+use pas::pas::train::{PasTrainer, TrainConfig, TrainSession};
+use pas::schedule::default_schedule;
+use pas::score::analytic::AnalyticEps;
+use pas::solvers::registry;
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::path::PathBuf;
+
+const DATASET: &str = "gmm-hd64";
+const SOLVER: &str = "ddim";
+const N_STEPS: usize = 6;
+
+fn golden_cfg() -> TrainConfig {
+    TrainConfig {
+        n_traj: 48,
+        epochs: 24,
+        minibatch: 16,
+        teacher_nfe: 60,
+        lr: 5e-2,
+        scale_mode: ScaleMode::Relative,
+        seed: 424242,
+        ..TrainConfig::default()
+    }
+}
+
+fn fixture_path() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("tests")
+        .join("fixtures")
+        .join("golden_training.txt")
+}
+
+/// Dict coordinates as per-step f64 bit patterns.
+fn dict_bits(dict: &CoordinateDict) -> BTreeMap<usize, Vec<u64>> {
+    dict.steps
+        .iter()
+        .map(|(i, c)| (*i, c.iter().map(|v| v.to_bits()).collect()))
+        .collect()
+}
+
+fn render(bits: &BTreeMap<usize, Vec<u64>>) -> String {
+    let mut out = String::from(
+        "# Golden trained coordinates (bitwise): `step_i hex(coord f64 bits)...`\n\
+         # Written by tests/golden_training.rs; delete to regenerate.\n",
+    );
+    for (i, coords) in bits {
+        let mut line = format!("{i}");
+        for b in coords {
+            write!(line, " {b:016x}").unwrap();
+        }
+        out.push_str(&line);
+        out.push('\n');
+    }
+    out
+}
+
+fn parse_fixture(text: &str) -> BTreeMap<usize, Vec<u64>> {
+    let mut out = BTreeMap::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        let i: usize = it.next().expect("step index").parse().expect("step index");
+        let bits: Vec<u64> = it
+            .map(|h| u64::from_str_radix(h, 16).expect("fixture hex"))
+            .collect();
+        out.insert(i, bits);
+    }
+    out
+}
+
+#[test]
+fn trained_dict_is_bitwise_stable_across_thread_caps() {
+    let ds = pas::data::registry::get(DATASET).unwrap();
+    let model = AnalyticEps::from_dataset(&ds);
+    let solver = registry::get(SOLVER).unwrap();
+    let sched = default_schedule(N_STEPS);
+    let cfg = golden_cfg();
+
+    // Oracle: the sequential pre-refactor path.
+    let oracle = PasTrainer::new(cfg.clone())
+        .train_tp_reference(solver.as_ref(), model.as_ref(), &sched, DATASET, false, None)
+        .unwrap();
+    assert!(
+        !oracle.dict.steps.is_empty(),
+        "golden config must correct at least one step for the pin to be meaningful"
+    );
+    let want = dict_bits(&oracle.dict);
+
+    // Sessions at every shard cap must reproduce the oracle exactly.
+    for threads in [1usize, 2, 16] {
+        let got = TrainSession::with_threads(cfg.clone(), threads)
+            .train(solver.as_ref(), model.as_ref(), &sched, DATASET, false, None)
+            .unwrap();
+        assert_eq!(
+            dict_bits(&got.dict),
+            want,
+            "trained dict diverged from the sequential oracle at threads={threads}"
+        );
+        assert_eq!(
+            got.curve_corrected, oracle.curve_corrected,
+            "corrected curve diverged at threads={threads}"
+        );
+        assert_eq!(
+            got.curve_uncorrected, oracle.curve_uncorrected,
+            "uncorrected curve diverged at threads={threads}"
+        );
+    }
+
+    // Fixture pin (self-bootstrapping, like golden_trajectories.rs).
+    let path = fixture_path();
+    match std::fs::read_to_string(&path) {
+        Ok(text) => {
+            let fixture = parse_fixture(&text);
+            assert_eq!(
+                want,
+                fixture,
+                "trained coordinates drifted bitwise from the fixture \
+                 (delete {} to intentionally re-pin)",
+                path.display()
+            );
+        }
+        Err(_) => {
+            std::fs::create_dir_all(path.parent().unwrap()).expect("create fixtures dir");
+            std::fs::write(&path, render(&want)).expect("write fixture");
+            eprintln!(
+                "golden_training: bootstrapped fixture ({} corrected steps) — commit {}",
+                want.len(),
+                path.display()
+            );
+        }
+    }
+}
