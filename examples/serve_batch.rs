@@ -33,6 +33,7 @@ fn main() {
             max_batch: 512,
             batch_window: Duration::from_millis(4),
             queue_depth: 512,
+            ..ServiceConfig::default()
         },
         vec![dict],
     );

@@ -12,6 +12,7 @@ fn run_load(workers: usize, requests: usize, n_per_req: usize) {
             max_batch: 512,
             batch_window: Duration::from_millis(2),
             queue_depth: 1024,
+            ..ServiceConfig::default()
         },
         Vec::new(),
     );

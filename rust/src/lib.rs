@@ -42,7 +42,7 @@ pub mod prelude {
     pub use crate::pas::train::{PasTrainer, TrainConfig, TrainSession};
     pub use crate::schedule::Schedule;
     pub use crate::score::EpsModel;
-    pub use crate::solvers::engine::{EngineConfig, Record, SamplerEngine};
+    pub use crate::solvers::engine::{EngineConfig, Record, SamplerEngine, SlotEngine};
     pub use crate::solvers::{SolveRun, Solver};
     pub use crate::util::rng::Pcg64;
 }

@@ -13,6 +13,7 @@ use crate::schedule::Schedule;
 use crate::score::EpsModel;
 use crate::solvers::{run_solver, DirectionHook, SolveRun, Solver, StepCtx};
 use crate::util::pool::{Pool, SendPtr};
+use std::borrow::Cow;
 
 thread_local! {
     /// Per-worker PCA workspace for the correction hot path: the scratch
@@ -23,8 +24,18 @@ thread_local! {
         std::cell::RefCell::new((PcaScratch::new(), Vec::new()));
 }
 
+/// The correction state — one trajectory buffer `Q` per batch row — is
+/// **per slot**: rows are seeded together at the run's first step and
+/// advance in lockstep, so one hook serves a whole engine batch (or a
+/// continuous-batching cohort, which is admitted and retired as a unit).
+///
+/// The dictionary is held as a [`Cow`]: experiment/test call sites borrow
+/// a caller-owned dict ([`Self::new`]); the serving scheduler snapshots
+/// the live registry per cohort and hands the hook its own copy
+/// ([`Self::owned`]) so corrections stay self-contained while the
+/// registry keeps retraining underneath.
 pub struct CorrectedSampler<'a> {
-    pub dict: &'a CoordinateDict,
+    pub dict: Cow<'a, CoordinateDict>,
     buffers: Vec<TrajBuffer>,
     dim: usize,
     /// Number of corrections applied so far (for tests / stats).
@@ -34,7 +45,18 @@ pub struct CorrectedSampler<'a> {
 impl<'a> CorrectedSampler<'a> {
     pub fn new(dict: &'a CoordinateDict, dim: usize) -> CorrectedSampler<'a> {
         CorrectedSampler {
-            dict,
+            dict: Cow::Borrowed(dict),
+            buffers: Vec::new(),
+            dim,
+            corrections_applied: 0,
+        }
+    }
+
+    /// Hook that owns its dictionary snapshot (no borrow to keep alive) —
+    /// the continuous scheduler's per-cohort form.
+    pub fn owned(dict: CoordinateDict, dim: usize) -> CorrectedSampler<'static> {
+        CorrectedSampler {
+            dict: Cow::Owned(dict),
             buffers: Vec::new(),
             dim,
             corrections_applied: 0,

@@ -44,6 +44,9 @@ impl Schedule {
 
     /// Uniform grid in t.
     pub fn uniform(n: usize, t_min: f64, t_max: f64) -> Schedule {
+        // Same contract as `polynomial`: without it, n = 0 divides 0/0
+        // into a NaN grid that propagates silently into solver steps.
+        assert!(n >= 1 && t_min > 0.0 && t_max > t_min);
         let ts = (0..=n)
             .map(|j| t_max - (t_max - t_min) * j as f64 / n as f64)
             .collect();
@@ -55,6 +58,9 @@ impl Schedule {
 
     /// Uniform in log-SNR (for EDM, lambda = -log t ⇒ geometric t grid).
     pub fn log_snr(n: usize, t_min: f64, t_max: f64) -> Schedule {
+        // Same contract as `polynomial`; `t_min > 0` additionally guards
+        // the `ln` below (t_min = 0 would put -inf in the grid).
+        assert!(n >= 1 && t_min > 0.0 && t_max > t_min);
         let (la, lb) = (t_max.ln(), t_min.ln());
         let ts = (0..=n)
             .map(|j| (la + (lb - la) * j as f64 / n as f64).exp())
@@ -163,6 +169,24 @@ mod tests {
         assert_eq!(teacher.n_steps(), 6 * (m + 1));
         // m is minimal.
         assert!(6 * m < 100);
+    }
+
+    #[test]
+    #[should_panic]
+    fn uniform_rejects_zero_steps() {
+        let _ = Schedule::uniform(0, 0.002, 80.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn log_snr_rejects_zero_t_min() {
+        let _ = Schedule::log_snr(4, 0.0, 80.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn uniform_rejects_inverted_range() {
+        let _ = Schedule::uniform(4, 80.0, 0.002);
     }
 
     #[test]

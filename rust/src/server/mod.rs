@@ -1,13 +1,36 @@
 //! Batched sampling service (L3 "serving" path).
 //!
-//! A threaded coordinator in the vLLM-router mold, scaled to this system:
-//! clients submit sampling requests (`dataset, solver, nfe, n, pas?`);
-//! a **dynamic batcher** groups compatible requests (same model/solver/
-//! schedule/correction) into worker batches up to `max_batch`, bounded
-//! queues provide **backpressure**, and a worker pool drives the samplers.
-//! The TCP front-end speaks line-delimited JSON ([`protocol`]).
+//! A threaded coordinator in the vLLM-router mold, scaled to this system
+//! — and, like vLLM, **continuously batched**: the default scheduler
+//! ([`service::Batching::Continuous`]) keeps one resident engine run per
+//! compatibility key (`dataset, solver, nfe, pas?`) and changes its row
+//! population at **step boundaries**. Requests are admitted into free
+//! slots while earlier requests are mid-flight (each row carries its own
+//! step cursor into the shared schedule, with per-slot ring history so
+//! multistep solvers' lookback stays correct at mixed depths), and
+//! finished rows retire — and reply — the moment their last step
+//! completes. Tail latency under staggered arrivals is bounded by step
+//! duration instead of whole-rollout duration.
+//!
+//! **Admission policy:** FIFO per key under the `max_batch` residency cap
+//! (oversized requests run alone on an empty engine); requests admitted
+//! at the same boundary form one lockstep cohort. **Determinism
+//! contract:** every response is bit-identical to running that request
+//! alone, for every admission interleaving and thread count — enforced by
+//! parity tests over randomized mid-flight admission × engine thread caps
+//! {1, 4, 16}. The seed's collect-then-run batcher survives behind
+//! [`service::Batching::CollectThenRun`] as the latency baseline
+//! (`benches/continuous_batching.rs`).
+//!
+//! Bounded queues provide **backpressure** (per key under the continuous
+//! scheduler), and the TCP front-end speaks strictly-validated
+//! line-delimited JSON ([`protocol`]): unknown datasets/solvers,
+//! out-of-range `n`, and inexact or negative seeds are structured errors,
+//! never silent rewrites.
 
 pub mod protocol;
 pub mod service;
 
-pub use service::{PasTrainStats, Service, ServiceConfig, SamplingRequest, SamplingResponse};
+pub use service::{
+    Batching, PasTrainStats, SamplingRequest, SamplingResponse, Service, ServiceConfig,
+};

@@ -5,7 +5,16 @@
 //!
 //! Response line:
 //! `{"id":1,"n":16,"dim":2,"nfe":10,"batched_with":3,"latency_ms":4.2,
-//!   "samples":[...]}` or `{"error":"..."}`.
+//!   "queue_ms":0.3,"run_ms":3.9,"samples":[...]}` or `{"error":"..."}`.
+//!
+//! Parsing is strict where silence would mis-serve: an unknown `dataset`
+//! or `solver` is an error (not a silent fall-back to the default model),
+//! `n` outside `1..=MAX_N` and `nfe` outside `1..=MAX_NFE` are errors
+//! (not silent clamps), and `seed`
+//! must be an exact non-negative integer — it is matched against the
+//! request's RNG stream bit-for-bit, so values parsed through f64 (which
+//! loses precision above 2^53) or negative values are rejected. Absent
+//! fields still take the documented defaults.
 
 use super::service::{SamplingRequest, Service};
 use crate::util::json::Json;
@@ -14,24 +23,77 @@ use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
+/// Largest per-request batch the front-end accepts.
+pub const MAX_N: usize = 4096;
+
+/// Largest NFE budget the front-end accepts. Unbounded `nfe` would let a
+/// single request allocate an `nfe + 1`-node schedule (and spend that
+/// many model evaluations) on a worker thread.
+pub const MAX_NFE: usize = 10_000;
+
 pub fn parse_request(line: &str) -> Result<SamplingRequest, String> {
     let j = Json::parse(line)?;
+    let dataset = match j.get("dataset") {
+        None => "gmm-hd64".to_string(),
+        Some(v) => v
+            .as_str()
+            .ok_or("\"dataset\" must be a string")?
+            .to_string(),
+    };
+    // Name check only — constructing the dataset here would run its mode
+    // generators (eigendecompositions) once per request just to validate
+    // a string.
+    if !crate::data::registry::ALL.contains(&dataset.as_str()) {
+        return Err(format!("unknown dataset \"{dataset}\""));
+    }
+    let solver = match j.get("solver") {
+        None => "ddim".to_string(),
+        Some(v) => v.as_str().ok_or("\"solver\" must be a string")?.to_string(),
+    };
+    if crate::solvers::registry::get(&solver).is_none() {
+        return Err(format!("unknown solver \"{solver}\""));
+    }
+    let nfe = match j.get("nfe") {
+        None => 10,
+        Some(v) => {
+            let nfe = v.as_usize().ok_or("\"nfe\" must be a positive integer")?;
+            if !(1..=MAX_NFE).contains(&nfe) {
+                return Err(format!("\"nfe\" must be in 1..={MAX_NFE} (got {nfe})"));
+            }
+            nfe
+        }
+    };
+    let n_samples = match j.get("n") {
+        None => 1,
+        Some(v) => {
+            let n = v.as_usize().ok_or("\"n\" must be a positive integer")?;
+            if !(1..=MAX_N).contains(&n) {
+                return Err(format!("\"n\" must be in 1..={MAX_N} (got {n})"));
+            }
+            n
+        }
+    };
+    // Exact u64 parse from the integer token: `as_u64` refuses negatives,
+    // fractions, and float-typed values above 2^53, so a seed never loses
+    // precision silently.
+    let seed = match j.get("seed") {
+        None => 0,
+        Some(v) => v
+            .as_u64()
+            .ok_or("\"seed\" must be a non-negative integer (full u64 range)")?,
+    };
+    let use_pas = match j.get("pas") {
+        None => false,
+        Some(v) => v.as_bool().ok_or("\"pas\" must be a boolean")?,
+    };
     Ok(SamplingRequest {
         id: 0,
-        dataset: j
-            .get("dataset")
-            .and_then(|v| v.as_str())
-            .unwrap_or("gmm-hd64")
-            .to_string(),
-        solver: j
-            .get("solver")
-            .and_then(|v| v.as_str())
-            .unwrap_or("ddim")
-            .to_string(),
-        nfe: j.get("nfe").and_then(|v| v.as_usize()).unwrap_or(10),
-        n_samples: j.get("n").and_then(|v| v.as_usize()).unwrap_or(1).clamp(1, 4096),
-        seed: j.get("seed").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64,
-        use_pas: j.get("pas").and_then(|v| v.as_bool()).unwrap_or(false),
+        dataset,
+        solver,
+        nfe,
+        n_samples,
+        seed,
+        use_pas,
     })
 }
 
@@ -41,12 +103,14 @@ pub fn response_json(resp: &super::service::SamplingResponse) -> Json {
         o.set("error", Json::Str(e.clone()));
         return o;
     }
-    o.set("id", Json::Num(resp.id as f64))
+    o.set("id", Json::UInt(resp.id))
         .set("n", Json::Num(resp.n as f64))
         .set("dim", Json::Num(resp.dim as f64))
         .set("nfe", Json::Num(resp.nfe_spent as f64))
         .set("batched_with", Json::Num(resp.batched_with as f64))
         .set("latency_ms", Json::Num(resp.latency_ms))
+        .set("queue_ms", Json::Num(resp.queue_ms))
+        .set("run_ms", Json::Num(resp.run_ms))
         .set("samples", Json::from_f64_slice(&resp.samples));
     o
 }
@@ -127,6 +191,55 @@ mod tests {
         assert_eq!(r.nfe, 8);
         assert_eq!(r.n_samples, 4);
         assert!(!r.use_pas);
+    }
+
+    #[test]
+    fn absent_fields_take_defaults() {
+        let r = parse_request("{}").unwrap();
+        assert_eq!(r.dataset, "gmm-hd64");
+        assert_eq!(r.solver, "ddim");
+        assert_eq!(r.nfe, 10);
+        assert_eq!(r.n_samples, 1);
+        assert_eq!(r.seed, 0);
+        assert!(!r.use_pas);
+    }
+
+    /// Seeds parse exactly from the raw integer token across the full u64
+    /// range; negatives and lossy encodings are rejected.
+    #[test]
+    fn seed_roundtrips_exactly() {
+        for seed in [0u64, (1 << 53) - 1, (1 << 53) + 1, u64::MAX - 1, u64::MAX] {
+            let r = parse_request(&format!(r#"{{"dataset":"gmm2d","seed":{seed}}}"#)).unwrap();
+            assert_eq!(r.seed, seed, "seed {seed} must survive parsing bit-for-bit");
+        }
+        for bad in ["-1", "-9007199254740993", "1.5", "\"7\"", "18446744073709551616"] {
+            let e = parse_request(&format!(r#"{{"dataset":"gmm2d","seed":{bad}}}"#));
+            assert!(e.is_err(), "seed {bad} must be rejected, got {e:?}");
+        }
+    }
+
+    /// Mistyped or unknown dataset/solver/n values produce errors instead
+    /// of silently serving the default model or a clamped batch.
+    #[test]
+    fn unknown_fields_error_instead_of_defaulting() {
+        for (line, needle) in [
+            (r#"{"dataset":"gmm2d-typo"}"#, "unknown dataset"),
+            (r#"{"dataset":42}"#, "must be a string"),
+            (r#"{"solver":"ddimm"}"#, "unknown solver"),
+            (r#"{"solver":false}"#, "must be a string"),
+            (r#"{"n":0}"#, "\"n\" must be in"),
+            (r#"{"n":4097}"#, "\"n\" must be in"),
+            (r#"{"n":"many"}"#, "positive integer"),
+            (r#"{"nfe":0}"#, "\"nfe\" must be in"),
+            (r#"{"nfe":-4}"#, "positive integer"),
+            (r#"{"nfe":1000000000000000000}"#, "\"nfe\" must be in"),
+            (r#"{"pas":"yes"}"#, "boolean"),
+        ] {
+            match parse_request(line) {
+                Err(e) => assert!(e.contains(needle), "{line}: {e}"),
+                Ok(r) => panic!("{line} must be rejected, parsed {r:?}"),
+            }
+        }
     }
 
     #[test]

@@ -1,28 +1,67 @@
-//! In-process sampling service: dynamic batching + worker pool +
-//! backpressure + **online PAS training**. The TCP front-end in
-//! [`super::protocol`] is a thin shim over this, and
+//! In-process sampling service: **step-level continuous batching** +
+//! worker pool + backpressure + **online PAS training**. The TCP
+//! front-end in [`super::protocol`] is a thin shim over this, and
 //! examples/serve_batch.rs drives it directly.
+//!
+//! # Scheduling
+//!
+//! The default scheduler ([`Batching::Continuous`]) runs one **resident
+//! engine run per compatibility key** (`dataset, solver, nfe, pas`) on a
+//! [`SlotEngine`]: requests are admitted into free slots **at step
+//! boundaries** while earlier requests are mid-flight, every row carries
+//! its own step cursor into the shared schedule, and finished rows retire
+//! — and their responses are sent — the moment their last step completes.
+//! Tail latency under staggered arrivals is therefore bounded by *step*
+//! duration, not whole-batch rollout duration (the vLLM-style property,
+//! transplanted from token steps to solver steps).
+//!
+//! * **Admission policy.** FIFO per key. A request is admitted when its
+//!   rows fit under the `max_batch` residency cap (an oversized request
+//!   is admitted alone when the engine is empty). Requests admitted at
+//!   the same boundary form one *cohort* — rows in lockstep — and every
+//!   cohort steps once per scheduler tick. A worker yields a hot key back
+//!   to the dispatch queue after [`YIELD_AFTER_TICKS`] ticks (residents
+//!   drain first) so one key cannot starve others, and a panicking
+//!   resident run fails its queued requests and deactivates the key
+//!   instead of stranding them ([`KeyGuard`]).
+//! * **Determinism contract.** Each request's samples are bit-identical
+//!   to running that request alone (same seed/id prior via
+//!   [`sample_prior_stream`], same engine arithmetic), for every
+//!   admission interleaving and thread count — rows are independent end
+//!   to end, so continuous batching is an indexing change, not a numerics
+//!   change. Enforced by this module's parity tests across randomized
+//!   admission offsets × engine thread caps {1, 4, 16}.
+//! * **Correction state.** `use_pas` cohorts snapshot the dictionary
+//!   registry at admission into a per-cohort, owned
+//!   [`CorrectedSampler`], whose per-row trajectory buffers live and die
+//!   with the cohort's slots.
+//!
+//! The seed's collect-then-run batcher is retained behind
+//! [`Batching::CollectThenRun`] as the latency baseline
+//! (`benches/continuous_batching.rs` measures both under staggered
+//! arrivals) and as a fallback.
+//!
+//! # Online training
 //!
 //! Dictionaries are held behind an `RwLock` so [`Service::train_pas`] can
 //! train (or retrain) a `(dataset, solver, nfe)` correction **while
-//! serving traffic** — workers take a cheap read-lock snapshot per batch
-//! (a dict is ≤ ~40 f64s) and are never blocked by an in-flight training
-//! run, which executes on the caller's thread against the service's
-//! persistent, workspace-pooled [`TrainSession`].
+//! serving traffic** — schedulers take a cheap read-lock snapshot per
+//! cohort (a dict is ≤ ~40 f64s) and are never blocked by an in-flight
+//! training run, which executes on the caller's thread against the
+//! service's persistent, workspace-pooled [`TrainSession`].
 
 use crate::pas::coords::CoordinateDict;
 use crate::pas::correct::CorrectedSampler;
 use crate::pas::train::{TrainConfig, TrainSession};
-use crate::schedule::default_schedule;
+use crate::schedule::{default_schedule, Schedule};
 use crate::score::analytic::AnalyticEps;
 use crate::score::EpsModel;
-use crate::solvers::engine::{Record, SamplerEngine};
-use crate::solvers::Solver;
-use crate::traj::sample_prior;
-use crate::util::rng::Pcg64;
-use std::collections::HashMap;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use crate::solvers::engine::{Record, SamplerEngine, SlotEngine};
+use crate::solvers::{DirectionHook, Solver};
+use crate::traj::sample_prior_stream;
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex, RwLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -52,20 +91,45 @@ pub struct SamplingResponse {
     pub n: usize,
     pub dim: usize,
     pub nfe_spent: usize,
+    /// Peak number of requests co-resident with this one (continuous
+    /// scheduler) / fused into its batch (collect-then-run).
     pub batched_with: usize,
+    /// End-to-end latency (submit → response).
     pub latency_ms: f64,
+    /// Time spent queued before the scheduler admitted the request.
+    pub queue_ms: f64,
+    /// Time from admission to the final solver step.
+    pub run_ms: f64,
     pub error: Option<String>,
+}
+
+/// How the service groups requests into solver work.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Batching {
+    /// Step-level continuous batching (default): per-key resident engine
+    /// runs; admission/retirement at step boundaries.
+    Continuous,
+    /// The seed's collect-then-run batcher: gather compatible requests
+    /// for `batch_window`, run the fused batch to completion.
+    CollectThenRun,
 }
 
 #[derive(Clone, Debug)]
 pub struct ServiceConfig {
     pub workers: usize,
-    /// Max trajectories fused into one solver run.
+    /// Residency cap: max trajectories resident in one engine run
+    /// (continuous) / fused into one solver run (collect-then-run).
     pub max_batch: usize,
-    /// How long the batcher waits to fill a batch.
+    /// How long the collect-then-run batcher waits to fill a batch
+    /// (unused by the continuous scheduler, which admits at step
+    /// boundaries instead of on a timer).
     pub batch_window: Duration,
-    /// Bounded queue depth (backpressure: submit blocks / rejects beyond this).
+    /// Bounded queue depth (backpressure: submit rejects beyond this).
     pub queue_depth: usize,
+    pub batching: Batching,
+    /// Row-shard cap for the engines (`0` = pool size). Results are
+    /// bit-identical for every value; tests pin {1, 4, 16}.
+    pub engine_threads: usize,
 }
 
 impl Default for ServiceConfig {
@@ -75,6 +139,8 @@ impl Default for ServiceConfig {
             max_batch: 256,
             batch_window: Duration::from_millis(2),
             queue_depth: 256,
+            batching: Batching::Continuous,
+            engine_threads: 0,
         }
     }
 }
@@ -85,7 +151,7 @@ struct Pending {
     reply: SyncSender<SamplingResponse>,
 }
 
-/// Batch key: requests sharing it can be fused into one solver run.
+/// Batch key: requests sharing it can run in one resident engine run.
 #[derive(Clone, PartialEq, Eq, Hash, Debug)]
 struct BatchKey {
     dataset: String,
@@ -94,14 +160,31 @@ struct BatchKey {
     use_pas: bool,
 }
 
+impl BatchKey {
+    fn of(req: &SamplingRequest) -> BatchKey {
+        BatchKey {
+            dataset: req.dataset.clone(),
+            solver: req.solver.clone(),
+            nfe: req.nfe,
+            use_pas: req.use_pas,
+        }
+    }
+}
+
 /// Service metrics (exposed via `stats`).
 #[derive(Default)]
 pub struct Metrics {
     pub requests: AtomicU64,
     pub completed: AtomicU64,
     pub rejected: AtomicU64,
+    /// Cohorts formed (continuous) / batches fused (collect-then-run).
     pub batches: AtomicU64,
     pub fused_requests: AtomicU64,
+    /// Requests admitted into a resident run that already had earlier
+    /// cohorts mid-flight — the continuous scheduler's reason to exist.
+    pub admitted_mid_flight: AtomicU64,
+    /// Scheduler ticks (one solver step for every resident cohort).
+    pub ticks: AtomicU64,
     /// Dictionaries trained online via [`Service::train_pas`].
     pub dicts_trained: AtomicU64,
 }
@@ -118,8 +201,99 @@ pub struct PasTrainStats {
     pub final_error_corrected: f64,
 }
 
+/// Per-key request queue; `active` is true while some worker owns the
+/// key's resident run.
+struct KeyState {
+    queue: VecDeque<Pending>,
+    active: bool,
+}
+
+type KeyHandle = (BatchKey, Arc<Mutex<KeyState>>);
+
+/// Key-table size that triggers an opportunistic sweep of idle entries
+/// (inactive, empty queue) on the next new-key insertion.
+const KEY_TABLE_GC_LEN: usize = 1024;
+
+/// Continuous front-end: routes submissions into per-key queues and
+/// activates a worker per key with queued work. The activation channel is
+/// unbounded so `submit` never blocks: it carries at most one handle per
+/// key with queued work (backpressure lives in the bounded per-key
+/// queues, not here). `backlog` counts handles waiting in that channel —
+/// workers consult it to decide whether yielding a hot key would actually
+/// help anyone.
+struct Router {
+    table: Mutex<HashMap<BatchKey, Arc<Mutex<KeyState>>>>,
+    ktx: Sender<KeyHandle>,
+    queue_depth: usize,
+    backlog: Arc<AtomicUsize>,
+}
+
+impl Router {
+    fn route(&self, p: Pending, metrics: &Metrics) -> Result<(), String> {
+        let key = BatchKey::of(&p.req);
+        let entry = {
+            let mut table = self.table.lock().unwrap();
+            // Bound the table to live keys: sweep idle entries when a new
+            // key would grow an already-large table. Only entries whose
+            // Arc we hold the *sole* reference to are candidates — a
+            // concurrent `route` that already cloned the Arc (but has not
+            // locked it yet) keeps the count above 1, and no new clone
+            // can appear while we hold the table lock, so a swept entry
+            // can never be resurrected into a duplicate resident run.
+            if table.len() >= KEY_TABLE_GC_LEN && !table.contains_key(&key) {
+                table.retain(|_, s| {
+                    if Arc::strong_count(s) > 1 {
+                        return true;
+                    }
+                    match s.try_lock() {
+                        Ok(st) => st.active || !st.queue.is_empty(),
+                        Err(_) => true,
+                    }
+                });
+            }
+            table
+                .entry(key.clone())
+                .or_insert_with(|| {
+                    Arc::new(Mutex::new(KeyState {
+                        queue: VecDeque::new(),
+                        active: false,
+                    }))
+                })
+                .clone()
+        };
+        let activate = {
+            let mut st = entry.lock().unwrap();
+            if st.queue.len() >= self.queue_depth {
+                metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                return Err("queue full (backpressure)".into());
+            }
+            st.queue.push_back(p);
+            if st.active {
+                false
+            } else {
+                st.active = true;
+                true
+            }
+        };
+        // Sent outside the key lock; a worker picking the key up
+        // immediately can only find the request we just queued.
+        if activate {
+            self.backlog.fetch_add(1, Ordering::Relaxed);
+            if self.ktx.send((key, entry)).is_err() {
+                return Err("service stopped".into());
+            }
+        }
+        Ok(())
+    }
+}
+
+enum Front {
+    Collect { tx: SyncSender<Pending> },
+    Continuous { router: Arc<Router> },
+}
+
 pub struct Service {
-    tx: SyncSender<Pending>,
+    front: Front,
     next_id: AtomicU64,
     pub metrics: Arc<Metrics>,
     stop: Arc<AtomicBool>,
@@ -135,36 +309,75 @@ impl Service {
     /// Start the service. `dicts` maps (dataset, solver, nfe) to trained
     /// PAS dictionaries for requests with `use_pas`.
     pub fn start(cfg: ServiceConfig, dicts: Vec<CoordinateDict>) -> Service {
-        let (tx, rx) = sync_channel::<Pending>(cfg.queue_depth);
         let metrics = Arc::new(Metrics::default());
         let stop = Arc::new(AtomicBool::new(false));
-        // Work queue between batcher and workers.
-        let (wtx, wrx) = sync_channel::<Vec<Pending>>(cfg.queue_depth);
-        let wrx = Arc::new(Mutex::new(wrx));
-        let mut threads = Vec::new();
-
-        // Batcher thread.
-        {
-            let cfg = cfg.clone();
-            let metrics = metrics.clone();
-            let stop = stop.clone();
-            threads.push(std::thread::spawn(move || {
-                batcher_loop(rx, wtx, cfg, metrics, stop);
-            }));
-        }
-        // Worker threads.
         let dicts = Arc::new(RwLock::new(index_dicts(dicts)));
-        for w in 0..cfg.workers {
-            let wrx = wrx.clone();
-            let metrics = metrics.clone();
-            let dicts = dicts.clone();
-            let stop = stop.clone();
-            threads.push(std::thread::spawn(move || {
-                worker_loop(w, wrx, metrics, dicts, stop);
-            }));
-        }
+        let mut threads = Vec::new();
+        let front = match cfg.batching {
+            Batching::CollectThenRun => {
+                let (tx, rx) = sync_channel::<Pending>(cfg.queue_depth);
+                // Work queue between batcher and workers.
+                let (wtx, wrx) = sync_channel::<Vec<Pending>>(cfg.queue_depth);
+                let wrx = Arc::new(Mutex::new(wrx));
+                {
+                    let cfg = cfg.clone();
+                    let metrics = metrics.clone();
+                    let stop = stop.clone();
+                    threads.push(std::thread::spawn(move || {
+                        batcher_loop(rx, wtx, cfg, metrics, stop);
+                    }));
+                }
+                for _ in 0..cfg.workers {
+                    let wrx = wrx.clone();
+                    let metrics = metrics.clone();
+                    let dicts = dicts.clone();
+                    let stop = stop.clone();
+                    let engine_threads = cfg.engine_threads;
+                    threads.push(std::thread::spawn(move || {
+                        collect_worker_loop(wrx, metrics, dicts, stop, engine_threads);
+                    }));
+                }
+                Front::Collect { tx }
+            }
+            Batching::Continuous => {
+                let (ktx, krx) = channel::<KeyHandle>();
+                let krx = Arc::new(Mutex::new(krx));
+                let backlog = Arc::new(AtomicUsize::new(0));
+                let router = Arc::new(Router {
+                    table: Mutex::new(HashMap::new()),
+                    ktx: ktx.clone(),
+                    queue_depth: cfg.queue_depth,
+                    backlog: backlog.clone(),
+                });
+                for _ in 0..cfg.workers {
+                    let krx = krx.clone();
+                    // Workers keep a sender too, to hand a key back after
+                    // a fairness yield (see `run_key`).
+                    let ktx = ktx.clone();
+                    let backlog = backlog.clone();
+                    let metrics = metrics.clone();
+                    let dicts = dicts.clone();
+                    let stop = stop.clone();
+                    let engine_threads = cfg.engine_threads;
+                    let max_rows = cfg.max_batch;
+                    threads.push(std::thread::spawn(move || {
+                        continuous_worker_loop(
+                            krx,
+                            ktx,
+                            backlog,
+                            metrics,
+                            dicts,
+                            stop,
+                            engine_threads,
+                            max_rows,
+                        );
+                    }));
+                }
+                Front::Continuous { router }
+            }
+        };
         Service {
-            tx,
+            front,
             next_id: AtomicU64::new(1),
             metrics,
             stop,
@@ -177,8 +390,8 @@ impl Service {
     /// Train (or retrain) a PAS dictionary for `(dataset, solver, nfe)`
     /// **online** and register it for `use_pas` requests. Runs on the
     /// caller's thread against the service's persistent
-    /// [`TrainSession`] — serving workers keep draining batches (they
-    /// only take read-lock snapshots of the dict registry). Concurrent
+    /// [`TrainSession`] — serving workers keep draining work (they only
+    /// take read-lock snapshots of the dict registry). Concurrent
     /// `train_pas` calls serialize on the session mutex.
     pub fn train_pas(
         &self,
@@ -225,22 +438,34 @@ impl Service {
         &self,
         mut req: SamplingRequest,
     ) -> Result<Receiver<SamplingResponse>, String> {
+        if req.n_samples == 0 {
+            // Rejected up front for both schedulers: a zero-row batch has
+            // no rows to admit (and would trip engine shape asserts).
+            return Err("n must be >= 1".into());
+        }
         if req.id == 0 {
             req.id = self.next_id.fetch_add(1, Ordering::Relaxed);
         }
         let (rtx, rrx) = sync_channel(1);
         self.metrics.requests.fetch_add(1, Ordering::Relaxed);
-        match self.tx.try_send(Pending {
+        let p = Pending {
             req,
             enqueued: Instant::now(),
             reply: rtx,
-        }) {
-            Ok(()) => Ok(rrx),
-            Err(TrySendError::Full(_)) => {
-                self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
-                Err("queue full (backpressure)".into())
+        };
+        match &self.front {
+            Front::Collect { tx } => match tx.try_send(p) {
+                Ok(()) => Ok(rrx),
+                Err(TrySendError::Full(_)) => {
+                    self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                    Err("queue full (backpressure)".into())
+                }
+                Err(TrySendError::Disconnected(_)) => Err("service stopped".into()),
+            },
+            Front::Continuous { router } => {
+                router.route(p, &self.metrics)?;
+                Ok(rrx)
             }
-            Err(TrySendError::Disconnected(_)) => Err("service stopped".into()),
         }
     }
 
@@ -250,10 +475,13 @@ impl Service {
         rx.recv().map_err(|_| "worker dropped".to_string())
     }
 
-    pub fn shutdown(mut self) {
+    pub fn shutdown(self) {
         self.stop.store(true, Ordering::Relaxed);
-        drop(self.tx);
-        for t in self.threads.drain(..) {
+        let Service { front, threads, .. } = self;
+        // Dropping the front-end disconnects the channels the scheduler
+        // threads block on.
+        drop(front);
+        for t in threads {
             let _ = t.join();
         }
     }
@@ -265,6 +493,368 @@ fn index_dicts(dicts: Vec<CoordinateDict>) -> DictMap {
         .map(|d| ((d.dataset.clone(), d.solver.clone(), d.nfe), d))
         .collect()
 }
+
+// ---------------------------------------------------------------------------
+// Step-level continuous scheduler
+// ---------------------------------------------------------------------------
+
+/// One admitted request inside a cohort.
+struct Member {
+    p: Pending,
+    admitted: Instant,
+    /// First row of this request inside the cohort's slot list.
+    row0: usize,
+    rows: usize,
+    /// Peak co-resident request count observed while this request ran.
+    peak_coresident: usize,
+}
+
+/// Requests admitted at the same step boundary: their rows share a step
+/// cursor and advance in lockstep, which is what lets one
+/// [`CorrectedSampler`] (per-row buffers seeded at the cohort's first
+/// step) serve the whole cohort.
+struct Cohort {
+    members: Vec<Member>,
+    /// Engine slot ids, request-contiguous in member order.
+    slots: Vec<usize>,
+    steps_done: usize,
+    hook: Option<CorrectedSampler<'static>>,
+}
+
+/// One resident engine run for one compatibility key: the step-level
+/// continuous scheduler. See the module docs for the admission policy and
+/// determinism contract.
+struct KeyRun {
+    key: BatchKey,
+    solver: Box<dyn Solver>,
+    model: Box<AnalyticEps>,
+    sched: Schedule,
+    dim: usize,
+    n_steps: usize,
+    cohorts: Vec<Cohort>,
+    resident_rows: usize,
+}
+
+impl KeyRun {
+    fn new(key: &BatchKey) -> Result<KeyRun, String> {
+        let ds = crate::data::registry::get(&key.dataset).ok_or("unknown dataset")?;
+        let solver: Box<dyn Solver> =
+            crate::solvers::registry::get(&key.solver).ok_or("unknown solver")?;
+        let steps = solver
+            .steps_for_nfe(key.nfe)
+            .ok_or("NFE not representable for this solver")?;
+        let model = AnalyticEps::from_dataset(&ds);
+        let sched = default_schedule(steps);
+        let dim = model.dim();
+        Ok(KeyRun {
+            key: key.clone(),
+            solver,
+            model,
+            sched,
+            dim,
+            n_steps: steps,
+            cohorts: Vec::new(),
+            resident_rows: 0,
+        })
+    }
+
+    fn is_idle(&self) -> bool {
+        self.cohorts.is_empty()
+    }
+
+    /// Admit one request at the current step boundary. Requests admitted
+    /// at the same boundary merge into one cohort (their rows march in
+    /// lockstep) when the model's rows are independent; otherwise each
+    /// request gets its own cohort — either way the result bits match the
+    /// solo run.
+    fn admit(
+        &mut self,
+        engine: &mut SlotEngine,
+        p: Pending,
+        dicts: &RwLock<DictMap>,
+        metrics: &Metrics,
+    ) {
+        let rows = p.req.n_samples;
+        let x_t = sample_prior_stream(p.req.seed, p.req.id, rows, self.dim, self.sched.t_max());
+        let mid_flight = self.cohorts.iter().any(|c| c.steps_done > 0);
+        // Merging rows from different requests into one eval/step is only
+        // bit-preserving when *both* halves of the determinism contract
+        // hold (see `SlotEngine` docs); otherwise every request steps in
+        // its own cohort.
+        let mergeable = self.model.rows_independent()
+            && self.solver.row_independent()
+            && self.cohorts.last().is_some_and(|c| c.steps_done == 0);
+        if !mergeable {
+            let hook = if self.key.use_pas {
+                // Per-cohort dictionary snapshot under a short read lock:
+                // online retraining never blocks on a resident run.
+                dicts
+                    .read()
+                    .unwrap()
+                    .get(&(self.key.dataset.clone(), self.key.solver.clone(), self.key.nfe))
+                    .map(|d| CorrectedSampler::owned(d.clone(), self.dim))
+            } else {
+                None
+            };
+            self.cohorts.push(Cohort {
+                members: Vec::new(),
+                slots: Vec::new(),
+                steps_done: 0,
+                hook,
+            });
+            metrics.batches.fetch_add(1, Ordering::Relaxed);
+        }
+        let cohort = self.cohorts.last_mut().unwrap();
+        let row0 = cohort.slots.len();
+        engine.admit(&x_t, &mut cohort.slots);
+        cohort.members.push(Member {
+            admitted: Instant::now(),
+            p,
+            row0,
+            rows,
+            peak_coresident: 1,
+        });
+        self.resident_rows += rows;
+        metrics.fused_requests.fetch_add(1, Ordering::Relaxed);
+        if mid_flight {
+            metrics.admitted_mid_flight.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// One scheduler tick: every resident cohort takes one solver step;
+    /// cohorts that reached the end of the schedule retire immediately —
+    /// samples are sent and slots freed before the next admission phase.
+    fn tick(&mut self, engine: &mut SlotEngine, metrics: &Metrics) {
+        if self.cohorts.is_empty() {
+            return;
+        }
+        metrics.ticks.fetch_add(1, Ordering::Relaxed);
+        let live: usize = self.cohorts.iter().map(|c| c.members.len()).sum();
+        for cohort in self.cohorts.iter_mut() {
+            for m in cohort.members.iter_mut() {
+                m.peak_coresident = m.peak_coresident.max(live);
+            }
+            let hook = cohort.hook.as_mut().map(|h| h as &mut dyn DirectionHook);
+            engine.step_cohort(
+                self.solver.as_ref(),
+                self.model.as_ref(),
+                &self.sched,
+                &cohort.slots,
+                hook,
+            );
+            cohort.steps_done += 1;
+        }
+        let mut i = 0;
+        while i < self.cohorts.len() {
+            if self.cohorts[i].steps_done == self.n_steps {
+                let cohort = self.cohorts.remove(i);
+                self.retire_cohort(engine, cohort, metrics);
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    fn retire_cohort(&mut self, engine: &mut SlotEngine, cohort: Cohort, metrics: &Metrics) {
+        let nfe = self.n_steps * self.solver.evals_per_step();
+        let slots = &cohort.slots;
+        for m in cohort.members {
+            let mut samples = vec![0.0; m.rows * self.dim];
+            for r in 0..m.rows {
+                engine.retire_into(
+                    slots[m.row0 + r],
+                    &mut samples[r * self.dim..(r + 1) * self.dim],
+                );
+            }
+            self.resident_rows -= m.rows;
+            metrics.completed.fetch_add(1, Ordering::Relaxed);
+            let _ = m.p.reply.send(SamplingResponse {
+                id: m.p.req.id,
+                samples,
+                n: m.rows,
+                dim: self.dim,
+                nfe_spent: nfe,
+                batched_with: m.peak_coresident,
+                latency_ms: m.p.enqueued.elapsed().as_secs_f64() * 1e3,
+                queue_ms: (m.admitted - m.p.enqueued).as_secs_f64() * 1e3,
+                run_ms: m.admitted.elapsed().as_secs_f64() * 1e3,
+                error: None,
+            });
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn continuous_worker_loop(
+    krx: Arc<Mutex<Receiver<KeyHandle>>>,
+    ktx: Sender<KeyHandle>,
+    backlog: Arc<AtomicUsize>,
+    metrics: Arc<Metrics>,
+    dicts: Arc<RwLock<DictMap>>,
+    stop: Arc<AtomicBool>,
+    engine_threads: usize,
+    max_rows: usize,
+) {
+    // One long-lived slot engine per worker; its slot table, staging
+    // buffers and scratch arena are reused across resident runs.
+    let mut engine = SlotEngine::new(engine_threads);
+    loop {
+        let (key, state) = {
+            let guard = krx.lock().unwrap();
+            match guard.recv_timeout(Duration::from_millis(50)) {
+                Ok(h) => h,
+                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                    if stop.load(Ordering::Relaxed) {
+                        return;
+                    }
+                    continue;
+                }
+                Err(_) => return,
+            }
+        };
+        backlog.fetch_sub(1, Ordering::Relaxed);
+        // A panic inside a resident run must not kill the worker or
+        // strand the key: `run_key`'s drop guard fails + deactivates the
+        // key on unwind, and the engine workspace (possibly mid-step) is
+        // rebuilt here.
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            run_key(&mut engine, key, &state, &metrics, &dicts, max_rows, &ktx, &backlog);
+        }));
+        if res.is_err() {
+            engine = SlotEngine::new(engine_threads);
+        }
+    }
+}
+
+/// Scheduler ticks one worker spends on a key before yielding it back to
+/// the dispatch queue so other keys get a turn (resident cohorts drain
+/// first — their state lives in this worker's engine). Bounds how long a
+/// hot key can monopolize a worker under sustained load.
+const YIELD_AFTER_TICKS: usize = 256;
+
+/// Fails + deactivates a key if its resident run unwinds, so queued
+/// requests error out instead of hanging behind a permanently-`active`
+/// key.
+struct KeyGuard<'a> {
+    state: &'a Mutex<KeyState>,
+    defused: bool,
+}
+
+impl Drop for KeyGuard<'_> {
+    fn drop(&mut self) {
+        if self.defused {
+            return;
+        }
+        let mut st = match self.state.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        let drained: Vec<Pending> = st.queue.drain(..).collect();
+        st.active = false;
+        drop(st);
+        fail_all(drained, "sampling scheduler aborted on this key");
+    }
+}
+
+/// Drive one key's resident run. Alternates admission phases (pop
+/// everything that fits, FIFO) with scheduler ticks; deactivates the key
+/// — under the same lock the router uses — only when no work remains, so
+/// no request is ever stranded. After [`YIELD_AFTER_TICKS`] ticks — and
+/// only while other keys are actually waiting for a worker (`backlog`) —
+/// the run stops admitting, drains its residents, and hands the key back
+/// to the dispatch queue so a hot key cannot starve other keys.
+#[allow(clippy::too_many_arguments)]
+fn run_key(
+    engine: &mut SlotEngine,
+    key: BatchKey,
+    state: &Arc<Mutex<KeyState>>,
+    metrics: &Metrics,
+    dicts: &RwLock<DictMap>,
+    max_rows: usize,
+    requeue: &Sender<KeyHandle>,
+    backlog: &AtomicUsize,
+) {
+    let mut run = match KeyRun::new(&key) {
+        Ok(r) => r,
+        Err(e) => {
+            // The key itself is invalid: every request for it fails.
+            loop {
+                let drained: Vec<Pending> = {
+                    let mut st = state.lock().unwrap();
+                    if st.queue.is_empty() {
+                        st.active = false;
+                        return;
+                    }
+                    st.queue.drain(..).collect()
+                };
+                fail_all(drained, &e);
+            }
+        }
+    };
+    let mut guard = KeyGuard {
+        state: state.as_ref(),
+        defused: false,
+    };
+    engine.reset(run.dim, run.n_steps);
+    let mut ticks = 0usize;
+    loop {
+        // Yield only when it helps someone: past the tick budget *and*
+        // at least one other key is waiting in the dispatch queue.
+        let draining =
+            ticks >= YIELD_AFTER_TICKS && backlog.load(Ordering::Relaxed) > 0;
+        let mut to_admit: Vec<Pending> = Vec::new();
+        {
+            let mut st = state.lock().unwrap();
+            if !draining {
+                let mut projected = run.resident_rows;
+                while let Some(front) = st.queue.front() {
+                    let rows = front.req.n_samples;
+                    // FIFO admission under the residency cap; an oversized
+                    // request runs alone when the engine is empty.
+                    // (rows == 0 passes the cap and is failed below.)
+                    if projected + rows <= max_rows || projected == 0 {
+                        projected += rows;
+                        to_admit.push(st.queue.pop_front().unwrap());
+                    } else {
+                        break;
+                    }
+                }
+            }
+            if run.is_idle() && to_admit.is_empty() {
+                if st.queue.is_empty() {
+                    st.active = false;
+                    guard.defused = true;
+                    return;
+                }
+                // Fairness yield: residents drained but the queue is not
+                // empty — hand the key back (it stays `active`; exactly
+                // one handle re-enters the dispatch queue) and free this
+                // worker for other keys. If the service is stopping the
+                // guard fails the queued requests instead.
+                debug_assert!(draining);
+                drop(st);
+                backlog.fetch_add(1, Ordering::Relaxed);
+                if requeue.send((key, state.clone())).is_ok() {
+                    guard.defused = true;
+                }
+                return;
+            }
+        }
+        for p in to_admit {
+            if p.req.n_samples == 0 {
+                fail_one(p, "n must be >= 1");
+            } else {
+                run.admit(engine, p, dicts, metrics);
+            }
+        }
+        run.tick(engine, metrics);
+        ticks += 1;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Collect-then-run baseline (the seed batcher)
+// ---------------------------------------------------------------------------
 
 fn batcher_loop(
     rx: Receiver<Pending>,
@@ -287,12 +877,7 @@ fn batcher_loop(
                 Err(_) => break,
             }
         };
-        let key = BatchKey {
-            dataset: first.req.dataset.clone(),
-            solver: first.req.solver.clone(),
-            nfe: first.req.nfe,
-            use_pas: first.req.use_pas,
-        };
+        let key = BatchKey::of(&first.req);
         let mut batch = vec![first];
         let mut total: usize = batch[0].req.n_samples;
         let deadline = Instant::now() + cfg.batch_window;
@@ -304,13 +889,7 @@ fn batcher_loop(
             }
             match rx.recv_timeout(deadline - now) {
                 Ok(p) => {
-                    let pk = BatchKey {
-                        dataset: p.req.dataset.clone(),
-                        solver: p.req.solver.clone(),
-                        nfe: p.req.nfe,
-                        use_pas: p.req.use_pas,
-                    };
-                    if pk == key && total + p.req.n_samples <= cfg.max_batch {
+                    if BatchKey::of(&p.req) == key && total + p.req.n_samples <= cfg.max_batch {
                         total += p.req.n_samples;
                         batch.push(p);
                     } else {
@@ -331,17 +910,20 @@ fn batcher_loop(
     }
 }
 
-fn worker_loop(
-    _id: usize,
+fn collect_worker_loop(
     wrx: Arc<Mutex<Receiver<Vec<Pending>>>>,
     metrics: Arc<Metrics>,
     dicts: Arc<RwLock<DictMap>>,
     stop: Arc<AtomicBool>,
+    engine_threads: usize,
 ) {
     // One long-lived engine per worker: the serving path never records
     // trajectories (`Record::None`), and the workspace is reused across
     // batches, so steady-state sampling performs no per-step allocation.
-    let mut engine = SamplerEngine::with_record(Record::None);
+    let mut engine = SamplerEngine::new(crate::solvers::engine::EngineConfig {
+        record: Record::None,
+        threads: engine_threads,
+    });
     loop {
         let batch = {
             let guard = wrx.lock().unwrap();
@@ -360,18 +942,24 @@ fn worker_loop(
     }
 }
 
+fn fail_one(p: Pending, msg: &str) {
+    let _ = p.reply.send(SamplingResponse {
+        id: p.req.id,
+        samples: Vec::new(),
+        n: 0,
+        dim: 0,
+        nfe_spent: 0,
+        batched_with: 0,
+        latency_ms: 0.0,
+        queue_ms: 0.0,
+        run_ms: 0.0,
+        error: Some(msg.to_string()),
+    });
+}
+
 fn fail_all(batch: Vec<Pending>, msg: &str) {
     for p in batch {
-        let _ = p.reply.send(SamplingResponse {
-            id: p.req.id,
-            samples: Vec::new(),
-            n: 0,
-            dim: 0,
-            nfe_spent: 0,
-            batched_with: 0,
-            latency_ms: 0.0,
-            error: Some(msg.to_string()),
-        });
+        fail_one(p, msg);
     }
 }
 
@@ -381,6 +969,7 @@ fn run_batch(
     dicts: &RwLock<DictMap>,
     engine: &mut SamplerEngine,
 ) {
+    let run_start = Instant::now();
     let req0 = &batch[0].req;
     let ds = match crate::data::registry::get(&req0.dataset) {
         Some(d) => d,
@@ -401,8 +990,13 @@ fn run_batch(
     let n_total: usize = batch.iter().map(|p| p.req.n_samples).sum();
     let mut x_t = Vec::with_capacity(n_total * dim);
     for p in &batch {
-        let mut rng = Pcg64::seed_stream(p.req.seed, p.req.id);
-        x_t.extend(sample_prior(&mut rng, p.req.n_samples, dim, sched.t_max()));
+        x_t.extend(sample_prior_stream(
+            p.req.seed,
+            p.req.id,
+            p.req.n_samples,
+            dim,
+            sched.t_max(),
+        ));
     }
     // Snapshot the dict under a short read lock so an online `train_pas`
     // never blocks on (or is blocked by) an in-flight solver run.
@@ -441,6 +1035,7 @@ fn run_batch(
     };
     // Scatter results back.
     let fused = batch.len();
+    let run_ms = run_start.elapsed().as_secs_f64() * 1e3;
     let mut offset = 0usize;
     for p in batch {
         let n = p.req.n_samples;
@@ -455,6 +1050,8 @@ fn run_batch(
             nfe_spent: nfe,
             batched_with: fused,
             latency_ms: p.enqueued.elapsed().as_secs_f64() * 1e3,
+            queue_ms: (run_start - p.enqueued).as_secs_f64() * 1e3,
+            run_ms,
             error: None,
         });
     }
@@ -463,6 +1060,8 @@ fn run_batch(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::pas::coords::ScaleMode;
+    use crate::util::rng::Pcg64;
 
     fn req(n: usize, seed: u64) -> SamplingRequest {
         SamplingRequest {
@@ -484,13 +1083,15 @@ mod tests {
         assert_eq!(resp.n, 16);
         assert_eq!(resp.dim, 2);
         assert_eq!(resp.samples.len(), 32);
+        assert!(resp.queue_ms >= 0.0 && resp.run_ms > 0.0);
         svc.shutdown();
     }
 
     #[test]
-    fn batches_concurrent_requests() {
+    fn collect_then_run_batches_concurrent_requests() {
         let svc = Service::start(
             ServiceConfig {
+                batching: Batching::CollectThenRun,
                 batch_window: Duration::from_millis(30),
                 ..ServiceConfig::default()
             },
@@ -603,6 +1204,297 @@ mod tests {
             let _ = rx.recv();
         }
         assert!(rejected > 0, "expected at least one backpressure rejection");
+        assert!(svc.metrics.rejected.load(Ordering::Relaxed) > 0);
+        svc.shutdown();
+    }
+
+    // -- continuous-scheduler internals -----------------------------------
+
+    /// Drive a `KeyRun` directly (no threads): admit `reqs` at the given
+    /// tick offsets, run to drain, return the responses in request order.
+    fn drive_key_run(
+        key: &BatchKey,
+        engine_threads: usize,
+        reqs: &[(SamplingRequest, usize)],
+        dicts: &RwLock<DictMap>,
+    ) -> Vec<SamplingResponse> {
+        let metrics = Metrics::default();
+        let mut engine = SlotEngine::new(engine_threads);
+        let mut run = KeyRun::new(key).expect("valid key");
+        engine.reset(run.dim, run.n_steps);
+        let mut rxs = Vec::new();
+        let mut waiting: Vec<(usize, Pending)> = Vec::new();
+        for (r, (req, at)) in reqs.iter().enumerate() {
+            let (rtx, rrx) = sync_channel(1);
+            rxs.push(rrx);
+            let mut req = req.clone();
+            req.id = r as u64 + 1;
+            waiting.push((
+                *at,
+                Pending {
+                    req,
+                    enqueued: Instant::now(),
+                    reply: rtx,
+                },
+            ));
+        }
+        let mut tick = 0usize;
+        while !waiting.is_empty() || !run.is_idle() {
+            let mut i = 0;
+            while i < waiting.len() {
+                if waiting[i].0 <= tick {
+                    let (_, p) = waiting.remove(i);
+                    run.admit(&mut engine, p, dicts, &metrics);
+                } else {
+                    i += 1;
+                }
+            }
+            run.tick(&mut engine, &metrics);
+            tick += 1;
+            assert!(tick < 10_000, "key run failed to drain");
+        }
+        rxs.into_iter()
+            .map(|rx| rx.try_recv().expect("response must be ready"))
+            .collect()
+    }
+
+    /// Solo reference: the request run alone through a fresh serving
+    /// engine (the determinism contract's right-hand side).
+    fn solo_run(key: &BatchKey, req: &SamplingRequest, id: u64, dicts: &RwLock<DictMap>) -> Vec<f64> {
+        let ds = crate::data::registry::get(&key.dataset).unwrap();
+        let model = AnalyticEps::from_dataset(&ds);
+        let solver = crate::solvers::registry::get(&key.solver).unwrap();
+        let steps = solver.steps_for_nfe(key.nfe).unwrap();
+        let sched = default_schedule(steps);
+        let dim = model.dim();
+        let x_t = sample_prior_stream(req.seed, id, req.n_samples, dim, sched.t_max());
+        let mut x0 = vec![0.0; req.n_samples * dim];
+        let mut engine = SamplerEngine::with_record(Record::None);
+        let dict = if key.use_pas {
+            dicts
+                .read()
+                .unwrap()
+                .get(&(key.dataset.clone(), key.solver.clone(), key.nfe))
+                .cloned()
+        } else {
+            None
+        };
+        match &dict {
+            Some(d) => {
+                let mut hook = CorrectedSampler::new(d, dim);
+                engine.run_into(
+                    solver.as_ref(),
+                    model.as_ref(),
+                    &x_t,
+                    req.n_samples,
+                    &sched,
+                    Some(&mut hook),
+                    &mut x0,
+                );
+            }
+            None => {
+                engine.run_into(
+                    solver.as_ref(),
+                    model.as_ref(),
+                    &x_t,
+                    req.n_samples,
+                    &sched,
+                    None,
+                    &mut x0,
+                );
+            }
+        }
+        x0
+    }
+
+    /// The enforced bit-exactness contract: N requests admitted at
+    /// randomized step offsets, every response bitwise-equal to its solo
+    /// run, across engine thread caps {1, 4, 16}, for single-step,
+    /// multistep (ring lookback) and multi-eval solvers.
+    #[test]
+    fn continuous_parity_under_randomized_admission() {
+        let mut rng = Pcg64::seed(77);
+        for (solver, nfe) in [("ddim", 8usize), ("dpmpp3m", 8), ("heun", 16)] {
+            let key = BatchKey {
+                dataset: "gmm-hd64".into(),
+                solver: solver.into(),
+                nfe,
+                use_pas: false,
+            };
+            // Randomized shapes and admission offsets, fixed across the
+            // thread caps so all three run the same scenario.
+            let reqs: Vec<(SamplingRequest, usize)> = (0..6)
+                .map(|s| {
+                    let n = 1 + (rng.next_u64() % 5) as usize;
+                    let at = (rng.next_u64() % 10) as usize;
+                    let mut r = req(n, s);
+                    r.dataset = key.dataset.clone();
+                    r.solver = key.solver.clone();
+                    r.nfe = nfe;
+                    (r, at)
+                })
+                .collect();
+            let dicts = RwLock::new(DictMap::new());
+            for threads in [1usize, 4, 16] {
+                let resps = drive_key_run(&key, threads, &reqs, &dicts);
+                for (r, resp) in resps.iter().enumerate() {
+                    assert!(resp.error.is_none(), "{solver}: {:?}", resp.error);
+                    let want = solo_run(&key, &reqs[r].0, resp.id, &dicts);
+                    assert_eq!(
+                        resp.samples, want,
+                        "{solver}: request {r} (threads={threads}, admitted at tick \
+                         {}) diverged from its solo run",
+                        reqs[r].1
+                    );
+                    assert_eq!(resp.nfe_spent, nfe);
+                }
+            }
+        }
+    }
+
+    /// Same contract through the PAS correction hook: per-cohort owned
+    /// dict snapshots + per-slot trajectory buffers must reproduce the
+    /// solo corrected run bitwise under mid-flight admission.
+    #[test]
+    fn continuous_parity_with_pas_correction() {
+        let key = BatchKey {
+            dataset: "gmm2d".into(),
+            solver: "ddim".into(),
+            nfe: 6,
+            use_pas: true,
+        };
+        let mut dict = CoordinateDict::new(4, ScaleMode::Relative, "ddim", "gmm2d", 6);
+        dict.steps.insert(4, vec![0.9, 0.05, 0.0, 0.0]);
+        dict.steps.insert(2, vec![1.0, -0.1, 0.0, 0.0]);
+        let dicts = RwLock::new(index_dicts(vec![dict]));
+        let reqs: Vec<(SamplingRequest, usize)> = [(3usize, 0usize), (2, 0), (4, 2), (1, 3)]
+            .iter()
+            .enumerate()
+            .map(|(s, &(n, at))| {
+                let mut r = req(n, s as u64 + 10);
+                r.use_pas = true;
+                (r, at)
+            })
+            .collect();
+        for threads in [1usize, 4, 16] {
+            let resps = drive_key_run(&key, threads, &reqs, &dicts);
+            for (r, resp) in resps.iter().enumerate() {
+                assert!(resp.error.is_none());
+                let want = solo_run(&key, &reqs[r].0, resp.id, &dicts);
+                assert_eq!(
+                    resp.samples, want,
+                    "corrected request {r} (threads={threads}) diverged from its solo run"
+                );
+            }
+        }
+    }
+
+    /// Mid-flight admission is observable: a request admitted while an
+    /// earlier one is in flight is co-resident with it, both finish, and
+    /// the metric records the admission.
+    #[test]
+    fn continuous_admits_mid_flight() {
+        let key = BatchKey {
+            dataset: "gmm2d".into(),
+            solver: "ddim".into(),
+            nfe: 6,
+            use_pas: false,
+        };
+        let dicts = RwLock::new(DictMap::new());
+        let metrics = Metrics::default();
+        let mut engine = SlotEngine::new(1);
+        let mut run = KeyRun::new(&key).unwrap();
+        engine.reset(run.dim, run.n_steps);
+        let mk = |n: usize, id: u64| {
+            let (rtx, rrx) = sync_channel(1);
+            let mut r = req(n, id);
+            r.id = id;
+            (
+                Pending {
+                    req: r,
+                    enqueued: Instant::now(),
+                    reply: rtx,
+                },
+                rrx,
+            )
+        };
+        let (pa, rxa) = mk(4, 1);
+        let (pb, rxb) = mk(2, 2);
+        run.admit(&mut engine, pa, &dicts, &metrics);
+        run.tick(&mut engine, &metrics);
+        run.tick(&mut engine, &metrics);
+        // A is 2 steps deep; B joins mid-flight in its own cohort.
+        run.admit(&mut engine, pb, &dicts, &metrics);
+        assert_eq!(metrics.admitted_mid_flight.load(Ordering::Relaxed), 1);
+        // A retires at tick 6 (B still 2 steps behind) ...
+        for _ in 0..4 {
+            run.tick(&mut engine, &metrics);
+        }
+        let ra = rxa.try_recv().expect("A must retire as soon as it finishes");
+        assert!(rxb.try_recv().is_err(), "B must still be in flight");
+        // ... and B follows two ticks later.
+        run.tick(&mut engine, &metrics);
+        run.tick(&mut engine, &metrics);
+        let rb = rxb.try_recv().expect("B must retire two ticks after A");
+        assert!(run.is_idle());
+        assert_eq!(ra.batched_with, 2, "A saw B co-resident");
+        assert_eq!(rb.batched_with, 2, "B saw A co-resident");
+        assert_eq!(metrics.batches.load(Ordering::Relaxed), 2, "two cohorts");
+        assert_eq!(metrics.completed.load(Ordering::Relaxed), 2);
+    }
+
+    /// End-to-end through the threaded service: whatever the real
+    /// admission interleaving turned out to be, every response must match
+    /// its solo run bitwise (the contract is interleaving-independent).
+    #[test]
+    fn continuous_service_responses_match_solo_runs() {
+        for threads in [1usize, 4] {
+            let svc = Service::start(
+                ServiceConfig {
+                    workers: 2,
+                    engine_threads: threads,
+                    ..ServiceConfig::default()
+                },
+                Vec::new(),
+            );
+            let reqs: Vec<SamplingRequest> = (0..8).map(|s| req(3 + s as usize % 4, s)).collect();
+            let rxs: Vec<_> = reqs
+                .iter()
+                .map(|r| svc.submit(r.clone()).unwrap())
+                .collect();
+            let key = BatchKey::of(&reqs[0]);
+            let dicts = RwLock::new(DictMap::new());
+            for (r, rx) in rxs.into_iter().enumerate() {
+                let resp = rx.recv().unwrap();
+                assert!(resp.error.is_none());
+                let want = solo_run(&key, &reqs[r], resp.id, &dicts);
+                assert_eq!(
+                    resp.samples, want,
+                    "request {r} (threads={threads}) diverged from its solo run"
+                );
+                assert!(resp.queue_ms >= 0.0 && resp.run_ms >= 0.0);
+            }
+            svc.shutdown();
+        }
+    }
+
+    /// An oversized request (> max_batch rows) is admitted alone instead
+    /// of deadlocking the key, and later requests still complete.
+    #[test]
+    fn oversized_request_is_served_alone() {
+        let svc = Service::start(
+            ServiceConfig {
+                workers: 1,
+                max_batch: 8,
+                ..ServiceConfig::default()
+            },
+            Vec::new(),
+        );
+        let big = svc.call(req(32, 5)).unwrap();
+        assert!(big.error.is_none());
+        assert_eq!(big.n, 32);
+        let small = svc.call(req(2, 6)).unwrap();
+        assert!(small.error.is_none());
         svc.shutdown();
     }
 }

@@ -382,6 +382,298 @@ impl SamplerEngine {
     }
 }
 
+/// One resident row of a [`SlotEngine`]: its own ring history (states and
+/// directions, `row_len = dim`) whose committed length *is* the row's step
+/// cursor — slot `xs` holds nodes `0..=j` after `j` steps.
+struct Slot {
+    xs: NodeStore,
+    ds: NodeStore,
+    active: bool,
+}
+
+/// Slot-resident engine for **step-level continuous batching**.
+///
+/// Where [`SamplerEngine`] drives one fixed batch from `t_max` to `t_min`,
+/// a `SlotEngine` keeps a *changing population* of independent rows
+/// resident across one shared [`Schedule`]:
+///
+/// * **Per-row step cursors.** Every slot carries its own position in the
+///   schedule (the committed length of its state ring), so rows admitted
+///   at different times coexist at different depths.
+/// * **Slot admission / retirement.** [`Self::admit`] seeds free slots
+///   with prior rows mid-flight (growing the slot table only when the
+///   free list is empty); [`Self::retire_into`] copies a finished row's
+///   final state out and returns the slot to the free list immediately —
+///   no row ever waits for an unrelated row's rollout.
+/// * **Per-slot ring history.** Each slot owns `HIST_NODES`-deep
+///   [`NodeStore`] rings for states and directions, so multistep solvers'
+///   lookback stays correct for rows at different depths. A step gathers
+///   the cohort's admissible history window into ring-layout staging
+///   buffers and hands solvers the same absolute-node [`NodeView`]s the
+///   batch engine uses.
+/// * **Sharded stepping over only-active slots.** [`Self::step_cohort`]
+///   advances one *cohort* — rows sharing a cursor — through the same
+///   [`step_rows`] dispatch as [`SamplerEngine`], so the whole solver
+///   registry (multi-eval included) shards row-wise with per-chunk
+///   scratch.
+///
+/// # Determinism contract
+///
+/// A row's samples are **bit-identical** to running that row alone
+/// through [`SamplerEngine::run_into`], for every admission interleaving,
+/// cohort composition, and thread count. This holds because per-row f64
+/// operation order is composition-independent at every stage: the model
+/// must report [`EpsModel::rows_independent`] (the blocked analytic eval
+/// is bit-equal to `eval_one` per row regardless of batch makeup —
+/// `tests/eval_blocked_parity.rs`), the solver must report
+/// [`Solver::row_independent`] (chunk-layout invariance —
+/// `tests/engine_parity.rs`), and history reads go through exact copies
+/// of the row's own nodes. `server::service` tests enforce the end-to-end
+/// claim under randomized mid-flight admission × thread caps {1, 4, 16}.
+///
+/// All buffers are grow-only: after a warm-up admission of a given shape,
+/// steady-state stepping performs no heap allocation.
+pub struct SlotEngine {
+    /// Max row-shards for the solver update; `0` = pool size.
+    threads: usize,
+    dim: usize,
+    n_steps: usize,
+    slots: Vec<Slot>,
+    /// Free slot ids (LIFO).
+    free: Vec<usize>,
+    n_active: usize,
+    /// Ring-layout staging of the cohort's state history: node `m` lives
+    /// at staging slot `m % HIST_NODES`, each a flat `(rows, dim)` block.
+    xh_stage: Vec<f64>,
+    /// Same for the direction history (committed nodes `< j` only).
+    dh_stage: Vec<f64>,
+    /// Cohort directions for the in-flight step.
+    d_buf: Vec<f64>,
+    /// Cohort next-state output.
+    out_buf: Vec<f64>,
+    /// Solver scratch arena (see [`Solver::scratch_spec`]).
+    scratch: Vec<f64>,
+}
+
+impl SlotEngine {
+    /// `threads` caps the row-shards per cohort step (`0` = pool size,
+    /// `1` = sequential). Output bits are identical either way.
+    pub fn new(threads: usize) -> SlotEngine {
+        SlotEngine {
+            threads,
+            dim: 0,
+            n_steps: 0,
+            slots: Vec::new(),
+            free: Vec::new(),
+            n_active: 0,
+            xh_stage: Vec::new(),
+            dh_stage: Vec::new(),
+            d_buf: Vec::new(),
+            out_buf: Vec::new(),
+            scratch: Vec::new(),
+        }
+    }
+
+    /// Re-shape for a new resident run (one compatibility key: fixed
+    /// `dim` and schedule length). Never shrinks allocations; all slots
+    /// return to the free list.
+    pub fn reset(&mut self, dim: usize, n_steps: usize) {
+        assert!(dim > 0 && n_steps > 0);
+        self.dim = dim;
+        self.n_steps = n_steps;
+        self.n_active = 0;
+        self.free.clear();
+        for (i, s) in self.slots.iter_mut().enumerate() {
+            s.active = false;
+            self.free.push(i);
+        }
+    }
+
+    /// Rows currently resident.
+    pub fn active_rows(&self) -> usize {
+        self.n_active
+    }
+
+    /// Schedule length this engine was reset for.
+    pub fn n_steps(&self) -> usize {
+        self.n_steps
+    }
+
+    /// Admit `x_t.len() / dim` rows at cursor 0, appending their slot ids
+    /// to `slots_out` (in row order). Grows the slot table when the free
+    /// list runs dry — callers enforce their own residency cap.
+    pub fn admit(&mut self, x_t: &[f64], slots_out: &mut Vec<usize>) {
+        let dim = self.dim;
+        assert!(dim > 0, "reset the engine before admitting");
+        assert!(!x_t.is_empty() && x_t.len() % dim == 0, "x_t must be (rows, dim) flat");
+        let rows = x_t.len() / dim;
+        for r in 0..rows {
+            let id = match self.free.pop() {
+                Some(id) => id,
+                None => {
+                    self.slots.push(Slot {
+                        xs: NodeStore::new(),
+                        ds: NodeStore::new(),
+                        active: false,
+                    });
+                    self.slots.len() - 1
+                }
+            };
+            let slot = &mut self.slots[id];
+            slot.xs.reset(dim, HIST_NODES);
+            slot.ds.reset(dim, HIST_NODES);
+            slot.xs.push_row(&x_t[r * dim..(r + 1) * dim]);
+            slot.active = true;
+            slots_out.push(id);
+            self.n_active += 1;
+        }
+    }
+
+    /// Step cursor of a resident slot (steps taken so far).
+    pub fn cursor(&self, slot: usize) -> usize {
+        assert!(self.slots[slot].active, "slot {slot} not resident");
+        self.slots[slot].xs.len() - 1
+    }
+
+    /// Copy a finished row's final state (`(dim,)`) into `out` and free
+    /// its slot.
+    pub fn retire_into(&mut self, slot: usize, out: &mut [f64]) {
+        let n_steps = self.n_steps;
+        let s = &mut self.slots[slot];
+        assert!(s.active, "slot {slot} not resident");
+        assert_eq!(s.xs.len(), n_steps + 1, "slot {slot} has not finished its schedule");
+        out.copy_from_slice(s.xs.row(n_steps));
+        s.active = false;
+        s.xs.reset(1, 1); // drop logical contents; allocation is retained
+        s.ds.reset(1, 1);
+        self.free.push(slot);
+        self.n_active -= 1;
+    }
+
+    /// Advance one cohort — resident rows sharing a step cursor — by one
+    /// solver step. `slots` lists the cohort's slot ids in row order;
+    /// every listed slot must be at the same cursor `j < n_steps`. The
+    /// optional hook sees the gathered `(rows, dim)` batch exactly as a
+    /// [`SamplerEngine`] hook would. Returns the model evaluations spent
+    /// (`rows`-invariant: one logical NFE per eval, as everywhere else).
+    pub fn step_cohort(
+        &mut self,
+        solver: &dyn Solver,
+        model: &dyn EpsModel,
+        sched: &Schedule,
+        slots: &[usize],
+        mut hook: Option<&mut dyn DirectionHook>,
+    ) -> usize {
+        let rows = slots.len();
+        assert!(rows > 0, "empty cohort");
+        let dim = self.dim;
+        assert_eq!(sched.n_steps(), self.n_steps, "schedule shape changed mid-run");
+        let j = self.slots[slots[0]].xs.len() - 1;
+        assert!(j < self.n_steps, "cohort already finished");
+        let row_len = rows * dim;
+        let stage_need = HIST_NODES * row_len;
+        if self.xh_stage.len() < stage_need {
+            self.xh_stage.resize(stage_need, 0.0);
+        }
+        if self.dh_stage.len() < stage_need {
+            self.dh_stage.resize(stage_need, 0.0);
+        }
+        if self.d_buf.len() < row_len {
+            self.d_buf.resize(row_len, 0.0);
+        }
+        if self.out_buf.len() < row_len {
+            self.out_buf.resize(row_len, 0.0);
+        }
+        // Gather the admissible history windows into ring-layout staging:
+        // exactly the nodes a `NodeView::ring(len, HIST_NODES)` admits,
+        // copied from each slot's own ring (bit-exact reads of the row's
+        // past). States: nodes `len - (HIST_NODES - 1) ..= j` of `len =
+        // j + 1`; directions: the trailing window of the `j` committed.
+        let x_lo = (j + 1).saturating_sub(HIST_NODES - 1);
+        for node in x_lo..=j {
+            let base = (node % HIST_NODES) * row_len;
+            for (r, &id) in slots.iter().enumerate() {
+                let s = &self.slots[id];
+                assert!(s.active, "slot {id} not resident");
+                assert_eq!(s.xs.len(), j + 1, "cohort slots must share a cursor");
+                self.xh_stage[base + r * dim..base + (r + 1) * dim]
+                    .copy_from_slice(s.xs.row(node));
+            }
+        }
+        let d_lo = j.saturating_sub(HIST_NODES - 1);
+        for node in d_lo..j {
+            let base = (node % HIST_NODES) * row_len;
+            for (r, &id) in slots.iter().enumerate() {
+                self.dh_stage[base + r * dim..base + (r + 1) * dim]
+                    .copy_from_slice(self.slots[id].ds.row(node));
+            }
+        }
+        let t = sched.ts[j];
+        let t_next = sched.ts[j + 1];
+        let x_cur: &[f64] = {
+            let base = (j % HIST_NODES) * row_len;
+            // Reborrow immutably for the rest of the step; staging is not
+            // written again until the next call.
+            &self.xh_stage[base..base + row_len]
+        };
+        let d = &mut self.d_buf[..row_len];
+        // Primary evaluation, then the hook, exactly as `run_into`.
+        model.eval_batch(x_cur, rows, t, d);
+        let xs_view = NodeView::ring(self.xh_stage.as_ptr(), row_len, j + 1, HIST_NODES);
+        let ds_view = NodeView::ring(self.dh_stage.as_ptr(), row_len, j, HIST_NODES);
+        let ctx = StepCtx {
+            j,
+            i_paper: self.n_steps - j,
+            t,
+            t_next,
+            sched,
+            xs: xs_view,
+            ds: ds_view,
+        };
+        if let Some(h) = hook.as_deref_mut() {
+            h.correct(&ctx, x_cur, rows, d);
+        }
+        let spec = solver.scratch_spec(dim, rows);
+        let max_parts = if self.threads == 0 {
+            Pool::global().size()
+        } else {
+            self.threads
+        };
+        let scratch_need = spec.per_row * rows + spec.flat * max_parts.max(1);
+        if self.scratch.len() < scratch_need {
+            self.scratch.resize(scratch_need, 0.0);
+        }
+        step_rows(
+            self.threads,
+            solver,
+            model,
+            &ctx,
+            x_cur,
+            d,
+            rows,
+            dim,
+            spec,
+            &mut self.scratch,
+            &mut self.out_buf[..row_len],
+        );
+        // Scatter: the (post-hook) direction becomes node `j` of each
+        // slot's d-ring, the stepped state node `j + 1` of its x-ring —
+        // advancing the cursor.
+        for (r, &id) in slots.iter().enumerate() {
+            let s = &mut self.slots[id];
+            s.ds.push_row(&self.d_buf[r * dim..(r + 1) * dim]);
+            s.xs.push_row(&self.out_buf[r * dim..(r + 1) * dim]);
+        }
+        solver.evals_per_step()
+    }
+}
+
+impl Default for SlotEngine {
+    fn default() -> Self {
+        SlotEngine::new(0)
+    }
+}
+
 /// Advance the batch, sharding rows across the pool when profitable.
 /// Each shard receives column sub-views of the history and its own
 /// disjoint [`StepScratch`] slice of the engine arena, so per-row
@@ -606,6 +898,110 @@ mod tests {
         let mut x0 = vec![0.0; n * 64];
         let nfe = eng.run_into(solver.as_ref(), &guard, &x_t, n, &sched, None, &mut x0);
         assert_eq!(nfe, 8);
+    }
+
+    /// Slot-resident stepping with staggered admissions (including
+    /// re-admission into freed slots) must reproduce every request's solo
+    /// run bit-for-bit, for single- and multi-step and multi-eval solvers.
+    #[test]
+    fn slot_engine_matches_solo_runs_under_staggered_admission() {
+        let ds = get("gmm-hd64").unwrap();
+        let model = AnalyticEps::from_dataset(&ds);
+        let n_steps = 8;
+        let sched = default_schedule(n_steps);
+        let dim = 64;
+        // (admission tick, rows): the third admission lands after the
+        // first retired, so it reuses freed slots mid-flight.
+        let arrivals: [(usize, usize); 3] = [(0, 3), (2, 2), (8, 4)];
+        for name in ["ddim", "ipndm", "dpmpp3m", "unipc3m", "heun"] {
+            let solver = registry::get(name).unwrap();
+            let mut rng = Pcg64::seed(21);
+            let priors: Vec<Vec<f64>> = arrivals
+                .iter()
+                .map(|&(_, rows)| sample_prior(&mut rng, rows, dim, sched.t_max()))
+                .collect();
+            for threads in [1usize, 3] {
+                let counting = CountingEps::new(model.as_ref());
+                let mut eng = SlotEngine::new(threads);
+                eng.reset(dim, n_steps);
+                // (slots, cursor, arrival index) per live cohort.
+                let mut live: Vec<(Vec<usize>, usize, usize)> = Vec::new();
+                let mut done: Vec<(usize, Vec<f64>)> = Vec::new();
+                let mut tick = 0usize;
+                while done.len() < arrivals.len() {
+                    for (a, &(at, _)) in arrivals.iter().enumerate() {
+                        if at == tick {
+                            let mut slots = Vec::new();
+                            eng.admit(&priors[a], &mut slots);
+                            live.push((slots, 0, a));
+                        }
+                    }
+                    for (slots, cursor, _) in live.iter_mut() {
+                        eng.step_cohort(solver.as_ref(), &counting, &sched, slots, None);
+                        *cursor += 1;
+                    }
+                    live.retain_mut(|(slots, cursor, a)| {
+                        if *cursor < n_steps {
+                            return true;
+                        }
+                        let mut out = vec![0.0; slots.len() * dim];
+                        for (r, &s) in slots.iter().enumerate() {
+                            eng.retire_into(s, &mut out[r * dim..(r + 1) * dim]);
+                        }
+                        done.push((*a, out));
+                        false
+                    });
+                    tick += 1;
+                    assert!(tick < 64, "{name}: scheduler failed to drain");
+                }
+                for (a, got) in done {
+                    let rows = arrivals[a].1;
+                    let mut solo_eng = SamplerEngine::with_record(Record::None);
+                    let mut want = vec![0.0; rows * dim];
+                    solo_eng.run_into(
+                        solver.as_ref(),
+                        model.as_ref(),
+                        &priors[a],
+                        rows,
+                        &sched,
+                        None,
+                        &mut want,
+                    );
+                    assert_eq!(
+                        got, want,
+                        "{name}: request {a} (threads={threads}) diverged from its solo run"
+                    );
+                }
+                assert_eq!(eng.active_rows(), 0);
+                // Per-slot NFE accounting: every resident row is evaluated
+                // exactly `evals_per_step` times per step, regardless of
+                // cohort composition or sharding.
+                let total_rows: usize = arrivals.iter().map(|&(_, r)| r).sum();
+                assert_eq!(
+                    counting.rows_evaluated(),
+                    total_rows * n_steps * solver.evals_per_step(),
+                    "{name}: per-slot NFE accounting (threads={threads})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "share a cursor")]
+    fn slot_engine_rejects_mixed_cursor_cohorts() {
+        let ds = get("gmm2d").unwrap();
+        let model = AnalyticEps::from_dataset(&ds);
+        let sched = default_schedule(4);
+        let solver = registry::get("ddim").unwrap();
+        let mut rng = Pcg64::seed(22);
+        let mut eng = SlotEngine::new(1);
+        eng.reset(2, 4);
+        let (mut a, mut b) = (Vec::new(), Vec::new());
+        eng.admit(&sample_prior(&mut rng, 1, 2, sched.t_max()), &mut a);
+        eng.step_cohort(solver.as_ref(), model.as_ref(), &sched, &a, None);
+        eng.admit(&sample_prior(&mut rng, 1, 2, sched.t_max()), &mut b);
+        let mixed = vec![a[0], b[0]];
+        let _ = eng.step_cohort(solver.as_ref(), model.as_ref(), &sched, &mixed, None);
     }
 
     #[test]

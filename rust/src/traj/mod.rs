@@ -31,6 +31,17 @@ pub fn sample_prior_into(rng: &mut Pcg64, t_max: f64, out: &mut [f64]) {
     crate::tensor::scale(t_max, out);
 }
 
+/// The serving layer's per-request prior convention: request `(seed,
+/// stream)` — the stream is the request id — draws from its own
+/// deterministic [`Pcg64`] stream, independent of batch composition or
+/// admission order. Both service schedulers and every solo-run parity
+/// check draw through this one function, so "the same request" always
+/// means "the same prior rows" by construction.
+pub fn sample_prior_stream(seed: u64, stream: u64, n: usize, dim: usize, t_max: f64) -> Vec<f64> {
+    let mut rng = Pcg64::seed_stream(seed, stream);
+    sample_prior(&mut rng, n, dim, t_max)
+}
+
 /// Ground-truth trajectories for a student schedule (paper §3.3).
 ///
 /// The teacher runs `teacher_nfe` model evaluations on the refined grid
@@ -212,6 +223,13 @@ mod tests {
         assert_eq!(x, y);
         // RNG streams advanced identically.
         assert_eq!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn prior_stream_matches_manual_stream() {
+        let mut rng = Pcg64::seed_stream(5, 9);
+        let a = sample_prior(&mut rng, 3, 2, 80.0);
+        assert_eq!(a, sample_prior_stream(5, 9, 3, 2, 80.0));
     }
 
     #[test]

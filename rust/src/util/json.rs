@@ -8,16 +8,44 @@
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
-/// A JSON value. Numbers are kept as f64 (all our payloads are numeric
-/// science data; 2^53 integer precision is plenty).
-#[derive(Clone, Debug, PartialEq)]
+/// A JSON value. Non-integer numbers are kept as f64; non-negative
+/// integer tokens are kept exactly as [`Json::UInt`] so 64-bit payload
+/// fields (request seeds, ids) survive parsing bit-for-bit — an f64 can
+/// only represent integers exactly up to 2^53.
+#[derive(Clone, Debug)]
 pub enum Json {
     Null,
     Bool(bool),
     Num(f64),
+    /// A non-negative integer token, preserved exactly (full u64 range).
+    UInt(u64),
     Str(String),
     Arr(Vec<Json>),
     Obj(BTreeMap<String, Json>),
+}
+
+/// Numeric equality bridges the two number variants: `Num(6.0)` and
+/// `UInt(6)` compare equal, so value round-trips through serialization
+/// (which prints both as `6`) stay reflexive. The bridge is *exact*: a
+/// `Num` only equals a `UInt` when the f64 is an integer inside f64's
+/// exact range (≤ 2^53) — comparing through a lossy u64→f64 cast would
+/// make distinct values above 2^53 "equal" and break transitivity.
+impl PartialEq for Json {
+    fn eq(&self, other: &Self) -> bool {
+        match (self, other) {
+            (Json::Null, Json::Null) => true,
+            (Json::Bool(a), Json::Bool(b)) => a == b,
+            (Json::Num(a), Json::Num(b)) => a == b,
+            (Json::UInt(a), Json::UInt(b)) => a == b,
+            (Json::Num(a), Json::UInt(b)) | (Json::UInt(b), Json::Num(a)) => {
+                Json::Num(*a).as_u64() == Some(*b)
+            }
+            (Json::Str(a), Json::Str(b)) => a == b,
+            (Json::Arr(a), Json::Arr(b)) => a == b,
+            (Json::Obj(a), Json::Obj(b)) => a == b,
+            _ => false,
+        }
+    }
 }
 
 impl Json {
@@ -42,12 +70,27 @@ impl Json {
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(x) => Some(*x),
+            // Lossy above 2^53 — callers needing exactness use `as_u64`.
+            Json::UInt(u) => Some(*u as f64),
+            _ => None,
+        }
+    }
+
+    /// Exact non-negative integer value. `UInt` tokens return their full
+    /// u64 range; `Num` qualifies only when it is integral, non-negative
+    /// and within f64's exact-integer range (≤ 2^53). Negative numbers,
+    /// fractions, and anything non-numeric return `None`.
+    pub fn as_u64(&self) -> Option<u64> {
+        const MAX_EXACT: f64 = 9_007_199_254_740_992.0; // 2^53
+        match self {
+            Json::UInt(u) => Some(*u),
+            Json::Num(x) if *x >= 0.0 && x.fract() == 0.0 && *x <= MAX_EXACT => Some(*x as u64),
             _ => None,
         }
     }
 
     pub fn as_usize(&self) -> Option<usize> {
-        self.as_f64().map(|x| x as usize)
+        self.as_u64().and_then(|u| usize::try_from(u).ok())
     }
 
     pub fn as_str(&self) -> Option<&str> {
@@ -101,6 +144,9 @@ impl Json {
                 } else {
                     out.push_str("null"); // JSON has no NaN/Inf
                 }
+            }
+            Json::UInt(u) => {
+                let _ = write!(out, "{}", u);
             }
             Json::Str(s) => {
                 out.push('"');
@@ -220,11 +266,19 @@ impl<'a> Parser<'a> {
                 break;
             }
         }
-        std::str::from_utf8(&self.b[start..self.i])
-            .ok()
-            .and_then(|s| s.parse::<f64>().ok())
+        let tok = std::str::from_utf8(&self.b[start..self.i])
+            .map_err(|_| format!("bad number at byte {start}"))?;
+        // A pure non-negative integer token parses exactly (full u64
+        // range); everything else — fractions, exponents, negatives, and
+        // integers beyond u64 — falls back to f64.
+        if !tok.is_empty() && tok.bytes().all(|c| c.is_ascii_digit()) {
+            if let Ok(u) = tok.parse::<u64>() {
+                return Ok(Json::UInt(u));
+            }
+        }
+        tok.parse::<f64>()
             .map(Json::Num)
-            .ok_or_else(|| format!("bad number at byte {start}"))
+            .map_err(|_| format!("bad number at byte {start}"))
     }
 
     fn string(&mut self) -> Result<String, String> {
@@ -384,6 +438,44 @@ mod tests {
     fn integers_print_without_fraction() {
         assert_eq!(Json::Num(6.0).to_string(), "6");
         assert_eq!(Json::Num(6.5).to_string(), "6.5");
+        assert_eq!(Json::UInt(6).to_string(), "6");
+        assert_eq!(Json::UInt(u64::MAX).to_string(), "18446744073709551615");
+    }
+
+    #[test]
+    fn integer_tokens_parse_exactly() {
+        // Below, at, and above the f64 exact-integer boundary (2^53), up
+        // to u64::MAX: every one must round-trip bit-for-bit.
+        for u in [
+            0u64,
+            (1 << 53) - 1,
+            (1 << 53) + 1,
+            u64::MAX - 1,
+            u64::MAX,
+        ] {
+            let j = Json::parse(&u.to_string()).unwrap();
+            assert_eq!(j.as_u64(), Some(u), "token {u}");
+            assert_eq!(Json::parse(&j.to_string()).unwrap().as_u64(), Some(u));
+        }
+        // Integral f64s stay usable through the exact accessor...
+        assert_eq!(Json::Num(12.0).as_u64(), Some(12));
+        // ...but negatives, fractions, exponents and >u64 tokens do not.
+        assert_eq!(Json::parse("-1").unwrap().as_u64(), None);
+        assert_eq!(Json::parse("1.5").unwrap().as_u64(), None);
+        assert_eq!(Json::parse("18446744073709551616").unwrap().as_u64(), None);
+        // Exponent tokens go through f64: exact only within 2^53.
+        assert_eq!(Json::parse("1e3").unwrap().as_u64(), Some(1000));
+        assert_eq!(Json::parse("1e18").unwrap().as_u64(), None);
+        // Cross-variant numeric equality is exact: equal only where the
+        // u64 ↔ f64 mapping is injective (≤ 2^53), so PartialEq stays
+        // transitive above the boundary.
+        assert_eq!(Json::parse("6").unwrap(), Json::Num(6.0));
+        assert_eq!(Json::UInt(1 << 53), Json::Num(9_007_199_254_740_992.0));
+        assert_ne!(Json::UInt((1 << 53) + 1), Json::Num(9_007_199_254_740_992.0));
+        assert_ne!(
+            Json::parse("18446744073709551616").unwrap(), // 2^64: a Num
+            Json::UInt(u64::MAX)
+        );
     }
 
     #[test]

@@ -1,0 +1,189 @@
+//! Integration: step-level continuous batching through the public
+//! service API.
+//!
+//! The scheduler's determinism contract makes these tests timing-proof:
+//! whatever admission interleaving the threaded service actually
+//! produces, every response must be bit-identical to running that request
+//! alone — so we stagger submissions with real sleeps (forcing genuine
+//! mid-flight admissions most of the time) and still assert exact bits.
+
+use pas::pas::coords::{CoordinateDict, ScaleMode};
+use pas::pas::correct::CorrectedSampler;
+use pas::schedule::default_schedule;
+use pas::score::analytic::AnalyticEps;
+use pas::server::{Batching, SamplingRequest, Service, ServiceConfig};
+use pas::solvers::engine::{Record, SamplerEngine};
+use pas::traj::sample_prior_stream;
+use std::time::Duration;
+
+/// Run `req` alone through a fresh serving-configuration engine — the
+/// right-hand side of the determinism contract.
+fn solo_run(req: &SamplingRequest, id: u64, dict: Option<&CoordinateDict>) -> Vec<f64> {
+    let ds = pas::data::registry::get(&req.dataset).unwrap();
+    let model = AnalyticEps::from_dataset(&ds);
+    let solver = pas::solvers::registry::get(&req.solver).unwrap();
+    let steps = solver.steps_for_nfe(req.nfe).unwrap();
+    let sched = default_schedule(steps);
+    let dim = model.dim();
+    let x_t = sample_prior_stream(req.seed, id, req.n_samples, dim, sched.t_max());
+    let mut x0 = vec![0.0; req.n_samples * dim];
+    let mut engine = SamplerEngine::with_record(Record::None);
+    match dict {
+        Some(d) => {
+            let mut hook = CorrectedSampler::new(d, dim);
+            engine.run_into(
+                solver.as_ref(),
+                model.as_ref(),
+                &x_t,
+                req.n_samples,
+                &sched,
+                Some(&mut hook),
+                &mut x0,
+            );
+        }
+        None => {
+            engine.run_into(
+                solver.as_ref(),
+                model.as_ref(),
+                &x_t,
+                req.n_samples,
+                &sched,
+                None,
+                &mut x0,
+            );
+        }
+    }
+    x0
+}
+
+fn request(dataset: &str, solver: &str, nfe: usize, n: usize, seed: u64) -> SamplingRequest {
+    SamplingRequest {
+        id: 0,
+        dataset: dataset.into(),
+        solver: solver.into(),
+        nfe,
+        n_samples: n,
+        seed,
+        use_pas: false,
+    }
+}
+
+/// Staggered arrivals into one compatibility key: every response must
+/// match its solo run bitwise, across engine thread caps.
+#[test]
+fn staggered_arrivals_match_solo_runs_bitwise() {
+    for engine_threads in [1usize, 4, 16] {
+        let svc = Service::start(
+            ServiceConfig {
+                workers: 2,
+                engine_threads,
+                ..ServiceConfig::default()
+            },
+            Vec::new(),
+        );
+        // Mixed solvers (two keys) with staggered submission so later
+        // requests usually land while earlier ones are mid-flight.
+        let reqs: Vec<SamplingRequest> = (0..10)
+            .map(|i| {
+                let (solver, nfe) = if i % 3 == 0 { ("dpmpp3m", 12) } else { ("ddim", 12) };
+                request("gmm-hd64", solver, nfe, 8 + (i as usize % 5), i)
+            })
+            .collect();
+        let mut rxs = Vec::new();
+        for r in &reqs {
+            rxs.push(svc.submit(r.clone()).unwrap());
+            std::thread::sleep(Duration::from_micros(300));
+        }
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let resp = rx.recv().unwrap();
+            assert!(resp.error.is_none(), "request {i}: {:?}", resp.error);
+            assert_eq!(resp.n, reqs[i].n_samples);
+            let want = solo_run(&reqs[i], resp.id, None);
+            assert_eq!(
+                resp.samples, want,
+                "request {i} (engine_threads={engine_threads}) diverged from its solo run"
+            );
+        }
+        svc.shutdown();
+    }
+}
+
+/// Same through the PAS correction path with a registered dictionary.
+#[test]
+fn corrected_staggered_arrivals_match_solo_runs() {
+    let mut dict = CoordinateDict::new(4, ScaleMode::Relative, "ddim", "gmm2d", 6);
+    dict.steps.insert(4, vec![0.95, 0.02, 0.0, 0.0]);
+    dict.steps.insert(1, vec![1.0, 0.0, -0.05, 0.0]);
+    let svc = Service::start(ServiceConfig::default(), vec![dict.clone()]);
+    let reqs: Vec<SamplingRequest> = (0..6)
+        .map(|i| {
+            let mut r = request("gmm2d", "ddim", 6, 4 + i as usize, 100 + i);
+            r.use_pas = true;
+            r
+        })
+        .collect();
+    let mut rxs = Vec::new();
+    for r in &reqs {
+        rxs.push(svc.submit(r.clone()).unwrap());
+        std::thread::sleep(Duration::from_micros(200));
+    }
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx.recv().unwrap();
+        assert!(resp.error.is_none());
+        let want = solo_run(&reqs[i], resp.id, Some(&dict));
+        assert_eq!(
+            resp.samples, want,
+            "corrected request {i} diverged from its solo run"
+        );
+    }
+    svc.shutdown();
+}
+
+/// The collect-then-run baseline stays available and bit-compatible: its
+/// responses match the same solo runs the continuous scheduler matches.
+#[test]
+fn collect_then_run_baseline_matches_same_contract() {
+    let svc = Service::start(
+        ServiceConfig {
+            batching: Batching::CollectThenRun,
+            batch_window: Duration::from_millis(5),
+            ..ServiceConfig::default()
+        },
+        Vec::new(),
+    );
+    let reqs: Vec<SamplingRequest> =
+        (0..5).map(|i| request("gmm2d", "ipndm", 8, 6, 40 + i)).collect();
+    let rxs: Vec<_> = reqs.iter().map(|r| svc.submit(r.clone()).unwrap()).collect();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx.recv().unwrap();
+        assert!(resp.error.is_none());
+        let want = solo_run(&reqs[i], resp.id, None);
+        assert_eq!(resp.samples, want, "collect-then-run request {i}");
+    }
+    svc.shutdown();
+}
+
+/// Protocol-level errors surface as structured error responses over the
+/// full stack (strict parsing feeds the service the validated request).
+#[test]
+fn service_reports_structured_errors() {
+    let svc = Service::start(ServiceConfig::default(), Vec::new());
+    for line in [
+        r#"{"dataset":"not-a-dataset","solver":"ddim","nfe":6,"n":2}"#,
+        r#"{"dataset":"gmm2d","solver":"not-a-solver","nfe":6,"n":2}"#,
+        r#"{"dataset":"gmm2d","solver":"ddim","nfe":6,"n":9999}"#,
+        r#"{"dataset":"gmm2d","solver":"ddim","nfe":6,"n":2,"seed":-3}"#,
+    ] {
+        let err = pas::server::protocol::parse_request(line);
+        assert!(err.is_err(), "{line} must be rejected at the protocol layer");
+    }
+    // A valid request still flows end to end.
+    let ok = pas::server::protocol::parse_request(
+        r#"{"dataset":"gmm2d","solver":"ddim","nfe":6,"n":2,"seed":18446744073709551615}"#,
+    )
+    .unwrap();
+    assert_eq!(ok.seed, u64::MAX);
+    let resp = svc.call(ok).unwrap();
+    assert!(resp.error.is_none());
+    svc.shutdown();
+}
