@@ -73,6 +73,7 @@ fn run_mode(batching: Batching, interval: Duration) -> ModeStats {
             queue_depth: 1024,
             batching,
             engine_threads: 0,
+            artifact_root: None,
         },
         Vec::new(),
     );

@@ -1,0 +1,316 @@
+//! Verified read side of the artifact store: checksum + semantic
+//! validation on every load, quarantine of corrupt blobs, and fallback to
+//! the newest remaining good version ("heal") instead of panicking.
+//!
+//! The loader's contract mirrors serving's availability bias: corruption
+//! costs versions, never the process. A key whose every retained version
+//! is corrupt simply loads nothing — serving cold-starts that key
+//! uncorrected — and the corrupt blobs sit in `quarantine/` for
+//! post-mortem. Healing persists a new manifest generation so a
+//! subsequent [`verify`] converges back to clean.
+
+use super::manifest::{ArtifactKey, ManifestEntry, ManifestSource, VersionRecord};
+use super::store::ArtifactStore;
+use crate::pas::coords::CoordinateDict;
+use crate::util::json::Json;
+
+/// One successfully loaded artifact.
+#[derive(Clone, Debug)]
+pub struct LoadedDict {
+    pub key: ArtifactKey,
+    /// Version actually served (the manifest current, unless healing fell
+    /// back to an older one).
+    pub version: u64,
+    pub checksum: String,
+    /// True when the manifest's current version was unusable and the
+    /// loader fell back to (and re-promoted) an older good version.
+    pub healed: bool,
+    pub dict: CoordinateDict,
+}
+
+/// Result of [`load_all`].
+#[derive(Debug, Default)]
+pub struct LoadAllReport {
+    /// Which manifest file the load started from.
+    pub source: Option<ManifestSource>,
+    pub loaded: Vec<LoadedDict>,
+    /// Keys where every retained version was unusable, with the
+    /// per-version reasons.
+    pub failed: Vec<(ArtifactKey, String)>,
+}
+
+/// Result of [`verify`] — read-only integrity sweep over every record
+/// (current and history) in the manifest.
+#[derive(Debug)]
+pub struct VerifyReport {
+    pub source: ManifestSource,
+    pub generation: u64,
+    /// Number of (key, version) records checked.
+    pub checked: usize,
+    /// Human-readable description per bad record; empty means clean.
+    pub errors: Vec<String>,
+}
+
+impl VerifyReport {
+    pub fn ok(&self) -> bool {
+        self.errors.is_empty()
+    }
+}
+
+/// Load + validate the blob behind one version record. On corruption
+/// (checksum mismatch, invalid JSON, or a dict that fails
+/// [`CoordinateDict::from_json`]'s validation) the blob is quarantined
+/// before the error is returned; a missing blob is an error without
+/// quarantine.
+fn try_load_record(
+    store: &ArtifactStore,
+    key: &ArtifactKey,
+    rec: &VersionRecord,
+) -> Result<CoordinateDict, String> {
+    let bytes = match store.read_blob(&rec.checksum) {
+        Ok(Some(b)) => b,
+        Ok(None) => return Err("blob missing".to_string()),
+        Err(e) => {
+            store.quarantine_blob(&rec.checksum);
+            return Err(e);
+        }
+    };
+    let parsed = String::from_utf8(bytes)
+        .map_err(|e| format!("blob not utf-8: {e}"))
+        .and_then(|s| Json::parse(&s))
+        .and_then(|j| CoordinateDict::from_json(&j));
+    match parsed {
+        Ok(dict) => {
+            if dict.dataset != key.dataset || dict.solver != key.solver {
+                // Keyed under one name, trained under another: suspicious
+                // but not corrupt (keys carry the serving identity, the
+                // dict its training provenance) — serve it, loudly.
+                crate::warn_!(
+                    "artifact {} v{}: dict provenance is {}/{}",
+                    key.id(),
+                    rec.version,
+                    dict.dataset,
+                    dict.solver
+                );
+            }
+            Ok(dict)
+        }
+        Err(e) => {
+            // Checksum matched but the content is not a valid dict: the
+            // published artifact itself was bad. Same treatment.
+            store.quarantine_blob(&rec.checksum);
+            Err(format!("invalid dict: {e}"))
+        }
+    }
+}
+
+/// Load one entry, walking current → history newest-to-oldest until a
+/// version validates. On fallback the entry is mutated in place (the
+/// chosen record becomes current, newer corpses are dropped); the caller
+/// persists the healed manifest.
+fn load_entry(store: &ArtifactStore, entry: &mut ManifestEntry) -> Result<LoadedDict, String> {
+    let mut candidates = vec![entry.current.clone()];
+    candidates.extend(entry.history.iter().rev().cloned());
+    let mut errs = Vec::new();
+    for (idx, rec) in candidates.iter().enumerate() {
+        match try_load_record(store, &entry.key, rec) {
+            Ok(dict) => {
+                let healed = idx > 0;
+                if healed {
+                    crate::warn_!(
+                        "artifact {}: v{} unusable, healed to v{}",
+                        entry.key.id(),
+                        entry.current.version,
+                        rec.version
+                    );
+                    entry.history.retain(|r| r.version < rec.version);
+                    entry.current = rec.clone();
+                }
+                return Ok(LoadedDict {
+                    key: entry.key.clone(),
+                    version: rec.version,
+                    checksum: rec.checksum.clone(),
+                    healed,
+                    dict,
+                });
+            }
+            Err(e) => errs.push(format!("v{}: {e}", rec.version)),
+        }
+    }
+    Err(errs.join("; "))
+}
+
+/// Load every key in the store. Corrupt versions are quarantined and
+/// healed around; if any entry healed, the demotion is persisted as a new
+/// manifest generation so the store converges back to a verified state.
+/// Never panics; a completely unusable store returns an empty report.
+pub fn load_all(store: &mut ArtifactStore) -> LoadAllReport {
+    let (mut manifest, source) = store.load_manifest();
+    let mut report = LoadAllReport {
+        source: Some(source),
+        ..LoadAllReport::default()
+    };
+    let mut healed_any = false;
+    for entry in manifest.entries.values_mut() {
+        match load_entry(store, entry) {
+            Ok(l) => {
+                healed_any |= l.healed;
+                report.loaded.push(l);
+            }
+            Err(e) => report.failed.push((entry.key.clone(), e)),
+        }
+    }
+    if healed_any {
+        manifest.generation += 1;
+        if let Err(e) = store.write_manifest(&manifest, source == ManifestSource::Current) {
+            crate::warn_!("could not persist healed manifest: {e}");
+        }
+    }
+    report
+}
+
+/// Load a single key (same heal semantics as [`load_all`]). `None` when
+/// the key is unknown or every retained version is unusable.
+pub fn load_dict(store: &mut ArtifactStore, key: &ArtifactKey) -> Option<LoadedDict> {
+    let (mut manifest, source) = store.load_manifest();
+    let entry = manifest.entries.get_mut(&key.id())?;
+    match load_entry(store, entry) {
+        Ok(l) => {
+            if l.healed {
+                manifest.generation += 1;
+                if let Err(e) =
+                    store.write_manifest(&manifest, source == ManifestSource::Current)
+                {
+                    crate::warn_!("could not persist healed manifest: {e}");
+                }
+            }
+            Some(l)
+        }
+        Err(e) => {
+            crate::warn_!("artifact {}: no usable version ({e})", key.id());
+            None
+        }
+    }
+}
+
+/// Read-only integrity sweep: checks every record (current and history)
+/// of every key against its checksum and dict validation. Mutates
+/// nothing — no quarantine, no heal — so operators can diagnose before
+/// acting; `artifact load` is the healing counterpart.
+pub fn verify(store: &ArtifactStore) -> VerifyReport {
+    let (manifest, source) = store.load_manifest();
+    let mut checked = 0usize;
+    let mut errors = Vec::new();
+    for entry in manifest.entries.values() {
+        for rec in std::iter::once(&entry.current).chain(entry.history.iter()) {
+            checked += 1;
+            let res = match store.read_blob(&rec.checksum) {
+                Ok(Some(b)) => String::from_utf8(b)
+                    .map_err(|e| format!("blob not utf-8: {e}"))
+                    .and_then(|s| Json::parse(&s))
+                    .and_then(|j| CoordinateDict::from_json(&j).map(|_| ())),
+                Ok(None) => Err("blob missing".to_string()),
+                Err(e) => Err(e),
+            };
+            if let Err(e) = res {
+                errors.push(format!("{} v{}: {e}", entry.key.id(), rec.version));
+            }
+        }
+    }
+    VerifyReport {
+        source,
+        generation: manifest.generation,
+        checked,
+        errors,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pas::coords::ScaleMode;
+    use std::path::PathBuf;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    fn unique_dir(tag: &str) -> PathBuf {
+        static SEQ: AtomicU64 = AtomicU64::new(0);
+        let d = std::env::temp_dir().join(format!(
+            "pas_loader_{tag}_{}_{}",
+            std::process::id(),
+            SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn dict(v: f64) -> CoordinateDict {
+        let mut d = CoordinateDict::new(4, ScaleMode::Absolute, "ddim", "gmm2d", 10);
+        d.steps.insert(6, vec![v, 0.1, -0.2, 0.0]);
+        d
+    }
+
+    #[test]
+    fn load_roundtrip_and_verify_clean() {
+        let dir = unique_dir("roundtrip");
+        let mut store = ArtifactStore::open(&dir).unwrap();
+        let key = ArtifactKey::new("gmm2d", "ddim", 10);
+        let d = dict(1.5);
+        let out = store.publish(&key, &d).unwrap();
+        assert_eq!(out.version, 1);
+
+        let loaded = load_dict(&mut store, &key).unwrap();
+        assert!(!loaded.healed);
+        assert_eq!(loaded.version, 1);
+        // Bit-identical: canonical JSON equality is byte equality.
+        assert_eq!(loaded.dict.to_json().to_string(), d.to_json().to_string());
+
+        let rep = verify(&store);
+        assert!(rep.ok(), "{:?}", rep.errors);
+        assert_eq!(rep.checked, 1);
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn corrupt_current_heals_to_previous() {
+        let dir = unique_dir("heal");
+        let mut store = ArtifactStore::open(&dir).unwrap();
+        let key = ArtifactKey::new("gmm2d", "ddim", 10);
+        let d1 = dict(1.0);
+        let d2 = dict(2.0);
+        store.publish(&key, &d1).unwrap();
+        let out2 = store.publish(&key, &d2).unwrap();
+        assert_eq!(out2.version, 2);
+
+        // Truncate v2's blob: checksum no longer matches.
+        let p = store.blob_path(&out2.checksum);
+        let bytes = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &bytes[..bytes.len() / 2]).unwrap();
+
+        assert!(!verify(&store).ok());
+        let loaded = load_dict(&mut store, &key).unwrap();
+        assert!(loaded.healed);
+        assert_eq!(loaded.version, 1);
+        assert_eq!(loaded.dict.to_json().to_string(), d1.to_json().to_string());
+        assert!(store.quarantine_path(&out2.checksum).exists());
+        // Heal persisted: a fresh handle verifies clean.
+        let store2 = ArtifactStore::open(&dir).unwrap();
+        let rep = verify(&store2);
+        assert!(rep.ok(), "{:?}", rep.errors);
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn all_versions_corrupt_loads_nothing() {
+        let dir = unique_dir("dead");
+        let mut store = ArtifactStore::open(&dir).unwrap();
+        let key = ArtifactKey::new("gmm2d", "ddim", 10);
+        let out = store.publish(&key, &dict(1.0)).unwrap();
+        std::fs::write(store.blob_path(&out.checksum), b"garbage").unwrap();
+
+        assert!(load_dict(&mut store, &key).is_none());
+        let rep = load_all(&mut store);
+        assert!(rep.loaded.is_empty());
+        assert_eq!(rep.failed.len(), 1);
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

@@ -1,0 +1,325 @@
+//! Versioned, self-checksummed manifest: the store's source of truth.
+//!
+//! `manifest.json` maps artifact keys to their current [`VersionRecord`]
+//! plus retained history, under a **monotonically increasing
+//! `generation`** bumped by every publish/rollback/heal. The serialized
+//! form embeds a checksum of its own body, so a torn write is detected at
+//! parse time (and the loader falls back to `manifest.prev.json`). The
+//! JSON writer is canonical (sorted object keys, integer tokens), so
+//! serialize → parse → serialize is byte-stable and the self-checksum is
+//! well-defined.
+
+use super::store::checksum_hex;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// Manifest format version — bump on incompatible layout changes.
+pub const FORMAT: u64 = 1;
+
+/// Identity of one artifact slot: the serving-registry key. `nfe` is the
+/// *requested* NFE (the serving key), which for multi-eval solvers
+/// differs from the solver-step count a dict's own `nfe` field records.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct ArtifactKey {
+    pub dataset: String,
+    pub solver: String,
+    pub nfe: usize,
+}
+
+impl ArtifactKey {
+    pub fn new(dataset: &str, solver: &str, nfe: usize) -> ArtifactKey {
+        ArtifactKey {
+            dataset: dataset.to_string(),
+            solver: solver.to_string(),
+            nfe,
+        }
+    }
+
+    /// Manifest map key, `dataset/solver/nfe`.
+    pub fn id(&self) -> String {
+        format!("{}/{}/{}", self.dataset, self.solver, self.nfe)
+    }
+}
+
+/// One published version of one key: its number and blob checksum.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct VersionRecord {
+    /// Per-key version, starting at 1 and strictly increasing.
+    pub version: u64,
+    /// Blob checksum (= blob file name, sans extension).
+    pub checksum: String,
+}
+
+/// Manifest entry for one key: the current version plus retained older
+/// versions (oldest first) available for rollback/fallback.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ManifestEntry {
+    pub key: ArtifactKey,
+    pub current: VersionRecord,
+    pub history: Vec<VersionRecord>,
+}
+
+/// Which file the manifest was loaded from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ManifestSource {
+    /// `manifest.json`, the healthy case.
+    Current,
+    /// `manifest.json` was missing or torn; recovered from
+    /// `manifest.prev.json` (one generation old).
+    Previous,
+    /// Neither file was usable: clean cold start.
+    Empty,
+}
+
+/// In-memory manifest. `Default` is the empty generation-0 store.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Manifest {
+    pub generation: u64,
+    /// [`ArtifactKey::id`] → entry. BTreeMap for canonical serialization.
+    pub entries: BTreeMap<String, ManifestEntry>,
+}
+
+impl Manifest {
+    /// Entry for `key`, created empty (version-0 sentinel current) if
+    /// absent — `publish` replaces the sentinel before writing, and
+    /// `parse` rejects version 0, so a sentinel can never be persisted.
+    pub fn entry_mut(&mut self, key: &ArtifactKey) -> &mut ManifestEntry {
+        self.entries
+            .entry(key.id())
+            .or_insert_with(|| ManifestEntry {
+                key: key.clone(),
+                current: VersionRecord {
+                    version: 0,
+                    checksum: String::new(),
+                },
+                history: Vec::new(),
+            })
+    }
+
+    pub fn get(&self, key: &ArtifactKey) -> Option<&ManifestEntry> {
+        self.entries.get(&key.id())
+    }
+
+    fn body_json(&self) -> Json {
+        let mut entries = Json::obj();
+        for (id, e) in &self.entries {
+            let mut o = Json::obj();
+            o.set("dataset", Json::Str(e.key.dataset.clone()))
+                .set("solver", Json::Str(e.key.solver.clone()))
+                .set("nfe", Json::UInt(e.key.nfe as u64))
+                .set("current", record_json(&e.current))
+                .set(
+                    "history",
+                    Json::Arr(e.history.iter().map(record_json).collect()),
+                );
+            entries.set(id, o);
+        }
+        let mut o = Json::obj();
+        o.set("format", Json::UInt(FORMAT))
+            .set("generation", Json::UInt(self.generation))
+            .set("entries", entries);
+        o
+    }
+
+    /// Canonical serialization with the embedded self-checksum.
+    pub fn serialize(&self) -> String {
+        let mut j = self.body_json();
+        let sum = checksum_hex(self.body_json().to_string().as_bytes());
+        j.set("checksum", Json::Str(sum));
+        j.to_string()
+    }
+
+    /// Parse and fully validate a serialized manifest: the embedded
+    /// checksum must match the body (torn-write detection), and every
+    /// entry must be internally consistent (id matches its key fields,
+    /// versions start at 1, history strictly ascending below current).
+    pub fn parse(s: &str) -> Result<Manifest, String> {
+        let mut j = Json::parse(s)?;
+        let declared = j
+            .take("checksum")
+            .and_then(|v| v.as_str().map(|s| s.to_string()))
+            .ok_or("manifest missing checksum")?;
+        let actual = checksum_hex(j.to_string().as_bytes());
+        if actual != declared {
+            return Err(format!(
+                "manifest checksum mismatch: declared {declared}, body hashes to {actual} (torn write?)"
+            ));
+        }
+        let format = j
+            .get("format")
+            .and_then(|v| v.as_u64())
+            .ok_or("manifest missing format")?;
+        if format != FORMAT {
+            return Err(format!("unsupported manifest format {format}"));
+        }
+        let generation = j
+            .get("generation")
+            .and_then(|v| v.as_u64())
+            .ok_or("manifest missing generation")?;
+        let mut entries = BTreeMap::new();
+        if let Some(em) = j.get("entries") {
+            let em = em.as_obj().ok_or("manifest entries must be an object")?;
+            for (id, v) in em {
+                let entry = parse_entry(id, v)?;
+                entries.insert(id.clone(), entry);
+            }
+        }
+        Ok(Manifest {
+            generation,
+            entries,
+        })
+    }
+}
+
+fn record_json(r: &VersionRecord) -> Json {
+    let mut o = Json::obj();
+    o.set("version", Json::UInt(r.version))
+        .set("checksum", Json::Str(r.checksum.clone()));
+    o
+}
+
+fn parse_record(j: &Json, what: &str) -> Result<VersionRecord, String> {
+    let version = j
+        .get("version")
+        .and_then(|v| v.as_u64())
+        .ok_or_else(|| format!("{what}: missing version"))?;
+    if version == 0 {
+        return Err(format!("{what}: version 0 is invalid"));
+    }
+    let checksum = j
+        .get("checksum")
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| format!("{what}: missing checksum"))?
+        .to_string();
+    if checksum.len() != 16 || !checksum.bytes().all(|b| b.is_ascii_hexdigit()) {
+        return Err(format!("{what}: malformed checksum \"{checksum}\""));
+    }
+    Ok(VersionRecord { version, checksum })
+}
+
+fn parse_entry(id: &str, j: &Json) -> Result<ManifestEntry, String> {
+    let dataset = j
+        .get("dataset")
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| format!("entry {id}: missing dataset"))?;
+    let solver = j
+        .get("solver")
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| format!("entry {id}: missing solver"))?;
+    let nfe = j
+        .get("nfe")
+        .and_then(|v| v.as_usize())
+        .ok_or_else(|| format!("entry {id}: missing nfe"))?;
+    let key = ArtifactKey::new(dataset, solver, nfe);
+    if key.id() != id {
+        return Err(format!("entry {id}: key fields disagree ({})", key.id()));
+    }
+    let current = parse_record(
+        j.get("current").ok_or_else(|| format!("entry {id}: missing current"))?,
+        &format!("entry {id} current"),
+    )?;
+    let mut history = Vec::new();
+    if let Some(h) = j.get("history") {
+        for (k, r) in h
+            .as_arr()
+            .ok_or_else(|| format!("entry {id}: history must be an array"))?
+            .iter()
+            .enumerate()
+        {
+            history.push(parse_record(r, &format!("entry {id} history[{k}]"))?);
+        }
+    }
+    let mut last = 0u64;
+    for r in &history {
+        if r.version <= last {
+            return Err(format!("entry {id}: history versions not ascending"));
+        }
+        last = r.version;
+    }
+    if current.version <= last {
+        return Err(format!(
+            "entry {id}: current version {} not above history",
+            current.version
+        ));
+    }
+    Ok(ManifestEntry {
+        key,
+        current,
+        history,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Manifest {
+        let mut m = Manifest::default();
+        let key = ArtifactKey::new("gmm2d", "ddim", 10);
+        let e = m.entry_mut(&key);
+        e.current = VersionRecord {
+            version: 2,
+            checksum: "00112233445566aa".into(),
+        };
+        e.history.push(VersionRecord {
+            version: 1,
+            checksum: "ffeeddccbbaa0099".into(),
+        });
+        m.generation = 2;
+        m
+    }
+
+    #[test]
+    fn serialize_parse_roundtrip_is_byte_stable() {
+        let m = sample();
+        let s = m.serialize();
+        let back = Manifest::parse(&s).unwrap();
+        assert_eq!(back, m);
+        assert_eq!(back.serialize(), s, "canonical form must be stable");
+        let e = back.get(&ArtifactKey::new("gmm2d", "ddim", 10)).unwrap();
+        assert_eq!(e.current.version, 2);
+        assert_eq!(e.history.len(), 1);
+    }
+
+    #[test]
+    fn tampered_or_torn_manifest_is_rejected() {
+        let s = sample().serialize();
+        // Torn tail.
+        assert!(Manifest::parse(&s[..s.len() / 2]).is_err());
+        // Bit flip in the body breaks the self-checksum.
+        let flipped = s.replace("\"generation\":2", "\"generation\":3");
+        assert_ne!(flipped, s);
+        let e = Manifest::parse(&flipped).unwrap_err();
+        assert!(e.contains("checksum mismatch"), "{e}");
+        // Missing checksum field.
+        assert!(Manifest::parse("{\"format\":1,\"generation\":0}").is_err());
+    }
+
+    #[test]
+    fn invalid_entries_are_rejected() {
+        let mut m = sample();
+        // Version 0 sentinel must never persist.
+        m.entry_mut(&ArtifactKey::new("gmm2d", "heun", 8));
+        assert!(Manifest::parse(&m.serialize()).is_err());
+
+        let mut m = sample();
+        // Non-ascending history.
+        let key = ArtifactKey::new("gmm2d", "ddim", 10);
+        m.entry_mut(&key).history.push(VersionRecord {
+            version: 1,
+            checksum: "ffeeddccbbaa0099".into(),
+        });
+        assert!(Manifest::parse(&m.serialize()).is_err());
+
+        // Current must sit above history.
+        let mut m = sample();
+        m.entry_mut(&key).current.version = 1;
+        assert!(Manifest::parse(&m.serialize()).is_err());
+    }
+
+    #[test]
+    fn key_id_roundtrip() {
+        let k = ArtifactKey::new("gmm-hd64", "dpmpp3m", 12);
+        assert_eq!(k.id(), "gmm-hd64/dpmpp3m/12");
+    }
+}

@@ -1,0 +1,72 @@
+//! Durable, checksummed artifact store for trained [`CoordinateDict`]s.
+//!
+//! PAS's whole premise is that a trained sampler correction is ~10
+//! parameters — cheap to train, trivial to store, and exactly the kind of
+//! state that must *not* evaporate on a process restart. This module is
+//! the gap between "an in-process `RwLock` registry" and "a deployable
+//! service": a content-addressed, checksummed on-disk store keyed by
+//! `(dataset, solver, nfe)` with monotonically increasing per-key
+//! versions, atomic publish, corruption quarantine, and rollback.
+//!
+//! # Layout
+//!
+//! ```text
+//! <root>/
+//!   blobs/<fnv1a64-hex>.json    one artifact per file, named by checksum
+//!   quarantine/<hex>.json       corrupt blobs moved aside, never deleted
+//!   manifest.json               current generation (self-checksummed)
+//!   manifest.prev.json          previous generation, kept for recovery
+//! ```
+//!
+//! # Durability protocol
+//!
+//! Every file is written **temp-file → fsync → atomic rename** (then the
+//! parent directory is fsynced), never in place — a crash at any point
+//! leaves either the old file or the new one, plus at worst an orphaned
+//! `*.tmp.*` file that [`ArtifactStore::open`] sweeps. The manifest adds
+//! one more rung: publishing generation *G+1* first renames the live
+//! `manifest.json` (generation *G*) to `manifest.prev.json`, then renames
+//! the new temp file into place, so the torn-manifest crash window (kill
+//! between the two renames) leaves a store whose loader recovers from the
+//! previous generation instead of panicking. The manifest body carries its
+//! own checksum, so a partially written (torn) `manifest.json` is detected
+//! on parse and likewise falls back.
+//!
+//! # Read-side integrity
+//!
+//! [`loader`] verifies every blob's checksum (and semantic validity, via
+//! the hardened [`CoordinateDict::from_json`]) on read. A corrupt blob is
+//! **quarantined** — renamed into `quarantine/` for post-mortem — and the
+//! loader falls back to the newest remaining good version of that key,
+//! persisting the demotion so the store converges back to a verified
+//! state ("heal"). A key whose every version is corrupt simply loads
+//! nothing: serving cold-starts that key uncorrected rather than
+//! panicking or serving corrupt coordinates.
+//!
+//! # Fault injection
+//!
+//! [`store::FailPoint`] lets tests kill the write path between the
+//! temp-file write and the rename (blob or manifest, and between the two
+//! manifest renames) — `tests/artifact_store.rs` drives the full
+//! crash-recovery matrix with it.
+//!
+//! Writers are expected to serialize per store directory (the server
+//! wraps its store in a `Mutex`; the CLI is one-shot). Concurrent
+//! publishes through one handle are safe and strictly versioned; separate
+//! processes racing on one directory can lose a manifest update but can
+//! never corrupt published state, because nothing is written in place.
+//!
+//! This store is also the cache target for future solver/schedule
+//! auto-search recipes (ROADMAP item on USF-style search): any artifact
+//! that serializes to JSON can ride the same blob + manifest machinery.
+
+pub mod loader;
+pub mod manifest;
+pub mod store;
+
+pub use loader::{load_all, load_dict, verify, LoadAllReport, LoadedDict, VerifyReport};
+pub use manifest::{ArtifactKey, Manifest, ManifestEntry, ManifestSource, VersionRecord};
+pub use store::{ArtifactStore, FailPoint, PublishOutcome};
+
+#[cfg(doc)]
+use crate::pas::coords::CoordinateDict;

@@ -1,0 +1,473 @@
+//! On-disk layout and write path of the artifact store.
+//!
+//! Everything durable goes through [`write_atomic`]: temp file in the
+//! same directory, `fsync`, atomic rename over the target, `fsync` of the
+//! parent directory. Blobs are content-addressed (file name = FNV-1a 64
+//! checksum of the bytes), so a blob write is idempotent and two
+//! publishes of identical content share one file. The manifest publish
+//! protocol on top (demote current to `manifest.prev.json`, then rename
+//! the new generation into place) is documented on [`super`].
+
+use super::manifest::{ArtifactKey, Manifest, ManifestSource, VersionRecord};
+use crate::pas::coords::CoordinateDict;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Older versions retained per key for rollback/fallback. Oldest records
+/// beyond this are dropped from the manifest (their blobs stay on disk —
+/// a dict blob is a few hundred bytes, and content-addressing means they
+/// can be shared; nothing ever deletes a blob except quarantine's move).
+pub const HISTORY_KEEP: usize = 8;
+
+/// 64-bit FNV-1a over `bytes` — the store's integrity checksum. Not
+/// cryptographic (the threat model is torn writes and bit rot, not an
+/// adversary); dependency-free and byte-order independent.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    const BASIS: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = BASIS;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(PRIME);
+    }
+    h
+}
+
+/// Checksum as the fixed-width lower-hex string used for blob file names
+/// and manifest records.
+pub fn checksum_hex(bytes: &[u8]) -> String {
+    format!("{:016x}", fnv1a64(bytes))
+}
+
+/// Simulated crash sites in the write path, for fault-injection tests.
+/// Injected via [`ArtifactStore::inject_failpoint`]; the next write that
+/// reaches the site returns an error *without executing the rest of the
+/// protocol* — exactly the state a `kill -9` at that instant leaves.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FailPoint {
+    /// Blob temp file written + synced; crash before the rename makes it
+    /// live. Leaves an orphaned temp file, no visible blob, old manifest.
+    BlobBeforeRename,
+    /// New manifest temp written + synced; crash before anything is
+    /// renamed. Old `manifest.json` still live — the publish never
+    /// happened (the new blob is an orphan).
+    ManifestBeforeRename,
+    /// Crash after `manifest.json` was demoted to `manifest.prev.json`
+    /// but before the new generation was renamed into place: the classic
+    /// torn-manifest window. No `manifest.json` exists; the loader must
+    /// recover from the previous generation.
+    ManifestBetweenRenames,
+}
+
+/// Unique-ish suffix counter for temp files (plus the pid, so two test
+/// processes sharing a tree cannot collide).
+static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
+
+fn tmp_sibling(path: &Path) -> PathBuf {
+    let file = path
+        .file_name()
+        .map(|s| s.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "file".to_string());
+    let n = TMP_SEQ.fetch_add(1, Ordering::Relaxed);
+    path.with_file_name(format!("{file}.tmp.{}.{n}", std::process::id()))
+}
+
+fn sync_dir(dir: &Path) {
+    // Directory fsync is best-effort (not all filesystems support it);
+    // the rename itself is what provides atomicity.
+    if let Ok(d) = std::fs::File::open(dir) {
+        let _ = d.sync_all();
+    }
+}
+
+/// Write `bytes` to `path` durably and atomically: temp sibling → write →
+/// `fsync` → rename → parent-dir `fsync`. A crash leaves either the old
+/// file or the new one, never a torn mix. Creates parent directories.
+pub fn write_atomic(path: &Path, bytes: &[u8]) -> std::io::Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let tmp = tmp_sibling(path);
+    let mut f = std::fs::File::create(&tmp)?;
+    f.write_all(bytes)?;
+    f.sync_all()?;
+    drop(f);
+    if let Err(e) = std::fs::rename(&tmp, path) {
+        let _ = std::fs::remove_file(&tmp);
+        return Err(e);
+    }
+    if let Some(dir) = path.parent() {
+        sync_dir(dir);
+    }
+    Ok(())
+}
+
+/// What [`ArtifactStore::publish`] did.
+#[derive(Clone, Debug)]
+pub struct PublishOutcome {
+    /// The key's now-current version.
+    pub version: u64,
+    /// Checksum (= blob name) of the published content.
+    pub checksum: String,
+    /// True when the key's current version already had byte-identical
+    /// content: nothing was written, no version was consumed.
+    pub deduplicated: bool,
+}
+
+/// Handle on one artifact store directory. See [`super`] for the layout
+/// and durability protocol. Methods taking `&mut self` are the write
+/// path; callers serialize writers per directory (the server wraps the
+/// store in a `Mutex`).
+pub struct ArtifactStore {
+    root: PathBuf,
+    fail: Option<FailPoint>,
+}
+
+impl ArtifactStore {
+    /// Open (creating if absent) the store at `root`. A missing or empty
+    /// directory is a clean cold start. Sweeps `*.tmp.*` orphans left by
+    /// crashed writers — they were never renamed live, so removing them
+    /// is always safe.
+    pub fn open(root: &Path) -> Result<ArtifactStore, String> {
+        for sub in ["blobs", "quarantine"] {
+            std::fs::create_dir_all(root.join(sub))
+                .map_err(|e| format!("artifact store {}: {e}", root.display()))?;
+        }
+        let store = ArtifactStore {
+            root: root.to_path_buf(),
+            fail: None,
+        };
+        store.sweep_tmp(&store.root);
+        store.sweep_tmp(&store.root.join("blobs"));
+        Ok(store)
+    }
+
+    fn sweep_tmp(&self, dir: &Path) {
+        let Ok(entries) = std::fs::read_dir(dir) else {
+            return;
+        };
+        for e in entries.flatten() {
+            let name = e.file_name();
+            if name.to_string_lossy().contains(".tmp.") {
+                let _ = std::fs::remove_file(e.path());
+            }
+        }
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    pub fn blob_path(&self, checksum: &str) -> PathBuf {
+        self.root.join("blobs").join(format!("{checksum}.json"))
+    }
+
+    pub fn quarantine_path(&self, checksum: &str) -> PathBuf {
+        self.root.join("quarantine").join(format!("{checksum}.json"))
+    }
+
+    fn manifest_path(&self) -> PathBuf {
+        self.root.join("manifest.json")
+    }
+
+    fn manifest_prev_path(&self) -> PathBuf {
+        self.root.join("manifest.prev.json")
+    }
+
+    /// Arm a one-shot simulated crash at `fp`; the next write reaching
+    /// that site errors out mid-protocol. Test-only by intent, but always
+    /// compiled: the fault-injection suite runs against the exact
+    /// production write path, not a test double.
+    pub fn inject_failpoint(&mut self, fp: FailPoint) {
+        self.fail = Some(fp);
+    }
+
+    /// Fire (and disarm) the injected failpoint if it matches this site.
+    fn crash_if_armed(&mut self, fp: FailPoint) -> Result<(), String> {
+        if self.fail == Some(fp) {
+            self.fail = None;
+            return Err(format!("injected crash at {fp:?}"));
+        }
+        Ok(())
+    }
+
+    /// Atomic write with a simulated-crash site between the synced temp
+    /// file and the rename. On a (real or injected) failure the target is
+    /// untouched.
+    fn write_atomic_at(
+        &mut self,
+        path: &Path,
+        bytes: &[u8],
+        fp: FailPoint,
+    ) -> Result<(), String> {
+        let tmp = tmp_sibling(path);
+        let write = || -> std::io::Result<()> {
+            let mut f = std::fs::File::create(&tmp)?;
+            f.write_all(bytes)?;
+            f.sync_all()?;
+            Ok(())
+        };
+        write().map_err(|e| format!("write {}: {e}", tmp.display()))?;
+        // Simulated kill: the temp file stays behind (as it would after a
+        // real crash) for `open`'s sweep to collect.
+        self.crash_if_armed(fp)?;
+        std::fs::rename(&tmp, path).map_err(|e| format!("rename to {}: {e}", path.display()))?;
+        if let Some(dir) = path.parent() {
+            sync_dir(dir);
+        }
+        Ok(())
+    }
+
+    /// Write `bytes` as a content-addressed blob; returns its checksum
+    /// (= file name). Idempotent: identical content lands on the same
+    /// path, and the rename makes the last writer win with identical
+    /// bytes.
+    pub fn write_blob(&mut self, bytes: &[u8]) -> Result<String, String> {
+        let sum = checksum_hex(bytes);
+        let path = self.blob_path(&sum);
+        self.write_atomic_at(&path, bytes, FailPoint::BlobBeforeRename)?;
+        Ok(sum)
+    }
+
+    /// Read a blob and verify its content against `checksum`. `Ok(None)`
+    /// when the file is missing; `Err` distinguishes corruption (checksum
+    /// mismatch) so callers can quarantine.
+    pub fn read_blob(&self, checksum: &str) -> Result<Option<Vec<u8>>, String> {
+        let path = self.blob_path(checksum);
+        let bytes = match std::fs::read(&path) {
+            Ok(b) => b,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+            Err(e) => return Err(format!("read {}: {e}", path.display())),
+        };
+        let actual = checksum_hex(&bytes);
+        if actual != checksum {
+            return Err(format!(
+                "blob {checksum} corrupt: content hashes to {actual}"
+            ));
+        }
+        Ok(Some(bytes))
+    }
+
+    /// Move a blob into `quarantine/` for post-mortem instead of deleting
+    /// it. Returns whether a file was actually moved.
+    pub fn quarantine_blob(&self, checksum: &str) -> bool {
+        let from = self.blob_path(checksum);
+        let to = self.quarantine_path(checksum);
+        let moved = std::fs::rename(&from, &to).is_ok();
+        if moved {
+            sync_dir(&self.root.join("blobs"));
+            sync_dir(&self.root.join("quarantine"));
+        }
+        moved
+    }
+
+    /// Load the manifest, falling back per the recovery ladder: a
+    /// missing, torn, or checksum-failing `manifest.json` falls back to
+    /// `manifest.prev.json`; if both are unusable the store cold-starts
+    /// empty. Never errors, never panics — the worst corruption costs one
+    /// generation, not availability.
+    pub fn load_manifest(&self) -> (Manifest, ManifestSource) {
+        match read_manifest_file(&self.manifest_path()) {
+            Some(m) => (m, ManifestSource::Current),
+            None => match read_manifest_file(&self.manifest_prev_path()) {
+                Some(m) => (m, ManifestSource::Previous),
+                None => (Manifest::default(), ManifestSource::Empty),
+            },
+        }
+    }
+
+    /// Publish `manifest` as the next live generation. When
+    /// `demote_current` (the live `manifest.json` was readable), it is
+    /// first renamed to `manifest.prev.json` so the previous generation
+    /// stays recoverable; a torn current is deleted instead, preserving
+    /// the good `manifest.prev.json` it was recovered from.
+    pub fn write_manifest(
+        &mut self,
+        manifest: &Manifest,
+        demote_current: bool,
+    ) -> Result<(), String> {
+        let bytes = manifest.serialize().into_bytes();
+        let tmp = tmp_sibling(&self.manifest_path());
+        let write = || -> std::io::Result<()> {
+            let mut f = std::fs::File::create(&tmp)?;
+            f.write_all(&bytes)?;
+            f.sync_all()?;
+            Ok(())
+        };
+        write().map_err(|e| format!("write {}: {e}", tmp.display()))?;
+        self.crash_if_armed(FailPoint::ManifestBeforeRename)?;
+        let cur = self.manifest_path();
+        if cur.exists() {
+            if demote_current {
+                std::fs::rename(&cur, self.manifest_prev_path())
+                    .map_err(|e| format!("demote manifest: {e}"))?;
+            } else {
+                // The current manifest is torn; renaming it over the good
+                // previous generation would destroy the recovery copy.
+                std::fs::remove_file(&cur).map_err(|e| format!("drop torn manifest: {e}"))?;
+            }
+        }
+        self.crash_if_armed(FailPoint::ManifestBetweenRenames)?;
+        std::fs::rename(&tmp, &cur).map_err(|e| format!("rename manifest: {e}"))?;
+        sync_dir(&self.root);
+        Ok(())
+    }
+
+    /// Publish `dict` as the new current version of `key`: write the blob
+    /// (content-addressed, atomic), then publish a new manifest
+    /// generation whose entry for `key` bumps the version and retains the
+    /// old current in `history` (up to [`HISTORY_KEEP`]). Re-publishing
+    /// byte-identical content is a no-op ([`PublishOutcome::deduplicated`]).
+    ///
+    /// The key is explicit — not derived from the dict — because serving
+    /// keys use the *requested* NFE while `dict.nfe` records solver
+    /// steps; the two differ for multi-eval solvers.
+    pub fn publish(
+        &mut self,
+        key: &ArtifactKey,
+        dict: &CoordinateDict,
+    ) -> Result<PublishOutcome, String> {
+        let bytes = dict.to_json().to_string().into_bytes();
+        let sum = checksum_hex(&bytes);
+        let (mut manifest, source) = self.load_manifest();
+        if let Some(entry) = manifest.entries.get(&key.id()) {
+            if entry.current.checksum == sum {
+                return Ok(PublishOutcome {
+                    version: entry.current.version,
+                    checksum: sum,
+                    deduplicated: true,
+                });
+            }
+        }
+        let written = self.write_blob(&bytes)?;
+        debug_assert_eq!(written, sum);
+        let entry = manifest.entry_mut(key);
+        let version = if entry.current.version == 0 {
+            1
+        } else {
+            let old = entry.current.clone();
+            entry.history.push(old);
+            if entry.history.len() > HISTORY_KEEP {
+                let drop_n = entry.history.len() - HISTORY_KEEP;
+                entry.history.drain(..drop_n);
+            }
+            entry.current.version + 1
+        };
+        entry.current = VersionRecord {
+            version,
+            checksum: sum.clone(),
+        };
+        manifest.generation += 1;
+        self.write_manifest(&manifest, source == ManifestSource::Current)?;
+        Ok(PublishOutcome {
+            version,
+            checksum: sum,
+            deduplicated: false,
+        })
+    }
+
+    /// Roll `key` back to its newest retained previous version: the
+    /// current record is dropped from the manifest (its blob stays on
+    /// disk), the newest history record becomes current, and a new
+    /// manifest generation is published atomically. Errors when the key
+    /// is unknown or has no retained history.
+    pub fn rollback(&mut self, key: &ArtifactKey) -> Result<VersionRecord, String> {
+        let (mut manifest, source) = self.load_manifest();
+        let entry = manifest
+            .entries
+            .get_mut(&key.id())
+            .ok_or_else(|| format!("no artifact for {}", key.id()))?;
+        let prev = entry
+            .history
+            .pop()
+            .ok_or_else(|| format!("{}: no previous version to roll back to", key.id()))?;
+        entry.current = prev.clone();
+        manifest.generation += 1;
+        self.write_manifest(&manifest, source == ManifestSource::Current)?;
+        Ok(prev)
+    }
+}
+
+fn read_manifest_file(path: &Path) -> Option<Manifest> {
+    let s = std::fs::read_to_string(path).ok()?;
+    match Manifest::parse(&s) {
+        Ok(m) => Some(m),
+        Err(e) => {
+            crate::warn_!("unusable manifest {}: {e}", path.display());
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn unique_dir(tag: &str) -> PathBuf {
+        static SEQ: AtomicU64 = AtomicU64::new(0);
+        let d = std::env::temp_dir().join(format!(
+            "pas_store_{tag}_{}_{}",
+            std::process::id(),
+            SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn fnv1a64_reference_vectors() {
+        // Published FNV-1a 64 test vectors: the empty string hashes to
+        // the offset basis; "a" to 0xaf63dc4c8601ec8c.
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(checksum_hex(b"a"), "af63dc4c8601ec8c");
+        assert_ne!(fnv1a64(b"ab"), fnv1a64(b"ba"));
+    }
+
+    #[test]
+    fn write_atomic_replaces_and_survives() {
+        let dir = unique_dir("atomic");
+        let path = dir.join("f.json");
+        write_atomic(&path, b"one").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"one");
+        write_atomic(&path, b"two").unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), b"two");
+        // No temp litter after successful writes.
+        let litter: Vec<_> = std::fs::read_dir(&dir)
+            .unwrap()
+            .flatten()
+            .filter(|e| e.file_name().to_string_lossy().contains(".tmp."))
+            .collect();
+        assert!(litter.is_empty(), "{litter:?}");
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn open_sweeps_orphaned_tmp_files() {
+        let dir = unique_dir("sweep");
+        std::fs::create_dir_all(dir.join("blobs")).unwrap();
+        std::fs::write(dir.join("manifest.json.tmp.1.2"), b"orphan").unwrap();
+        std::fs::write(dir.join("blobs/aa.json.tmp.3.4"), b"orphan").unwrap();
+        let _store = ArtifactStore::open(&dir).unwrap();
+        assert!(!dir.join("manifest.json.tmp.1.2").exists());
+        assert!(!dir.join("blobs/aa.json.tmp.3.4").exists());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn blob_roundtrip_and_corruption_detection() {
+        let dir = unique_dir("blob");
+        let mut store = ArtifactStore::open(&dir).unwrap();
+        let sum = store.write_blob(b"{\"x\":1}").unwrap();
+        assert_eq!(store.read_blob(&sum).unwrap().unwrap(), b"{\"x\":1}");
+        assert_eq!(store.read_blob("0000000000000000").unwrap(), None);
+        // Flip a byte in place: the checksum no longer matches the name.
+        std::fs::write(store.blob_path(&sum), b"{\"x\":2}").unwrap();
+        assert!(store.read_blob(&sum).is_err());
+        assert!(store.quarantine_blob(&sum));
+        assert!(store.quarantine_path(&sum).exists());
+        assert_eq!(store.read_blob(&sum).unwrap(), None, "moved aside");
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

@@ -74,8 +74,14 @@ USAGE:
               [--n-traj K] [--epochs E] [--lr L] [--tau T] [--loss l1|l2|...]
               --out coords.json
   pas repro   <id>|all [--quick] [--out results/] [--n-samples K]
-  pas serve   [--addr 127.0.0.1:7777] [--workers W]
+  pas serve   [--addr 127.0.0.1:7777] [--workers W] [--artifacts DIR]
   pas client  --addr HOST:PORT --dataset D --solver S --nfe N --n K
+  pas artifact list     --store DIR
+  pas artifact publish  --store DIR --coords f.json
+              [--dataset D] [--solver S] [--nfe N]   (defaults: dict fields)
+  pas artifact verify   --store DIR                  (exit 1 on corruption)
+  pas artifact load     --store DIR                  (quarantine + heal)
+  pas artifact rollback --store DIR --dataset D --solver S --nfe N
   pas pjrt-check [--artifacts DIR] [--name eps_spiral2d]
   pas help
 
@@ -98,6 +104,7 @@ pub fn main(argv: Vec<String>) -> i32 {
         "repro" => cmd_repro(&args),
         "serve" => cmd_serve(&args),
         "client" => cmd_client(&args),
+        "artifact" => cmd_artifact(&args),
         "pjrt-check" => cmd_pjrt_check(&args),
         "dump-data" => cmd_dump_data(&args),
         other => Err(format!("unknown command {other}\n{USAGE}")),
@@ -292,6 +299,7 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     let addr = args.get("addr").unwrap_or("127.0.0.1:7777").to_string();
     let cfg = ServiceConfig {
         workers: args.get_usize("workers", 4),
+        artifact_root: args.get("artifacts").map(PathBuf::from),
         ..ServiceConfig::default()
     };
     let svc = std::sync::Arc::new(Service::start(cfg, Vec::new()));
@@ -320,6 +328,127 @@ fn cmd_client(args: &Args) -> Result<(), String> {
     reader.read_line(&mut line).map_err(|e| e.to_string())?;
     println!("{}", line.trim());
     Ok(())
+}
+
+/// Operator surface over the durable dict store ([`crate::artifact`]).
+/// `verify` and `load` communicate through the exit code so CI and deploy
+/// scripts can gate on store health: `verify` is read-only diagnosis
+/// (exit 1 on any corrupt record), `load` is the healing counterpart
+/// (quarantines corrupt blobs, falls back to the last good version,
+/// persists the demotion; exit 1 only when a key has no usable version).
+fn cmd_artifact(args: &Args) -> Result<(), String> {
+    use crate::artifact::{self, ArtifactKey, ArtifactStore};
+    let sub = args
+        .positional
+        .get(1)
+        .map(|s| s.as_str())
+        .ok_or("usage: pas artifact <list|publish|verify|load|rollback> --store DIR")?;
+    let store_dir = args.get("store").ok_or("need --store DIR")?;
+    let mut store = ArtifactStore::open(&PathBuf::from(store_dir))?;
+    match sub {
+        "list" => {
+            let (manifest, source) = store.load_manifest();
+            println!(
+                "{}: generation {} ({:?}), {} key(s)",
+                store_dir,
+                manifest.generation,
+                source,
+                manifest.entries.len()
+            );
+            for (id, e) in &manifest.entries {
+                println!(
+                    "  {id:<28} v{:<3} {}  ({} retained)",
+                    e.current.version,
+                    e.current.checksum,
+                    e.history.len()
+                );
+            }
+            Ok(())
+        }
+        "publish" => {
+            let coords = args.get("coords").ok_or("need --coords f.json")?;
+            let dict = CoordinateDict::load(&PathBuf::from(coords))?;
+            // The serving key defaults to the dict's own fields but can be
+            // overridden — for multi-eval solvers the requested NFE (the
+            // serving key) differs from the dict's solver-step count.
+            let dataset = args
+                .get("dataset")
+                .map(str::to_string)
+                .unwrap_or_else(|| dict.dataset.clone());
+            let solver = args
+                .get("solver")
+                .map(str::to_string)
+                .unwrap_or_else(|| dict.solver.clone());
+            let nfe = args.get_usize("nfe", dict.nfe);
+            let key = ArtifactKey::new(&dataset, &solver, nfe);
+            let out = store.publish(&key, &dict)?;
+            println!(
+                "published {} v{} checksum {}{}",
+                key.id(),
+                out.version,
+                out.checksum,
+                if out.deduplicated { " (deduplicated, already current)" } else { "" }
+            );
+            Ok(())
+        }
+        "verify" => {
+            let rep = artifact::verify(&store);
+            println!(
+                "checked {} record(s), generation {} ({:?})",
+                rep.checked, rep.generation, rep.source
+            );
+            for e in &rep.errors {
+                eprintln!("  BAD {e}");
+            }
+            if rep.ok() {
+                println!("store OK");
+                Ok(())
+            } else {
+                Err(format!("{} corrupt record(s)", rep.errors.len()))
+            }
+        }
+        "load" => {
+            let rep = artifact::load_all(&mut store);
+            for l in &rep.loaded {
+                println!(
+                    "  {} v{} ({} params){}",
+                    l.key.id(),
+                    l.version,
+                    l.dict.n_params(),
+                    if l.healed { "  [healed]" } else { "" }
+                );
+            }
+            for (k, why) in &rep.failed {
+                eprintln!("  FAILED {}: {why}", k.id());
+            }
+            println!(
+                "loaded {} dict(s), {} unusable",
+                rep.loaded.len(),
+                rep.failed.len()
+            );
+            if rep.failed.is_empty() {
+                Ok(())
+            } else {
+                Err(format!("{} key(s) have no usable version", rep.failed.len()))
+            }
+        }
+        "rollback" => {
+            let dataset = args.get("dataset").ok_or("need --dataset")?;
+            let solver = args.get("solver").ok_or("need --solver")?;
+            let nfe = args
+                .get("nfe")
+                .and_then(|v| v.parse().ok())
+                .ok_or("need --nfe N")?;
+            let key = ArtifactKey::new(dataset, solver, nfe);
+            let rec = store.rollback(&key)?;
+            println!("rolled {} back to v{} ({})", key.id(), rec.version, rec.checksum);
+            Ok(())
+        }
+        other => Err(format!(
+            "unknown artifact subcommand {other}\n\
+             usage: pas artifact <list|publish|verify|load|rollback> --store DIR"
+        )),
+    }
 }
 
 /// Export dataset samples for the build-time Python denoiser training

@@ -26,6 +26,7 @@ pub mod score;
 pub mod solvers;
 pub mod traj;
 pub mod pas;
+pub mod artifact;
 pub mod metrics;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
@@ -36,6 +37,7 @@ pub mod cli;
 
 /// Convenience re-exports for examples and downstream users.
 pub mod prelude {
+    pub use crate::artifact::{ArtifactKey, ArtifactStore};
     pub use crate::data::Dataset;
     pub use crate::pas::coords::CoordinateDict;
     pub use crate::pas::correct::CorrectedSampler;

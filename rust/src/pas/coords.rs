@@ -39,7 +39,7 @@ impl ScaleMode {
 /// Trained PAS artifact for one (dataset, solver, NFE) combination.
 #[derive(Clone, Debug)]
 pub struct CoordinateDict {
-    /// Paper time-point index `i` (N..1) → learned coordinates (len ≤ n_basis).
+    /// Paper time-point index `i` (N..1) → learned coordinates (len == n_basis).
     pub steps: BTreeMap<usize, Vec<f64>>,
     pub n_basis: usize,
     pub scale_mode: ScaleMode,
@@ -121,7 +121,26 @@ impl CoordinateDict {
         if let Some(Json::Obj(m)) = j.get("steps") {
             for (k, v) in m {
                 let i: usize = k.parse().map_err(|_| format!("bad step key {k}"))?;
+                // Paper index i runs N..1; training emits at most one
+                // entry per solver step, so anything outside 1..=nfe is a
+                // corrupt or mismatched artifact.
+                if i == 0 || i > nfe {
+                    return Err(format!("step key {i} out of range 1..={nfe}"));
+                }
+                let raw = v.as_arr().ok_or("bad coords")?;
                 let c = v.to_f64_vec().ok_or("bad coords")?;
+                // `to_f64_vec` drops non-numeric elements, so check the
+                // raw array length too: a vector that only reaches
+                // n_basis after dropping garbage is still corrupt.
+                if raw.len() != n_basis || c.len() != raw.len() {
+                    return Err(format!(
+                        "step {i}: coord vector len {} != n_basis {n_basis}",
+                        raw.len()
+                    ));
+                }
+                if c.iter().any(|x| !x.is_finite()) {
+                    return Err(format!("step {i}: non-finite coordinate"));
+                }
                 steps.insert(i, c);
             }
         }
@@ -135,11 +154,10 @@ impl CoordinateDict {
         })
     }
 
+    /// Durable save: temp file + fsync + atomic rename (via the artifact
+    /// store's helper), so a crash mid-save can never leave a torn dict.
     pub fn save(&self, path: &std::path::Path) -> std::io::Result<()> {
-        if let Some(dir) = path.parent() {
-            std::fs::create_dir_all(dir)?;
-        }
-        std::fs::write(path, self.to_json().to_string())
+        crate::artifact::store::write_atomic(path, self.to_json().to_string().as_bytes())
     }
 
     pub fn load(path: &std::path::Path) -> Result<CoordinateDict, String> {
@@ -169,13 +187,66 @@ mod tests {
     fn file_roundtrip() {
         let mut d = CoordinateDict::new(4, ScaleMode::Relative, "ipndm3", "gmm-hd64", 8);
         d.steps.insert(3, vec![1.0, 0.0, 0.0, -0.01]);
-        let dir = std::env::temp_dir().join("pas_test_coords");
+        // Per-test unique directory: a fixed path collides when two test
+        // runs (or PAS_THREADS legs in CI) execute concurrently.
+        let dir = std::env::temp_dir().join(format!(
+            "pas_test_coords_{}_{:p}",
+            std::process::id(),
+            &d as *const _
+        ));
         let path = dir.join("c.json");
         d.save(&path).unwrap();
         let back = CoordinateDict::load(&path).unwrap();
         assert_eq!(back.steps, d.steps);
         assert_eq!(back.solver, "ipndm3");
         let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn from_json_rejects_corrupt_dicts() {
+        let mut d = CoordinateDict::new(4, ScaleMode::Absolute, "ddim", "gmm2d", 10);
+        d.steps.insert(6, vec![1.5, 0.1, -0.2, 0.0]);
+        let good = d.to_json();
+        assert!(CoordinateDict::from_json(&good).is_ok());
+
+        // Coord vector shorter than n_basis.
+        let mut j = good.clone();
+        let mut steps = Json::obj();
+        steps.set("6", Json::from_f64_slice(&[1.5, 0.1]));
+        j.set("steps", steps);
+        let e = CoordinateDict::from_json(&j).unwrap_err();
+        assert!(e.contains("n_basis"), "{e}");
+
+        // Step key 0 and key beyond nfe.
+        for bad_key in ["0", "11"] {
+            let mut j = good.clone();
+            let mut steps = Json::obj();
+            steps.set(bad_key, Json::from_f64_slice(&[1.0, 0.0, 0.0, 0.0]));
+            j.set("steps", steps);
+            let e = CoordinateDict::from_json(&j).unwrap_err();
+            assert!(e.contains("out of range"), "key {bad_key}: {e}");
+        }
+        // Key == nfe is legitimate: training emits it at j = 0.
+        let mut j = good.clone();
+        let mut steps = Json::obj();
+        steps.set("10", Json::from_f64_slice(&[1.0, 0.0, 0.0, 0.0]));
+        j.set("steps", steps);
+        assert!(CoordinateDict::from_json(&j).is_ok());
+
+        // Non-numeric garbage inside an otherwise right-length vector.
+        let mut j = good.clone();
+        let mut steps = Json::obj();
+        steps.set(
+            "6",
+            Json::Arr(vec![
+                Json::Num(1.0),
+                Json::Str("oops".into()),
+                Json::Num(0.0),
+                Json::Num(0.0),
+            ]),
+        );
+        j.set("steps", steps);
+        assert!(CoordinateDict::from_json(&j).is_err());
     }
 
     #[test]

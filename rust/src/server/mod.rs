@@ -27,6 +27,34 @@
 //! line-delimited JSON ([`protocol`]): unknown datasets/solvers,
 //! out-of-range `n`, and inexact or negative seeds are structured errors,
 //! never silent rewrites.
+//!
+//! # Dictionary lifecycle (startup → publish → rollback)
+//!
+//! With [`service::ServiceConfig::artifact_root`] set, the dict registry
+//! is backed by the durable [`crate::artifact`] store:
+//!
+//! * **Startup.** [`service::Service::start`] opens the store and loads
+//!   every key (checksum-verified; corrupt blobs quarantined, the loader
+//!   healing back to the last good version; a torn manifest recovers from
+//!   the previous generation; a missing/empty store is a clean cold
+//!   start). Caller-supplied dicts override stored ones.
+//! * **Publish.** [`service::Service::train_pas`] persists each newly
+//!   trained dict as a new atomically-published version (failure to
+//!   persist is warned, never blocks serving);
+//!   [`service::Service::publish_dict`] is the explicit deploy path.
+//!   Either way the registry is updated first, and serving workers pick
+//!   the new dict up through the existing per-cohort snapshots — cohorts
+//!   admitted before the publish finish on their snapshot bit-identically,
+//!   cohorts admitted after use the new version; nothing blocks.
+//! * **Rollback.** [`service::Service::rollback`] (also exposed as the
+//!   wire `{"cmd":"rollback",...}` and `pas artifact rollback`) demotes
+//!   the key to its previous stored version and swaps the re-verified
+//!   dict into the registry under the same snapshot rules.
+//!
+//! Store health is observable via `{"cmd":"status"}`
+//! ([`service::Service::status_json`]: `artifacts_loaded`,
+//! `dicts_published`, `rollbacks`, …) and the `pas artifact
+//! list/verify/load` CLI.
 
 pub mod protocol;
 pub mod service;

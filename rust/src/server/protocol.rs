@@ -15,6 +15,13 @@
 //! request's RNG stream bit-for-bit, so values parsed through f64 (which
 //! loses precision above 2^53) or negative values are rejected. Absent
 //! fields still take the documented defaults.
+//!
+//! Lines carrying a `"cmd"` key are **admin commands** instead of
+//! sampling requests:
+//! `{"cmd":"status"}` returns the metrics/registry/store snapshot
+//! ([`Service::status_json`]); `{"cmd":"rollback","dataset":...,
+//! "solver":...,"nfe":...}` rolls the key's dict back to its previous
+//! stored version and replies `{"ok":true,"version":v}`.
 
 use super::service::{SamplingRequest, Service};
 use crate::util::json::Json;
@@ -147,6 +154,52 @@ pub fn serve(
     Ok(local)
 }
 
+fn error_json(msg: String) -> Json {
+    let mut o = Json::obj();
+    o.set("error", Json::Str(msg));
+    o
+}
+
+/// Dispatch a line carrying a `"cmd"` key. `None` means the line is not
+/// an admin command (no such key, or not even JSON) and should be parsed
+/// as a sampling request — whose own strict errors then apply.
+fn admin_reply(line: &str, svc: &Service) -> Option<Json> {
+    let j = Json::parse(line).ok()?;
+    let cmd = j.get("cmd")?;
+    let Some(cmd) = cmd.as_str() else {
+        return Some(error_json("\"cmd\" must be a string".into()));
+    };
+    let reply = match cmd {
+        "status" => svc.status_json(),
+        "rollback" => {
+            let args = (
+                j.get("dataset").and_then(|v| v.as_str()),
+                j.get("solver").and_then(|v| v.as_str()),
+                j.get("nfe").and_then(|v| v.as_usize()),
+            );
+            match args {
+                (Some(dataset), Some(solver), Some(nfe)) => {
+                    match svc.rollback(dataset, solver, nfe) {
+                        Ok(version) => {
+                            let mut o = Json::obj();
+                            o.set("ok", Json::Bool(true))
+                                .set("version", Json::UInt(version));
+                            o
+                        }
+                        Err(e) => error_json(e),
+                    }
+                }
+                _ => error_json(
+                    "rollback needs \"dataset\" (string), \"solver\" (string), \"nfe\" (integer)"
+                        .into(),
+                ),
+            }
+        }
+        other => error_json(format!("unknown cmd \"{other}\"")),
+    };
+    Some(reply)
+}
+
 fn handle_client(stream: TcpStream, svc: &Service) -> std::io::Result<()> {
     let mut writer = stream.try_clone()?;
     let reader = BufReader::new(stream);
@@ -155,20 +208,15 @@ fn handle_client(stream: TcpStream, svc: &Service) -> std::io::Result<()> {
         if line.trim().is_empty() {
             continue;
         }
-        let reply = match parse_request(&line) {
-            Ok(req) => match svc.call(req) {
-                Ok(resp) => response_json(&resp),
-                Err(e) => {
-                    let mut o = Json::obj();
-                    o.set("error", Json::Str(e));
-                    o
-                }
+        let reply = match admin_reply(&line, svc) {
+            Some(r) => r,
+            None => match parse_request(&line) {
+                Ok(req) => match svc.call(req) {
+                    Ok(resp) => response_json(&resp),
+                    Err(e) => error_json(e),
+                },
+                Err(e) => error_json(e),
             },
-            Err(e) => {
-                let mut o = Json::obj();
-                o.set("error", Json::Str(e));
-                o
-            }
         };
         writer.write_all(reply.to_string().as_bytes())?;
         writer.write_all(b"\n")?;
@@ -260,6 +308,42 @@ mod tests {
             j.get("samples").unwrap().as_arr().unwrap().len(),
             4 // 2 samples x dim 2
         );
+        stop.store(true, Ordering::Relaxed);
+    }
+
+    #[test]
+    fn admin_status_and_rollback_over_tcp() {
+        let svc = Arc::new(Service::start(ServiceConfig::default(), Vec::new()));
+        let stop = Arc::new(AtomicBool::new(false));
+        let addr = serve(svc, "127.0.0.1:0", stop.clone()).unwrap();
+        let mut conn = TcpStream::connect(addr).unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        let mut ask = |line: &str| {
+            conn.write_all(line.as_bytes()).unwrap();
+            conn.write_all(b"\n").unwrap();
+            let mut reply = String::new();
+            reader.read_line(&mut reply).unwrap();
+            Json::parse(reply.trim()).unwrap()
+        };
+        let status = ask(r#"{"cmd":"status"}"#);
+        assert!(status.get("error").is_none(), "{status:?}");
+        assert_eq!(status.get("rollbacks").unwrap().as_u64(), Some(0));
+        assert_eq!(status.get("artifacts_loaded").unwrap().as_u64(), Some(0));
+        assert_eq!(status.get("artifact_store").unwrap(), &Json::Null);
+        // Rollback without a store / with bad args / unknown cmd: errors.
+        for (line, needle) in [
+            (
+                r#"{"cmd":"rollback","dataset":"gmm2d","solver":"ddim","nfe":6}"#,
+                "no artifact store",
+            ),
+            (r#"{"cmd":"rollback","dataset":"gmm2d"}"#, "rollback needs"),
+            (r#"{"cmd":"selfdestruct"}"#, "unknown cmd"),
+            (r#"{"cmd":42}"#, "must be a string"),
+        ] {
+            let r = ask(line);
+            let e = r.get("error").and_then(|v| v.as_str()).unwrap_or_default();
+            assert!(e.contains(needle), "{line}: {r:?}");
+        }
         stop.store(true, Ordering::Relaxed);
     }
 

@@ -50,9 +50,11 @@
 //! training run, which executes on the caller's thread against the
 //! service's persistent, workspace-pooled [`TrainSession`].
 
+use crate::artifact::{ArtifactKey, ArtifactStore};
 use crate::pas::coords::CoordinateDict;
 use crate::pas::correct::CorrectedSampler;
 use crate::pas::train::{TrainConfig, TrainSession};
+use crate::util::json::Json;
 use crate::schedule::{default_schedule, Schedule};
 use crate::score::analytic::AnalyticEps;
 use crate::score::EpsModel;
@@ -130,6 +132,12 @@ pub struct ServiceConfig {
     /// Row-shard cap for the engines (`0` = pool size). Results are
     /// bit-identical for every value; tests pin {1, 4, 16}.
     pub engine_threads: usize,
+    /// Directory of the durable dict artifact store ([`crate::artifact`]).
+    /// `Some`: dictionaries are loaded (checksum-verified, healed) at
+    /// startup and every `train_pas`/`publish_dict` result is persisted
+    /// as a new version. `None`: the registry is purely in-memory (the
+    /// pre-store behavior).
+    pub artifact_root: Option<std::path::PathBuf>,
 }
 
 impl Default for ServiceConfig {
@@ -141,6 +149,7 @@ impl Default for ServiceConfig {
             queue_depth: 256,
             batching: Batching::Continuous,
             engine_threads: 0,
+            artifact_root: None,
         }
     }
 }
@@ -187,6 +196,14 @@ pub struct Metrics {
     pub ticks: AtomicU64,
     /// Dictionaries trained online via [`Service::train_pas`].
     pub dicts_trained: AtomicU64,
+    /// Dictionaries loaded (checksum-verified) from the artifact store at
+    /// startup.
+    pub artifacts_loaded: AtomicU64,
+    /// New dict versions persisted to the artifact store (deduplicated
+    /// republishes of identical content are not counted).
+    pub dicts_published: AtomicU64,
+    /// Successful [`Service::rollback`] operations.
+    pub rollbacks: AtomicU64,
 }
 
 /// Summary of one online [`Service::train_pas`] run.
@@ -199,6 +216,10 @@ pub struct PasTrainStats {
     /// training rollout (the Figure-3 endpoints).
     pub final_error_uncorrected: f64,
     pub final_error_corrected: f64,
+    /// Artifact-store version the trained dict was published as (`None`
+    /// when the service runs without a store, or persistence failed —
+    /// serving proceeds either way).
+    pub published_version: Option<u64>,
 }
 
 /// Per-key request queue; `active` is true while some worker owns the
@@ -303,15 +324,55 @@ pub struct Service {
     /// workspaces (engine, node stores, basis store, SGD scratch) are
     /// reused across online training runs.
     trainer: Mutex<TrainSession>,
+    /// Durable dict store ([`crate::artifact`]); `None` when the service
+    /// runs in-memory only. The mutex serializes the write path (publish,
+    /// rollback) per the store's single-writer expectation.
+    store: Option<Mutex<ArtifactStore>>,
 }
 
 impl Service {
     /// Start the service. `dicts` maps (dataset, solver, nfe) to trained
     /// PAS dictionaries for requests with `use_pas`.
+    ///
+    /// With [`ServiceConfig::artifact_root`] set, the artifact store is
+    /// opened first and every stored dict is loaded (checksum-verified;
+    /// corrupt versions are quarantined and healed around; a torn
+    /// manifest recovers from the previous generation; a missing/empty
+    /// store is a clean cold start). Caller-supplied `dicts` override
+    /// stored ones on key collision. A store that cannot even be opened
+    /// disables persistence with a warning rather than failing startup.
     pub fn start(cfg: ServiceConfig, dicts: Vec<CoordinateDict>) -> Service {
         let metrics = Arc::new(Metrics::default());
         let stop = Arc::new(AtomicBool::new(false));
-        let dicts = Arc::new(RwLock::new(index_dicts(dicts)));
+        let mut initial = DictMap::new();
+        let store = match &cfg.artifact_root {
+            Some(root) => match ArtifactStore::open(root) {
+                Ok(mut s) => {
+                    let report = crate::artifact::load_all(&mut s);
+                    for l in report.loaded {
+                        metrics.artifacts_loaded.fetch_add(1, Ordering::Relaxed);
+                        crate::info!(
+                            "loaded artifact {} v{}{}",
+                            l.key.id(),
+                            l.version,
+                            if l.healed { " (healed)" } else { "" }
+                        );
+                        initial.insert((l.key.dataset, l.key.solver, l.key.nfe), l.dict);
+                    }
+                    for (key, why) in &report.failed {
+                        crate::warn_!("artifact {} unusable, serving uncorrected: {why}", key.id());
+                    }
+                    Some(Mutex::new(s))
+                }
+                Err(e) => {
+                    crate::warn_!("artifact store disabled: {e}");
+                    None
+                }
+            },
+            None => None,
+        };
+        initial.extend(index_dicts(dicts));
+        let dicts = Arc::new(RwLock::new(initial));
         let mut threads = Vec::new();
         let front = match cfg.batching {
             Batching::CollectThenRun => {
@@ -384,6 +445,7 @@ impl Service {
             threads,
             dicts,
             trainer: Mutex::new(TrainSession::new(TrainConfig::default())),
+            store,
         }
     }
 
@@ -417,19 +479,159 @@ impl Service {
             session.cfg = overrides.unwrap_or_default();
             session.train(solver.as_ref(), model.as_ref(), &sched, ds.name(), false, None)?
         };
-        let stats = PasTrainStats {
+        let mut stats = PasTrainStats {
             n_params: tr.dict.n_params(),
             corrected_steps: tr.trace.corrected_steps(),
             train_seconds: tr.train_seconds,
             final_error_uncorrected: tr.curve_uncorrected.last().copied().unwrap_or(0.0),
             final_error_corrected: tr.curve_corrected.last().copied().unwrap_or(0.0),
+            published_version: None,
         };
         self.dicts
             .write()
             .unwrap()
-            .insert((dataset.to_string(), solver_name.to_string(), nfe), tr.dict);
+            .insert(
+                (dataset.to_string(), solver_name.to_string(), nfe),
+                tr.dict.clone(),
+            );
         self.metrics.dicts_trained.fetch_add(1, Ordering::Relaxed);
+        // Persist after registration: serving gains the dict even if the
+        // disk publish fails (persistence failure costs durability, never
+        // availability — it is warned, not propagated).
+        stats.published_version = self.persist(dataset, solver_name, nfe, &tr.dict);
         Ok(stats)
+    }
+
+    /// Publish `dict` to the artifact store as a new version of
+    /// `(dataset, solver, nfe)`, if a store is configured. Returns the
+    /// published version; logs and returns `None` on persistence failure.
+    fn persist(&self, dataset: &str, solver: &str, nfe: usize, dict: &CoordinateDict) -> Option<u64> {
+        let store = self.store.as_ref()?;
+        let key = ArtifactKey::new(dataset, solver, nfe);
+        match store.lock().unwrap().publish(&key, dict) {
+            Ok(out) => {
+                if !out.deduplicated {
+                    self.metrics.dicts_published.fetch_add(1, Ordering::Relaxed);
+                }
+                Some(out.version)
+            }
+            Err(e) => {
+                crate::warn_!("publish {} failed (dict stays registered in-memory): {e}", key.id());
+                None
+            }
+        }
+    }
+
+    /// Register `dict` for `(dataset, solver, nfe)` and persist it as a
+    /// new artifact version. In-flight cohorts keep their admission-time
+    /// snapshot; cohorts admitted after this call use `dict`. Returns the
+    /// published version (`None` without a store). Unlike the passive
+    /// persistence in [`Service::train_pas`], a configured store that
+    /// fails to publish here is an error — this is the explicit
+    /// operator/deploy path.
+    pub fn publish_dict(
+        &self,
+        dataset: &str,
+        solver: &str,
+        nfe: usize,
+        dict: CoordinateDict,
+    ) -> Result<Option<u64>, String> {
+        self.dicts
+            .write()
+            .unwrap()
+            .insert((dataset.to_string(), solver.to_string(), nfe), dict.clone());
+        let Some(store) = self.store.as_ref() else {
+            return Ok(None);
+        };
+        let key = ArtifactKey::new(dataset, solver, nfe);
+        let out = store.lock().unwrap().publish(&key, &dict)?;
+        if !out.deduplicated {
+            self.metrics.dicts_published.fetch_add(1, Ordering::Relaxed);
+        }
+        Ok(Some(out.version))
+    }
+
+    /// Roll `(dataset, solver, nfe)` back to its previous stored version:
+    /// the store drops the current record, the rolled-back dict is
+    /// re-verified on load and swapped into the registry (new admissions
+    /// pick it up; in-flight cohorts finish on their snapshots). Returns
+    /// the now-current version.
+    pub fn rollback(&self, dataset: &str, solver: &str, nfe: usize) -> Result<u64, String> {
+        let store = self
+            .store
+            .as_ref()
+            .ok_or("no artifact store configured")?;
+        let key = ArtifactKey::new(dataset, solver, nfe);
+        let loaded = {
+            let mut s = store.lock().unwrap();
+            let rec = s.rollback(&key)?;
+            crate::artifact::load_dict(&mut s, &key)
+                .ok_or_else(|| format!("rolled {} back to v{} but it does not load", key.id(), rec.version))?
+        };
+        let version = loaded.version;
+        self.dicts
+            .write()
+            .unwrap()
+            .insert((dataset.to_string(), solver.to_string(), nfe), loaded.dict);
+        self.metrics.rollbacks.fetch_add(1, Ordering::Relaxed);
+        crate::info!("rolled {} back to v{version}", key.id());
+        Ok(version)
+    }
+
+    /// Clone of the currently registered dict for a key (what the next
+    /// admitted cohort would snapshot), if any.
+    pub fn dict_snapshot(&self, dataset: &str, solver: &str, nfe: usize) -> Option<CoordinateDict> {
+        self.dicts
+            .read()
+            .unwrap()
+            .get(&(dataset.to_string(), solver.to_string(), nfe))
+            .cloned()
+    }
+
+    /// Operational status: every metrics counter plus registry/store
+    /// facts, as the JSON object the wire protocol's `status` command
+    /// returns.
+    pub fn status_json(&self) -> Json {
+        let m = &self.metrics;
+        let mut o = Json::obj();
+        o.set("requests", Json::UInt(m.requests.load(Ordering::Relaxed)))
+            .set("completed", Json::UInt(m.completed.load(Ordering::Relaxed)))
+            .set("rejected", Json::UInt(m.rejected.load(Ordering::Relaxed)))
+            .set("batches", Json::UInt(m.batches.load(Ordering::Relaxed)))
+            .set(
+                "fused_requests",
+                Json::UInt(m.fused_requests.load(Ordering::Relaxed)),
+            )
+            .set(
+                "admitted_mid_flight",
+                Json::UInt(m.admitted_mid_flight.load(Ordering::Relaxed)),
+            )
+            .set("ticks", Json::UInt(m.ticks.load(Ordering::Relaxed)))
+            .set(
+                "dicts_trained",
+                Json::UInt(m.dicts_trained.load(Ordering::Relaxed)),
+            )
+            .set(
+                "artifacts_loaded",
+                Json::UInt(m.artifacts_loaded.load(Ordering::Relaxed)),
+            )
+            .set(
+                "dicts_published",
+                Json::UInt(m.dicts_published.load(Ordering::Relaxed)),
+            )
+            .set("rollbacks", Json::UInt(m.rollbacks.load(Ordering::Relaxed)))
+            .set(
+                "dicts_registered",
+                Json::UInt(self.dicts.read().unwrap().len() as u64),
+            );
+        match self.store.as_ref() {
+            Some(s) => o.set(
+                "artifact_store",
+                Json::Str(s.lock().unwrap().root().display().to_string()),
+            ),
+            None => o.set("artifact_store", Json::Null),
+        };
+        o
     }
 
     /// Submit a request; returns a receiver for the response, or an error

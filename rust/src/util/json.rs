@@ -114,6 +114,24 @@ impl Json {
         }
     }
 
+    pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
+        match self {
+            Json::Obj(m) => Some(m),
+            _ => None,
+        }
+    }
+
+    /// Remove and return a field from an object. `None` when `self` is
+    /// not an object or the key is absent. Used by the manifest's
+    /// self-checksum: strip the embedded checksum, re-serialize the rest
+    /// canonically, compare.
+    pub fn take(&mut self, key: &str) -> Option<Json> {
+        match self {
+            Json::Obj(m) => m.remove(key),
+            _ => None,
+        }
+    }
+
     pub fn from_f64_slice(xs: &[f64]) -> Json {
         Json::Arr(xs.iter().map(|x| Json::Num(*x)).collect())
     }
@@ -476,6 +494,18 @@ mod tests {
             Json::parse("18446744073709551616").unwrap(), // 2^64: a Num
             Json::UInt(u64::MAX)
         );
+    }
+
+    #[test]
+    fn obj_access_and_take() {
+        let mut o = Json::obj();
+        o.set("keep", Json::UInt(1)).set("drop", Json::UInt(2));
+        assert_eq!(o.as_obj().unwrap().len(), 2);
+        assert_eq!(o.take("drop"), Some(Json::UInt(2)));
+        assert_eq!(o.take("drop"), None);
+        assert_eq!(o.to_string(), "{\"keep\":1}");
+        assert_eq!(Json::Null.as_obj(), None);
+        assert_eq!(Json::Arr(vec![]).take("x"), None);
     }
 
     #[test]

@@ -1,0 +1,500 @@
+//! Fault-injection suite for the durable dict artifact store.
+//!
+//! Drives the *production* write path (the failpoints are compiled in,
+//! not a test double) through every crash window the protocol has —
+//! truncated blobs, bit-flipped checksums, torn manifests (killed between
+//! the tmp-write and the rename, and between the two manifest renames),
+//! duplicate and concurrent publishes — and asserts the recovery
+//! invariant throughout: the loader falls back to the last good version,
+//! never panics, never serves corrupt bits, and a publish → kill →
+//! restart → load round-trip yields a `CoordinateDict` bit-identical to
+//! the published one. "Bit-identical" is asserted as canonical-JSON byte
+//! equality: the serializer is deterministic (sorted keys, exact integer
+//! tokens), so equal strings ⇔ equal bits.
+
+use pas::artifact::{self, ArtifactKey, ArtifactStore, FailPoint, ManifestSource, VersionRecord};
+use pas::pas::coords::{CoordinateDict, ScaleMode};
+use pas::pas::train::TrainConfig;
+use pas::server::{Service, ServiceConfig};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+fn unique_dir(tag: &str) -> PathBuf {
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    let d = std::env::temp_dir().join(format!(
+        "pas_artifact_it_{tag}_{}_{}",
+        std::process::id(),
+        SEQ.fetch_add(1, Ordering::Relaxed)
+    ));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn dict(nfe: usize, v: f64) -> CoordinateDict {
+    let mut d = CoordinateDict::new(4, ScaleMode::Absolute, "ddim", "gmm2d", nfe);
+    d.steps.insert(4, vec![v, 0.1, -0.2, 0.0]);
+    d.steps.insert(2, vec![1.0, v * 0.5, 0.0, 0.05]);
+    d
+}
+
+fn bits(d: &CoordinateDict) -> String {
+    d.to_json().to_string()
+}
+
+fn key() -> ArtifactKey {
+    ArtifactKey::new("gmm2d", "ddim", 8)
+}
+
+/// A missing or empty store directory is a clean cold start, not an
+/// error — for the raw store and for a service configured with one.
+#[test]
+fn empty_store_is_a_clean_cold_start() {
+    let dir = unique_dir("cold");
+    let mut store = ArtifactStore::open(&dir).unwrap();
+    let rep = artifact::load_all(&mut store);
+    assert_eq!(rep.source, Some(ManifestSource::Empty));
+    assert!(rep.loaded.is_empty() && rep.failed.is_empty());
+    assert!(artifact::verify(&store).ok());
+
+    let svc = Service::start(
+        ServiceConfig {
+            workers: 1,
+            artifact_root: Some(dir.clone()),
+            ..ServiceConfig::default()
+        },
+        Vec::new(),
+    );
+    assert_eq!(svc.metrics.artifacts_loaded.load(Ordering::Relaxed), 0);
+    svc.shutdown();
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+/// The core durability round-trip: publish, drop every handle, reopen,
+/// load — the dict must come back bit-identical, across multiple keys.
+#[test]
+fn publish_reopen_load_is_bit_identical() {
+    let dir = unique_dir("roundtrip");
+    let keys = [
+        ArtifactKey::new("gmm2d", "ddim", 8),
+        ArtifactKey::new("gmm2d", "heun", 8),
+        ArtifactKey::new("gmm-hd64", "ddim", 12),
+    ];
+    let dicts: Vec<CoordinateDict> = (0..3).map(|i| dict(12, 1.0 + i as f64)).collect();
+    {
+        let mut store = ArtifactStore::open(&dir).unwrap();
+        for (k, d) in keys.iter().zip(&dicts) {
+            let out = store.publish(k, d).unwrap();
+            assert_eq!(out.version, 1);
+            assert!(!out.deduplicated);
+        }
+    }
+    let mut store = ArtifactStore::open(&dir).unwrap();
+    let rep = artifact::load_all(&mut store);
+    assert_eq!(rep.source, Some(ManifestSource::Current));
+    assert_eq!(rep.loaded.len(), 3);
+    assert!(rep.failed.is_empty());
+    for (k, d) in keys.iter().zip(&dicts) {
+        let l = rep.loaded.iter().find(|l| &l.key == k).unwrap();
+        assert!(!l.healed);
+        assert_eq!(bits(&l.dict), bits(d), "{} corrupted in round-trip", k.id());
+    }
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+/// Re-publishing byte-identical content is a no-op: no version consumed,
+/// no new manifest generation, content-addressing shares the blob.
+#[test]
+fn duplicate_publish_deduplicates() {
+    let dir = unique_dir("dedup");
+    let mut store = ArtifactStore::open(&dir).unwrap();
+    let d = dict(8, 1.5);
+    assert_eq!(store.publish(&key(), &d).unwrap().version, 1);
+    let gen_before = store.load_manifest().0.generation;
+    let again = store.publish(&key(), &d).unwrap();
+    assert!(again.deduplicated);
+    assert_eq!(again.version, 1);
+    assert_eq!(store.load_manifest().0.generation, gen_before);
+    // Different content does consume a version.
+    let out = store.publish(&key(), &dict(8, 2.5)).unwrap();
+    assert_eq!((out.version, out.deduplicated), (2, false));
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+/// Truncated current blob: verify flags it, the loader quarantines it and
+/// falls back to the previous version, and the heal persists — a fresh
+/// process sees a clean store.
+#[test]
+fn truncated_blob_falls_back_and_heals() {
+    let dir = unique_dir("truncate");
+    let (d1, d2) = (dict(8, 1.0), dict(8, 2.0));
+    let v2_checksum = {
+        let mut store = ArtifactStore::open(&dir).unwrap();
+        store.publish(&key(), &d1).unwrap();
+        store.publish(&key(), &d2).unwrap().checksum
+    };
+    let mut store = ArtifactStore::open(&dir).unwrap();
+    let blob = store.blob_path(&v2_checksum);
+    let bytes = std::fs::read(&blob).unwrap();
+    std::fs::write(&blob, &bytes[..bytes.len() / 2]).unwrap();
+
+    assert!(!artifact::verify(&store).ok());
+    let l = artifact::load_dict(&mut store, &key()).unwrap();
+    assert!(l.healed);
+    assert_eq!(l.version, 1);
+    assert_eq!(bits(&l.dict), bits(&d1));
+    assert!(store.quarantine_path(&v2_checksum).exists());
+
+    let store2 = ArtifactStore::open(&dir).unwrap();
+    let rep = artifact::verify(&store2);
+    assert!(rep.ok(), "heal must persist: {:?}", rep.errors);
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+/// Bit-flipped blob with no older version: the key loads nothing — no
+/// panic, no corrupt dict served — and other keys are unaffected.
+#[test]
+fn bit_flipped_only_version_loads_nothing() {
+    let dir = unique_dir("bitflip");
+    let other = ArtifactKey::new("gmm2d", "ipndm", 8);
+    let (d_bad, d_ok) = (dict(8, 1.0), dict(8, 3.0));
+    let sum = {
+        let mut store = ArtifactStore::open(&dir).unwrap();
+        let sum = store.publish(&key(), &d_bad).unwrap().checksum;
+        store.publish(&other, &d_ok).unwrap();
+        sum
+    };
+    let mut store = ArtifactStore::open(&dir).unwrap();
+    let blob = store.blob_path(&sum);
+    let mut bytes = std::fs::read(&blob).unwrap();
+    bytes[8] ^= 0x40;
+    std::fs::write(&blob, &bytes).unwrap();
+
+    assert!(artifact::load_dict(&mut store, &key()).is_none());
+    let rep = artifact::load_all(&mut store);
+    assert_eq!(rep.failed.len(), 1);
+    assert_eq!(rep.loaded.len(), 1);
+    assert_eq!(bits(&rep.loaded[0].dict), bits(&d_ok));
+    assert!(store.quarantine_path(&sum).exists());
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+/// The torn-manifest crash windows, via injected failpoints in the real
+/// write path. Either side of the rename pair, a restart recovers a
+/// consistent generation and the loaded dict is bit-identical to a
+/// version that was once current.
+#[test]
+fn torn_manifest_recovers_previous_generation() {
+    for fp in [FailPoint::ManifestBeforeRename, FailPoint::ManifestBetweenRenames] {
+        let dir = unique_dir("torn");
+        let (d1, d2) = (dict(8, 1.0), dict(8, 2.0));
+        {
+            let mut store = ArtifactStore::open(&dir).unwrap();
+            store.publish(&key(), &d1).unwrap();
+            store.inject_failpoint(fp);
+            let err = store.publish(&key(), &d2).unwrap_err();
+            assert!(err.contains("injected crash"), "{fp:?}: {err}");
+        }
+        // "Restart": a fresh handle sweeps orphans and walks the
+        // manifest recovery ladder.
+        let mut store = ArtifactStore::open(&dir).unwrap();
+        let (manifest, source) = store.load_manifest();
+        match fp {
+            // Crash before any rename: manifest.json untouched.
+            FailPoint::ManifestBeforeRename => assert_eq!(source, ManifestSource::Current),
+            // Crash between the renames: no manifest.json; recovered
+            // from the demoted previous generation.
+            _ => assert_eq!(source, ManifestSource::Previous),
+        }
+        let entry = manifest.get(&key()).unwrap();
+        assert_eq!(entry.current.version, 1, "{fp:?}: v2 must not be visible");
+        let l = artifact::load_dict(&mut store, &key()).unwrap();
+        assert_eq!(bits(&l.dict), bits(&d1), "{fp:?}");
+        assert!(!l.healed);
+        // The interrupted publish retries cleanly afterwards.
+        let out = store.publish(&key(), &d2).unwrap();
+        assert_eq!(out.version, 2);
+        assert_eq!(
+            bits(&artifact::load_dict(&mut store, &key()).unwrap().dict),
+            bits(&d2)
+        );
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}
+
+/// A scribbled (not just torn) manifest.json: parse-level self-checksum
+/// rejects it, the previous generation serves, and the next publish
+/// discards the corpse without clobbering the good recovery copy.
+#[test]
+fn scribbled_manifest_falls_back_and_is_replaced() {
+    let dir = unique_dir("scribble");
+    let (d1, d2, d3) = (dict(8, 1.0), dict(8, 2.0), dict(8, 3.0));
+    let mut store = ArtifactStore::open(&dir).unwrap();
+    store.publish(&key(), &d1).unwrap();
+    store.publish(&key(), &d2).unwrap(); // current gen 2, prev gen 1
+    std::fs::write(dir.join("manifest.json"), b"{\"half a manifest").unwrap();
+
+    let (manifest, source) = store.load_manifest();
+    assert_eq!(source, ManifestSource::Previous);
+    // One generation lost: prev knows v1 only.
+    assert_eq!(manifest.get(&key()).unwrap().current.version, 1);
+    assert_eq!(bits(&artifact::load_dict(&mut store, &key()).unwrap().dict), bits(&d1));
+    // Publishing on top of the recovered generation drops the corpse.
+    let out = store.publish(&key(), &d3).unwrap();
+    assert_eq!(out.version, 2);
+    let (manifest, source) = store.load_manifest();
+    assert_eq!(source, ManifestSource::Current);
+    assert_eq!(manifest.get(&key()).unwrap().current.version, 2);
+    assert_eq!(bits(&artifact::load_dict(&mut store, &key()).unwrap().dict), bits(&d3));
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+/// Crash between a blob's tmp-write and its rename: the publish fails,
+/// the store is untouched (old version still current and loadable), and
+/// the orphaned temp file is swept on reopen.
+#[test]
+fn blob_crash_leaves_store_intact_and_sweeps_orphan() {
+    let dir = unique_dir("blobcrash");
+    let (d1, d2) = (dict(8, 1.0), dict(8, 2.0));
+    let mut store = ArtifactStore::open(&dir).unwrap();
+    store.publish(&key(), &d1).unwrap();
+    store.inject_failpoint(FailPoint::BlobBeforeRename);
+    assert!(store.publish(&key(), &d2).is_err());
+    let orphans = |dir: &PathBuf| -> usize {
+        std::fs::read_dir(dir.join("blobs"))
+            .unwrap()
+            .flatten()
+            .filter(|e| e.file_name().to_string_lossy().contains(".tmp."))
+            .count()
+    };
+    assert_eq!(orphans(&dir), 1, "simulated kill leaves the temp file");
+    let mut store = ArtifactStore::open(&dir).unwrap();
+    assert_eq!(orphans(&dir), 0, "reopen sweeps it");
+    let l = artifact::load_dict(&mut store, &key()).unwrap();
+    assert_eq!((l.version, bits(&l.dict) == bits(&d1)), (1, true));
+    assert!(artifact::verify(&store).ok());
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+/// Concurrent publishes through one shared handle: versions are strictly
+/// sequential with no gaps or duplicates, and the final state is one of
+/// the published dicts, bit-identical.
+#[test]
+fn concurrent_publishes_are_strictly_versioned() {
+    let dir = unique_dir("concurrent");
+    let store = Arc::new(Mutex::new(ArtifactStore::open(&dir).unwrap()));
+    let n_threads = 4;
+    let per_thread = 5;
+    let mut handles = Vec::new();
+    for t in 0..n_threads {
+        let store = store.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut versions = Vec::new();
+            for i in 0..per_thread {
+                let d = dict(8, 1.0 + (t * per_thread + i) as f64 * 0.125);
+                let out = store.lock().unwrap().publish(&key(), &d).unwrap();
+                assert!(!out.deduplicated, "all payloads are distinct");
+                versions.push(out.version);
+            }
+            versions
+        }));
+    }
+    let mut all: Vec<u64> = handles
+        .into_iter()
+        .flat_map(|h| h.join().unwrap())
+        .collect();
+    all.sort_unstable();
+    let expect: Vec<u64> = (1..=(n_threads * per_thread) as u64).collect();
+    assert_eq!(all, expect, "versions must be gap-free and duplicate-free");
+
+    let mut store = Arc::try_unwrap(store)
+        .map_err(|_| ())
+        .unwrap()
+        .into_inner()
+        .unwrap();
+    let l = artifact::load_dict(&mut store, &key()).unwrap();
+    assert_eq!(l.version, (n_threads * per_thread) as u64);
+    assert!(artifact::verify(&store).ok());
+    // History is capped; blobs for dropped records stay on disk.
+    let entry_hist = store.load_manifest().0.get(&key()).unwrap().history.len();
+    assert_eq!(entry_hist, pas::artifact::store::HISTORY_KEEP);
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+/// A blob whose checksum is fine but whose *content* fails dict
+/// validation (the hardened `from_json`): quarantined and healed around,
+/// same as bit rot — checksums alone don't make an artifact servable.
+#[test]
+fn semantically_invalid_blob_is_quarantined() {
+    let dir = unique_dir("semantic");
+    let d1 = dict(8, 1.0);
+    let mut store = ArtifactStore::open(&dir).unwrap();
+    store.publish(&key(), &d1).unwrap();
+    // Valid JSON, not a valid dict (missing fields): write it as a blob
+    // and hand-promote it to current, as a buggy publisher would.
+    let bad_sum = store.write_blob(b"{\"not\":\"a dict\"}").unwrap();
+    let (mut manifest, source) = store.load_manifest();
+    {
+        let e = manifest.entry_mut(&key());
+        let old = e.current.clone();
+        e.history.push(old);
+        e.current = VersionRecord {
+            version: 2,
+            checksum: bad_sum.clone(),
+        };
+    }
+    manifest.generation += 1;
+    store
+        .write_manifest(&manifest, source == ManifestSource::Current)
+        .unwrap();
+
+    let rep = artifact::verify(&store);
+    assert!(!rep.ok());
+    assert!(rep.errors[0].contains("gmm2d/ddim/8 v2"), "{:?}", rep.errors);
+    let l = artifact::load_dict(&mut store, &key()).unwrap();
+    assert!(l.healed);
+    assert_eq!(bits(&l.dict), bits(&d1));
+    assert!(store.quarantine_path(&bad_sum).exists());
+    assert!(artifact::verify(&store).ok(), "heal persisted");
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+/// Full service loop: train online (which publishes), restart the
+/// service, and the registry is rebuilt from disk bit-identically —
+/// ROADMAP open item 1's exact failure mode, closed.
+#[test]
+fn service_training_survives_restart_bit_identically() {
+    let dir = unique_dir("svc_restart");
+    let cfg = || ServiceConfig {
+        workers: 1,
+        artifact_root: Some(dir.clone()),
+        ..ServiceConfig::default()
+    };
+    let trained = {
+        let svc = Service::start(cfg(), Vec::new());
+        let stats = svc
+            .train_pas(
+                "gmm2d",
+                "ddim",
+                8,
+                Some(TrainConfig {
+                    n_traj: 48,
+                    epochs: 16,
+                    minibatch: 16,
+                    teacher_nfe: 60,
+                    lr: 5e-2,
+                    scale_mode: ScaleMode::Relative,
+                    ..TrainConfig::default()
+                }),
+            )
+            .unwrap();
+        assert_eq!(stats.published_version, Some(1));
+        assert_eq!(svc.metrics.dicts_published.load(Ordering::Relaxed), 1);
+        let snap = svc.dict_snapshot("gmm2d", "ddim", 8).unwrap();
+        svc.shutdown();
+        snap
+    };
+    let svc = Service::start(cfg(), Vec::new());
+    assert_eq!(svc.metrics.artifacts_loaded.load(Ordering::Relaxed), 1);
+    let reloaded = svc.dict_snapshot("gmm2d", "ddim", 8).unwrap();
+    assert_eq!(
+        bits(&reloaded),
+        bits(&trained),
+        "restart must reproduce the trained dict bit-for-bit"
+    );
+    // And it actually serves.
+    let resp = svc
+        .call(pas::server::SamplingRequest {
+            id: 0,
+            dataset: "gmm2d".into(),
+            solver: "ddim".into(),
+            nfe: 8,
+            n_samples: 4,
+            seed: 11,
+            use_pas: true,
+        })
+        .unwrap();
+    assert!(resp.error.is_none());
+    svc.shutdown();
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+/// The admin rollback path: registry swaps to the re-verified previous
+/// version, the counter ticks, and rolling back past the retained
+/// history is a clean error.
+#[test]
+fn service_rollback_swaps_registry() {
+    let dir = unique_dir("svc_rollback");
+    let svc = Service::start(
+        ServiceConfig {
+            workers: 1,
+            artifact_root: Some(dir.clone()),
+            ..ServiceConfig::default()
+        },
+        Vec::new(),
+    );
+    let (da, db) = (dict(8, 1.0), dict(8, 2.0));
+    assert_eq!(svc.publish_dict("gmm2d", "ddim", 8, da.clone()).unwrap(), Some(1));
+    assert_eq!(svc.publish_dict("gmm2d", "ddim", 8, db.clone()).unwrap(), Some(2));
+    assert_eq!(bits(&svc.dict_snapshot("gmm2d", "ddim", 8).unwrap()), bits(&db));
+
+    assert_eq!(svc.rollback("gmm2d", "ddim", 8).unwrap(), 1);
+    assert_eq!(bits(&svc.dict_snapshot("gmm2d", "ddim", 8).unwrap()), bits(&da));
+    assert_eq!(svc.metrics.rollbacks.load(Ordering::Relaxed), 1);
+    let status = svc.status_json();
+    assert_eq!(status.get("rollbacks").unwrap().as_u64(), Some(1));
+    assert_eq!(status.get("dicts_published").unwrap().as_u64(), Some(2));
+    // No retained history left for this key.
+    assert!(svc.rollback("gmm2d", "ddim", 8).is_err());
+    assert!(svc.rollback("gmm2d", "nope", 8).is_err());
+    svc.shutdown();
+    let _ = std::fs::remove_dir_all(dir);
+}
+
+/// Operator surface end to end through the CLI exit codes — the same
+/// sequence the CI crash-recovery smoke step runs: publish two versions,
+/// corrupt the current blob, `verify` fails, `load` heals, `verify`
+/// passes again.
+#[test]
+fn cli_artifact_flow_exit_codes() {
+    let dir = unique_dir("cli");
+    let store_dir = dir.join("store").display().to_string();
+    let run = |args: &[&str]| -> i32 { pas::cli::main(args.iter().map(|s| s.to_string()).collect()) };
+
+    let c1 = dir.join("c1.json");
+    let c2 = dir.join("c2.json");
+    dict(8, 1.0).save(&c1).unwrap();
+    dict(8, 2.0).save(&c2).unwrap();
+    assert_eq!(run(&["artifact", "publish", "--store", &store_dir, "--coords", &c1.display().to_string()]), 0);
+    assert_eq!(run(&["artifact", "publish", "--store", &store_dir, "--coords", &c2.display().to_string()]), 0);
+    assert_eq!(run(&["artifact", "list", "--store", &store_dir]), 0);
+    assert_eq!(run(&["artifact", "verify", "--store", &store_dir]), 0);
+
+    // Corrupt the current version's blob.
+    let store = ArtifactStore::open(&PathBuf::from(&store_dir)).unwrap();
+    let cur = store
+        .load_manifest()
+        .0
+        .get(&key())
+        .unwrap()
+        .current
+        .clone();
+    let blob = store.blob_path(&cur.checksum);
+    let mut bytes = std::fs::read(&blob).unwrap();
+    bytes[8] ^= 0x01;
+    std::fs::write(&blob, &bytes).unwrap();
+    drop(store);
+
+    assert_eq!(run(&["artifact", "verify", "--store", &store_dir]), 1, "corruption must fail verify");
+    assert_eq!(run(&["artifact", "load", "--store", &store_dir]), 0, "load heals to the previous version");
+    assert_eq!(run(&["artifact", "verify", "--store", &store_dir]), 0, "store converges back to clean");
+    // Rollback now has no retained history (the heal consumed it).
+    assert_eq!(
+        run(&["artifact", "rollback", "--store", &store_dir, "--dataset", "gmm2d", "--solver", "ddim", "--nfe", "8"]),
+        1
+    );
+    // Bad usage is exit 1, not a panic.
+    assert_eq!(run(&["artifact", "frobnicate", "--store", &store_dir]), 1);
+    assert_eq!(run(&["artifact", "verify"]), 1, "missing --store");
+    let _ = std::fs::remove_dir_all(dir);
+}

@@ -14,6 +14,7 @@ use pas::score::analytic::AnalyticEps;
 use pas::server::{Batching, SamplingRequest, Service, ServiceConfig};
 use pas::solvers::engine::{Record, SamplerEngine};
 use pas::traj::sample_prior_stream;
+use std::sync::atomic::Ordering;
 use std::time::Duration;
 
 /// Run `req` alone through a fresh serving-configuration engine — the
@@ -161,6 +162,77 @@ fn collect_then_run_baseline_matches_same_contract() {
         assert_eq!(resp.samples, want, "collect-then-run request {i}");
     }
     svc.shutdown();
+}
+
+/// Hot-reload mid-flight: publishing a new dict version while a cohort is
+/// in flight must leave that cohort on its admission-time snapshot
+/// (bit-identical to a solo run with the old dict) while requests
+/// admitted after the publish use the new version — and the published
+/// versions must survive a restart through the artifact store.
+#[test]
+fn hot_reload_mid_flight_swaps_dicts_per_cohort() {
+    let dir = std::env::temp_dir().join(format!("pas_hot_reload_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let cfg = || ServiceConfig {
+        workers: 1,
+        artifact_root: Some(dir.clone()),
+        ..ServiceConfig::default()
+    };
+    let svc = Service::start(cfg(), Vec::new());
+    let (nfe, n) = (2000usize, 32usize); // long rollout: publish lands mid-flight
+    let mut dict_a = CoordinateDict::new(4, ScaleMode::Relative, "ddim", "gmm2d", nfe);
+    dict_a.steps.insert(4, vec![0.9, 0.05, 0.0, 0.0]);
+    let mut dict_b = dict_a.clone();
+    dict_b.steps.insert(4, vec![1.1, -0.08, 0.02, 0.0]);
+    dict_b.steps.insert(2, vec![1.0, 0.0, -0.1, 0.0]);
+    assert_eq!(
+        svc.publish_dict("gmm2d", "ddim", nfe, dict_a.clone()).unwrap(),
+        Some(1)
+    );
+
+    let mut req1 = request("gmm2d", "ddim", nfe, n, 7);
+    req1.use_pas = true;
+    let rx1 = svc.submit(req1.clone()).unwrap();
+    // Wait for req1's cohort to form. Its dict snapshot is taken before
+    // the `batches` counter increments, so batches >= 1 proves the
+    // snapshot (of A) predates the publish of B below. And because the
+    // scheduler always ticks between admission phases, a request
+    // submitted after this point can never merge into req1's cohort.
+    let t0 = std::time::Instant::now();
+    while svc.metrics.batches.load(Ordering::Relaxed) == 0 {
+        assert!(t0.elapsed() < Duration::from_secs(10), "cohort never formed");
+        std::thread::sleep(Duration::from_micros(200));
+    }
+    assert_eq!(
+        svc.publish_dict("gmm2d", "ddim", nfe, dict_b.clone()).unwrap(),
+        Some(2)
+    );
+    let mut req2 = request("gmm2d", "ddim", nfe, 8, 8);
+    req2.use_pas = true;
+    let rx2 = svc.submit(req2.clone()).unwrap();
+
+    let resp1 = rx1.recv().unwrap();
+    let resp2 = rx2.recv().unwrap();
+    assert!(resp1.error.is_none(), "{:?}", resp1.error);
+    assert!(resp2.error.is_none(), "{:?}", resp2.error);
+    // The in-flight cohort finished on its snapshot (A), bitwise...
+    assert_eq!(resp1.samples, solo_run(&req1, resp1.id, Some(&dict_a)));
+    assert_ne!(resp1.samples, solo_run(&req1, resp1.id, Some(&dict_b)));
+    // ...while the post-publish admission used B.
+    assert_eq!(resp2.samples, solo_run(&req2, resp2.id, Some(&dict_b)));
+    assert_ne!(resp2.samples, solo_run(&req2, resp2.id, Some(&dict_a)));
+    assert_eq!(svc.metrics.dicts_published.load(Ordering::Relaxed), 2);
+    let snap = svc.dict_snapshot("gmm2d", "ddim", nfe).unwrap();
+    assert_eq!(snap.to_json().to_string(), dict_b.to_json().to_string());
+    svc.shutdown();
+
+    // Restart: the store hands back exactly the last published version.
+    let svc2 = Service::start(cfg(), Vec::new());
+    assert_eq!(svc2.metrics.artifacts_loaded.load(Ordering::Relaxed), 1);
+    let snap2 = svc2.dict_snapshot("gmm2d", "ddim", nfe).unwrap();
+    assert_eq!(snap2.to_json().to_string(), dict_b.to_json().to_string());
+    svc2.shutdown();
+    let _ = std::fs::remove_dir_all(dir);
 }
 
 /// Protocol-level errors surface as structured error responses over the
