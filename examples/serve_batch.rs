@@ -52,6 +52,8 @@ fn main() {
                 n_samples: 32,
                 seed: i as u64,
                 use_pas: i >= total_requests / 2,
+                deadline_ms: None,
+                priority: 0,
             })
             .expect("queue full")
         })

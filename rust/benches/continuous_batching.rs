@@ -94,6 +94,8 @@ fn run_mode(batching: Batching, interval: Duration) -> ModeStats {
                 n_samples: N_PER_REQ,
                 seed: i as u64,
                 use_pas: false,
+                deadline_ms: None,
+                priority: 0,
             })
             .expect("queue deep enough for the whole load"),
         );
@@ -121,6 +123,173 @@ fn run_mode(batching: Batching, interval: Duration) -> ModeStats {
         samples_per_s: samples as f64 / wall,
         batches,
     }
+}
+
+// ---------------------------------------------------------------------------
+// Overload + mixed-priority scenario (SLO admission control)
+// ---------------------------------------------------------------------------
+
+const OVERLOAD_REQUESTS: usize = 48;
+
+struct PriorityStats {
+    completed: usize,
+    shed: usize,
+    mean_latency_ms: f64,
+}
+
+struct OverloadStats {
+    deadline_mult: f64,
+    deadline_ms: f64,
+    completed: usize,
+    shed: usize,
+    shed_rate: f64,
+    admitted_p50_ms: f64,
+    admitted_p99_ms: f64,
+    /// Mean latency of *shed* replies — how fast infeasible requests
+    /// fail (the whole point of shedding vs queue-to-death).
+    shed_reply_mean_ms: f64,
+    by_priority: [PriorityStats; 2],
+}
+
+/// Offered load ~1.5x capacity on one key, every request carrying
+/// `deadline_ms = deadline_mult x solo`, priorities alternating 0 / 5.
+/// Tight deadlines should shed the tail fast and keep admitted p99
+/// bounded near the deadline; loose deadlines shed little and let p99
+/// grow with the queue — the shed-rate vs p99 tradeoff BENCH_serve.json
+/// reports.
+fn run_overload(deadline_mult: f64, solo_ms: f64) -> OverloadStats {
+    let svc = Service::start(
+        ServiceConfig {
+            workers: 1,
+            // 4 requests co-resident: arrivals at 6/solo overrun capacity,
+            // so a queue actually builds and deadlines start binding.
+            max_batch: 4 * N_PER_REQ,
+            batch_window: Duration::from_millis(2),
+            queue_depth: 1024,
+            batching: Batching::Continuous,
+            engine_threads: 0,
+            artifact_root: None,
+        },
+        Vec::new(),
+    );
+    let deadline_ms = solo_ms * deadline_mult;
+    let interval = Duration::from_secs_f64(solo_ms / 6.0 / 1e3);
+    let t0 = Instant::now();
+    let mut rxs = Vec::new();
+    for i in 0..OVERLOAD_REQUESTS {
+        let target = interval * i as u32;
+        let now = t0.elapsed();
+        if now < target {
+            std::thread::sleep(target - now);
+        }
+        let priority = if i % 2 == 1 { 5 } else { 0 };
+        rxs.push((
+            priority,
+            svc.submit(SamplingRequest {
+                id: 0,
+                dataset: DATASET.into(),
+                solver: SOLVER.into(),
+                nfe: NFE,
+                n_samples: N_PER_REQ,
+                seed: i as u64,
+                use_pas: false,
+                deadline_ms: Some(deadline_ms),
+                priority,
+            })
+            .expect("queue deep enough for the whole load"),
+        ));
+    }
+    let mut admitted_lats = Vec::new();
+    let mut shed_lats = Vec::new();
+    let mut by_priority = [
+        PriorityStats { completed: 0, shed: 0, mean_latency_ms: 0.0 },
+        PriorityStats { completed: 0, shed: 0, mean_latency_ms: 0.0 },
+    ];
+    for (priority, rx) in rxs {
+        let r = rx.recv().expect("worker alive");
+        let slot = usize::from(priority != 0);
+        match &r.error {
+            None => {
+                admitted_lats.push(r.latency_ms);
+                by_priority[slot].completed += 1;
+                by_priority[slot].mean_latency_ms += r.latency_ms;
+            }
+            Some(e) => {
+                assert!(e.contains("deadline"), "unexpected serve error: {e}");
+                assert!(r.latency_ms > 0.0, "shed replies must carry real latency");
+                shed_lats.push(r.latency_ms);
+                by_priority[slot].shed += 1;
+            }
+        }
+    }
+    svc.shutdown();
+    for p in by_priority.iter_mut() {
+        if p.completed > 0 {
+            p.mean_latency_ms /= p.completed as f64;
+        }
+    }
+    admitted_lats.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let (p50, p99) = if admitted_lats.is_empty() {
+        (0.0, 0.0)
+    } else {
+        (percentile(&admitted_lats, 0.50), percentile(&admitted_lats, 0.99))
+    };
+    OverloadStats {
+        deadline_mult,
+        deadline_ms,
+        completed: admitted_lats.len(),
+        shed: shed_lats.len(),
+        shed_rate: shed_lats.len() as f64 / OVERLOAD_REQUESTS as f64,
+        admitted_p50_ms: p50,
+        admitted_p99_ms: p99,
+        shed_reply_mean_ms: if shed_lats.is_empty() {
+            0.0
+        } else {
+            shed_lats.iter().sum::<f64>() / shed_lats.len() as f64
+        },
+        by_priority,
+    }
+}
+
+fn overload_json(s: &OverloadStats) -> Json {
+    let prio = |p: &PriorityStats| {
+        let mut o = Json::obj();
+        o.set("completed", Json::Num(p.completed as f64))
+            .set("shed", Json::Num(p.shed as f64))
+            .set("mean_latency_ms", Json::Num(p.mean_latency_ms));
+        o
+    };
+    let mut o = Json::obj();
+    o.set("deadline_mult", Json::Num(s.deadline_mult))
+        .set("deadline_ms", Json::Num(s.deadline_ms))
+        .set("requests", Json::Num(OVERLOAD_REQUESTS as f64))
+        .set("completed", Json::Num(s.completed as f64))
+        .set("shed", Json::Num(s.shed as f64))
+        .set("shed_rate", Json::Num(s.shed_rate))
+        .set("admitted_p50_ms", Json::Num(s.admitted_p50_ms))
+        .set("admitted_p99_ms", Json::Num(s.admitted_p99_ms))
+        .set("shed_reply_mean_ms", Json::Num(s.shed_reply_mean_ms))
+        .set("priority_0", prio(&s.by_priority[0]))
+        .set("priority_5", prio(&s.by_priority[1]));
+    o
+}
+
+fn print_overload(s: &OverloadStats) {
+    println!(
+        "overload x{:<4.1} shed {:>2}/{} ({:>5.1}%)  admitted p50 {:>8.2} ms  p99 {:>8.2} ms  \
+         shed-reply mean {:>7.2} ms  prio5 {}/{} done  prio0 {}/{} done",
+        s.deadline_mult,
+        s.shed,
+        OVERLOAD_REQUESTS,
+        s.shed_rate * 100.0,
+        s.admitted_p50_ms,
+        s.admitted_p99_ms,
+        s.shed_reply_mean_ms,
+        s.by_priority[1].completed,
+        s.by_priority[1].completed + s.by_priority[1].shed,
+        s.by_priority[0].completed,
+        s.by_priority[0].completed + s.by_priority[0].shed,
+    );
 }
 
 fn stats_json(s: &ModeStats) -> Json {
@@ -179,11 +348,32 @@ fn main() {
             "pas_threads",
             Json::Str(std::env::var("PAS_THREADS").unwrap_or_else(|_| "auto".into())),
         );
+    // Overload scenarios: same key at ~1.5x capacity, mixed priorities,
+    // tight vs loose deadlines — the shed-rate vs admitted-p99 tradeoff.
+    println!(
+        "== overload: {OVERLOAD_REQUESTS} reqs at 6x solo rate, priorities 0/5 alternating =="
+    );
+    let tight = run_overload(2.0, solo_ms);
+    print_overload(&tight);
+    let loose = run_overload(16.0, solo_ms);
+    print_overload(&loose);
+    if tight.shed == 0 {
+        eprintln!(
+            "WARNING: tight-deadline overload scenario shed nothing on this machine/run \
+             (deadline {:.2} ms)",
+            tight.deadline_ms
+        );
+    }
+
     top.set("workload", workload)
         .set("collect_then_run", stats_json(&collect))
         .set("continuous", stats_json(&continuous))
         .set("p99_improvement", Json::Num(p99_speedup))
-        .set("throughput_ratio", Json::Num(thpt_ratio));
+        .set("throughput_ratio", Json::Num(thpt_ratio))
+        .set(
+            "overload",
+            Json::Arr(vec![overload_json(&tight), overload_json(&loose)]),
+        );
     match std::fs::write("BENCH_serve.json", top.to_string()) {
         Ok(()) => println!("wrote BENCH_serve.json"),
         Err(e) => eprintln!("could not write BENCH_serve.json: {e}"),

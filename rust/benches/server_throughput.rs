@@ -27,6 +27,8 @@ fn run_load(workers: usize, requests: usize, n_per_req: usize) {
                 n_samples: n_per_req,
                 seed: i as u64,
                 use_pas: false,
+                deadline_ms: None,
+                priority: 0,
             })
             .ok()
         })

@@ -76,6 +76,9 @@ USAGE:
   pas repro   <id>|all [--quick] [--out results/] [--n-samples K]
   pas serve   [--addr 127.0.0.1:7777] [--workers W] [--artifacts DIR]
   pas client  --addr HOST:PORT --dataset D --solver S --nfe N --n K
+              [--seed X] [--pas] [--deadline-ms MS] [--priority P]
+  pas client  --addr HOST:PORT --cmd status|metrics|health
+  pas client  --addr HOST:PORT --cmd rollback --dataset D --solver S --nfe N
   pas artifact list     --store DIR
   pas artifact publish  --store DIR --coords f.json
               [--dataset D] [--solver S] [--nfe N]   (defaults: dict fields)
@@ -311,22 +314,53 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     }
 }
 
+/// One round trip against a running `pas serve`. With `--cmd` this sends
+/// an admin command (`status`/`metrics`/`health`/`rollback`); otherwise a
+/// sampling request built from the flags. A reply carrying a `"text"`
+/// string field (the metrics page) is printed decoded — the operator
+/// wants the exposition text, not a JSON-escaped blob.
 fn cmd_client(args: &Args) -> Result<(), String> {
     use std::io::{BufRead, BufReader, Write};
     let addr = args.get("addr").unwrap_or("127.0.0.1:7777");
     let mut req = Json::obj();
-    req.set("dataset", Json::Str(args.get("dataset").unwrap_or("gmm-hd64").into()))
-        .set("solver", Json::Str(args.get("solver").unwrap_or("ddim").into()))
-        .set("nfe", Json::Num(args.get_usize("nfe", 10) as f64))
-        .set("n", Json::Num(args.get_usize("n", 4) as f64))
-        .set("seed", Json::Num(args.get_usize("seed", 0) as f64));
+    if let Some(cmd) = args.get("cmd") {
+        req.set("cmd", Json::Str(cmd.into()));
+        if cmd == "rollback" {
+            req.set("dataset", Json::Str(args.get("dataset").unwrap_or("gmm-hd64").into()))
+                .set("solver", Json::Str(args.get("solver").unwrap_or("ddim").into()))
+                .set("nfe", Json::Num(args.get_usize("nfe", 10) as f64));
+        }
+    } else {
+        req.set("dataset", Json::Str(args.get("dataset").unwrap_or("gmm-hd64").into()))
+            .set("solver", Json::Str(args.get("solver").unwrap_or("ddim").into()))
+            .set("nfe", Json::Num(args.get_usize("nfe", 10) as f64))
+            .set("n", Json::Num(args.get_usize("n", 4) as f64))
+            .set("seed", Json::Num(args.get_usize("seed", 0) as f64));
+        if args.has("pas") {
+            req.set("pas", Json::Bool(true));
+        }
+        if let Some(d) = args.get("deadline-ms") {
+            let d: f64 = d.parse().map_err(|_| "--deadline-ms must be a number")?;
+            req.set("deadline_ms", Json::Num(d));
+        }
+        if let Some(p) = args.get("priority") {
+            let p: i64 = p.parse().map_err(|_| "--priority must be an integer")?;
+            req.set("priority", Json::Num(p as f64));
+        }
+    }
     let mut conn = std::net::TcpStream::connect(addr).map_err(|e| e.to_string())?;
     conn.write_all(format!("{}\n", req.to_string()).as_bytes())
         .map_err(|e| e.to_string())?;
     let mut reader = BufReader::new(conn);
     let mut line = String::new();
     reader.read_line(&mut line).map_err(|e| e.to_string())?;
-    println!("{}", line.trim());
+    let decoded_text = Json::parse(line.trim())
+        .ok()
+        .and_then(|j| j.get("text").and_then(|t| t.as_str()).map(String::from));
+    match decoded_text {
+        Some(text) => print!("{text}"),
+        None => println!("{}", line.trim()),
+    }
     Ok(())
 }
 

@@ -1,0 +1,437 @@
+//! Operator observability surface for the serving stack: lock-cheap
+//! fixed-bucket latency histograms, per-key gauges, and renderers for a
+//! text-format metrics page plus a health summary.
+//!
+//! # Design
+//!
+//! * **Histograms are atomic bucket counters.** [`Histogram::record`] is
+//!   three relaxed `fetch_add`s on a fixed array — no locks, no
+//!   allocation — so the hot retire path in the continuous scheduler can
+//!   observe every response without perturbing the zero-alloc discipline
+//!   (`tests/alloc_audit.rs`) or serialization of workers. Bucket bounds
+//!   are fixed at compile time ([`BUCKET_BOUNDS_MS`]), spanning 50µs to
+//!   10s, which covers everything from a single cheap solver step to a
+//!   pathological queue stall.
+//! * **Quantiles are bucket upper bounds.** [`Histogram::quantile_ms`]
+//!   walks the cumulative counts and returns the upper bound of the
+//!   bucket containing the target rank — coarse but monotone, honest
+//!   about its resolution, and computable without retaining samples.
+//! * **Text format.** [`render_text`] emits Prometheus-style exposition
+//!   text (`# TYPE` headers, cumulative `_bucket{le=...}` counters,
+//!   `_sum`/`_count`, labeled per-key gauges) so any scrape-based
+//!   collector — or a human with `pas client --cmd metrics` — can read
+//!   it. [`health_json`] is the machine-readable one-look summary
+//!   (status, saturation, shed/fail counts, coarse latency quantiles)
+//!   behind the wire `{"cmd":"health"}` command.
+//!
+//! Everything here is observational: nothing in this module is on the
+//! numerics path, and recording a sample never blocks a scheduler tick.
+
+use super::service::Metrics;
+use crate::util::json::Json;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Histogram bucket upper bounds, in milliseconds. The final implicit
+/// bucket is `+Inf` (the overflow bucket).
+pub const BUCKET_BOUNDS_MS: [f64; 16] = [
+    0.05, 0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0, 25.0, 50.0, 100.0, 250.0, 500.0, 1000.0, 2500.0,
+    10_000.0,
+];
+
+/// Bucket count including the `+Inf` overflow bucket.
+const N_BUCKETS: usize = BUCKET_BOUNDS_MS.len() + 1;
+
+/// Fixed-bucket latency histogram with atomic counters. Recording is
+/// lock-free and allocation-free; rendering and quantile estimation pay
+/// the (cold-path) cost of a relaxed sweep over the buckets.
+pub struct Histogram {
+    buckets: [AtomicU64; N_BUCKETS],
+    count: AtomicU64,
+    /// Sum of recorded values in integer microseconds (so the hot path
+    /// needs no float atomics; 2^64 µs ≈ 585k years of accumulated
+    /// latency, overflow is not a practical concern).
+    sum_us: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Histogram {
+    /// Record one observation (milliseconds). Three relaxed atomic adds;
+    /// never locks, never allocates.
+    pub fn record(&self, ms: f64) {
+        let ms = if ms.is_finite() && ms > 0.0 { ms } else { 0.0 };
+        let idx = BUCKET_BOUNDS_MS
+            .iter()
+            .position(|&b| ms <= b)
+            .unwrap_or(N_BUCKETS - 1);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add((ms * 1e3) as u64, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum_ms(&self) -> f64 {
+        self.sum_us.load(Ordering::Relaxed) as f64 / 1e3
+    }
+
+    /// Coarse quantile estimate: the upper bound of the bucket containing
+    /// the `q`-rank observation (the overflow bucket clamps to the
+    /// largest finite bound). Returns 0.0 on an empty histogram.
+    pub fn quantile_ms(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return 0.0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).max(1);
+        let mut cum = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            cum += b.load(Ordering::Relaxed);
+            if cum >= target {
+                return BUCKET_BOUNDS_MS[i.min(BUCKET_BOUNDS_MS.len() - 1)];
+            }
+        }
+        BUCKET_BOUNDS_MS[BUCKET_BOUNDS_MS.len() - 1]
+    }
+
+    /// Append this histogram in Prometheus exposition format
+    /// (`<name>_bucket{le="..."}` cumulative counters, `_sum`, `_count`).
+    fn render(&self, name: &str, out: &mut String) {
+        use std::fmt::Write;
+        let _ = writeln!(out, "# TYPE {name} histogram");
+        let mut cum = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            cum += b.load(Ordering::Relaxed);
+            if i < BUCKET_BOUNDS_MS.len() {
+                let _ = writeln!(out, "{name}_bucket{{le=\"{}\"}} {cum}", BUCKET_BOUNDS_MS[i]);
+            } else {
+                let _ = writeln!(out, "{name}_bucket{{le=\"+Inf\"}} {cum}");
+            }
+        }
+        let _ = writeln!(out, "{name}_sum {}", self.sum_ms());
+        let _ = writeln!(out, "{name}_count {}", self.count());
+    }
+}
+
+/// The serving path's three end-to-end latency histograms, recorded once
+/// per retired (or failed) request.
+#[derive(Default)]
+pub struct ServeHistograms {
+    /// Submit → admission.
+    pub queue_ms: Histogram,
+    /// Admission → final solver step.
+    pub run_ms: Histogram,
+    /// Submit → response (queue + run).
+    pub latency_ms: Histogram,
+}
+
+impl ServeHistograms {
+    /// Record one completed request's timing triple.
+    pub fn observe(&self, queue_ms: f64, run_ms: f64, latency_ms: f64) {
+        self.queue_ms.record(queue_ms);
+        self.run_ms.record(run_ms);
+        self.latency_ms.record(latency_ms);
+    }
+}
+
+/// Point-in-time view of one compatibility key, taken by
+/// [`super::service::Service`] under the router's locks.
+pub struct KeySnapshot {
+    /// Human-readable key label (`dataset/solver/nfe[/pas]`).
+    pub key: String,
+    /// True while a worker owns the key's resident run.
+    pub active: bool,
+    /// Requests queued behind the resident run.
+    pub queue_depth: usize,
+    /// Trajectory rows currently resident in the key's engine run.
+    pub resident_rows: usize,
+    /// Requests retired (completed) on this key since startup.
+    pub retired: u64,
+    /// Requests shed for deadline infeasibility on this key.
+    pub shed: u64,
+}
+
+/// Static + point-in-time pool facts for the gauge section.
+pub struct PoolInfo {
+    pub workers: usize,
+    pub pool_threads: usize,
+    pub engine_threads: usize,
+    pub max_batch: usize,
+    pub queue_depth: usize,
+    /// Keys currently waiting in the dispatch queue for a worker.
+    pub backlog: usize,
+    pub uptime_s: f64,
+    pub batching: &'static str,
+}
+
+/// Escape a label value for the exposition format (backslash and quote).
+fn escape_label(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            _ => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render the full text-format metrics page: global counters, the serve
+/// histograms, pool gauges, and per-key gauges/counters.
+pub fn render_text(metrics: &Metrics, keys: &[KeySnapshot], pool: &PoolInfo) -> String {
+    use std::fmt::Write;
+    let mut out = String::with_capacity(4096);
+    let c = |v: &AtomicU64| v.load(Ordering::Relaxed);
+    let counters: [(&str, u64, &str); 13] = [
+        ("pas_requests_total", c(&metrics.requests), "Requests accepted by submit"),
+        ("pas_completed_total", c(&metrics.completed), "Requests answered with samples"),
+        ("pas_rejected_total", c(&metrics.rejected), "Requests rejected by backpressure"),
+        ("pas_failed_total", c(&metrics.failed), "Requests answered with a structured error"),
+        ("pas_shed_total", c(&metrics.shed), "Requests shed for deadline infeasibility (subset of failed)"),
+        ("pas_batches_total", c(&metrics.batches), "Cohorts formed / batches fused"),
+        ("pas_fused_requests_total", c(&metrics.fused_requests), "Requests admitted into a shared run"),
+        (
+            "pas_admitted_mid_flight_total",
+            c(&metrics.admitted_mid_flight),
+            "Requests admitted while earlier cohorts were mid-flight",
+        ),
+        ("pas_ticks_total", c(&metrics.ticks), "Scheduler ticks"),
+        ("pas_dicts_trained_total", c(&metrics.dicts_trained), "Online train_pas runs"),
+        ("pas_artifacts_loaded_total", c(&metrics.artifacts_loaded), "Dicts loaded from the artifact store at startup"),
+        ("pas_dicts_published_total", c(&metrics.dicts_published), "New dict versions persisted"),
+        ("pas_rollbacks_total", c(&metrics.rollbacks), "Successful rollbacks"),
+    ];
+    for (name, v, help) in counters {
+        let _ = writeln!(out, "# HELP {name} {help}");
+        let _ = writeln!(out, "# TYPE {name} counter");
+        let _ = writeln!(out, "{name} {v}");
+    }
+    metrics.serve_hist.queue_ms.render("pas_serve_queue_ms", &mut out);
+    metrics.serve_hist.run_ms.render("pas_serve_run_ms", &mut out);
+    metrics.serve_hist.latency_ms.render("pas_serve_latency_ms", &mut out);
+
+    let resident: usize = keys.iter().map(|k| k.resident_rows).sum();
+    let capacity = pool.workers.max(1) * pool.max_batch.max(1);
+    let gauges: [(&str, f64, &str); 8] = [
+        ("pas_workers", pool.workers as f64, "Scheduler worker threads"),
+        ("pas_pool_threads", pool.pool_threads as f64, "Shared compute pool threads"),
+        ("pas_engine_threads", pool.engine_threads as f64, "Per-engine row-shard cap (0 = pool size)"),
+        ("pas_max_batch", pool.max_batch as f64, "Residency cap per resident run"),
+        ("pas_queue_depth_limit", pool.queue_depth as f64, "Per-key bounded queue depth"),
+        ("pas_dispatch_backlog", pool.backlog as f64, "Keys waiting for a worker"),
+        (
+            "pas_pool_utilization",
+            resident as f64 / capacity as f64,
+            "Resident rows / (workers * max_batch)",
+        ),
+        ("pas_uptime_seconds", pool.uptime_s, "Seconds since Service::start"),
+    ];
+    for (name, v, help) in gauges {
+        let _ = writeln!(out, "# HELP {name} {help}");
+        let _ = writeln!(out, "# TYPE {name} gauge");
+        let _ = writeln!(out, "{name} {v}");
+    }
+    let _ = writeln!(out, "# HELP pas_batching Active batching mode");
+    let _ = writeln!(out, "# TYPE pas_batching gauge");
+    let _ = writeln!(out, "pas_batching{{mode=\"{}\"}} 1", escape_label(pool.batching));
+
+    let _ = writeln!(out, "# HELP pas_keys Compatibility keys in the router table");
+    let _ = writeln!(out, "# TYPE pas_keys gauge");
+    let _ = writeln!(out, "pas_keys {}", keys.len());
+    for (name, help) in [
+        ("pas_key_queue_depth", "Requests queued on this key"),
+        ("pas_key_resident_rows", "Rows resident in this key's engine run"),
+        ("pas_key_active", "1 while a worker owns this key"),
+        ("pas_key_retired_total", "Requests completed on this key"),
+        ("pas_key_shed_total", "Requests deadline-shed on this key"),
+    ] {
+        let _ = writeln!(out, "# HELP {name} {help}");
+        let _ = writeln!(
+            out,
+            "# TYPE {name} {}",
+            if name.ends_with("_total") { "counter" } else { "gauge" }
+        );
+    }
+    for k in keys {
+        let label = escape_label(&k.key);
+        let _ = writeln!(out, "pas_key_queue_depth{{key=\"{label}\"}} {}", k.queue_depth);
+        let _ = writeln!(out, "pas_key_resident_rows{{key=\"{label}\"}} {}", k.resident_rows);
+        let _ = writeln!(out, "pas_key_active{{key=\"{label}\"}} {}", u8::from(k.active));
+        let _ = writeln!(out, "pas_key_retired_total{{key=\"{label}\"}} {}", k.retired);
+        let _ = writeln!(out, "pas_key_shed_total{{key=\"{label}\"}} {}", k.shed);
+    }
+    out
+}
+
+/// One-look health summary as JSON: coarse status classification plus
+/// the numbers an operator triages with. `status` is `"overloaded"` when
+/// any key's queue is at ≥ 80% of the bounded depth, else `"ok"`.
+pub fn health_json(
+    metrics: &Metrics,
+    keys: &[KeySnapshot],
+    queue_depth_limit: usize,
+    uptime_s: f64,
+    dicts_registered: usize,
+    artifact_store: Option<String>,
+) -> Json {
+    let requests = metrics.requests.load(Ordering::Relaxed);
+    let completed = metrics.completed.load(Ordering::Relaxed);
+    let rejected = metrics.rejected.load(Ordering::Relaxed);
+    let failed = metrics.failed.load(Ordering::Relaxed);
+    let shed = metrics.shed.load(Ordering::Relaxed);
+    let in_flight = requests.saturating_sub(completed + rejected + failed);
+    let max_queue = keys.iter().map(|k| k.queue_depth).max().unwrap_or(0);
+    // "≥ 80% full" without floats: depth * 5 >= limit * 4.
+    let saturated = keys
+        .iter()
+        .filter(|k| k.queue_depth * 5 >= queue_depth_limit.max(1) * 4)
+        .count();
+    let status = if saturated > 0 { "overloaded" } else { "ok" };
+    let mut o = Json::obj();
+    o.set("status", Json::Str(status.into()))
+        .set("uptime_s", Json::Num(uptime_s))
+        .set("requests", Json::UInt(requests))
+        .set("completed", Json::UInt(completed))
+        .set("rejected", Json::UInt(rejected))
+        .set("failed", Json::UInt(failed))
+        .set("shed", Json::UInt(shed))
+        .set("in_flight", Json::UInt(in_flight))
+        .set(
+            "latency_p50_ms",
+            Json::Num(metrics.serve_hist.latency_ms.quantile_ms(0.5)),
+        )
+        .set(
+            "latency_p99_ms",
+            Json::Num(metrics.serve_hist.latency_ms.quantile_ms(0.99)),
+        )
+        .set(
+            "queue_p99_ms",
+            Json::Num(metrics.serve_hist.queue_ms.quantile_ms(0.99)),
+        )
+        .set("keys_total", Json::UInt(keys.len() as u64))
+        .set(
+            "keys_active",
+            Json::UInt(keys.iter().filter(|k| k.active).count() as u64),
+        )
+        .set("keys_saturated", Json::UInt(saturated as u64))
+        .set("max_key_queue_depth", Json::UInt(max_queue as u64))
+        .set("dicts_registered", Json::UInt(dicts_registered as u64));
+    match artifact_store {
+        Some(root) => o.set("artifact_store", Json::Str(root)),
+        None => o.set("artifact_store", Json::Null),
+    };
+    o
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_counts_and_quantiles() {
+        let h = Histogram::default();
+        assert_eq!(h.quantile_ms(0.5), 0.0, "empty histogram");
+        for _ in 0..90 {
+            h.record(0.3); // -> le=0.5 bucket
+        }
+        for _ in 0..10 {
+            h.record(40.0); // -> le=50 bucket
+        }
+        assert_eq!(h.count(), 100);
+        assert!((h.sum_ms() - (90.0 * 0.3 + 10.0 * 40.0)).abs() < 0.5);
+        assert_eq!(h.quantile_ms(0.5), 0.5);
+        assert_eq!(h.quantile_ms(0.99), 50.0);
+        // Overflow bucket clamps to the largest finite bound.
+        h.record(1e9);
+        assert_eq!(h.quantile_ms(1.0), 10_000.0);
+        // Non-finite / negative inputs are clamped, not dropped or NaN'd.
+        h.record(f64::NAN);
+        h.record(-3.0);
+        assert_eq!(h.count(), 103);
+    }
+
+    #[test]
+    fn render_text_is_well_formed() {
+        let metrics = Metrics::default();
+        metrics.requests.store(7, Ordering::Relaxed);
+        metrics.serve_hist.observe(0.2, 1.5, 1.7);
+        let keys = [KeySnapshot {
+            key: "gmm2d/ddim/6".into(),
+            active: true,
+            queue_depth: 3,
+            resident_rows: 12,
+            retired: 5,
+            shed: 1,
+        }];
+        let pool = PoolInfo {
+            workers: 4,
+            pool_threads: 4,
+            engine_threads: 0,
+            max_batch: 256,
+            queue_depth: 256,
+            backlog: 0,
+            uptime_s: 1.0,
+            batching: "continuous",
+        };
+        let text = render_text(&metrics, &keys, &pool);
+        assert!(text.contains("pas_requests_total 7"));
+        assert!(text.contains("pas_serve_latency_ms_bucket{le=\"+Inf\"} 1"));
+        assert!(text.contains("pas_serve_latency_ms_count 1"));
+        assert!(text.contains("pas_key_queue_depth{key=\"gmm2d/ddim/6\"} 3"));
+        assert!(text.contains("pas_key_shed_total{key=\"gmm2d/ddim/6\"} 1"));
+        assert!(text.contains("pas_pool_utilization"));
+        // Every non-comment line is "name[{labels}] value".
+        for line in text.lines() {
+            if line.starts_with('#') || line.is_empty() {
+                continue;
+            }
+            let mut parts = line.rsplitn(2, ' ');
+            let value = parts.next().unwrap();
+            assert!(
+                value.parse::<f64>().is_ok(),
+                "unparseable metric value in line: {line}"
+            );
+            assert!(parts.next().is_some(), "metric line without a name: {line}");
+        }
+    }
+
+    #[test]
+    fn health_flags_saturation() {
+        let metrics = Metrics::default();
+        metrics.requests.store(10, Ordering::Relaxed);
+        metrics.completed.store(6, Ordering::Relaxed);
+        metrics.failed.store(1, Ordering::Relaxed);
+        let mut keys = vec![KeySnapshot {
+            key: "a".into(),
+            active: true,
+            queue_depth: 1,
+            resident_rows: 4,
+            retired: 6,
+            shed: 0,
+        }];
+        let h = health_json(&metrics, &keys, 256, 2.0, 1, None);
+        assert_eq!(h.get("status").and_then(|s| s.as_str()), Some("ok"));
+        assert_eq!(h.get("in_flight").and_then(|v| v.as_u64()), Some(3));
+        keys[0].queue_depth = 250; // >= 80% of 256
+        let h = health_json(&metrics, &keys, 256, 2.0, 1, None);
+        assert_eq!(h.get("status").and_then(|s| s.as_str()), Some("overloaded"));
+        assert_eq!(h.get("keys_saturated").and_then(|v| v.as_u64()), Some(1));
+    }
+
+    #[test]
+    fn label_escaping() {
+        assert_eq!(escape_label(r#"a"b\c"#), r#"a\"b\\c"#);
+    }
+}

@@ -12,21 +12,56 @@
 //! completes. Tail latency under staggered arrivals is bounded by step
 //! duration instead of whole-rollout duration.
 //!
-//! **Admission policy:** FIFO per key under the `max_batch` residency cap
-//! (oversized requests run alone on an empty engine); requests admitted
-//! at the same boundary form one lockstep cohort. **Determinism
-//! contract:** every response is bit-identical to running that request
-//! alone, for every admission interleaving and thread count — enforced by
-//! parity tests over randomized mid-flight admission × engine thread caps
-//! {1, 4, 16}. The seed's collect-then-run batcher survives behind
-//! [`service::Batching::CollectThenRun`] as the latency baseline
-//! (`benches/continuous_batching.rs`).
+//! **Admission policy:** priority-then-FIFO per key under the
+//! `max_batch` residency cap (oversized requests run alone on an empty
+//! engine); requests admitted at the same boundary form one lockstep
+//! cohort. **Determinism contract:** every response is bit-identical to
+//! running that request alone, for every admission interleaving and
+//! thread count — enforced by parity tests over randomized mid-flight
+//! admission × engine thread caps {1, 4, 16}. The seed's collect-then-run
+//! batcher survives behind [`service::Batching::CollectThenRun`] as the
+//! latency baseline (`benches/continuous_batching.rs`).
 //!
 //! Bounded queues provide **backpressure** (per key under the continuous
 //! scheduler), and the TCP front-end speaks strictly-validated
 //! line-delimited JSON ([`protocol`]): unknown datasets/solvers,
 //! out-of-range `n`, and inexact or negative seeds are structured errors,
 //! never silent rewrites.
+//!
+//! # SLO model (deadlines, priorities, shedding)
+//!
+//! Requests may carry two optional SLO fields, both strictly validated at
+//! the protocol layer and both **scheduling-only** — neither ever changes
+//! sample numerics:
+//!
+//! * **`deadline_ms`** — a soft end-to-end latency budget measured from
+//!   submit. The continuous scheduler *sheds* a queued request the moment
+//!   its budget becomes infeasible: expired outright, or smaller than
+//!   `n_steps ×` the key's observed per-tick latency (an EWMA the
+//!   resident run maintains from its own wall clock). Shed requests fail
+//!   fast with a structured `deadline` error carrying real `latency_ms` —
+//!   the alternative, queuing them to miss their deadline slowly, wastes
+//!   both the client's patience and a worker's compute. A request that
+//!   has already been admitted is never shed: admitted rows always run to
+//!   completion, preserving the bit-exactness contract.
+//! * **`priority`** — an integer (−100..=100, default 0) ordering the
+//!   request *within its key's queue*: higher admits first, FIFO among
+//!   equals. Priorities do not preempt resident cohorts and do not cross
+//!   keys (cross-key fairness is the scheduler's weighted yield: a
+//!   worker's per-key tick budget shrinks as more keys wait for
+//!   dispatch).
+//!
+//! # Observability
+//!
+//! [`metrics_export`] renders the operator surface: a Prometheus-style
+//! text metrics page ([`service::Service::metrics_text`], wire
+//! `{"cmd":"metrics"}`) with lock-free fixed-bucket histograms of
+//! `queue_ms`/`run_ms`/`latency_ms`, per-key queue-depth/residency/
+//! retire/shed series and pool utilization — and a health summary
+//! ([`service::Service::health_json`], wire `{"cmd":"health"}`) that
+//! classifies the service `"ok"`/`"overloaded"` from key-queue
+//! saturation. Recording is three relaxed atomic adds per series on the
+//! retire path: no locks, no allocations, no numerics impact.
 //!
 //! # Dictionary lifecycle (startup → publish → rollback)
 //!
@@ -56,6 +91,7 @@
 //! `dicts_published`, `rollbacks`, …) and the `pas artifact
 //! list/verify/load` CLI.
 
+pub mod metrics_export;
 pub mod protocol;
 pub mod service;
 

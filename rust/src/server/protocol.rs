@@ -1,11 +1,22 @@
 //! TCP front-end: line-delimited JSON over a listener socket.
 //!
 //! Request line:
-//! `{"dataset":"gmm2d","solver":"ddim","nfe":10,"n":16,"seed":1,"pas":false}`
+//! `{"dataset":"gmm2d","solver":"ddim","nfe":10,"n":16,"seed":1,"pas":false,
+//!   "deadline_ms":250.0,"priority":5}`
+//!
+//! `deadline_ms` (optional, finite, > 0) is the request's soft
+//! end-to-end latency budget: the continuous scheduler sheds the request
+//! with a structured `deadline` error once the budget is infeasible
+//! (expired, or shorter than the key's projected run time). `priority`
+//! (optional integer, [`MIN_PRIORITY`]`..=`[`MAX_PRIORITY`], default 0)
+//! orders the request within its key's queue — higher admits first, FIFO
+//! among equals. Both affect scheduling only, never sample numerics.
 //!
 //! Response line:
 //! `{"id":1,"n":16,"dim":2,"nfe":10,"batched_with":3,"latency_ms":4.2,
-//!   "queue_ms":0.3,"run_ms":3.9,"samples":[...]}` or `{"error":"..."}`.
+//!   "queue_ms":0.3,"run_ms":3.9,"samples":[...]}`. Error replies carry
+//! timing too (error paths are where operators most need it):
+//! `{"id":1,"error":"...","latency_ms":4.2,"queue_ms":4.2,"run_ms":0}`.
 //!
 //! Parsing is strict where silence would mis-serve: an unknown `dataset`
 //! or `solver` is an error (not a silent fall-back to the default model),
@@ -13,15 +24,29 @@
 //! (not silent clamps), and `seed`
 //! must be an exact non-negative integer — it is matched against the
 //! request's RNG stream bit-for-bit, so values parsed through f64 (which
-//! loses precision above 2^53) or negative values are rejected. Absent
-//! fields still take the documented defaults.
+//! loses precision above 2^53) or negative values are rejected. A
+//! non-finite or non-positive `deadline_ms` and a fractional or
+//! out-of-range `priority` are likewise errors. Absent fields still take
+//! the documented defaults.
 //!
 //! Lines carrying a `"cmd"` key are **admin commands** instead of
 //! sampling requests:
-//! `{"cmd":"status"}` returns the metrics/registry/store snapshot
-//! ([`Service::status_json`]); `{"cmd":"rollback","dataset":...,
-//! "solver":...,"nfe":...}` rolls the key's dict back to its previous
-//! stored version and replies `{"ok":true,"version":v}`.
+//!
+//! * `{"cmd":"status"}` — the metrics/registry/store counter snapshot
+//!   ([`Service::status_json`]).
+//! * `{"cmd":"metrics"}` — the full text-format metrics page
+//!   ([`Service::metrics_text`]: Prometheus-style exposition text with
+//!   counters, `queue_ms`/`run_ms`/`latency_ms` histograms, pool gauges
+//!   and per-key series), wrapped as
+//!   `{"format":"prometheus-text","text":"..."}` so the reply stays one
+//!   JSON line.
+//! * `{"cmd":"health"}` — the one-look health summary
+//!   ([`Service::health_json`]: `status` of `"ok"`/`"overloaded"`,
+//!   in-flight/shed/failed counts, coarse latency quantiles,
+//!   key saturation).
+//! * `{"cmd":"rollback","dataset":...,"solver":...,"nfe":...}` — rolls
+//!   the key's dict back to its previous stored version and replies
+//!   `{"ok":true,"version":v}`.
 
 use super::service::{SamplingRequest, Service};
 use crate::util::json::Json;
@@ -37,6 +62,12 @@ pub const MAX_N: usize = 4096;
 /// single request allocate an `nfe + 1`-node schedule (and spend that
 /// many model evaluations) on a worker thread.
 pub const MAX_NFE: usize = 10_000;
+
+/// Lowest scheduling priority the front-end accepts.
+pub const MIN_PRIORITY: i32 = -100;
+
+/// Highest scheduling priority the front-end accepts.
+pub const MAX_PRIORITY: i32 = 100;
 
 pub fn parse_request(line: &str) -> Result<SamplingRequest, String> {
     let j = Json::parse(line)?;
@@ -93,6 +124,39 @@ pub fn parse_request(line: &str) -> Result<SamplingRequest, String> {
         None => false,
         Some(v) => v.as_bool().ok_or("\"pas\" must be a boolean")?,
     };
+    // SLO fields: strict like everything above — a deadline of 0 (or a
+    // negative/NaN one) and a fractional or out-of-range priority are
+    // rejected, not silently clamped or ignored.
+    let deadline_ms = match j.get("deadline_ms") {
+        None => None,
+        Some(v) => {
+            let d = v
+                .as_f64()
+                .ok_or("\"deadline_ms\" must be a number (milliseconds)")?;
+            if !d.is_finite() || d <= 0.0 {
+                return Err(format!(
+                    "\"deadline_ms\" must be a finite positive number of milliseconds (got {d})"
+                ));
+            }
+            Some(d)
+        }
+    };
+    let priority = match j.get("priority") {
+        None => 0,
+        Some(v) => {
+            let p = v.as_f64().ok_or("\"priority\" must be an integer")?;
+            if p.fract() != 0.0 {
+                return Err(format!("\"priority\" must be an integer (got {p})"));
+            }
+            let p = p as i64;
+            if p < MIN_PRIORITY as i64 || p > MAX_PRIORITY as i64 {
+                return Err(format!(
+                    "\"priority\" must be in {MIN_PRIORITY}..={MAX_PRIORITY} (got {p})"
+                ));
+            }
+            p as i32
+        }
+    };
     Ok(SamplingRequest {
         id: 0,
         dataset,
@@ -101,13 +165,21 @@ pub fn parse_request(line: &str) -> Result<SamplingRequest, String> {
         n_samples,
         seed,
         use_pas,
+        deadline_ms,
+        priority,
     })
 }
 
 pub fn response_json(resp: &super::service::SamplingResponse) -> Json {
     let mut o = Json::obj();
     if let Some(e) = &resp.error {
-        o.set("error", Json::Str(e.clone()));
+        // Error replies keep their identity and timing: operators triage
+        // failures by how long the request lived, not just why it died.
+        o.set("id", Json::UInt(resp.id))
+            .set("error", Json::Str(e.clone()))
+            .set("latency_ms", Json::Num(resp.latency_ms))
+            .set("queue_ms", Json::Num(resp.queue_ms))
+            .set("run_ms", Json::Num(resp.run_ms));
         return o;
     }
     o.set("id", Json::UInt(resp.id))
@@ -171,6 +243,15 @@ fn admin_reply(line: &str, svc: &Service) -> Option<Json> {
     };
     let reply = match cmd {
         "status" => svc.status_json(),
+        "metrics" => {
+            // The exposition text is multi-line; the wire is one JSON
+            // object per line, so it ships as a string field.
+            let mut o = Json::obj();
+            o.set("format", Json::Str("prometheus-text".into()))
+                .set("text", Json::Str(svc.metrics_text()));
+            o
+        }
+        "health" => svc.health_json(),
         "rollback" => {
             let args = (
                 j.get("dataset").and_then(|v| v.as_str()),
@@ -250,6 +331,36 @@ mod tests {
         assert_eq!(r.n_samples, 1);
         assert_eq!(r.seed, 0);
         assert!(!r.use_pas);
+        assert_eq!(r.deadline_ms, None);
+        assert_eq!(r.priority, 0);
+    }
+
+    /// SLO fields parse with the same strictness as everything else:
+    /// valid values flow through, junk is a structured error.
+    #[test]
+    fn slo_fields_parse_and_validate() {
+        let r = parse_request(
+            r#"{"dataset":"gmm2d","deadline_ms":250.5,"priority":-2}"#,
+        )
+        .unwrap();
+        assert_eq!(r.deadline_ms, Some(250.5));
+        assert_eq!(r.priority, -2);
+        let r = parse_request(r#"{"dataset":"gmm2d","priority":100}"#).unwrap();
+        assert_eq!(r.priority, 100);
+        for (line, needle) in [
+            (r#"{"deadline_ms":0}"#, "finite positive"),
+            (r#"{"deadline_ms":-5}"#, "finite positive"),
+            (r#"{"deadline_ms":"soon"}"#, "must be a number"),
+            (r#"{"priority":1.5}"#, "must be an integer"),
+            (r#"{"priority":101}"#, "must be in -100..=100"),
+            (r#"{"priority":-101}"#, "must be in -100..=100"),
+            (r#"{"priority":"high"}"#, "must be an integer"),
+        ] {
+            match parse_request(line) {
+                Err(e) => assert!(e.contains(needle), "{line}: {e}"),
+                Ok(r) => panic!("{line} must be rejected, parsed {r:?}"),
+            }
+        }
     }
 
     /// Seeds parse exactly from the raw integer token across the full u64
@@ -328,8 +439,24 @@ mod tests {
         let status = ask(r#"{"cmd":"status"}"#);
         assert!(status.get("error").is_none(), "{status:?}");
         assert_eq!(status.get("rollbacks").unwrap().as_u64(), Some(0));
+        assert_eq!(status.get("failed").unwrap().as_u64(), Some(0));
+        assert_eq!(status.get("shed").unwrap().as_u64(), Some(0));
         assert_eq!(status.get("artifacts_loaded").unwrap().as_u64(), Some(0));
         assert_eq!(status.get("artifact_store").unwrap(), &Json::Null);
+        // One sampling request, so the observability surfaces have data.
+        let sample = ask(r#"{"dataset":"gmm2d","solver":"ddim","nfe":6,"n":2,"seed":1}"#);
+        assert!(sample.get("error").is_none(), "{sample:?}");
+        let metrics = ask(r#"{"cmd":"metrics"}"#);
+        assert_eq!(
+            metrics.get("format").and_then(|v| v.as_str()),
+            Some("prometheus-text")
+        );
+        let text = metrics.get("text").and_then(|v| v.as_str()).unwrap();
+        assert!(text.contains("pas_requests_total 1"), "{text}");
+        assert!(text.contains("pas_serve_latency_ms_bucket"), "{text}");
+        let health = ask(r#"{"cmd":"health"}"#);
+        assert_eq!(health.get("status").and_then(|v| v.as_str()), Some("ok"));
+        assert_eq!(health.get("completed").and_then(|v| v.as_u64()), Some(1));
         // Rollback without a store / with bad args / unknown cmd: errors.
         for (line, needle) in [
             (

@@ -15,15 +15,31 @@
 //! duration, not whole-batch rollout duration (the vLLM-style property,
 //! transplanted from token steps to solver steps).
 //!
-//! * **Admission policy.** FIFO per key. A request is admitted when its
+//! * **Admission policy.** Priority-then-FIFO per key: the router keeps
+//!   each key's queue ordered by [`SamplingRequest::priority`]
+//!   (descending; FIFO among equals), and a request is admitted when its
 //!   rows fit under the `max_batch` residency cap (an oversized request
 //!   is admitted alone when the engine is empty). Requests admitted at
 //!   the same boundary form one *cohort* — rows in lockstep — and every
-//!   cohort steps once per scheduler tick. A worker yields a hot key back
-//!   to the dispatch queue after [`YIELD_AFTER_TICKS`] ticks (residents
-//!   drain first) so one key cannot starve others, and a panicking
-//!   resident run fails its queued requests and deactivates the key
-//!   instead of stranding them ([`KeyGuard`]).
+//!   cohort steps once per scheduler tick. A panicking resident run fails
+//!   its queued requests and deactivates the key instead of stranding
+//!   them ([`KeyGuard`]).
+//! * **SLO admission (deadline shedding).** A request may carry
+//!   [`SamplingRequest::deadline_ms`], a soft end-to-end latency budget
+//!   measured from submit. Each admission phase first sheds queued
+//!   requests whose deadline has already expired or whose remaining
+//!   budget cannot cover `n_steps` ticks at the key's observed per-tick
+//!   latency (an EWMA, [`TICK_EWMA_ALPHA`], warmed by the run's own
+//!   non-idle ticks) — they fail fast with a structured `deadline` error
+//!   carrying real `latency_ms` instead of rotting in the queue. Already
+//!   admitted rows always run to completion, so shedding changes
+//!   *scheduling only*, never numerics.
+//! * **Weighted fair yielding.** A worker's tick budget on one key
+//!   scales inversely with the dispatch backlog
+//!   ([`BASE_TICK_BUDGET`]` / (1 + waiting keys)`, floored at one tick):
+//!   an uncontended key keeps its worker indefinitely, while under
+//!   contention hot keys rotate proportionally faster (residents drain
+//!   first — their state lives in the worker's engine).
 //! * **Determinism contract.** Each request's samples are bit-identical
 //!   to running that request alone (same seed/id prior via
 //!   [`sample_prior_stream`], same engine arithmetic), for every
@@ -50,6 +66,7 @@
 //! training run, which executes on the caller's thread against the
 //! service's persistent, workspace-pooled [`TrainSession`].
 
+use super::metrics_export::{self, KeySnapshot, PoolInfo, ServeHistograms};
 use crate::artifact::{ArtifactKey, ArtifactStore};
 use crate::pas::coords::CoordinateDict;
 use crate::pas::correct::CorrectedSampler;
@@ -83,6 +100,18 @@ pub struct SamplingRequest {
     /// Apply a pre-trained PAS dictionary if the service has one registered
     /// for (dataset, solver, nfe).
     pub use_pas: bool,
+    /// Soft end-to-end latency budget in milliseconds, measured from
+    /// submit. `None` = no deadline. The continuous scheduler sheds a
+    /// queued request (structured `deadline` error) once the deadline has
+    /// expired or the remaining budget cannot cover the key's projected
+    /// run time; a request already admitted always runs to completion.
+    pub deadline_ms: Option<f64>,
+    /// Scheduling priority within a compatibility key: higher admits
+    /// first, FIFO among equals. `0` is the default; the wire protocol
+    /// accepts [`super::protocol::MIN_PRIORITY`] ..=
+    /// [`super::protocol::MAX_PRIORITY`]. Priority affects *ordering
+    /// only* — results stay bit-identical to the solo run.
+    pub priority: i32,
 }
 
 /// Service reply.
@@ -186,6 +215,13 @@ pub struct Metrics {
     pub requests: AtomicU64,
     pub completed: AtomicU64,
     pub rejected: AtomicU64,
+    /// Requests answered with a structured error (invalid key, scheduler
+    /// abort, deadline shed, ...). With `rejected` and `completed`, makes
+    /// `requests == completed + rejected + failed + in-flight` hold.
+    pub failed: AtomicU64,
+    /// Requests shed because their deadline was infeasible (a subset of
+    /// `failed`).
+    pub shed: AtomicU64,
     /// Cohorts formed (continuous) / batches fused (collect-then-run).
     pub batches: AtomicU64,
     pub fused_requests: AtomicU64,
@@ -204,6 +240,11 @@ pub struct Metrics {
     pub dicts_published: AtomicU64,
     /// Successful [`Service::rollback`] operations.
     pub rollbacks: AtomicU64,
+    /// Fixed-bucket latency histograms (`queue_ms`/`run_ms`/`latency_ms`)
+    /// recorded once per answered request; see
+    /// [`super::metrics_export`]. Atomic bucket counters: recording on
+    /// the hot retire path is lock-free and allocation-free.
+    pub serve_hist: ServeHistograms,
 }
 
 /// Summary of one online [`Service::train_pas`] run.
@@ -223,13 +264,34 @@ pub struct PasTrainStats {
 }
 
 /// Per-key request queue; `active` is true while some worker owns the
-/// key's resident run.
+/// key's resident run. The queue is kept priority-ordered (descending,
+/// FIFO among equals) by [`Router::route`].
 struct KeyState {
     queue: VecDeque<Pending>,
     active: bool,
 }
 
-type KeyHandle = (BatchKey, Arc<Mutex<KeyState>>);
+/// Lock-free per-key observability counters, updated by the key's owning
+/// worker and read by the metrics/health renderers without taking the
+/// key's state lock.
+#[derive(Default)]
+struct KeyStats {
+    /// Requests completed (retired with samples) on this key.
+    retired: AtomicU64,
+    /// Requests shed for deadline infeasibility on this key.
+    shed: AtomicU64,
+    /// Rows currently resident in the key's engine run.
+    resident_rows: AtomicUsize,
+}
+
+/// Router-table entry: the lockable scheduling state plus the lock-free
+/// stats sidecar.
+struct KeyEntry {
+    state: Mutex<KeyState>,
+    stats: KeyStats,
+}
+
+type KeyHandle = (BatchKey, Arc<KeyEntry>);
 
 /// Key-table size that triggers an opportunistic sweep of idle entries
 /// (inactive, empty queue) on the next new-key insertion.
@@ -243,7 +305,7 @@ const KEY_TABLE_GC_LEN: usize = 1024;
 /// workers consult it to decide whether yielding a hot key would actually
 /// help anyone.
 struct Router {
-    table: Mutex<HashMap<BatchKey, Arc<Mutex<KeyState>>>>,
+    table: Mutex<HashMap<BatchKey, Arc<KeyEntry>>>,
     ktx: Sender<KeyHandle>,
     queue_depth: usize,
     backlog: Arc<AtomicUsize>,
@@ -262,11 +324,11 @@ impl Router {
             // can appear while we hold the table lock, so a swept entry
             // can never be resurrected into a duplicate resident run.
             if table.len() >= KEY_TABLE_GC_LEN && !table.contains_key(&key) {
-                table.retain(|_, s| {
-                    if Arc::strong_count(s) > 1 {
+                table.retain(|_, e| {
+                    if Arc::strong_count(e) > 1 {
                         return true;
                     }
-                    match s.try_lock() {
+                    match e.state.try_lock() {
                         Ok(st) => st.active || !st.queue.is_empty(),
                         Err(_) => true,
                     }
@@ -275,20 +337,31 @@ impl Router {
             table
                 .entry(key.clone())
                 .or_insert_with(|| {
-                    Arc::new(Mutex::new(KeyState {
-                        queue: VecDeque::new(),
-                        active: false,
-                    }))
+                    Arc::new(KeyEntry {
+                        state: Mutex::new(KeyState {
+                            queue: VecDeque::new(),
+                            active: false,
+                        }),
+                        stats: KeyStats::default(),
+                    })
                 })
                 .clone()
         };
         let activate = {
-            let mut st = entry.lock().unwrap();
+            let mut st = entry.state.lock().unwrap();
             if st.queue.len() >= self.queue_depth {
                 metrics.rejected.fetch_add(1, Ordering::Relaxed);
                 return Err("queue full (backpressure)".into());
             }
-            st.queue.push_back(p);
+            // Priority-then-FIFO: insert after the last queued request of
+            // equal-or-higher priority, so higher priorities admit first
+            // and equal priorities keep arrival order.
+            let pos = st
+                .queue
+                .iter()
+                .rposition(|q| q.req.priority >= p.req.priority)
+                .map_or(0, |i| i + 1);
+            st.queue.insert(pos, p);
             if st.active {
                 false
             } else {
@@ -316,6 +389,10 @@ enum Front {
 pub struct Service {
     front: Front,
     next_id: AtomicU64,
+    /// Startup configuration, retained for the observability surface
+    /// (pool gauges in [`Service::metrics_text`]).
+    cfg: ServiceConfig,
+    started: Instant,
     pub metrics: Arc<Metrics>,
     stop: Arc<AtomicBool>,
     threads: Vec<JoinHandle<()>>,
@@ -440,6 +517,8 @@ impl Service {
         Service {
             front,
             next_id: AtomicU64::new(1),
+            cfg,
+            started: Instant::now(),
             metrics,
             stop,
             threads,
@@ -597,6 +676,8 @@ impl Service {
         o.set("requests", Json::UInt(m.requests.load(Ordering::Relaxed)))
             .set("completed", Json::UInt(m.completed.load(Ordering::Relaxed)))
             .set("rejected", Json::UInt(m.rejected.load(Ordering::Relaxed)))
+            .set("failed", Json::UInt(m.failed.load(Ordering::Relaxed)))
+            .set("shed", Json::UInt(m.shed.load(Ordering::Relaxed)))
             .set("batches", Json::UInt(m.batches.load(Ordering::Relaxed)))
             .set(
                 "fused_requests",
@@ -632,6 +713,85 @@ impl Service {
             None => o.set("artifact_store", Json::Null),
         };
         o
+    }
+
+    /// Point-in-time per-key snapshots for the observability renderers.
+    /// Empty under [`Batching::CollectThenRun`] (that scheduler has no
+    /// per-key state). Sorted by key label so the output is stable.
+    fn key_snapshots(&self) -> Vec<KeySnapshot> {
+        let Front::Continuous { router } = &self.front else {
+            return Vec::new();
+        };
+        let table = router.table.lock().unwrap();
+        let mut out: Vec<KeySnapshot> = table
+            .iter()
+            .map(|(k, e)| {
+                // Poisoned state (a panicked resident run) must not make
+                // the operator surface panic too.
+                let st = e.state.lock().unwrap_or_else(|p| p.into_inner());
+                KeySnapshot {
+                    key: format!(
+                        "{}/{}/{}{}",
+                        k.dataset,
+                        k.solver,
+                        k.nfe,
+                        if k.use_pas { "/pas" } else { "" }
+                    ),
+                    active: st.active,
+                    queue_depth: st.queue.len(),
+                    resident_rows: e.stats.resident_rows.load(Ordering::Relaxed),
+                    retired: e.stats.retired.load(Ordering::Relaxed),
+                    shed: e.stats.shed.load(Ordering::Relaxed),
+                }
+            })
+            .collect();
+        drop(table);
+        out.sort_by(|a, b| a.key.cmp(&b.key));
+        out
+    }
+
+    /// The text-format metrics page (Prometheus exposition style):
+    /// global counters, serve-latency histograms, pool gauges, per-key
+    /// gauges. Wire command `{"cmd":"metrics"}`.
+    pub fn metrics_text(&self) -> String {
+        let keys = self.key_snapshots();
+        let backlog = match &self.front {
+            Front::Continuous { router } => router.backlog.load(Ordering::Relaxed),
+            Front::Collect { .. } => 0,
+        };
+        let pool = PoolInfo {
+            workers: self.cfg.workers,
+            pool_threads: crate::util::pool::Pool::global().size(),
+            engine_threads: self.cfg.engine_threads,
+            max_batch: self.cfg.max_batch,
+            queue_depth: self.cfg.queue_depth,
+            backlog,
+            uptime_s: self.started.elapsed().as_secs_f64(),
+            batching: match self.cfg.batching {
+                Batching::Continuous => "continuous",
+                Batching::CollectThenRun => "collect-then-run",
+            },
+        };
+        metrics_export::render_text(&self.metrics, &keys, &pool)
+    }
+
+    /// One-look health summary (status classification, saturation, shed
+    /// and failure counts, coarse latency quantiles). Wire command
+    /// `{"cmd":"health"}`.
+    pub fn health_json(&self) -> Json {
+        let keys = self.key_snapshots();
+        let store_root = self
+            .store
+            .as_ref()
+            .map(|s| s.lock().unwrap().root().display().to_string());
+        metrics_export::health_json(
+            &self.metrics,
+            &keys,
+            self.cfg.queue_depth,
+            self.started.elapsed().as_secs_f64(),
+            self.dicts.read().unwrap().len(),
+            store_root,
+        )
     }
 
     /// Submit a request; returns a receiver for the response, or an error
@@ -735,6 +895,11 @@ struct KeyRun {
     n_steps: usize,
     cohorts: Vec<Cohort>,
     resident_rows: usize,
+    /// EWMA of the observed wall-clock per non-idle scheduler tick, in
+    /// milliseconds ([`TICK_EWMA_ALPHA`]). `None` until the run has timed
+    /// its first tick — deadline admission only sheds on *expired*
+    /// deadlines until an estimate exists.
+    tick_ewma_ms: Option<f64>,
 }
 
 impl KeyRun {
@@ -757,6 +922,7 @@ impl KeyRun {
             n_steps: steps,
             cohorts: Vec::new(),
             resident_rows: 0,
+            tick_ewma_ms: None,
         })
     }
 
@@ -826,7 +992,7 @@ impl KeyRun {
     /// One scheduler tick: every resident cohort takes one solver step;
     /// cohorts that reached the end of the schedule retire immediately —
     /// samples are sent and slots freed before the next admission phase.
-    fn tick(&mut self, engine: &mut SlotEngine, metrics: &Metrics) {
+    fn tick(&mut self, engine: &mut SlotEngine, metrics: &Metrics, stats: &KeyStats) {
         if self.cohorts.is_empty() {
             return;
         }
@@ -850,14 +1016,20 @@ impl KeyRun {
         while i < self.cohorts.len() {
             if self.cohorts[i].steps_done == self.n_steps {
                 let cohort = self.cohorts.remove(i);
-                self.retire_cohort(engine, cohort, metrics);
+                self.retire_cohort(engine, cohort, metrics, stats);
             } else {
                 i += 1;
             }
         }
     }
 
-    fn retire_cohort(&mut self, engine: &mut SlotEngine, cohort: Cohort, metrics: &Metrics) {
+    fn retire_cohort(
+        &mut self,
+        engine: &mut SlotEngine,
+        cohort: Cohort,
+        metrics: &Metrics,
+        stats: &KeyStats,
+    ) {
         let nfe = self.n_steps * self.solver.evals_per_step();
         let slots = &cohort.slots;
         for m in cohort.members {
@@ -870,6 +1042,13 @@ impl KeyRun {
             }
             self.resident_rows -= m.rows;
             metrics.completed.fetch_add(1, Ordering::Relaxed);
+            stats.retired.fetch_add(1, Ordering::Relaxed);
+            let latency_ms = m.p.enqueued.elapsed().as_secs_f64() * 1e3;
+            let queue_ms = (m.admitted - m.p.enqueued).as_secs_f64() * 1e3;
+            let run_ms = m.admitted.elapsed().as_secs_f64() * 1e3;
+            // Histograms before the reply: three relaxed atomic adds per
+            // series, lock-free and allocation-free on this hot path.
+            metrics.serve_hist.observe(queue_ms, run_ms, latency_ms);
             let _ = m.p.reply.send(SamplingResponse {
                 id: m.p.req.id,
                 samples,
@@ -877,9 +1056,9 @@ impl KeyRun {
                 dim: self.dim,
                 nfe_spent: nfe,
                 batched_with: m.peak_coresident,
-                latency_ms: m.p.enqueued.elapsed().as_secs_f64() * 1e3,
-                queue_ms: (m.admitted - m.p.enqueued).as_secs_f64() * 1e3,
-                run_ms: m.admitted.elapsed().as_secs_f64() * 1e3,
+                latency_ms,
+                queue_ms,
+                run_ms,
                 error: None,
             });
         }
@@ -901,7 +1080,7 @@ fn continuous_worker_loop(
     // buffers and scratch arena are reused across resident runs.
     let mut engine = SlotEngine::new(engine_threads);
     loop {
-        let (key, state) = {
+        let (key, entry) = {
             let guard = krx.lock().unwrap();
             match guard.recv_timeout(Duration::from_millis(50)) {
                 Ok(h) => h,
@@ -920,7 +1099,7 @@ fn continuous_worker_loop(
         // key on unwind, and the engine workspace (possibly mid-step) is
         // rebuilt here.
         let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            run_key(&mut engine, key, &state, &metrics, &dicts, max_rows, &ktx, &backlog);
+            run_key(&mut engine, key, &entry, &metrics, &dicts, max_rows, &ktx, &backlog);
         }));
         if res.is_err() {
             engine = SlotEngine::new(engine_threads);
@@ -928,17 +1107,42 @@ fn continuous_worker_loop(
     }
 }
 
-/// Scheduler ticks one worker spends on a key before yielding it back to
-/// the dispatch queue so other keys get a turn (resident cohorts drain
-/// first — their state lives in this worker's engine). Bounds how long a
-/// hot key can monopolize a worker under sustained load.
-const YIELD_AFTER_TICKS: usize = 256;
+/// Base tick budget for the weighted fair yield: a worker spends at most
+/// `BASE_TICK_BUDGET / (1 + dispatch backlog)` ticks (floored at one) on
+/// a key before yielding it back to the dispatch queue. With no other
+/// keys waiting the budget never triggers; the hotter the dispatch queue,
+/// the faster keys rotate.
+const BASE_TICK_BUDGET: usize = 256;
+
+/// EWMA smoothing for the observed per-tick wall clock that drives
+/// deadline admission: `ewma = (1-α)·ewma + α·sample`.
+const TICK_EWMA_ALPHA: f64 = 0.2;
+
+/// Deadline-infeasibility check for a *queued* (not yet admitted)
+/// request: true when the deadline already expired, or when the key's
+/// observed per-tick latency says the remaining budget cannot cover a
+/// full `n_steps` rollout. With no estimate yet (`tick_ewma_ms` None),
+/// only expired deadlines shed — never speculate without data.
+fn past_deadline(p: &Pending, n_steps: usize, tick_ewma_ms: Option<f64>) -> bool {
+    let Some(deadline_ms) = p.req.deadline_ms else {
+        return false;
+    };
+    let remaining = deadline_ms - p.enqueued.elapsed().as_secs_f64() * 1e3;
+    if remaining <= 0.0 {
+        return true;
+    }
+    match tick_ewma_ms {
+        Some(t) => remaining < n_steps as f64 * t,
+        None => false,
+    }
+}
 
 /// Fails + deactivates a key if its resident run unwinds, so queued
 /// requests error out instead of hanging behind a permanently-`active`
 /// key.
 struct KeyGuard<'a> {
     state: &'a Mutex<KeyState>,
+    metrics: &'a Metrics,
     defused: bool,
 }
 
@@ -954,28 +1158,34 @@ impl Drop for KeyGuard<'_> {
         let drained: Vec<Pending> = st.queue.drain(..).collect();
         st.active = false;
         drop(st);
-        fail_all(drained, "sampling scheduler aborted on this key");
+        fail_all(drained, "sampling scheduler aborted on this key", self.metrics);
     }
 }
 
-/// Drive one key's resident run. Alternates admission phases (pop
-/// everything that fits, FIFO) with scheduler ticks; deactivates the key
-/// — under the same lock the router uses — only when no work remains, so
-/// no request is ever stranded. After [`YIELD_AFTER_TICKS`] ticks — and
-/// only while other keys are actually waiting for a worker (`backlog`) —
-/// the run stops admitting, drains its residents, and hands the key back
-/// to the dispatch queue so a hot key cannot starve other keys.
+/// Drive one key's resident run. Alternates admission phases with
+/// scheduler ticks; deactivates the key — under the same lock the router
+/// uses — only when no work remains, so no request is ever stranded.
+///
+/// Each admission phase first **sheds** queued requests whose deadline is
+/// infeasible ([`past_deadline`]), then pops everything that fits under
+/// the residency cap in the queue's priority-then-FIFO order. Once the
+/// **weighted fair budget** is spent ([`BASE_TICK_BUDGET`] scaled down by
+/// the dispatch backlog) — and only while other keys are actually waiting
+/// for a worker — the run stops admitting, drains its residents, and
+/// hands the key back to the dispatch queue.
 #[allow(clippy::too_many_arguments)]
 fn run_key(
     engine: &mut SlotEngine,
     key: BatchKey,
-    state: &Arc<Mutex<KeyState>>,
+    entry: &Arc<KeyEntry>,
     metrics: &Metrics,
     dicts: &RwLock<DictMap>,
     max_rows: usize,
     requeue: &Sender<KeyHandle>,
     backlog: &AtomicUsize,
 ) {
+    let state = &entry.state;
+    let stats = &entry.stats;
     let mut run = match KeyRun::new(&key) {
         Ok(r) => r,
         Err(e) => {
@@ -989,31 +1199,47 @@ fn run_key(
                     }
                     st.queue.drain(..).collect()
                 };
-                fail_all(drained, &e);
+                fail_all(drained, &e, metrics);
             }
         }
     };
     let mut guard = KeyGuard {
-        state: state.as_ref(),
+        state,
+        metrics,
         defused: false,
     };
     engine.reset(run.dim, run.n_steps);
     let mut ticks = 0usize;
     loop {
-        // Yield only when it helps someone: past the tick budget *and*
-        // at least one other key is waiting in the dispatch queue.
-        let draining =
-            ticks >= YIELD_AFTER_TICKS && backlog.load(Ordering::Relaxed) > 0;
+        // Weighted fair yield: the tick budget shrinks as more keys wait
+        // for a worker (floored at one tick so a run always progresses),
+        // and yielding only happens when it helps someone.
+        let waiting = backlog.load(Ordering::Relaxed);
+        let budget = (BASE_TICK_BUDGET / (waiting + 1)).max(1);
+        let draining = waiting > 0 && ticks >= budget;
         let mut to_admit: Vec<Pending> = Vec::new();
-        {
+        let mut to_shed: Vec<Pending> = Vec::new();
+        let disposition = {
             let mut st = state.lock().unwrap();
+            // Deadline admission: shed infeasible queued requests first,
+            // so they fail fast instead of rotting behind the residents.
+            // (Admitted rows are never shed — numerics stay untouched.)
+            let mut i = 0;
+            while i < st.queue.len() {
+                if past_deadline(&st.queue[i], run.n_steps, run.tick_ewma_ms) {
+                    to_shed.push(st.queue.remove(i).unwrap());
+                } else {
+                    i += 1;
+                }
+            }
             if !draining {
                 let mut projected = run.resident_rows;
                 while let Some(front) = st.queue.front() {
                     let rows = front.req.n_samples;
-                    // FIFO admission under the residency cap; an oversized
-                    // request runs alone when the engine is empty.
-                    // (rows == 0 passes the cap and is failed below.)
+                    // Priority-then-FIFO admission under the residency
+                    // cap; an oversized request runs alone when the
+                    // engine is empty. (rows == 0 passes the cap and is
+                    // failed below.)
                     if projected + rows <= max_rows || projected == 0 {
                         projected += rows;
                         to_admit.push(st.queue.pop_front().unwrap());
@@ -1026,30 +1252,66 @@ fn run_key(
                 if st.queue.is_empty() {
                     st.active = false;
                     guard.defused = true;
-                    return;
+                    1 // done: key deactivated
+                } else {
+                    // Fairness yield: residents drained but the queue is
+                    // not empty — hand the key back (it stays `active`;
+                    // exactly one handle re-enters the dispatch queue)
+                    // and free this worker for other keys. If the service
+                    // is stopping the guard fails the queued requests
+                    // instead.
+                    debug_assert!(draining);
+                    2 // requeue
                 }
-                // Fairness yield: residents drained but the queue is not
-                // empty — hand the key back (it stays `active`; exactly
-                // one handle re-enters the dispatch queue) and free this
-                // worker for other keys. If the service is stopping the
-                // guard fails the queued requests instead.
-                debug_assert!(draining);
-                drop(st);
+            } else {
+                0 // keep running
+            }
+        };
+        // Shed replies go out after the state lock is released (reply
+        // channels can rendezvous with slow receivers).
+        for p in to_shed {
+            let deadline = p.req.deadline_ms.unwrap_or(0.0);
+            metrics.shed.fetch_add(1, Ordering::Relaxed);
+            stats.shed.fetch_add(1, Ordering::Relaxed);
+            fail_one(
+                p,
+                &format!("deadline: {deadline}ms budget infeasible for this key's load"),
+                metrics,
+            );
+        }
+        match disposition {
+            1 => return,
+            2 => {
                 backlog.fetch_add(1, Ordering::Relaxed);
-                if requeue.send((key, state.clone())).is_ok() {
+                if requeue.send((key, entry.clone())).is_ok() {
                     guard.defused = true;
                 }
                 return;
             }
+            _ => {}
         }
         for p in to_admit {
             if p.req.n_samples == 0 {
-                fail_one(p, "n must be >= 1");
+                fail_one(p, "n must be >= 1", metrics);
             } else {
                 run.admit(engine, p, dicts, metrics);
             }
         }
-        run.tick(engine, metrics);
+        // Time only non-idle ticks: an empty tick returns immediately and
+        // would poison the per-tick latency estimate toward zero.
+        let idle = run.is_idle();
+        let t0 = Instant::now();
+        run.tick(engine, metrics, stats);
+        if !idle {
+            let sample = t0.elapsed().as_secs_f64() * 1e3;
+            run.tick_ewma_ms = Some(match run.tick_ewma_ms {
+                Some(e) => (1.0 - TICK_EWMA_ALPHA) * e + TICK_EWMA_ALPHA * sample,
+                None => sample,
+            });
+            stats
+                .resident_rows
+                .store(run.resident_rows, Ordering::Relaxed);
+        }
         ticks += 1;
     }
 }
@@ -1065,13 +1327,16 @@ fn batcher_loop(
     metrics: Arc<Metrics>,
     stop: Arc<AtomicBool>,
 ) {
-    let mut held: Vec<Pending> = Vec::new();
+    // Incompatible arrivals are carried across batches in arrival order
+    // (the front one leads the next batch); bounded at two by the
+    // early-break below.
+    let mut held: VecDeque<Pending> = VecDeque::new();
     loop {
         if stop.load(Ordering::Relaxed) {
             break;
         }
         // Block for the first request (or shutdown).
-        let first = if let Some(p) = held.pop() {
+        let first = if let Some(p) = held.pop_front() {
             p
         } else {
             match rx.recv() {
@@ -1082,8 +1347,25 @@ fn batcher_loop(
         let key = BatchKey::of(&first.req);
         let mut batch = vec![first];
         let mut total: usize = batch[0].req.n_samples;
+        // A previously-held request may be compatible with this leader
+        // (it was only incompatible with the batch it arrived during).
+        let mut i = 0;
+        while i < held.len() {
+            if BatchKey::of(&held[i].req) == key && total + held[i].req.n_samples <= cfg.max_batch
+            {
+                let p = held.remove(i).unwrap();
+                total += p.req.n_samples;
+                batch.push(p);
+            } else {
+                i += 1;
+            }
+        }
         let deadline = Instant::now() + cfg.batch_window;
-        // Gather compatible requests within the window / size budget.
+        // Gather compatible requests for the *full* window / size budget.
+        // One incompatible arrival is held to lead the next batch without
+        // ending this one's collection (mixed-key traffic used to
+        // collapse fusion here); a second incompatible arrival ends the
+        // window early so the held queue stays bounded at one.
         while total < cfg.max_batch {
             let now = Instant::now();
             if now >= deadline {
@@ -1095,8 +1377,10 @@ fn batcher_loop(
                         total += p.req.n_samples;
                         batch.push(p);
                     } else {
-                        held.push(p); // incompatible: lead the next batch
-                        break;
+                        held.push_back(p);
+                        if held.len() > 1 {
+                            break;
+                        }
                     }
                 }
                 Err(_) => break, // window elapsed or channel closed
@@ -1144,7 +1428,15 @@ fn collect_worker_loop(
     }
 }
 
-fn fail_one(p: Pending, msg: &str) {
+/// Answer one request with a structured error. Error replies carry the
+/// real elapsed latency (submit → failure) — error paths are exactly
+/// where operators need timing — and count into `Metrics.failed` plus
+/// the latency histogram, so `requests == completed + rejected + failed
+/// + in-flight` holds.
+fn fail_one(p: Pending, msg: &str, metrics: &Metrics) {
+    let latency_ms = p.enqueued.elapsed().as_secs_f64() * 1e3;
+    metrics.failed.fetch_add(1, Ordering::Relaxed);
+    metrics.serve_hist.latency_ms.record(latency_ms);
     let _ = p.reply.send(SamplingResponse {
         id: p.req.id,
         samples: Vec::new(),
@@ -1152,16 +1444,17 @@ fn fail_one(p: Pending, msg: &str) {
         dim: 0,
         nfe_spent: 0,
         batched_with: 0,
-        latency_ms: 0.0,
-        queue_ms: 0.0,
+        latency_ms,
+        // The request never ran: its whole life was queue time.
+        queue_ms: latency_ms,
         run_ms: 0.0,
         error: Some(msg.to_string()),
     });
 }
 
-fn fail_all(batch: Vec<Pending>, msg: &str) {
+fn fail_all(batch: Vec<Pending>, msg: &str, metrics: &Metrics) {
     for p in batch {
-        fail_one(p, msg);
+        fail_one(p, msg, metrics);
     }
 }
 
@@ -1175,15 +1468,15 @@ fn run_batch(
     let req0 = &batch[0].req;
     let ds = match crate::data::registry::get(&req0.dataset) {
         Some(d) => d,
-        None => return fail_all(batch, "unknown dataset"),
+        None => return fail_all(batch, "unknown dataset", metrics),
     };
     let solver: Box<dyn Solver> = match crate::solvers::registry::get(&req0.solver) {
         Some(s) => s,
-        None => return fail_all(batch, "unknown solver"),
+        None => return fail_all(batch, "unknown solver", metrics),
     };
     let steps = match solver.steps_for_nfe(req0.nfe) {
         Some(s) => s,
-        None => return fail_all(batch, "NFE not representable for this solver"),
+        None => return fail_all(batch, "NFE not representable for this solver", metrics),
     };
     let model = AnalyticEps::from_dataset(&ds);
     let sched = default_schedule(steps);
@@ -1244,6 +1537,9 @@ fn run_batch(
         let samples = x0[offset * dim..(offset + n) * dim].to_vec();
         offset += n;
         metrics.completed.fetch_add(1, Ordering::Relaxed);
+        let latency_ms = p.enqueued.elapsed().as_secs_f64() * 1e3;
+        let queue_ms = (run_start - p.enqueued).as_secs_f64() * 1e3;
+        metrics.serve_hist.observe(queue_ms, run_ms, latency_ms);
         let _ = p.reply.send(SamplingResponse {
             id: p.req.id,
             samples,
@@ -1251,8 +1547,8 @@ fn run_batch(
             dim,
             nfe_spent: nfe,
             batched_with: fused,
-            latency_ms: p.enqueued.elapsed().as_secs_f64() * 1e3,
-            queue_ms: (run_start - p.enqueued).as_secs_f64() * 1e3,
+            latency_ms,
+            queue_ms,
             run_ms,
             error: None,
         });
@@ -1274,6 +1570,8 @@ mod tests {
             n_samples: n,
             seed,
             use_pas: false,
+            deadline_ms: None,
+            priority: 0,
         }
     }
 
@@ -1421,6 +1719,7 @@ mod tests {
         dicts: &RwLock<DictMap>,
     ) -> Vec<SamplingResponse> {
         let metrics = Metrics::default();
+        let stats = KeyStats::default();
         let mut engine = SlotEngine::new(engine_threads);
         let mut run = KeyRun::new(key).expect("valid key");
         engine.reset(run.dim, run.n_steps);
@@ -1451,7 +1750,7 @@ mod tests {
                     i += 1;
                 }
             }
-            run.tick(&mut engine, &metrics);
+            run.tick(&mut engine, &metrics, &stats);
             tick += 1;
             assert!(tick < 10_000, "key run failed to drain");
         }
@@ -1604,6 +1903,7 @@ mod tests {
         };
         let dicts = RwLock::new(DictMap::new());
         let metrics = Metrics::default();
+        let stats = KeyStats::default();
         let mut engine = SlotEngine::new(1);
         let mut run = KeyRun::new(&key).unwrap();
         engine.reset(run.dim, run.n_steps);
@@ -1623,20 +1923,20 @@ mod tests {
         let (pa, rxa) = mk(4, 1);
         let (pb, rxb) = mk(2, 2);
         run.admit(&mut engine, pa, &dicts, &metrics);
-        run.tick(&mut engine, &metrics);
-        run.tick(&mut engine, &metrics);
+        run.tick(&mut engine, &metrics, &stats);
+        run.tick(&mut engine, &metrics, &stats);
         // A is 2 steps deep; B joins mid-flight in its own cohort.
         run.admit(&mut engine, pb, &dicts, &metrics);
         assert_eq!(metrics.admitted_mid_flight.load(Ordering::Relaxed), 1);
         // A retires at tick 6 (B still 2 steps behind) ...
         for _ in 0..4 {
-            run.tick(&mut engine, &metrics);
+            run.tick(&mut engine, &metrics, &stats);
         }
         let ra = rxa.try_recv().expect("A must retire as soon as it finishes");
         assert!(rxb.try_recv().is_err(), "B must still be in flight");
         // ... and B follows two ticks later.
-        run.tick(&mut engine, &metrics);
-        run.tick(&mut engine, &metrics);
+        run.tick(&mut engine, &metrics, &stats);
+        run.tick(&mut engine, &metrics, &stats);
         let rb = rxb.try_recv().expect("B must retire two ticks after A");
         assert!(run.is_idle());
         assert_eq!(ra.batched_with, 2, "A saw B co-resident");
@@ -1697,6 +1997,160 @@ mod tests {
         assert_eq!(big.n, 32);
         let small = svc.call(req(2, 6)).unwrap();
         assert!(small.error.is_none());
+        svc.shutdown();
+    }
+
+    // -- SLO admission + observability -------------------------------------
+
+    /// The router keeps each key's queue priority-ordered (descending)
+    /// with FIFO tie-breaks.
+    #[test]
+    fn priority_orders_key_queue() {
+        let (ktx, _krx) = channel::<KeyHandle>();
+        let router = Router {
+            table: Mutex::new(HashMap::new()),
+            ktx,
+            queue_depth: 16,
+            backlog: Arc::new(AtomicUsize::new(0)),
+        };
+        let metrics = Metrics::default();
+        let mut keep = Vec::new(); // keep reply receivers alive
+        for (id, priority) in [(1u64, 0i32), (2, 0), (3, 5), (4, -3), (5, 5)] {
+            let (rtx, rrx) = sync_channel(1);
+            keep.push(rrx);
+            let mut r = req(1, id);
+            r.id = id;
+            r.priority = priority;
+            router
+                .route(
+                    Pending {
+                        req: r,
+                        enqueued: Instant::now(),
+                        reply: rtx,
+                    },
+                    &metrics,
+                )
+                .unwrap();
+        }
+        let table = router.table.lock().unwrap();
+        let entry = table.values().next().unwrap();
+        let st = entry.state.lock().unwrap();
+        let order: Vec<u64> = st.queue.iter().map(|p| p.req.id).collect();
+        // Priorities [5, 5] first in arrival order, then [0, 0], then -3.
+        assert_eq!(order, vec![3, 5, 1, 2, 4]);
+    }
+
+    /// Deadline shedding end-to-end: with one key saturated, an
+    /// infeasible-deadline request fails fast with a structured
+    /// `deadline` error carrying real latency, while an in-deadline
+    /// request still completes bit-identical to its solo run.
+    #[test]
+    fn deadline_expired_requests_are_shed() {
+        let svc = Service::start(
+            ServiceConfig {
+                workers: 1,
+                max_batch: 8,
+                ..ServiceConfig::default()
+            },
+            Vec::new(),
+        );
+        // Saturate the key: 8 rows resident for 2000 ticks (long enough
+        // that the requests below always land while it is mid-flight).
+        let mut blocker = req(8, 1);
+        blocker.nfe = 2000;
+        let rx_blocker = svc.submit(blocker.clone()).unwrap();
+        // Wait until the resident run has timed at least one tick so the
+        // EWMA estimate exists.
+        let t0 = Instant::now();
+        while svc.metrics.ticks.load(Ordering::Relaxed) < 2 {
+            assert!(t0.elapsed() < Duration::from_secs(10), "run never started");
+            std::thread::sleep(Duration::from_micros(100));
+        }
+        // Hopeless: a deadline that expires immediately. The key is full
+        // (projected 8 + 4 > max_batch 8), so this queues — and must be
+        // shed at the next admission phase, not after the blocker.
+        let mut hopeless = req(4, 2);
+        hopeless.nfe = 2000;
+        hopeless.deadline_ms = Some(0.01);
+        let rx_hopeless = svc.submit(hopeless).unwrap();
+        // Feasible: a deadline the queue-behind-blocker easily meets.
+        let mut feasible = req(4, 3);
+        feasible.nfe = 2000;
+        feasible.deadline_ms = Some(60_000.0);
+        let rx_feasible = svc.submit(feasible.clone()).unwrap();
+
+        let shed = rx_hopeless.recv().unwrap();
+        let err = shed.error.as_deref().expect("hopeless request must be shed");
+        assert!(err.contains("deadline"), "structured deadline error, got: {err}");
+        assert!(shed.latency_ms > 0.0, "shed reply must carry real latency");
+        assert_eq!(shed.queue_ms, shed.latency_ms, "a shed request never ran");
+        assert_eq!(shed.run_ms, 0.0);
+
+        let done = rx_feasible.recv().unwrap();
+        assert!(done.error.is_none(), "{:?}", done.error);
+        let key = BatchKey::of(&feasible);
+        let dicts = RwLock::new(DictMap::new());
+        assert_eq!(
+            done.samples,
+            solo_run(&key, &feasible, done.id, &dicts),
+            "in-deadline request must stay bit-identical to its solo run"
+        );
+        let blocked = rx_blocker.recv().unwrap();
+        assert!(blocked.error.is_none());
+        assert_eq!(svc.metrics.shed.load(Ordering::Relaxed), 1);
+        assert_eq!(svc.metrics.failed.load(Ordering::Relaxed), 1);
+        svc.shutdown();
+    }
+
+    /// Satellite bugfix: error replies report real latency and count
+    /// into `failed`, so the counter identity holds.
+    #[test]
+    fn error_replies_carry_latency_and_failed_counter() {
+        let svc = Service::start(ServiceConfig::default(), Vec::new());
+        let mut bad = req(4, 1);
+        bad.solver = "heun".into();
+        bad.nfe = 5; // odd: not representable -> invalid key
+        let resp = svc.call(bad).unwrap();
+        assert!(resp.error.is_some());
+        assert!(
+            resp.latency_ms > 0.0,
+            "error replies must carry real latency, got {}",
+            resp.latency_ms
+        );
+        assert_eq!(resp.queue_ms, resp.latency_ms);
+        let m = &svc.metrics;
+        assert_eq!(m.failed.load(Ordering::Relaxed), 1);
+        assert_eq!(
+            m.requests.load(Ordering::Relaxed),
+            m.completed.load(Ordering::Relaxed)
+                + m.rejected.load(Ordering::Relaxed)
+                + m.failed.load(Ordering::Relaxed),
+            "requests == completed + rejected + failed once drained"
+        );
+        svc.shutdown();
+    }
+
+    /// The operator surface renders: counters and per-key series in the
+    /// metrics text, coherent numbers in the health summary.
+    #[test]
+    fn metrics_text_and_health_render() {
+        let svc = Service::start(ServiceConfig::default(), Vec::new());
+        for s in 0..3 {
+            let resp = svc.call(req(4, s)).unwrap();
+            assert!(resp.error.is_none());
+        }
+        let text = svc.metrics_text();
+        assert!(text.contains("pas_requests_total 3"), "{text}");
+        assert!(text.contains("pas_completed_total 3"));
+        assert!(text.contains("pas_serve_latency_ms_count 3"));
+        assert!(text.contains("pas_key_queue_depth{key=\"gmm2d/ddim/6\"} 0"));
+        assert!(text.contains("pas_key_retired_total{key=\"gmm2d/ddim/6\"} 3"));
+        assert!(text.contains("pas_pool_utilization"));
+        let h = svc.health_json();
+        assert_eq!(h.get("status").and_then(|s| s.as_str()), Some("ok"));
+        assert_eq!(h.get("completed").and_then(|v| v.as_u64()), Some(3));
+        assert_eq!(h.get("in_flight").and_then(|v| v.as_u64()), Some(0));
+        assert!(h.get("latency_p50_ms").and_then(|v| v.as_f64()).unwrap() > 0.0);
         svc.shutdown();
     }
 }

@@ -215,6 +215,27 @@ fn zero_steady_state_allocs_every_solver_both_record_modes() {
         }
     }
 
+    // The serving metrics histograms sit on the hot retire path, which
+    // carries the scheduler's zero-alloc claim: `observe` is three
+    // relaxed fetch-adds per series, allocation-free from the first call.
+    {
+        use pas::server::metrics_export::ServeHistograms;
+        let hist = ServeHistograms::default();
+        hist.observe(0.5, 1.0, 1.5); // no warm-up needed; symmetry with above
+        let before = ALLOC_COUNT.load(Ordering::SeqCst);
+        for i in 0..100u32 {
+            let ms = f64::from(i) * 0.37;
+            hist.observe(ms, ms * 2.0, ms * 3.0);
+        }
+        let hist_allocs = ALLOC_COUNT.load(Ordering::SeqCst) - before;
+        std::hint::black_box(hist.latency_ms.count());
+        if hist_allocs > 0 {
+            failures.push(format!(
+                "ServeHistograms::observe allocated: {hist_allocs} over 100 observations"
+            ));
+        }
+    }
+
     // The tiled matmul kernels work entirely in caller-owned buffers:
     // zero allocations from the first call, no warm-up needed.
     {

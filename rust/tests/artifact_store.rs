@@ -412,6 +412,8 @@ fn service_training_survives_restart_bit_identically() {
             n_samples: 4,
             seed: 11,
             use_pas: true,
+            deadline_ms: None,
+            priority: 0,
         })
         .unwrap();
     assert!(resp.error.is_none());

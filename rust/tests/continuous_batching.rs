@@ -66,6 +66,8 @@ fn request(dataset: &str, solver: &str, nfe: usize, n: usize, seed: u64) -> Samp
         n_samples: n,
         seed,
         use_pas: false,
+        deadline_ms: None,
+        priority: 0,
     }
 }
 
@@ -233,6 +235,67 @@ fn hot_reload_mid_flight_swaps_dicts_per_cohort() {
     assert_eq!(snap2.to_json().to_string(), dict_b.to_json().to_string());
     svc2.shutdown();
     let _ = std::fs::remove_dir_all(dir);
+}
+
+/// SLO admission end to end: under a long-running cohort, a request whose
+/// deadline cannot cover its rollout is shed with a structured `deadline`
+/// error carrying real timing, while a feasible request admitted to the
+/// same busy key still matches its solo run bitwise — shedding changes
+/// scheduling, never numerics. The operator surfaces see all of it.
+#[test]
+fn deadline_shedding_preserves_determinism_and_shows_in_metrics() {
+    let svc = Service::start(
+        ServiceConfig {
+            workers: 1,
+            max_batch: 8,
+            ..ServiceConfig::default()
+        },
+        Vec::new(),
+    );
+    // Long rollout holds the key busy while the SLO requests arrive.
+    let blocker = request("gmm2d", "ddim", 2000, 8, 1);
+    let rx_blocker = svc.submit(blocker.clone()).unwrap();
+    let t0 = std::time::Instant::now();
+    while svc.metrics.ticks.load(Ordering::Relaxed) < 2 {
+        assert!(t0.elapsed() < Duration::from_secs(10), "blocker never started");
+        std::thread::sleep(Duration::from_micros(200));
+    }
+    let mut hopeless = request("gmm2d", "ddim", 2000, 4, 2);
+    hopeless.deadline_ms = Some(0.01);
+    let rx_hopeless = svc.submit(hopeless).unwrap();
+    let mut feasible = request("gmm2d", "ddim", 2000, 4, 3);
+    feasible.deadline_ms = Some(120_000.0);
+    feasible.priority = 5;
+    let rx_feasible = svc.submit(feasible.clone()).unwrap();
+
+    let shed = rx_hopeless.recv().unwrap();
+    let err = shed.error.as_deref().expect("hopeless request must be shed");
+    assert!(err.contains("deadline"), "unexpected error: {err}");
+    assert!(shed.latency_ms > 0.0, "shed reply must carry real latency");
+    assert_eq!(shed.queue_ms, shed.latency_ms);
+    assert_eq!(shed.run_ms, 0.0);
+
+    let done = rx_feasible.recv().unwrap();
+    assert!(done.error.is_none(), "{:?}", done.error);
+    assert_eq!(done.samples, solo_run(&feasible, done.id, None));
+    let b = rx_blocker.recv().unwrap();
+    assert!(b.error.is_none());
+    assert_eq!(b.samples, solo_run(&blocker, b.id, None));
+
+    // Operator surfaces account for every request.
+    let text = svc.metrics_text();
+    assert!(text.contains("pas_shed_total 1"), "metrics text:\n{text}");
+    assert!(text.contains("pas_failed_total 1"), "metrics text:\n{text}");
+    assert!(text.contains("pas_completed_total 2"), "metrics text:\n{text}");
+    let health = svc.health_json();
+    assert_eq!(health.get("in_flight").unwrap().as_f64().unwrap(), 0.0);
+    assert_eq!(
+        svc.metrics.requests.load(Ordering::Relaxed),
+        svc.metrics.completed.load(Ordering::Relaxed)
+            + svc.metrics.rejected.load(Ordering::Relaxed)
+            + svc.metrics.failed.load(Ordering::Relaxed)
+    );
+    svc.shutdown();
 }
 
 /// Protocol-level errors surface as structured error responses over the

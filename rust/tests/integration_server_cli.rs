@@ -40,6 +40,8 @@ fn service_applies_registered_pas_dict() {
         n_samples: 64,
         seed: 7,
         use_pas,
+        deadline_ms: None,
+        priority: 0,
     };
     let plain = svc.call(req(false)).unwrap();
     let pas_r = svc.call(req(true)).unwrap();
