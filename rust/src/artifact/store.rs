@@ -44,6 +44,9 @@ pub fn checksum_hex(bytes: &[u8]) -> String {
 /// Injected via [`ArtifactStore::inject_failpoint`]; the next write that
 /// reaches the site returns an error *without executing the rest of the
 /// protocol* — exactly the state a `kill -9` at that instant leaves.
+/// Backed by the store-instance-scoped one-shot set in
+/// [`crate::util::failpoint`] (the same infrastructure the serving-path
+/// chaos suite arms globally).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum FailPoint {
     /// Blob temp file written + synced; crash before the rename makes it
@@ -58,6 +61,16 @@ pub enum FailPoint {
     /// torn-manifest window. No `manifest.json` exists; the loader must
     /// recover from the previous generation.
     ManifestBetweenRenames,
+}
+
+impl FailPoint {
+    fn site(self) -> &'static str {
+        match self {
+            FailPoint::BlobBeforeRename => "artifact.blob_before_rename",
+            FailPoint::ManifestBeforeRename => "artifact.manifest_before_rename",
+            FailPoint::ManifestBetweenRenames => "artifact.manifest_between_renames",
+        }
+    }
 }
 
 /// Unique-ish suffix counter for temp files (plus the pid, so two test
@@ -121,7 +134,7 @@ pub struct PublishOutcome {
 /// store in a `Mutex`).
 pub struct ArtifactStore {
     root: PathBuf,
-    fail: Option<FailPoint>,
+    fail: crate::util::failpoint::FailPoints,
 }
 
 impl ArtifactStore {
@@ -136,7 +149,7 @@ impl ArtifactStore {
         }
         let store = ArtifactStore {
             root: root.to_path_buf(),
-            fail: None,
+            fail: crate::util::failpoint::FailPoints::new(),
         };
         store.sweep_tmp(&store.root);
         store.sweep_tmp(&store.root.join("blobs"));
@@ -180,13 +193,12 @@ impl ArtifactStore {
     /// compiled: the fault-injection suite runs against the exact
     /// production write path, not a test double.
     pub fn inject_failpoint(&mut self, fp: FailPoint) {
-        self.fail = Some(fp);
+        self.fail.arm(fp.site());
     }
 
     /// Fire (and disarm) the injected failpoint if it matches this site.
     fn crash_if_armed(&mut self, fp: FailPoint) -> Result<(), String> {
-        if self.fail == Some(fp) {
-            self.fail = None;
+        if self.fail.take(fp.site()).is_some() {
             return Err(format!("injected crash at {fp:?}"));
         }
         Ok(())

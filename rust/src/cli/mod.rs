@@ -75,6 +75,7 @@ USAGE:
               --out coords.json
   pas repro   <id>|all [--quick] [--out results/] [--n-samples K]
   pas serve   [--addr 127.0.0.1:7777] [--workers W] [--artifacts DIR]
+              [--drain-ms MS]        (SIGTERM/SIGINT drain deadline, default 5000)
   pas client  --addr HOST:PORT --dataset D --solver S --nfe N --n K
               [--seed X] [--pas] [--deadline-ms MS] [--priority P]
   pas client  --addr HOST:PORT --cmd status|metrics|health
@@ -297,20 +298,81 @@ fn cmd_repro(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
+/// Dependency-free POSIX signal latch: `pas serve` drains on
+/// SIGTERM/SIGINT instead of dying mid-cohort. Declares the libc
+/// `signal` symbol the std runtime already links, so no crate is pulled
+/// in; the handler is async-signal-safe (one atomic store).
+#[cfg(unix)]
+mod signals {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    static SHUTDOWN: AtomicBool = AtomicBool::new(false);
+
+    const SIGINT: i32 = 2;
+    const SIGTERM: i32 = 15;
+
+    extern "C" fn on_signal(_sig: i32) {
+        SHUTDOWN.store(true, Ordering::SeqCst);
+    }
+
+    pub fn install() {
+        extern "C" {
+            fn signal(signum: i32, handler: extern "C" fn(i32)) -> isize;
+        }
+        unsafe {
+            signal(SIGTERM, on_signal);
+            signal(SIGINT, on_signal);
+        }
+    }
+
+    pub fn requested() -> bool {
+        SHUTDOWN.load(Ordering::SeqCst)
+    }
+}
+
 fn cmd_serve(args: &Args) -> Result<(), String> {
+    use crate::server::protocol::{serve_with, ServerConfig};
     use crate::server::{Service, ServiceConfig};
+    use std::time::Duration;
     let addr = args.get("addr").unwrap_or("127.0.0.1:7777").to_string();
+    let drain_ms = args.get_usize("drain-ms", 5_000) as u64;
     let cfg = ServiceConfig {
         workers: args.get_usize("workers", 4),
         artifact_root: args.get("artifacts").map(PathBuf::from),
+        drain_deadline: Duration::from_millis(drain_ms),
         ..ServiceConfig::default()
     };
     let svc = std::sync::Arc::new(Service::start(cfg, Vec::new()));
     let stop = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
-    let local = crate::server::protocol::serve(svc, &addr, stop).map_err(|e| e.to_string())?;
-    println!("pas server listening on {local} (line-delimited JSON; Ctrl-C to stop)");
+    let server = serve_with(svc.clone(), &addr, stop, ServerConfig::default())
+        .map_err(|e| e.to_string())?;
+    println!(
+        "pas server listening on {} (line-delimited JSON; SIGTERM/Ctrl-C drains, \
+         --drain-ms {drain_ms})",
+        server.local_addr()
+    );
+    #[cfg(unix)]
+    {
+        signals::install();
+        while !signals::requested() {
+            std::thread::sleep(Duration::from_millis(50));
+        }
+        // Two-phase drain: stop accepting, fail queued work with
+        // structured errors, let residents retire under the deadline,
+        // then join connection threads so replies flush before exit.
+        eprintln!("draining: stopped accepting; waiting up to {drain_ms} ms for in-flight work");
+        server.begin_drain();
+        svc.shutdown();
+        let join_window = Duration::from_millis(drain_ms).max(Duration::from_secs(1));
+        if !server.join(join_window) {
+            eprintln!("drain: some connection threads did not exit in time; detaching them");
+        }
+        eprintln!("pas server stopped");
+        Ok(())
+    }
+    #[cfg(not(unix))]
     loop {
-        std::thread::sleep(std::time::Duration::from_secs(3600));
+        std::thread::sleep(Duration::from_secs(3600));
     }
 }
 

@@ -194,7 +194,7 @@ pub fn render_text(metrics: &Metrics, keys: &[KeySnapshot], pool: &PoolInfo) -> 
     use std::fmt::Write;
     let mut out = String::with_capacity(4096);
     let c = |v: &AtomicU64| v.load(Ordering::Relaxed);
-    let counters: [(&str, u64, &str); 13] = [
+    let counters: [(&str, u64, &str); 14] = [
         ("pas_requests_total", c(&metrics.requests), "Requests accepted by submit"),
         ("pas_completed_total", c(&metrics.completed), "Requests answered with samples"),
         ("pas_rejected_total", c(&metrics.rejected), "Requests rejected by backpressure"),
@@ -212,6 +212,11 @@ pub fn render_text(metrics: &Metrics, keys: &[KeySnapshot], pool: &PoolInfo) -> 
         ("pas_artifacts_loaded_total", c(&metrics.artifacts_loaded), "Dicts loaded from the artifact store at startup"),
         ("pas_dicts_published_total", c(&metrics.dicts_published), "New dict versions persisted"),
         ("pas_rollbacks_total", c(&metrics.rollbacks), "Successful rollbacks"),
+        (
+            "pas_numeric_failures_total",
+            c(&metrics.numeric_failures),
+            "Requests failed for non-finite values during sampling",
+        ),
     ];
     for (name, v, help) in counters {
         let _ = writeln!(out, "# HELP {name} {help}");
@@ -224,7 +229,7 @@ pub fn render_text(metrics: &Metrics, keys: &[KeySnapshot], pool: &PoolInfo) -> 
 
     let resident: usize = keys.iter().map(|k| k.resident_rows).sum();
     let capacity = pool.workers.max(1) * pool.max_batch.max(1);
-    let gauges: [(&str, f64, &str); 8] = [
+    let gauges: [(&str, f64, &str); 9] = [
         ("pas_workers", pool.workers as f64, "Scheduler worker threads"),
         ("pas_pool_threads", pool.pool_threads as f64, "Shared compute pool threads"),
         ("pas_engine_threads", pool.engine_threads as f64, "Per-engine row-shard cap (0 = pool size)"),
@@ -237,6 +242,12 @@ pub fn render_text(metrics: &Metrics, keys: &[KeySnapshot], pool: &PoolInfo) -> 
             "Resident rows / (workers * max_batch)",
         ),
         ("pas_uptime_seconds", pool.uptime_s, "Seconds since Service::start"),
+        // Gauge, not counter: breakers close again on rollback/republish.
+        (
+            "pas_breaker_open",
+            c(&metrics.breaker_open) as f64,
+            "Keys degraded to uncorrected sampling by the numeric circuit breaker",
+        ),
     ];
     for (name, v, help) in gauges {
         let _ = writeln!(out, "# HELP {name} {help}");
@@ -277,7 +288,9 @@ pub fn render_text(metrics: &Metrics, keys: &[KeySnapshot], pool: &PoolInfo) -> 
 
 /// One-look health summary as JSON: coarse status classification plus
 /// the numbers an operator triages with. `status` is `"overloaded"` when
-/// any key's queue is at ≥ 80% of the bounded depth, else `"ok"`.
+/// any key's queue is at ≥ 80% of the bounded depth, `"degraded"` when
+/// a numeric circuit breaker holds any key on uncorrected sampling, else
+/// `"ok"`.
 pub fn health_json(
     metrics: &Metrics,
     keys: &[KeySnapshot],
@@ -291,6 +304,8 @@ pub fn health_json(
     let rejected = metrics.rejected.load(Ordering::Relaxed);
     let failed = metrics.failed.load(Ordering::Relaxed);
     let shed = metrics.shed.load(Ordering::Relaxed);
+    let numeric_failures = metrics.numeric_failures.load(Ordering::Relaxed);
+    let breakers_open = metrics.breaker_open.load(Ordering::Relaxed);
     let in_flight = requests.saturating_sub(completed + rejected + failed);
     let max_queue = keys.iter().map(|k| k.queue_depth).max().unwrap_or(0);
     // "≥ 80% full" without floats: depth * 5 >= limit * 4.
@@ -298,7 +313,13 @@ pub fn health_json(
         .iter()
         .filter(|k| k.queue_depth * 5 >= queue_depth_limit.max(1) * 4)
         .count();
-    let status = if saturated > 0 { "overloaded" } else { "ok" };
+    let status = if saturated > 0 {
+        "overloaded"
+    } else if breakers_open > 0 {
+        "degraded"
+    } else {
+        "ok"
+    };
     let mut o = Json::obj();
     o.set("status", Json::Str(status.into()))
         .set("uptime_s", Json::Num(uptime_s))
@@ -307,6 +328,8 @@ pub fn health_json(
         .set("rejected", Json::UInt(rejected))
         .set("failed", Json::UInt(failed))
         .set("shed", Json::UInt(shed))
+        .set("numeric_failures", Json::UInt(numeric_failures))
+        .set("breakers_open", Json::UInt(breakers_open))
         .set("in_flight", Json::UInt(in_flight))
         .set(
             "latency_p50_ms",
@@ -392,6 +415,8 @@ mod tests {
         assert!(text.contains("pas_key_queue_depth{key=\"gmm2d/ddim/6\"} 3"));
         assert!(text.contains("pas_key_shed_total{key=\"gmm2d/ddim/6\"} 1"));
         assert!(text.contains("pas_pool_utilization"));
+        assert!(text.contains("pas_numeric_failures_total 0"));
+        assert!(text.contains("# TYPE pas_breaker_open gauge"));
         // Every non-comment line is "name[{labels}] value".
         for line in text.lines() {
             if line.starts_with('#') || line.is_empty() {
@@ -428,6 +453,14 @@ mod tests {
         let h = health_json(&metrics, &keys, 256, 2.0, 1, None);
         assert_eq!(h.get("status").and_then(|s| s.as_str()), Some("overloaded"));
         assert_eq!(h.get("keys_saturated").and_then(|v| v.as_u64()), Some(1));
+        // An open numeric breaker degrades health (overload still wins).
+        keys[0].queue_depth = 1;
+        metrics.breaker_open.store(1, Ordering::Relaxed);
+        metrics.numeric_failures.store(3, Ordering::Relaxed);
+        let h = health_json(&metrics, &keys, 256, 2.0, 1, None);
+        assert_eq!(h.get("status").and_then(|s| s.as_str()), Some("degraded"));
+        assert_eq!(h.get("breakers_open").and_then(|v| v.as_u64()), Some(1));
+        assert_eq!(h.get("numeric_failures").and_then(|v| v.as_u64()), Some(3));
     }
 
     #[test]

@@ -90,6 +90,53 @@
 //! ([`service::Service::status_json`]: `artifacts_loaded`,
 //! `dicts_published`, `rollbacks`, …) and the `pas artifact
 //! list/verify/load` CLI.
+//!
+//! # Fault containment (supervision, drain, numeric guardrails)
+//!
+//! The serving path is built to contain faults at the smallest scope
+//! that can absorb them — a row, a request, a connection, a key — and
+//! never let one fault take down its neighbours:
+//!
+//! * **Connection supervision** ([`protocol::serve_with`]). The TCP
+//!   front-end runs a supervised connection set: a hard connection cap
+//!   (structured `overloaded` reject beyond it), a frame bound enforced
+//!   *while reading* (a newline-less flood is cut off, not buffered),
+//!   slow-loris and dead-peer timeouts, and every connection thread
+//!   tracked so shutdown can join it.
+//! * **Graceful drain** ([`service::Service::shutdown`], SIGTERM in
+//!   `pas serve`). Shutdown is two-phase: phase 1 stops intake — the
+//!   front-end stops accepting, new submissions and queued-but-unadmitted
+//!   requests fail fast with a structured `draining` error; phase 2 lets
+//!   resident cohorts run to retirement under
+//!   [`service::ServiceConfig::drain_deadline`] (residents that cannot
+//!   finish in time fail with a structured error instead of holding
+//!   shutdown hostage), then joins workers and connection threads so
+//!   every reply flushes. The accounting identity `requests == completed
+//!   + rejected + failed` holds through shutdown: no request ever
+//!   vanishes. `shutdown` is idempotent.
+//! * **Numeric guardrails.** Every scheduler tick scans the stepped
+//!   rows' directions and states for non-finite values
+//!   ([`crate::solvers::engine::SlotEngine::poisoned_rows`]); poisoned
+//!   members fail *individually* with a structured `numeric` error while
+//!   cohort-mates keep stepping (row independence makes the eviction
+//!   bit-invisible to survivors). A per-key circuit breaker counts
+//!   consecutive corrected-path blow-ups: at the threshold it degrades
+//!   the key to **uncorrected** sampling, drops the offending dict from
+//!   the registry, and quarantines its blob in the artifact store —
+//!   still serving, just without the corrections that kept exploding.
+//!   `rollback`/`publish_dict`/`train_pas` close the breaker and resume
+//!   corrected serving. Breaker state is visible as the
+//!   `pas_breaker_open` gauge, `pas_numeric_failures_total`, and the
+//!   `"degraded"` health status. As a last line, the wire layer refuses
+//!   to serialize a "success" with non-finite samples
+//!   ([`protocol::response_json`] turns it into a `numeric` error; the
+//!   JSON writer would otherwise emit `null`).
+//! * **Chaos coverage.** Compiled-in fail points
+//!   ([`crate::util::failpoint`]) let `tests/serving_chaos.rs` drive the
+//!   production paths through eval panics mid-cohort, injected NaNs at a
+//!   chosen tick, reply-write failures, and stalled sockets — asserting
+//!   exactly-one-reply, survivor bit-parity with solo runs, and that
+//!   drain always terminates.
 
 pub mod metrics_export;
 pub mod protocol;

@@ -47,13 +47,44 @@
 //! * `{"cmd":"rollback","dataset":...,"solver":...,"nfe":...}` — rolls
 //!   the key's dict back to its previous stored version and replies
 //!   `{"ok":true,"version":v}`.
+//!
+//! # Connection supervision
+//!
+//! The listener runs a *supervised connection set* ([`serve_with`] /
+//! [`Server`]), not an unbounded thread-per-connection free-for-all:
+//!
+//! * **Connection cap** ([`ServerConfig::max_conns`]) — an accept beyond
+//!   the cap gets a one-line structured `overloaded` error and an
+//!   immediate close, so a connection flood cannot exhaust threads.
+//! * **Frame bound** ([`ServerConfig::max_line_bytes`]) — enforced
+//!   *while reading*: a client that streams bytes without ever sending a
+//!   newline is cut off with a structured `frame too large` error once
+//!   the partial frame exceeds the bound, instead of growing a buffer
+//!   until the process dies.
+//! * **Read/idle timeouts** — a partial frame that stalls longer than
+//!   [`ServerConfig::read_timeout`] (slow-loris) gets a structured
+//!   `timeout` error and a close; a connection idle between frames
+//!   longer than [`ServerConfig::idle_timeout`] (dead peer) is reaped
+//!   silently. Replies are bounded by
+//!   [`ServerConfig::write_timeout`].
+//! * **Tracked handles** — every connection thread is registered with a
+//!   done-flag, so [`Server::join`] can find and join them at shutdown
+//!   instead of orphaning detached threads.
+//!
+//! During drain ([`Server::begin_drain`]) the accept loop stops and each
+//! connection closes at its next between-frames moment; in-flight
+//! requests run to their (service-level) drain disposition first, so
+//! every accepted request still gets exactly one reply.
 
 use super::service::{SamplingRequest, Service};
+use crate::util::failpoint;
 use crate::util::json::Json;
-use std::io::{BufRead, BufReader, Write};
-use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 /// Largest per-request batch the front-end accepts.
 pub const MAX_N: usize = 4096;
@@ -182,6 +213,24 @@ pub fn response_json(resp: &super::service::SamplingResponse) -> Json {
             .set("run_ms", Json::Num(resp.run_ms));
         return o;
     }
+    // Non-finite samples must never reach the wire as a "success": JSON
+    // has no token for NaN/inf, so the writer would emit `null` and the
+    // client would deserialize silent corruption. The engine fails
+    // poisoned rows before they get here; this is the last-line guard in
+    // case any other path leaks one through.
+    if resp.samples.iter().any(|v| !v.is_finite()) {
+        o.set("id", Json::UInt(resp.id))
+            .set(
+                "error",
+                Json::Str(
+                    "numeric: non-finite values in sample output; request aborted".into(),
+                ),
+            )
+            .set("latency_ms", Json::Num(resp.latency_ms))
+            .set("queue_ms", Json::Num(resp.queue_ms))
+            .set("run_ms", Json::Num(resp.run_ms));
+        return o;
+    }
     o.set("id", Json::UInt(resp.id))
         .set("n", Json::Num(resp.n as f64))
         .set("dim", Json::Num(resp.dim as f64))
@@ -194,36 +243,193 @@ pub fn response_json(resp: &super::service::SamplingResponse) -> Json {
     o
 }
 
-/// Serve until `stop` is set. Binds to `addr` (e.g. "127.0.0.1:7777");
-/// returns the bound address (useful with port 0 in tests).
+/// Resource bounds for the supervised connection set.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// Hard cap on concurrent connections; accepts beyond it get a
+    /// structured `overloaded` reject and an immediate close.
+    pub max_conns: usize,
+    /// Largest frame (request line) accepted, enforced while reading.
+    pub max_line_bytes: usize,
+    /// Longest a *partial* frame may stall before the connection is cut
+    /// off with a structured `timeout` error (slow-loris bound).
+    pub read_timeout: Duration,
+    /// Longest a connection may sit idle *between* frames before it is
+    /// reaped silently (dead-peer bound).
+    pub idle_timeout: Duration,
+    /// Socket write timeout for replies, so one wedged client cannot
+    /// pin a connection thread forever.
+    pub write_timeout: Duration,
+}
+
+impl Default for ServerConfig {
+    fn default() -> ServerConfig {
+        ServerConfig {
+            max_conns: 256,
+            max_line_bytes: 1 << 20,
+            read_timeout: Duration::from_secs(10),
+            idle_timeout: Duration::from_secs(300),
+            write_timeout: Duration::from_secs(10),
+        }
+    }
+}
+
+/// How often a blocked read wakes to check timeouts and the drain flag.
+const READ_TICK: Duration = Duration::from_millis(50);
+
+/// Tracked connection threads: `active` gates admission at the cap,
+/// `handles` lets shutdown find and join every connection thread.
+struct ConnRegistry {
+    active: AtomicUsize,
+    handles: Mutex<Vec<(Arc<AtomicBool>, JoinHandle<()>)>>,
+}
+
+impl ConnRegistry {
+    /// Join (and drop) every connection thread whose done-flag is set.
+    /// Called from the accept loop so the handle list tracks live
+    /// connections, not the all-time total.
+    fn sweep(&self) {
+        let mut handles = self.handles.lock().unwrap();
+        let mut i = 0;
+        while i < handles.len() {
+            if handles[i].0.load(Ordering::Acquire) {
+                let (_, h) = handles.swap_remove(i);
+                let _ = h.join();
+            } else {
+                i += 1;
+            }
+        }
+    }
+}
+
+/// Handle on a running TCP front-end: the bound address plus enough
+/// state to drain and join it. Dropping the handle *detaches* the
+/// front-end (threads keep serving until the drain flag is set).
+pub struct Server {
+    local: SocketAddr,
+    draining: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+    conns: Arc<ConnRegistry>,
+}
+
+impl Server {
+    /// The bound address (useful with port 0 in tests).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local
+    }
+
+    /// Phase 1 of shutdown: stop accepting, and have each connection
+    /// close at its next between-frames moment. In-flight requests still
+    /// run to a reply first. Idempotent.
+    pub fn begin_drain(&self) {
+        self.draining.store(true, Ordering::SeqCst);
+    }
+
+    /// Drain and join: sets the drain flag, joins the accept loop, then
+    /// joins connection threads as they finish. Returns `true` if every
+    /// connection thread joined within `deadline`; stragglers (e.g. a
+    /// reply blocked on a wedged client socket) are left detached and
+    /// `false` is returned.
+    pub fn join(mut self, deadline: Duration) -> bool {
+        self.begin_drain();
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        let t0 = Instant::now();
+        loop {
+            self.conns.sweep();
+            if self.conns.handles.lock().unwrap().is_empty() {
+                return true;
+            }
+            if t0.elapsed() >= deadline {
+                return false;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    }
+}
+
+/// Serve until `stop` is set, with default [`ServerConfig`] bounds.
+/// Binds to `addr` (e.g. "127.0.0.1:7777"); returns the bound address
+/// (useful with port 0 in tests). The front-end runs detached: callers
+/// that need to *join* it at shutdown use [`serve_with`].
 pub fn serve(
     service: Arc<Service>,
     addr: &str,
     stop: Arc<AtomicBool>,
-) -> std::io::Result<std::net::SocketAddr> {
+) -> std::io::Result<SocketAddr> {
+    let server = serve_with(service, addr, stop, ServerConfig::default())?;
+    Ok(server.local_addr())
+}
+
+/// Serve with explicit bounds, returning a joinable [`Server`] handle.
+/// `draining` doubles as the external stop flag: setting it (directly or
+/// via [`Server::begin_drain`]) stops the accept loop and closes each
+/// connection at its next between-frames moment.
+pub fn serve_with(
+    service: Arc<Service>,
+    addr: &str,
+    draining: Arc<AtomicBool>,
+    cfg: ServerConfig,
+) -> std::io::Result<Server> {
     let listener = TcpListener::bind(addr)?;
     let local = listener.local_addr()?;
     listener.set_nonblocking(true)?;
-    std::thread::spawn(move || {
-        loop {
-            if stop.load(Ordering::Relaxed) {
+    let conns = Arc::new(ConnRegistry {
+        active: AtomicUsize::new(0),
+        handles: Mutex::new(Vec::new()),
+    });
+    let accept = {
+        let draining = draining.clone();
+        let conns = conns.clone();
+        std::thread::spawn(move || loop {
+            if draining.load(Ordering::Relaxed) {
                 break;
             }
+            conns.sweep();
             match listener.accept() {
                 Ok((stream, _)) => {
+                    if conns.active.load(Ordering::Acquire) >= cfg.max_conns {
+                        // Structured reject on the wire, then close: the
+                        // client learns *why* instead of seeing a RST or
+                        // an accept queue that never progresses.
+                        let mut s = stream;
+                        let _ = s.set_write_timeout(Some(cfg.write_timeout));
+                        let reply = error_json(format!(
+                            "overloaded: connection limit ({}) reached, retry later",
+                            cfg.max_conns
+                        ));
+                        let _ = s.write_all(reply.to_string().as_bytes());
+                        let _ = s.write_all(b"\n");
+                        continue;
+                    }
+                    conns.active.fetch_add(1, Ordering::AcqRel);
                     let svc = service.clone();
-                    std::thread::spawn(move || {
-                        let _ = handle_client(stream, &svc);
+                    let cfg = cfg.clone();
+                    let draining = draining.clone();
+                    let done = Arc::new(AtomicBool::new(false));
+                    let conns_in = conns.clone();
+                    let done_in = done.clone();
+                    let h = std::thread::spawn(move || {
+                        let _ = handle_client(stream, &svc, &cfg, &draining);
+                        conns_in.active.fetch_sub(1, Ordering::AcqRel);
+                        done_in.store(true, Ordering::Release);
                     });
+                    conns.handles.lock().unwrap().push((done, h));
                 }
                 Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                    std::thread::sleep(std::time::Duration::from_millis(10));
+                    std::thread::sleep(Duration::from_millis(10));
                 }
                 Err(_) => break,
             }
-        }
-    });
-    Ok(local)
+        })
+    };
+    Ok(Server {
+        local,
+        draining,
+        accept: Some(accept),
+        conns,
+    })
 }
 
 fn error_json(msg: String) -> Json {
@@ -281,35 +487,119 @@ fn admin_reply(line: &str, svc: &Service) -> Option<Json> {
     Some(reply)
 }
 
-fn handle_client(stream: TcpStream, svc: &Service) -> std::io::Result<()> {
-    let mut writer = stream.try_clone()?;
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let line = line?;
-        if line.trim().is_empty() {
-            continue;
-        }
-        let reply = match admin_reply(&line, svc) {
-            Some(r) => r,
-            None => match parse_request(&line) {
-                Ok(req) => match svc.call(req) {
-                    Ok(resp) => response_json(&resp),
-                    Err(e) => error_json(e),
-                },
+/// Write one reply line. The [`failpoint::PROTOCOL_WRITE_FAIL`] site
+/// simulates a client that vanished between request and reply; the
+/// resulting error unwinds `handle_client` exactly like a real broken
+/// pipe, which is the path the chaos suite asserts is leak-free.
+fn write_reply(writer: &mut TcpStream, reply: &Json) -> std::io::Result<()> {
+    if failpoint::take(failpoint::PROTOCOL_WRITE_FAIL).is_some() {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::BrokenPipe,
+            "injected reply write failure",
+        ));
+    }
+    writer.write_all(reply.to_string().as_bytes())?;
+    writer.write_all(b"\n")?;
+    writer.flush()
+}
+
+fn dispatch_line(line: &str, svc: &Service) -> Json {
+    match admin_reply(line, svc) {
+        Some(r) => r,
+        None => match parse_request(line) {
+            Ok(req) => match svc.call(req) {
+                Ok(resp) => response_json(&resp),
                 Err(e) => error_json(e),
             },
-        };
-        writer.write_all(reply.to_string().as_bytes())?;
-        writer.write_all(b"\n")?;
-        writer.flush()?;
+            Err(e) => error_json(e),
+        },
     }
-    Ok(())
+}
+
+/// Per-connection loop: a bounded line reader over a short-timeout
+/// socket. Unlike `BufReader::lines`, the frame bound and the stall
+/// clocks are enforced *during* the read, so a newline-less flood or a
+/// slow-loris client is contained before it costs unbounded memory or a
+/// pinned thread.
+fn handle_client(
+    stream: TcpStream,
+    svc: &Service,
+    cfg: &ServerConfig,
+    draining: &AtomicBool,
+) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(READ_TICK))?;
+    stream.set_write_timeout(Some(cfg.write_timeout))?;
+    let mut writer = stream.try_clone()?;
+    let mut stream = stream;
+    let mut buf: Vec<u8> = Vec::new();
+    let mut chunk = [0u8; 4096];
+    let mut last_activity = Instant::now();
+    loop {
+        // Serve every complete frame already buffered.
+        while let Some(pos) = buf.iter().position(|&b| b == b'\n') {
+            let frame: Vec<u8> = buf.drain(..=pos).collect();
+            let line = String::from_utf8_lossy(&frame[..frame.len() - 1]).into_owned();
+            if line.trim().is_empty() {
+                continue;
+            }
+            let reply = dispatch_line(&line, svc);
+            write_reply(&mut writer, &reply)?;
+            last_activity = Instant::now();
+        }
+        if buf.len() > cfg.max_line_bytes {
+            let _ = write_reply(
+                &mut writer,
+                &error_json(format!(
+                    "frame too large: exceeds {} bytes without a newline",
+                    cfg.max_line_bytes
+                )),
+            );
+            return Ok(());
+        }
+        if draining.load(Ordering::Relaxed) && buf.is_empty() {
+            // Between frames during drain: close so the client learns to
+            // reconnect elsewhere. A partial frame still gets its read
+            // window — its reply (likely a `draining` error from the
+            // service) flushes before the close above.
+            return Ok(());
+        }
+        match stream.read(&mut chunk) {
+            Ok(0) => return Ok(()), // peer closed
+            Ok(n) => {
+                buf.extend_from_slice(&chunk[..n]);
+                last_activity = Instant::now();
+            }
+            Err(ref e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                // Read tick expired: check the stall clocks.
+                let stalled = last_activity.elapsed();
+                if !buf.is_empty() && stalled >= cfg.read_timeout {
+                    let _ = write_reply(
+                        &mut writer,
+                        &error_json(format!(
+                            "timeout: partial frame stalled longer than {:?}",
+                            cfg.read_timeout
+                        )),
+                    );
+                    return Ok(());
+                }
+                if buf.is_empty() && stalled >= cfg.idle_timeout {
+                    return Ok(()); // dead peer: reap silently
+                }
+            }
+            Err(ref e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::server::service::ServiceConfig;
+    use std::io::{BufRead, BufReader};
 
     #[test]
     fn parses_request_line() {
@@ -486,5 +776,177 @@ mod tests {
         reader.read_line(&mut line).unwrap();
         assert!(line.contains("error"));
         stop.store(true, Ordering::Relaxed);
+    }
+
+    /// A "success" carrying non-finite samples must become a structured
+    /// `numeric` error reply — never a success whose writer silently
+    /// turns NaN into `null` on the wire.
+    #[test]
+    fn non_finite_success_becomes_numeric_error_on_wire() {
+        use crate::server::service::SamplingResponse;
+        // First, the corruption this guards against is real: the JSON
+        // writer has no token for NaN/inf and emits `null`.
+        assert_eq!(Json::Num(f64::NAN).to_string(), "null");
+        assert_eq!(Json::Num(f64::INFINITY).to_string(), "null");
+        for poison in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let resp = SamplingResponse {
+                id: 7,
+                samples: vec![1.0, poison, 3.0],
+                n: 1,
+                dim: 3,
+                nfe_spent: 10,
+                batched_with: 2,
+                latency_ms: 1.5,
+                queue_ms: 0.5,
+                run_ms: 1.0,
+                error: None,
+            };
+            let j = response_json(&resp);
+            let err = j
+                .get("error")
+                .and_then(|v| v.as_str())
+                .expect("non-finite samples must produce an error reply");
+            assert!(err.starts_with("numeric:"), "{err}");
+            assert!(j.get("samples").is_none(), "corrupt samples must not ship");
+            assert_eq!(j.get("id").unwrap().as_u64(), Some(7), "identity kept");
+            assert!(j.get("latency_ms").is_some(), "timing kept for triage");
+            // The reply line itself round-trips as JSON.
+            assert!(Json::parse(&j.to_string()).is_ok());
+        }
+        // Finite samples are untouched by the guard.
+        let ok = SamplingResponse {
+            id: 8,
+            samples: vec![1.0, 2.0],
+            n: 1,
+            dim: 2,
+            nfe_spent: 10,
+            batched_with: 0,
+            latency_ms: 1.0,
+            queue_ms: 0.0,
+            run_ms: 1.0,
+            error: None,
+        };
+        assert!(response_json(&ok).get("samples").is_some());
+    }
+
+    /// A client streaming bytes without a newline is cut off with a
+    /// structured error at the frame bound, not buffered until OOM.
+    #[test]
+    fn oversized_frame_is_cut_off_with_structured_error() {
+        let svc = Arc::new(Service::start(ServiceConfig::default(), Vec::new()));
+        let stop = Arc::new(AtomicBool::new(false));
+        let server = serve_with(
+            svc,
+            "127.0.0.1:0",
+            stop,
+            ServerConfig {
+                max_line_bytes: 256,
+                ..ServerConfig::default()
+            },
+        )
+        .unwrap();
+        let mut conn = TcpStream::connect(server.local_addr()).unwrap();
+        conn.write_all(&[b'x'; 4096]).unwrap(); // never a newline
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("frame too large"), "{line}");
+        let mut rest = String::new();
+        assert_eq!(
+            reader.read_line(&mut rest).unwrap(),
+            0,
+            "connection must close after the frame-bound error"
+        );
+        assert!(server.join(Duration::from_secs(10)), "threads must join");
+    }
+
+    /// Connections beyond the cap get a structured `overloaded` reject
+    /// and a close; admitted connections keep serving.
+    #[test]
+    fn connection_cap_rejects_with_overloaded() {
+        let svc = Arc::new(Service::start(ServiceConfig::default(), Vec::new()));
+        let stop = Arc::new(AtomicBool::new(false));
+        let server = serve_with(
+            svc,
+            "127.0.0.1:0",
+            stop,
+            ServerConfig {
+                max_conns: 1,
+                ..ServerConfig::default()
+            },
+        )
+        .unwrap();
+        // Prove the first connection is admitted and serving before the
+        // second connects (its reply orders the accept events).
+        let mut first = TcpStream::connect(server.local_addr()).unwrap();
+        first.write_all(b"{\"cmd\":\"health\"}\n").unwrap();
+        let mut r1 = BufReader::new(first.try_clone().unwrap());
+        let mut line = String::new();
+        r1.read_line(&mut line).unwrap();
+        assert!(line.contains("status"), "{line}");
+        let second = TcpStream::connect(server.local_addr()).unwrap();
+        let mut r2 = BufReader::new(second);
+        let mut reject = String::new();
+        r2.read_line(&mut reject).unwrap();
+        assert!(reject.contains("overloaded"), "{reject}");
+        let mut rest = String::new();
+        assert_eq!(r2.read_line(&mut rest).unwrap(), 0, "rejected conn closes");
+        // The admitted connection still works after the reject.
+        first.write_all(b"{\"cmd\":\"health\"}\n").unwrap();
+        let mut again = String::new();
+        r1.read_line(&mut again).unwrap();
+        assert!(again.contains("status"), "{again}");
+        assert!(server.join(Duration::from_secs(10)), "threads must join");
+    }
+
+    /// Slow-loris: a partial frame that stalls past the read timeout gets
+    /// a structured `timeout` error and a close.
+    #[test]
+    fn stalled_partial_frame_times_out() {
+        let svc = Arc::new(Service::start(ServiceConfig::default(), Vec::new()));
+        let stop = Arc::new(AtomicBool::new(false));
+        let server = serve_with(
+            svc,
+            "127.0.0.1:0",
+            stop,
+            ServerConfig {
+                read_timeout: Duration::from_millis(120),
+                ..ServerConfig::default()
+            },
+        )
+        .unwrap();
+        let mut conn = TcpStream::connect(server.local_addr()).unwrap();
+        conn.write_all(b"{\"cmd\":").unwrap(); // partial frame, then stall
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("timeout"), "{line}");
+        let mut rest = String::new();
+        assert_eq!(reader.read_line(&mut rest).unwrap(), 0, "then closes");
+        assert!(server.join(Duration::from_secs(10)), "threads must join");
+    }
+
+    /// Drain closes idle connections at their next read tick, and `join`
+    /// reaps every connection thread.
+    #[test]
+    fn drain_closes_idle_connections_and_joins() {
+        let svc = Arc::new(Service::start(ServiceConfig::default(), Vec::new()));
+        let stop = Arc::new(AtomicBool::new(false));
+        let server =
+            serve_with(svc, "127.0.0.1:0", stop, ServerConfig::default()).unwrap();
+        let mut conn = TcpStream::connect(server.local_addr()).unwrap();
+        conn.write_all(b"{\"cmd\":\"health\"}\n").unwrap();
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.contains("status"), "{line}");
+        server.begin_drain();
+        let mut rest = String::new();
+        assert_eq!(
+            reader.read_line(&mut rest).unwrap(),
+            0,
+            "drain must close idle connections"
+        );
+        assert!(server.join(Duration::from_secs(10)), "threads must join");
     }
 }

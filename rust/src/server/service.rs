@@ -167,6 +167,11 @@ pub struct ServiceConfig {
     /// as a new version. `None`: the registry is purely in-memory (the
     /// pre-store behavior).
     pub artifact_root: Option<std::path::PathBuf>,
+    /// Upper bound on how long [`Service::shutdown`]'s drain phase lets
+    /// resident cohorts run to retirement. Residents still in flight when
+    /// it expires fail with a structured `draining` error instead of
+    /// holding shutdown hostage.
+    pub drain_deadline: Duration,
 }
 
 impl Default for ServiceConfig {
@@ -179,6 +184,7 @@ impl Default for ServiceConfig {
             batching: Batching::Continuous,
             engine_threads: 0,
             artifact_root: None,
+            drain_deadline: Duration::from_secs(5),
         }
     }
 }
@@ -240,11 +246,123 @@ pub struct Metrics {
     pub dicts_published: AtomicU64,
     /// Successful [`Service::rollback`] operations.
     pub rollbacks: AtomicU64,
+    /// Requests failed with a structured `numeric` error: the engine's
+    /// per-tick guardrail detected a non-finite direction or state in the
+    /// request's rows (a subset of `failed`).
+    pub numeric_failures: AtomicU64,
+    /// Keys currently degraded to uncorrected sampling by the numeric
+    /// circuit breaker (a gauge, not a counter: `rollback`/republish
+    /// close the breaker and decrement it).
+    pub breaker_open: AtomicU64,
     /// Fixed-bucket latency histograms (`queue_ms`/`run_ms`/`latency_ms`)
     /// recorded once per answered request; see
     /// [`super::metrics_export`]. Atomic bucket counters: recording on
     /// the hot retire path is lock-free and allocation-free.
     pub serve_hist: ServeHistograms,
+}
+
+/// Structured error text for requests refused or abandoned because the
+/// service is shutting down. Clients can match on the `draining:` prefix.
+const DRAINING_ERR: &str = "draining: service is shutting down";
+
+/// Consecutive corrected-path numeric failures on one key before its
+/// breaker opens and the key degrades to uncorrected sampling.
+const BREAKER_THRESHOLD: u32 = 3;
+
+#[derive(Default)]
+struct BreakerState {
+    consecutive_fails: u32,
+    open: bool,
+}
+
+/// Per-`(dataset, solver, nfe)` circuit breaker for corrected-path
+/// numeric failures. A dictionary whose corrections repeatedly blow up
+/// the solver (non-finite rows caught by the engine guardrail) is almost
+/// certainly bad data, not bad luck: after [`BREAKER_THRESHOLD`]
+/// consecutive failures the breaker opens, the key degrades to
+/// *uncorrected* sampling (still serving, still deterministic), the dict
+/// is unregistered, and its blob is quarantined through the artifact
+/// store so a restart cannot reload it. [`Service::rollback`] or
+/// republishing a dict closes the breaker.
+struct NumericBreaker {
+    states: Mutex<HashMap<(String, String, usize), BreakerState>>,
+}
+
+impl NumericBreaker {
+    fn new() -> NumericBreaker {
+        NumericBreaker {
+            states: Mutex::new(HashMap::new()),
+        }
+    }
+
+    fn dict_key(key: &BatchKey) -> (String, String, usize) {
+        (key.dataset.clone(), key.solver.clone(), key.nfe)
+    }
+
+    /// True when the key is degraded to uncorrected sampling.
+    fn is_open(&self, key: &BatchKey) -> bool {
+        self.states
+            .lock()
+            .unwrap()
+            .get(&Self::dict_key(key))
+            .is_some_and(|s| s.open)
+    }
+
+    /// Record a corrected-path numeric failure. Returns `true` exactly
+    /// when this failure opened the breaker (the caller then quarantines
+    /// the dict).
+    fn record_failure(&self, key: &BatchKey, metrics: &Metrics) -> bool {
+        let mut m = self.states.lock().unwrap();
+        let st = m.entry(Self::dict_key(key)).or_default();
+        if st.open {
+            return false;
+        }
+        st.consecutive_fails += 1;
+        if st.consecutive_fails >= BREAKER_THRESHOLD {
+            st.open = true;
+            metrics.breaker_open.fetch_add(1, Ordering::Relaxed);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// A clean corrected retire resets the consecutive-failure count.
+    fn record_success(&self, key: &BatchKey) {
+        let mut m = self.states.lock().unwrap();
+        if let Some(st) = m.get_mut(&Self::dict_key(key)) {
+            if !st.open {
+                st.consecutive_fails = 0;
+            }
+        }
+    }
+
+    /// Close the breaker for a key — a rollback or republish deployed a
+    /// (presumed good) dict, so corrected serving resumes.
+    fn reset(&self, dataset: &str, solver: &str, nfe: usize, metrics: &Metrics) {
+        let mut m = self.states.lock().unwrap();
+        if let Some(st) = m.remove(&(dataset.to_string(), solver.to_string(), nfe)) {
+            if st.open {
+                metrics.breaker_open.fetch_sub(1, Ordering::Relaxed);
+                crate::info!("numeric breaker closed for {dataset}/{solver}/{nfe}");
+            }
+        }
+    }
+}
+
+/// Everything a continuous worker thread shares with the service: one
+/// `Arc<WorkerShared>` per service instead of eight loose `Arc` clones
+/// per worker.
+struct WorkerShared {
+    metrics: Arc<Metrics>,
+    dicts: Arc<RwLock<DictMap>>,
+    stop: Arc<AtomicBool>,
+    breaker: Arc<NumericBreaker>,
+    store: Option<Arc<Mutex<ArtifactStore>>>,
+    backlog: Arc<AtomicUsize>,
+    engine_threads: usize,
+    max_rows: usize,
+    drain_deadline: Duration,
 }
 
 /// Summary of one online [`Service::train_pas`] run.
@@ -309,6 +427,9 @@ struct Router {
     ktx: Sender<KeyHandle>,
     queue_depth: usize,
     backlog: Arc<AtomicUsize>,
+    /// Shutdown flag (shared with the service): consulted after queueing
+    /// so a submission racing `shutdown` cannot strand without a reply.
+    stop: Arc<AtomicBool>,
 }
 
 impl Router {
@@ -373,8 +494,23 @@ impl Router {
         // immediately can only find the request we just queued.
         if activate {
             self.backlog.fetch_add(1, Ordering::Relaxed);
-            if self.ktx.send((key, entry)).is_err() {
+            if self.ktx.send((key, entry.clone())).is_err() {
                 return Err("service stopped".into());
+            }
+        }
+        // Close the submit/shutdown race: if the stop flag went up while
+        // we were queueing, the drain (workers, then the final sweep in
+        // `Service::shutdown`) may already have passed this key — fail
+        // anything still queued here so the caller's request cannot
+        // strand without a reply.
+        if self.stop.load(Ordering::Relaxed) {
+            let drained: Vec<Pending> = {
+                let mut st = entry.state.lock().unwrap_or_else(|p| p.into_inner());
+                st.queue.drain(..).collect()
+            };
+            if !drained.is_empty() {
+                fail_all(drained, DRAINING_ERR, metrics);
+                return Err(DRAINING_ERR.into());
             }
         }
         Ok(())
@@ -387,7 +523,13 @@ enum Front {
 }
 
 pub struct Service {
-    front: Front,
+    /// The request front-end. Taken (and its channel senders dropped) by
+    /// [`Service::shutdown`] phase 1; `None` thereafter.
+    front: Mutex<Option<Front>>,
+    /// Continuous-mode router handle, retained outside `front` so the
+    /// observability surface and shutdown's final straggler sweep survive
+    /// the front teardown. `None` in collect-then-run mode.
+    router: Option<Arc<Router>>,
     next_id: AtomicU64,
     /// Startup configuration, retained for the observability surface
     /// (pool gauges in [`Service::metrics_text`]).
@@ -395,16 +537,19 @@ pub struct Service {
     started: Instant,
     pub metrics: Arc<Metrics>,
     stop: Arc<AtomicBool>,
-    threads: Vec<JoinHandle<()>>,
+    threads: Mutex<Vec<JoinHandle<()>>>,
     dicts: Arc<RwLock<DictMap>>,
+    /// Numeric circuit breaker shared with the continuous workers.
+    breaker: Arc<NumericBreaker>,
     /// Persistent training session for [`Service::train_pas`]: its
     /// workspaces (engine, node stores, basis store, SGD scratch) are
     /// reused across online training runs.
     trainer: Mutex<TrainSession>,
     /// Durable dict store ([`crate::artifact`]); `None` when the service
     /// runs in-memory only. The mutex serializes the write path (publish,
-    /// rollback) per the store's single-writer expectation.
-    store: Option<Mutex<ArtifactStore>>,
+    /// rollback, breaker quarantine) per the store's single-writer
+    /// expectation; the `Arc` shares the handle with the workers.
+    store: Option<Arc<Mutex<ArtifactStore>>>,
 }
 
 impl Service {
@@ -439,7 +584,7 @@ impl Service {
                     for (key, why) in &report.failed {
                         crate::warn_!("artifact {} unusable, serving uncorrected: {why}", key.id());
                     }
-                    Some(Mutex::new(s))
+                    Some(Arc::new(Mutex::new(s)))
                 }
                 Err(e) => {
                     crate::warn_!("artifact store disabled: {e}");
@@ -450,7 +595,9 @@ impl Service {
         };
         initial.extend(index_dicts(dicts));
         let dicts = Arc::new(RwLock::new(initial));
+        let breaker = Arc::new(NumericBreaker::new());
         let mut threads = Vec::new();
+        let mut router_handle: Option<Arc<Router>> = None;
         let front = match cfg.batching {
             Batching::CollectThenRun => {
                 let (tx, rx) = sync_channel::<Pending>(cfg.queue_depth);
@@ -469,10 +616,9 @@ impl Service {
                     let wrx = wrx.clone();
                     let metrics = metrics.clone();
                     let dicts = dicts.clone();
-                    let stop = stop.clone();
                     let engine_threads = cfg.engine_threads;
                     threads.push(std::thread::spawn(move || {
-                        collect_worker_loop(wrx, metrics, dicts, stop, engine_threads);
+                        collect_worker_loop(wrx, metrics, dicts, engine_threads);
                     }));
                 }
                 Front::Collect { tx }
@@ -486,43 +632,44 @@ impl Service {
                     ktx: ktx.clone(),
                     queue_depth: cfg.queue_depth,
                     backlog: backlog.clone(),
+                    stop: stop.clone(),
+                });
+                router_handle = Some(router.clone());
+                let shared = Arc::new(WorkerShared {
+                    metrics: metrics.clone(),
+                    dicts: dicts.clone(),
+                    stop: stop.clone(),
+                    breaker: breaker.clone(),
+                    store: store.clone(),
+                    backlog,
+                    engine_threads: cfg.engine_threads,
+                    max_rows: cfg.max_batch,
+                    drain_deadline: cfg.drain_deadline,
                 });
                 for _ in 0..cfg.workers {
                     let krx = krx.clone();
                     // Workers keep a sender too, to hand a key back after
                     // a fairness yield (see `run_key`).
                     let ktx = ktx.clone();
-                    let backlog = backlog.clone();
-                    let metrics = metrics.clone();
-                    let dicts = dicts.clone();
-                    let stop = stop.clone();
-                    let engine_threads = cfg.engine_threads;
-                    let max_rows = cfg.max_batch;
+                    let shared = shared.clone();
                     threads.push(std::thread::spawn(move || {
-                        continuous_worker_loop(
-                            krx,
-                            ktx,
-                            backlog,
-                            metrics,
-                            dicts,
-                            stop,
-                            engine_threads,
-                            max_rows,
-                        );
+                        continuous_worker_loop(krx, ktx, shared);
                     }));
                 }
                 Front::Continuous { router }
             }
         };
         Service {
-            front,
+            front: Mutex::new(Some(front)),
+            router: router_handle,
             next_id: AtomicU64::new(1),
             cfg,
             started: Instant::now(),
             metrics,
             stop,
-            threads,
+            threads: Mutex::new(threads),
             dicts,
+            breaker,
             trainer: Mutex::new(TrainSession::new(TrainConfig::default())),
             store,
         }
@@ -574,6 +721,9 @@ impl Service {
                 tr.dict.clone(),
             );
         self.metrics.dicts_trained.fetch_add(1, Ordering::Relaxed);
+        // A freshly trained dict supersedes whatever tripped the numeric
+        // breaker: corrected serving resumes.
+        self.breaker.reset(dataset, solver_name, nfe, &self.metrics);
         // Persist after registration: serving gains the dict even if the
         // disk publish fails (persistence failure costs durability, never
         // availability — it is warned, not propagated).
@@ -619,6 +769,8 @@ impl Service {
             .write()
             .unwrap()
             .insert((dataset.to_string(), solver.to_string(), nfe), dict.clone());
+        // An explicit publish closes any open numeric breaker for the key.
+        self.breaker.reset(dataset, solver, nfe, &self.metrics);
         let Some(store) = self.store.as_ref() else {
             return Ok(None);
         };
@@ -652,6 +804,9 @@ impl Service {
             .write()
             .unwrap()
             .insert((dataset.to_string(), solver.to_string(), nfe), loaded.dict);
+        // Rolling back to a known-good version closes any open numeric
+        // breaker: corrected serving resumes on the restored dict.
+        self.breaker.reset(dataset, solver, nfe, &self.metrics);
         self.metrics.rollbacks.fetch_add(1, Ordering::Relaxed);
         crate::info!("rolled {} back to v{version}", key.id());
         Ok(version)
@@ -702,6 +857,14 @@ impl Service {
             )
             .set("rollbacks", Json::UInt(m.rollbacks.load(Ordering::Relaxed)))
             .set(
+                "numeric_failures",
+                Json::UInt(m.numeric_failures.load(Ordering::Relaxed)),
+            )
+            .set(
+                "breaker_open",
+                Json::UInt(m.breaker_open.load(Ordering::Relaxed)),
+            )
+            .set(
                 "dicts_registered",
                 Json::UInt(self.dicts.read().unwrap().len() as u64),
             );
@@ -719,7 +882,7 @@ impl Service {
     /// Empty under [`Batching::CollectThenRun`] (that scheduler has no
     /// per-key state). Sorted by key label so the output is stable.
     fn key_snapshots(&self) -> Vec<KeySnapshot> {
-        let Front::Continuous { router } = &self.front else {
+        let Some(router) = &self.router else {
             return Vec::new();
         };
         let table = router.table.lock().unwrap();
@@ -755,9 +918,9 @@ impl Service {
     /// gauges. Wire command `{"cmd":"metrics"}`.
     pub fn metrics_text(&self) -> String {
         let keys = self.key_snapshots();
-        let backlog = match &self.front {
-            Front::Continuous { router } => router.backlog.load(Ordering::Relaxed),
-            Front::Collect { .. } => 0,
+        let backlog = match &self.router {
+            Some(router) => router.backlog.load(Ordering::Relaxed),
+            None => 0,
         };
         let pool = PoolInfo {
             workers: self.cfg.workers,
@@ -795,7 +958,8 @@ impl Service {
     }
 
     /// Submit a request; returns a receiver for the response, or an error
-    /// when the queue is full (backpressure surfaced to the caller).
+    /// when the queue is full (backpressure surfaced to the caller) or the
+    /// service is draining.
     pub fn submit(
         &self,
         mut req: SamplingRequest,
@@ -804,6 +968,11 @@ impl Service {
             // Rejected up front for both schedulers: a zero-row batch has
             // no rows to admit (and would trip engine shape asserts).
             return Err("n must be >= 1".into());
+        }
+        if self.stop.load(Ordering::Relaxed) {
+            // Fast-fail before the request is accepted (not counted):
+            // drain phase admits nothing new.
+            return Err(DRAINING_ERR.into());
         }
         if req.id == 0 {
             req.id = self.next_id.fetch_add(1, Ordering::Relaxed);
@@ -815,8 +984,13 @@ impl Service {
             enqueued: Instant::now(),
             reply: rtx,
         };
-        match &self.front {
-            Front::Collect { tx } => match tx.try_send(p) {
+        let front = self.front.lock().unwrap();
+        match front.as_ref() {
+            None => {
+                self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                Err(DRAINING_ERR.into())
+            }
+            Some(Front::Collect { tx }) => match tx.try_send(p) {
                 Ok(()) => Ok(rrx),
                 Err(TrySendError::Full(_)) => {
                     self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
@@ -824,7 +998,7 @@ impl Service {
                 }
                 Err(TrySendError::Disconnected(_)) => Err("service stopped".into()),
             },
-            Front::Continuous { router } => {
+            Some(Front::Continuous { router }) => {
                 router.route(p, &self.metrics)?;
                 Ok(rrx)
             }
@@ -837,14 +1011,47 @@ impl Service {
         rx.recv().map_err(|_| "worker dropped".to_string())
     }
 
-    pub fn shutdown(self) {
-        self.stop.store(true, Ordering::Relaxed);
-        let Service { front, threads, .. } = self;
-        // Dropping the front-end disconnects the channels the scheduler
-        // threads block on.
+    /// Graceful two-phase drain. Idempotent — a second call returns
+    /// immediately.
+    ///
+    /// Phase 1 raises the stop flag (new submissions fail fast with a
+    /// structured `draining` error) and drops the front-end, so no further
+    /// work can enter. Phase 2 joins the scheduler threads: each worker
+    /// drains its dispatch queue, fails queued-but-unadmitted requests
+    /// with the `draining` error, and lets resident cohorts run to
+    /// retirement under [`ServiceConfig::drain_deadline`] (residents still
+    /// in flight past the deadline fail instead of blocking exit). A final
+    /// sweep over the router table fails any straggler that raced the stop
+    /// flag, so **every accepted request gets exactly one structured
+    /// reply** and `requests == completed + rejected + failed` balances at
+    /// exit.
+    pub fn shutdown(&self) {
+        if self.stop.swap(true, Ordering::SeqCst) {
+            return; // already shut down (or shutting down on another thread)
+        }
+        // Phase 1: stop admitting. Dropping the front-end disconnects the
+        // channels the scheduler threads block on.
+        let front = self.front.lock().unwrap().take();
         drop(front);
+        // Phase 2: drain. Workers observe the stop flag, fail their queued
+        // requests, retire residents under the drain deadline, then exit.
+        let threads: Vec<JoinHandle<()>> = std::mem::take(&mut *self.threads.lock().unwrap());
         for t in threads {
             let _ = t.join();
+        }
+        // Final sweep: a submission that raced the stop flag may have
+        // queued after its key's worker exited — fail stragglers so they
+        // still get a structured reply.
+        if let Some(router) = &self.router {
+            let table = router.table.lock().unwrap();
+            for entry in table.values() {
+                let drained: Vec<Pending> = {
+                    let mut st = entry.state.lock().unwrap_or_else(|p| p.into_inner());
+                    st.active = false;
+                    st.queue.drain(..).collect()
+                };
+                fail_all(drained, DRAINING_ERR, &self.metrics);
+            }
         }
     }
 }
@@ -935,13 +1142,8 @@ impl KeyRun {
     /// lockstep) when the model's rows are independent; otherwise each
     /// request gets its own cohort — either way the result bits match the
     /// solo run.
-    fn admit(
-        &mut self,
-        engine: &mut SlotEngine,
-        p: Pending,
-        dicts: &RwLock<DictMap>,
-        metrics: &Metrics,
-    ) {
+    fn admit(&mut self, engine: &mut SlotEngine, p: Pending, shared: &WorkerShared) {
+        let metrics = &*shared.metrics;
         let rows = p.req.n_samples;
         let x_t = sample_prior_stream(p.req.seed, p.req.id, rows, self.dim, self.sched.t_max());
         let mid_flight = self.cohorts.iter().any(|c| c.steps_done > 0);
@@ -953,10 +1155,14 @@ impl KeyRun {
             && self.solver.row_independent()
             && self.cohorts.last().is_some_and(|c| c.steps_done == 0);
         if !mergeable {
-            let hook = if self.key.use_pas {
+            // An open numeric breaker degrades the key to uncorrected
+            // sampling: still serving, still deterministic, but without
+            // the dict whose corrections kept blowing up the solver.
+            let hook = if self.key.use_pas && !shared.breaker.is_open(&self.key) {
                 // Per-cohort dictionary snapshot under a short read lock:
                 // online retraining never blocks on a resident run.
-                dicts
+                shared
+                    .dicts
                     .read()
                     .unwrap()
                     .get(&(self.key.dataset.clone(), self.key.solver.clone(), self.key.nfe))
@@ -992,13 +1198,29 @@ impl KeyRun {
     /// One scheduler tick: every resident cohort takes one solver step;
     /// cohorts that reached the end of the schedule retire immediately —
     /// samples are sent and slots freed before the next admission phase.
-    fn tick(&mut self, engine: &mut SlotEngine, metrics: &Metrics, stats: &KeyStats) {
+    ///
+    /// After each cohort's step, the engine's numeric guardrail
+    /// ([`SlotEngine::poisoned_rows`]) is consulted: members whose rows
+    /// went non-finite fail *individually* with a structured `numeric`
+    /// error while their cohort-mates keep stepping — row independence
+    /// means a poisoned row never contaminates a neighbour's bits.
+    fn tick(&mut self, engine: &mut SlotEngine, shared: &WorkerShared, stats: &KeyStats) {
         if self.cohorts.is_empty() {
             return;
         }
+        let metrics = &*shared.metrics;
         metrics.ticks.fetch_add(1, Ordering::Relaxed);
         let live: usize = self.cohorts.iter().map(|c| c.members.len()).sum();
         for cohort in self.cohorts.iter_mut() {
+            // Chaos site: simulate a model eval panicking mid-cohort at
+            // the armed step index. Contained by `run_key`'s unwind
+            // handling, same as a real eval panic.
+            if crate::util::failpoint::peek(crate::util::failpoint::SERVICE_EVAL_PANIC)
+                == Some(cohort.steps_done as u64)
+            {
+                crate::util::failpoint::take(crate::util::failpoint::SERVICE_EVAL_PANIC);
+                panic!("injected eval panic at step {}", cohort.steps_done);
+            }
             for m in cohort.members.iter_mut() {
                 m.peak_coresident = m.peak_coresident.max(live);
             }
@@ -1011,26 +1233,60 @@ impl KeyRun {
                 hook,
             );
             cohort.steps_done += 1;
+            if !engine.poisoned_rows().is_empty() {
+                // Copy the indices out so the engine can be borrowed
+                // mutably for eviction (failure path only — the clean
+                // path stays allocation-free).
+                let poisoned: Vec<usize> = engine.poisoned_rows().to_vec();
+                let removed =
+                    fail_poisoned_members(cohort, &poisoned, engine, &self.key, shared);
+                self.resident_rows -= removed;
+            }
         }
         let mut i = 0;
         while i < self.cohorts.len() {
-            if self.cohorts[i].steps_done == self.n_steps {
+            if self.cohorts[i].members.is_empty() {
+                // Every member failed the numeric guardrail: nothing left
+                // to step or retire.
+                self.cohorts.remove(i);
+            } else if self.cohorts[i].steps_done == self.n_steps {
                 let cohort = self.cohorts.remove(i);
-                self.retire_cohort(engine, cohort, metrics, stats);
+                self.retire_cohort(engine, cohort, shared, stats);
             } else {
                 i += 1;
             }
         }
     }
 
+    /// Fail every resident member (structured error, real timing) and
+    /// drop all cohorts *without* touching the engine — used when the
+    /// engine workspace is unusable (unwinding out of a mid-cohort panic)
+    /// or being abandoned (drain deadline exceeded); the next `run_key`
+    /// on the worker resets the engine, reclaiming the slots.
+    fn fail_residents(&mut self, msg: &str, metrics: &Metrics, stats: &KeyStats) {
+        for cohort in std::mem::take(&mut self.cohorts) {
+            for m in cohort.members {
+                fail_member(m, msg, metrics);
+            }
+        }
+        self.resident_rows = 0;
+        stats.resident_rows.store(0, Ordering::Relaxed);
+    }
+
     fn retire_cohort(
         &mut self,
         engine: &mut SlotEngine,
         cohort: Cohort,
-        metrics: &Metrics,
+        shared: &WorkerShared,
         stats: &KeyStats,
     ) {
+        let metrics = &*shared.metrics;
         let nfe = self.n_steps * self.solver.evals_per_step();
+        // A corrected cohort retiring cleanly resets the breaker's
+        // consecutive-failure count for this key.
+        if cohort.hook.is_some() {
+            shared.breaker.record_success(&self.key);
+        }
         let slots = &cohort.slots;
         for m in cohort.members {
             let mut samples = vec![0.0; m.rows * self.dim];
@@ -1065,27 +1321,132 @@ impl KeyRun {
     }
 }
 
-#[allow(clippy::too_many_arguments)]
+/// Fail one *admitted* request with a structured error. Unlike
+/// [`fail_one`] the request has real queue and run phases, so the reply
+/// carries genuine `queue_ms`/`run_ms` splits.
+fn fail_member(m: Member, msg: &str, metrics: &Metrics) {
+    let latency_ms = m.p.enqueued.elapsed().as_secs_f64() * 1e3;
+    let queue_ms = (m.admitted - m.p.enqueued).as_secs_f64() * 1e3;
+    let run_ms = m.admitted.elapsed().as_secs_f64() * 1e3;
+    metrics.failed.fetch_add(1, Ordering::Relaxed);
+    metrics.serve_hist.latency_ms.record(latency_ms);
+    let _ = m.p.reply.send(SamplingResponse {
+        id: m.p.req.id,
+        samples: Vec::new(),
+        n: 0,
+        dim: 0,
+        nfe_spent: 0,
+        batched_with: m.peak_coresident,
+        latency_ms,
+        queue_ms,
+        run_ms,
+        error: Some(msg.to_string()),
+    });
+}
+
+/// Numeric-guardrail containment for one cohort: fail + evict the
+/// members owning poisoned cohort-row indices; surviving members keep
+/// their slots (row independence keeps their bits identical to the solo
+/// run) and the cohort's row bookkeeping — member `row0` offsets, the
+/// slot list — is rebuilt around the gap. Corrected-path failures feed
+/// the circuit breaker; the failure that opens it also quarantines the
+/// offending dict. Returns the number of rows evicted.
+fn fail_poisoned_members(
+    cohort: &mut Cohort,
+    poisoned: &[usize],
+    engine: &mut SlotEngine,
+    key: &BatchKey,
+    shared: &WorkerShared,
+) -> usize {
+    let metrics = &*shared.metrics;
+    let corrected = cohort.hook.is_some();
+    let old_members = std::mem::take(&mut cohort.members);
+    let old_slots = std::mem::take(&mut cohort.slots);
+    let mut removed_rows = 0usize;
+    for mut m in old_members {
+        let hit = poisoned.iter().any(|&r| r >= m.row0 && r < m.row0 + m.rows);
+        if hit {
+            for r in 0..m.rows {
+                engine.evict(old_slots[m.row0 + r]);
+            }
+            removed_rows += m.rows;
+            metrics.numeric_failures.fetch_add(1, Ordering::Relaxed);
+            crate::warn_!(
+                "numeric failure: non-finite state in request {} on {}/{}/{} — failing {} row(s)",
+                m.p.req.id,
+                key.dataset,
+                key.solver,
+                key.nfe,
+                m.rows
+            );
+            fail_member(
+                m,
+                "numeric: non-finite values produced during sampling; request aborted",
+                metrics,
+            );
+        } else {
+            let new_row0 = cohort.slots.len();
+            cohort
+                .slots
+                .extend_from_slice(&old_slots[m.row0..m.row0 + m.rows]);
+            m.row0 = new_row0;
+            cohort.members.push(m);
+        }
+    }
+    if corrected && shared.breaker.record_failure(key, metrics) {
+        open_breaker_containment(key, shared);
+    }
+    removed_rows
+}
+
+/// The breaker just opened for `key`: degrade it to uncorrected serving
+/// by unregistering the dict, and quarantine the offending blob through
+/// the artifact store so a restart cannot reload it. `Service::rollback`
+/// (or republishing) restores corrected serving and closes the breaker.
+fn open_breaker_containment(key: &BatchKey, shared: &WorkerShared) {
+    shared
+        .dicts
+        .write()
+        .unwrap()
+        .remove(&(key.dataset.clone(), key.solver.clone(), key.nfe));
+    crate::warn_!(
+        "numeric breaker open for {}/{}/{}: serving uncorrected until rollback/republish",
+        key.dataset,
+        key.solver,
+        key.nfe
+    );
+    let Some(store) = shared.store.as_ref() else {
+        return;
+    };
+    let s = store.lock().unwrap();
+    let akey = ArtifactKey::new(&key.dataset, &key.solver, key.nfe);
+    let (manifest, _) = s.load_manifest();
+    if let Some(entry) = manifest.entries.get(&akey.id()) {
+        let sum = entry.current.checksum.clone();
+        if s.quarantine_blob(&sum) {
+            crate::warn_!("quarantined dict blob {sum} for {}", akey.id());
+        }
+    }
+}
+
 fn continuous_worker_loop(
     krx: Arc<Mutex<Receiver<KeyHandle>>>,
     ktx: Sender<KeyHandle>,
-    backlog: Arc<AtomicUsize>,
-    metrics: Arc<Metrics>,
-    dicts: Arc<RwLock<DictMap>>,
-    stop: Arc<AtomicBool>,
-    engine_threads: usize,
-    max_rows: usize,
+    shared: Arc<WorkerShared>,
 ) {
     // One long-lived slot engine per worker; its slot table, staging
     // buffers and scratch arena are reused across resident runs.
-    let mut engine = SlotEngine::new(engine_threads);
+    let mut engine = SlotEngine::new(shared.engine_threads);
     loop {
         let (key, entry) = {
             let guard = krx.lock().unwrap();
             match guard.recv_timeout(Duration::from_millis(50)) {
                 Ok(h) => h,
                 Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
-                    if stop.load(Ordering::Relaxed) {
+                    // Buffered handles drain before this worker exits:
+                    // recv_timeout only times out on an empty channel, so
+                    // stopping here cannot strand a queued key.
+                    if shared.stop.load(Ordering::Relaxed) {
                         return;
                     }
                     continue;
@@ -1093,16 +1454,16 @@ fn continuous_worker_loop(
                 Err(_) => return,
             }
         };
-        backlog.fetch_sub(1, Ordering::Relaxed);
+        shared.backlog.fetch_sub(1, Ordering::Relaxed);
         // A panic inside a resident run must not kill the worker or
         // strand the key: `run_key`'s drop guard fails + deactivates the
         // key on unwind, and the engine workspace (possibly mid-step) is
         // rebuilt here.
         let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            run_key(&mut engine, key, &entry, &metrics, &dicts, max_rows, &ktx, &backlog);
+            run_key(&mut engine, key, &entry, &shared, &ktx);
         }));
         if res.is_err() {
-            engine = SlotEngine::new(engine_threads);
+            engine = SlotEngine::new(shared.engine_threads);
         }
     }
 }
@@ -1173,17 +1534,21 @@ impl Drop for KeyGuard<'_> {
 /// the dispatch backlog) — and only while other keys are actually waiting
 /// for a worker — the run stops admitting, drains its residents, and
 /// hands the key back to the dispatch queue.
-#[allow(clippy::too_many_arguments)]
+///
+/// When the service is stopping, the run enters **drain mode**: queued
+/// requests fail immediately with a structured `draining` error, nothing
+/// new is admitted, and residents tick to retirement until
+/// `shared.drain_deadline` (measured from when this run first observed
+/// the stop flag) — past the deadline the remaining residents fail
+/// rather than hold shutdown hostage.
 fn run_key(
     engine: &mut SlotEngine,
     key: BatchKey,
     entry: &Arc<KeyEntry>,
-    metrics: &Metrics,
-    dicts: &RwLock<DictMap>,
-    max_rows: usize,
+    shared: &WorkerShared,
     requeue: &Sender<KeyHandle>,
-    backlog: &AtomicUsize,
 ) {
+    let metrics = &*shared.metrics;
     let state = &entry.state;
     let stats = &entry.stats;
     let mut run = match KeyRun::new(&key) {
@@ -1210,41 +1575,55 @@ fn run_key(
     };
     engine.reset(run.dim, run.n_steps);
     let mut ticks = 0usize;
+    let mut drain_started: Option<Instant> = None;
     loop {
+        let stopping = shared.stop.load(Ordering::Relaxed);
+        if stopping && drain_started.is_none() {
+            drain_started = Some(Instant::now());
+        }
         // Weighted fair yield: the tick budget shrinks as more keys wait
         // for a worker (floored at one tick so a run always progresses),
         // and yielding only happens when it helps someone.
-        let waiting = backlog.load(Ordering::Relaxed);
+        let waiting = shared.backlog.load(Ordering::Relaxed);
         let budget = (BASE_TICK_BUDGET / (waiting + 1)).max(1);
-        let draining = waiting > 0 && ticks >= budget;
+        let yielding = waiting > 0 && ticks >= budget;
         let mut to_admit: Vec<Pending> = Vec::new();
         let mut to_shed: Vec<Pending> = Vec::new();
+        let mut to_fail: Vec<Pending> = Vec::new();
         let disposition = {
             let mut st = state.lock().unwrap();
-            // Deadline admission: shed infeasible queued requests first,
-            // so they fail fast instead of rotting behind the residents.
-            // (Admitted rows are never shed — numerics stay untouched.)
-            let mut i = 0;
-            while i < st.queue.len() {
-                if past_deadline(&st.queue[i], run.n_steps, run.tick_ewma_ms) {
-                    to_shed.push(st.queue.remove(i).unwrap());
-                } else {
-                    i += 1;
-                }
-            }
-            if !draining {
-                let mut projected = run.resident_rows;
-                while let Some(front) = st.queue.front() {
-                    let rows = front.req.n_samples;
-                    // Priority-then-FIFO admission under the residency
-                    // cap; an oversized request runs alone when the
-                    // engine is empty. (rows == 0 passes the cap and is
-                    // failed below.)
-                    if projected + rows <= max_rows || projected == 0 {
-                        projected += rows;
-                        to_admit.push(st.queue.pop_front().unwrap());
+            if stopping {
+                // Drain mode: queued-but-unadmitted requests fail with a
+                // structured error instead of waiting for an admission
+                // that will never come.
+                to_fail.extend(st.queue.drain(..));
+            } else {
+                // Deadline admission: shed infeasible queued requests
+                // first, so they fail fast instead of rotting behind the
+                // residents. (Admitted rows are never shed — numerics
+                // stay untouched.)
+                let mut i = 0;
+                while i < st.queue.len() {
+                    if past_deadline(&st.queue[i], run.n_steps, run.tick_ewma_ms) {
+                        to_shed.push(st.queue.remove(i).unwrap());
                     } else {
-                        break;
+                        i += 1;
+                    }
+                }
+                if !yielding {
+                    let mut projected = run.resident_rows;
+                    while let Some(front) = st.queue.front() {
+                        let rows = front.req.n_samples;
+                        // Priority-then-FIFO admission under the residency
+                        // cap; an oversized request runs alone when the
+                        // engine is empty. (rows == 0 passes the cap and is
+                        // failed below.)
+                        if projected + rows <= shared.max_rows || projected == 0 {
+                            projected += rows;
+                            to_admit.push(st.queue.pop_front().unwrap());
+                        } else {
+                            break;
+                        }
                     }
                 }
             }
@@ -1260,15 +1639,15 @@ fn run_key(
                     // and free this worker for other keys. If the service
                     // is stopping the guard fails the queued requests
                     // instead.
-                    debug_assert!(draining);
+                    debug_assert!(yielding);
                     2 // requeue
                 }
             } else {
                 0 // keep running
             }
         };
-        // Shed replies go out after the state lock is released (reply
-        // channels can rendezvous with slow receivers).
+        // Shed and drain replies go out after the state lock is released
+        // (reply channels can rendezvous with slow receivers).
         for p in to_shed {
             let deadline = p.req.deadline_ms.unwrap_or(0.0);
             metrics.shed.fetch_add(1, Ordering::Relaxed);
@@ -1279,10 +1658,11 @@ fn run_key(
                 metrics,
             );
         }
+        fail_all(to_fail, DRAINING_ERR, metrics);
         match disposition {
             1 => return,
             2 => {
-                backlog.fetch_add(1, Ordering::Relaxed);
+                shared.backlog.fetch_add(1, Ordering::Relaxed);
                 if requeue.send((key, entry.clone())).is_ok() {
                     guard.defused = true;
                 }
@@ -1294,14 +1674,37 @@ fn run_key(
             if p.req.n_samples == 0 {
                 fail_one(p, "n must be >= 1", metrics);
             } else {
-                run.admit(engine, p, dicts, metrics);
+                run.admit(engine, p, shared);
             }
+        }
+        // Drain deadline: residents get until the deadline to retire
+        // normally; past it they fail so shutdown can complete.
+        if stopping
+            && drain_started.is_some_and(|t0| t0.elapsed() >= shared.drain_deadline)
+            && !run.is_idle()
+        {
+            run.fail_residents(
+                "draining: drain deadline exceeded before completion",
+                metrics,
+                stats,
+            );
+            continue; // next pass deactivates the key and returns
         }
         // Time only non-idle ticks: an empty tick returns immediately and
         // would poison the per-tick latency estimate toward zero.
         let idle = run.is_idle();
         let t0 = Instant::now();
-        run.tick(engine, metrics, stats);
+        // An eval panic mid-cohort (or the injected chaos equivalent)
+        // must not strand the residents without replies: fail them all
+        // with a structured error, then resume the unwind so the KeyGuard
+        // fails the queue and the worker loop rebuilds its engine.
+        let ticked = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            run.tick(engine, shared, stats);
+        }));
+        if let Err(payload) = ticked {
+            run.fail_residents("eval panicked mid-cohort; request aborted", metrics, stats);
+            std::panic::resume_unwind(payload);
+        }
         if !idle {
             let sample = t0.elapsed().as_secs_f64() * 1e3;
             run.tick_ewma_ms = Some(match run.tick_ewma_ms {
@@ -1331,7 +1734,7 @@ fn batcher_loop(
     // (the front one leads the next batch); bounded at two by the
     // early-break below.
     let mut held: VecDeque<Pending> = VecDeque::new();
-    loop {
+    'batching: loop {
         if stop.load(Ordering::Relaxed) {
             break;
         }
@@ -1390,17 +1793,27 @@ fn batcher_loop(
         metrics
             .fused_requests
             .fetch_add(batch.len() as u64, Ordering::Relaxed);
-        if wtx.send(batch).is_err() {
-            break;
+        if let Err(e) = wtx.send(batch) {
+            // Workers are gone (shutdown finished racing us): the batch
+            // comes back in the error — fail it rather than drop it.
+            fail_all(e.0, DRAINING_ERR, &metrics);
+            break 'batching;
         }
     }
+    // Shutdown drain: everything queued-but-unbatched gets a structured
+    // reply before the batcher exits. mpsc buffers survive sender drops,
+    // so `try_recv` observes every submission that beat the stop flag.
+    let mut stranded: Vec<Pending> = held.drain(..).collect();
+    while let Ok(p) = rx.try_recv() {
+        stranded.push(p);
+    }
+    fail_all(stranded, DRAINING_ERR, &metrics);
 }
 
 fn collect_worker_loop(
     wrx: Arc<Mutex<Receiver<Vec<Pending>>>>,
     metrics: Arc<Metrics>,
     dicts: Arc<RwLock<DictMap>>,
-    stop: Arc<AtomicBool>,
     engine_threads: usize,
 ) {
     // One long-lived engine per worker: the serving path never records
@@ -1415,12 +1828,12 @@ fn collect_worker_loop(
             let guard = wrx.lock().unwrap();
             match guard.recv_timeout(Duration::from_millis(50)) {
                 Ok(b) => b,
-                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
-                    if stop.load(Ordering::Relaxed) {
-                        return;
-                    }
-                    continue;
-                }
+                // Timeout just cycles the lock so sibling workers get a
+                // turn at the receiver. Workers exit on *disconnect* (the
+                // batcher dropped the sender), which mpsc only reports
+                // once the buffer is empty — so a batch dispatched right
+                // before shutdown is still executed, never stranded.
+                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => continue,
                 Err(_) => return,
             }
         };
@@ -1536,6 +1949,17 @@ fn run_batch(
         let n = p.req.n_samples;
         let samples = x0[offset * dim..(offset + n) * dim].to_vec();
         offset += n;
+        // Numeric guardrail (collect path): a non-finite result is a
+        // structured per-request failure, never a "success" full of NaNs.
+        if samples.iter().any(|v| !v.is_finite()) {
+            metrics.numeric_failures.fetch_add(1, Ordering::Relaxed);
+            fail_one(
+                p,
+                "numeric: non-finite values produced during sampling; request aborted",
+                metrics,
+            );
+            continue;
+        }
         metrics.completed.fetch_add(1, Ordering::Relaxed);
         let latency_ms = p.enqueued.elapsed().as_secs_f64() * 1e3;
         let queue_ms = (run_start - p.enqueued).as_secs_f64() * 1e3;
@@ -1710,6 +2134,22 @@ mod tests {
 
     // -- continuous-scheduler internals -----------------------------------
 
+    /// Worker-context bundle for driving `KeyRun` directly in tests (no
+    /// threads, no store, closed breaker).
+    fn test_shared(dicts: DictMap) -> WorkerShared {
+        WorkerShared {
+            metrics: Arc::new(Metrics::default()),
+            dicts: Arc::new(RwLock::new(dicts)),
+            stop: Arc::new(AtomicBool::new(false)),
+            breaker: Arc::new(NumericBreaker::new()),
+            store: None,
+            backlog: Arc::new(AtomicUsize::new(0)),
+            engine_threads: 1,
+            max_rows: 256,
+            drain_deadline: Duration::from_secs(5),
+        }
+    }
+
     /// Drive a `KeyRun` directly (no threads): admit `reqs` at the given
     /// tick offsets, run to drain, return the responses in request order.
     fn drive_key_run(
@@ -1718,7 +2158,7 @@ mod tests {
         reqs: &[(SamplingRequest, usize)],
         dicts: &RwLock<DictMap>,
     ) -> Vec<SamplingResponse> {
-        let metrics = Metrics::default();
+        let shared = test_shared(dicts.read().unwrap().clone());
         let stats = KeyStats::default();
         let mut engine = SlotEngine::new(engine_threads);
         let mut run = KeyRun::new(key).expect("valid key");
@@ -1745,12 +2185,12 @@ mod tests {
             while i < waiting.len() {
                 if waiting[i].0 <= tick {
                     let (_, p) = waiting.remove(i);
-                    run.admit(&mut engine, p, dicts, &metrics);
+                    run.admit(&mut engine, p, &shared);
                 } else {
                     i += 1;
                 }
             }
-            run.tick(&mut engine, &metrics, &stats);
+            run.tick(&mut engine, &shared, &stats);
             tick += 1;
             assert!(tick < 10_000, "key run failed to drain");
         }
@@ -1901,8 +2341,7 @@ mod tests {
             nfe: 6,
             use_pas: false,
         };
-        let dicts = RwLock::new(DictMap::new());
-        let metrics = Metrics::default();
+        let shared = test_shared(DictMap::new());
         let stats = KeyStats::default();
         let mut engine = SlotEngine::new(1);
         let mut run = KeyRun::new(&key).unwrap();
@@ -1922,27 +2361,27 @@ mod tests {
         };
         let (pa, rxa) = mk(4, 1);
         let (pb, rxb) = mk(2, 2);
-        run.admit(&mut engine, pa, &dicts, &metrics);
-        run.tick(&mut engine, &metrics, &stats);
-        run.tick(&mut engine, &metrics, &stats);
+        run.admit(&mut engine, pa, &shared);
+        run.tick(&mut engine, &shared, &stats);
+        run.tick(&mut engine, &shared, &stats);
         // A is 2 steps deep; B joins mid-flight in its own cohort.
-        run.admit(&mut engine, pb, &dicts, &metrics);
-        assert_eq!(metrics.admitted_mid_flight.load(Ordering::Relaxed), 1);
+        run.admit(&mut engine, pb, &shared);
+        assert_eq!(shared.metrics.admitted_mid_flight.load(Ordering::Relaxed), 1);
         // A retires at tick 6 (B still 2 steps behind) ...
         for _ in 0..4 {
-            run.tick(&mut engine, &metrics, &stats);
+            run.tick(&mut engine, &shared, &stats);
         }
         let ra = rxa.try_recv().expect("A must retire as soon as it finishes");
         assert!(rxb.try_recv().is_err(), "B must still be in flight");
         // ... and B follows two ticks later.
-        run.tick(&mut engine, &metrics, &stats);
-        run.tick(&mut engine, &metrics, &stats);
+        run.tick(&mut engine, &shared, &stats);
+        run.tick(&mut engine, &shared, &stats);
         let rb = rxb.try_recv().expect("B must retire two ticks after A");
         assert!(run.is_idle());
         assert_eq!(ra.batched_with, 2, "A saw B co-resident");
         assert_eq!(rb.batched_with, 2, "B saw A co-resident");
-        assert_eq!(metrics.batches.load(Ordering::Relaxed), 2, "two cohorts");
-        assert_eq!(metrics.completed.load(Ordering::Relaxed), 2);
+        assert_eq!(shared.metrics.batches.load(Ordering::Relaxed), 2, "two cohorts");
+        assert_eq!(shared.metrics.completed.load(Ordering::Relaxed), 2);
     }
 
     /// End-to-end through the threaded service: whatever the real
@@ -2012,6 +2451,7 @@ mod tests {
             ktx,
             queue_depth: 16,
             backlog: Arc::new(AtomicUsize::new(0)),
+            stop: Arc::new(AtomicBool::new(false)),
         };
         let metrics = Metrics::default();
         let mut keep = Vec::new(); // keep reply receivers alive
@@ -2128,6 +2568,148 @@ mod tests {
             "requests == completed + rejected + failed once drained"
         );
         svc.shutdown();
+    }
+
+    // -- graceful drain ----------------------------------------------------
+
+    /// Two-phase drain under load: the in-flight cohort retires and
+    /// replies with real samples, queued-but-unadmitted requests fail
+    /// with a structured `draining` error, the counter identity balances,
+    /// post-shutdown submissions are refused, and a second `shutdown`
+    /// call is a no-op.
+    #[test]
+    fn shutdown_drains_in_flight_and_fails_queued() {
+        let svc = Service::start(
+            ServiceConfig {
+                workers: 1,
+                max_batch: 8,
+                ..ServiceConfig::default()
+            },
+            Vec::new(),
+        );
+        // Long-running resident: 8 rows at NFE 2000 hold the key while
+        // the requests below pile up behind the residency cap.
+        let mut blocker = req(8, 1);
+        blocker.nfe = 2000;
+        let rx_blocker = svc.submit(blocker).unwrap();
+        let t0 = Instant::now();
+        while svc.metrics.ticks.load(Ordering::Relaxed) < 2 {
+            assert!(t0.elapsed() < Duration::from_secs(10), "run never started");
+            std::thread::sleep(Duration::from_micros(100));
+        }
+        // These queue behind the blocker (projected 8 + 8 > max_batch 8).
+        let mut queued = Vec::new();
+        for s in 0..4 {
+            let mut r = req(8, 100 + s);
+            r.nfe = 2000;
+            queued.push(svc.submit(r).unwrap());
+        }
+        svc.shutdown();
+        // In-flight work retired with real samples ...
+        let done = rx_blocker.recv().expect("resident must get a reply");
+        assert!(done.error.is_none(), "{:?}", done.error);
+        assert_eq!(done.n, 8);
+        // ... queued work failed with the structured draining error ...
+        for rx in queued {
+            let resp = rx.recv().expect("queued request must get exactly one reply");
+            let err = resp.error.as_deref().expect("queued request must fail");
+            assert!(
+                err.starts_with("draining:"),
+                "structured draining error, got: {err}"
+            );
+        }
+        // ... and the books balance: every accepted request accounted for.
+        let m = &svc.metrics;
+        assert_eq!(
+            m.requests.load(Ordering::Relaxed),
+            m.completed.load(Ordering::Relaxed)
+                + m.rejected.load(Ordering::Relaxed)
+                + m.failed.load(Ordering::Relaxed),
+            "requests == completed + rejected + failed after shutdown"
+        );
+        // New submissions are refused fast with the same structured error.
+        let err = svc.submit(req(1, 9)).unwrap_err();
+        assert!(err.starts_with("draining:"), "{err}");
+        // Idempotent: the second call returns immediately (threads are
+        // already joined and taken).
+        svc.shutdown();
+    }
+
+    /// Residents that cannot finish inside the drain deadline fail with a
+    /// structured error instead of holding shutdown hostage.
+    #[test]
+    fn shutdown_drain_deadline_bounds_exit() {
+        let svc = Service::start(
+            ServiceConfig {
+                workers: 1,
+                drain_deadline: Duration::from_millis(5),
+                ..ServiceConfig::default()
+            },
+            Vec::new(),
+        );
+        let mut huge = req(64, 1);
+        huge.nfe = 10_000; // far more ticks than a 5 ms deadline covers
+        let rx = svc.submit(huge).unwrap();
+        let t0 = Instant::now();
+        while svc.metrics.ticks.load(Ordering::Relaxed) < 2 {
+            assert!(t0.elapsed() < Duration::from_secs(10), "run never started");
+            std::thread::sleep(Duration::from_micros(100));
+        }
+        let t0 = Instant::now();
+        svc.shutdown();
+        assert!(
+            t0.elapsed() < Duration::from_secs(30),
+            "shutdown must be bounded by the drain deadline"
+        );
+        let resp = rx.recv().expect("abandoned resident must still get a reply");
+        let err = resp
+            .error
+            .as_deref()
+            .expect("deadline-exceeded resident must fail");
+        assert!(err.starts_with("draining:"), "{err}");
+        let m = &svc.metrics;
+        assert_eq!(
+            m.requests.load(Ordering::Relaxed),
+            m.completed.load(Ordering::Relaxed)
+                + m.rejected.load(Ordering::Relaxed)
+                + m.failed.load(Ordering::Relaxed)
+        );
+    }
+
+    /// Collect-then-run drain: a submission still held by the batcher at
+    /// shutdown fails with the structured draining error (not a bare
+    /// disconnect), while the in-flight batch completes normally.
+    #[test]
+    fn shutdown_fails_queued_collect_requests() {
+        let svc = Service::start(
+            ServiceConfig {
+                batching: Batching::CollectThenRun,
+                workers: 1,
+                batch_window: Duration::from_millis(200),
+                ..ServiceConfig::default()
+            },
+            Vec::new(),
+        );
+        let rx_lead = svc.submit(req(4, 1)).unwrap();
+        // Incompatible key: the batcher holds it for the *next* batch,
+        // which shutdown ensures never forms.
+        let mut other = req(4, 2);
+        other.dataset = "gmm-hd64".into();
+        let rx_other = svc.submit(other).unwrap();
+        std::thread::sleep(Duration::from_millis(30)); // both inside the window
+        svc.shutdown();
+        let lead = rx_lead.recv().expect("leader must get a reply");
+        assert!(lead.error.is_none(), "{:?}", lead.error);
+        let held = rx_other.recv().expect("held request must get a reply");
+        let err = held.error.as_deref().expect("held request must fail");
+        assert!(err.starts_with("draining:"), "{err}");
+        let m = &svc.metrics;
+        assert_eq!(
+            m.requests.load(Ordering::Relaxed),
+            m.completed.load(Ordering::Relaxed)
+                + m.rejected.load(Ordering::Relaxed)
+                + m.failed.load(Ordering::Relaxed)
+        );
     }
 
     /// The operator surface renders: counters and per-key series in the

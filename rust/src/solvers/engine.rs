@@ -453,6 +453,9 @@ pub struct SlotEngine {
     out_buf: Vec<f64>,
     /// Solver scratch arena (see [`Solver::scratch_spec`]).
     scratch: Vec<f64>,
+    /// Cohort-relative indices of rows whose last step produced a
+    /// non-finite direction or state (grow-only; cleared per step).
+    poisoned: Vec<usize>,
 }
 
 impl SlotEngine {
@@ -471,6 +474,7 @@ impl SlotEngine {
             d_buf: Vec::new(),
             out_buf: Vec::new(),
             scratch: Vec::new(),
+            poisoned: Vec::new(),
         }
     }
 
@@ -483,6 +487,7 @@ impl SlotEngine {
         self.n_steps = n_steps;
         self.n_active = 0;
         self.free.clear();
+        self.poisoned.clear();
         for (i, s) in self.slots.iter_mut().enumerate() {
             s.active = false;
             self.free.push(i);
@@ -548,6 +553,29 @@ impl SlotEngine {
         s.ds.reset(1, 1);
         self.free.push(slot);
         self.n_active -= 1;
+    }
+
+    /// Free a resident slot *without* retiring it — the numeric-failure
+    /// path: the row's state is poisoned (non-finite), so there is
+    /// nothing to copy out. Unlike [`Self::retire_into`] the row may be
+    /// at any cursor.
+    pub fn evict(&mut self, slot: usize) {
+        let s = &mut self.slots[slot];
+        assert!(s.active, "slot {slot} not resident");
+        s.active = false;
+        s.xs.reset(1, 1);
+        s.ds.reset(1, 1);
+        self.free.push(slot);
+        self.n_active -= 1;
+    }
+
+    /// Cohort-relative indices (into the `slots` argument of the last
+    /// [`Self::step_cohort`] call) of rows whose step produced a
+    /// non-finite direction or next state. Sorted ascending; empty on a
+    /// clean step. Callers fail these rows individually ([`Self::evict`])
+    /// — row independence means the scan never indicts neighbours.
+    pub fn poisoned_rows(&self) -> &[usize] {
+        &self.poisoned
     }
 
     /// Advance one cohort — resident rows sharing a step cursor — by one
@@ -656,9 +684,29 @@ impl SlotEngine {
             &mut self.scratch,
             &mut self.out_buf[..row_len],
         );
+        // Chaos site: corrupt one row of the stepped cohort at the armed
+        // tick. Disarmed cost is one relaxed atomic load.
+        if crate::util::failpoint::peek(crate::util::failpoint::ENGINE_NAN_TICK) == Some(j as u64)
+        {
+            crate::util::failpoint::take(crate::util::failpoint::ENGINE_NAN_TICK);
+            self.out_buf[0] = f64::NAN;
+        }
+        // Numeric guardrail: flag rows whose direction or next state went
+        // non-finite this step. A grow-only index buffer keeps the scan
+        // inside the zero-allocation budget; per-row scanning (not
+        // whole-slab) lets the caller fail only the poisoned rows.
+        self.poisoned.clear();
+        for r in 0..rows {
+            let d_row = &self.d_buf[r * dim..(r + 1) * dim];
+            let x_row = &self.out_buf[r * dim..(r + 1) * dim];
+            if d_row.iter().any(|v| !v.is_finite()) || x_row.iter().any(|v| !v.is_finite()) {
+                self.poisoned.push(r);
+            }
+        }
         // Scatter: the (post-hook) direction becomes node `j` of each
         // slot's d-ring, the stepped state node `j + 1` of its x-ring —
-        // advancing the cursor.
+        // advancing the cursor. Poisoned rows scatter too (their slots
+        // stay cursor-consistent) and are evicted by the caller.
         for (r, &id) in slots.iter().enumerate() {
             let s = &mut self.slots[id];
             s.ds.push_row(&self.d_buf[r * dim..(r + 1) * dim]);

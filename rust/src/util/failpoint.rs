@@ -1,0 +1,172 @@
+//! Compiled-in fail points for fault-injection ("chaos") tests.
+//!
+//! The artifact store introduced the pattern: a one-shot trip wire armed
+//! by a test and checked by the *production* code path, so fault
+//! injection exercises the exact protocol that runs in production rather
+//! than a test double. This module lifts that infrastructure out of
+//! `artifact/store.rs` so the serving path (engine tick, scheduler,
+//! wire replies) can use it too. Two scopes:
+//!
+//! * [`FailPoints`] — an instance-scoped one-shot set. The artifact
+//!   store owns one per handle, so concurrent tests against different
+//!   store directories cannot interfere.
+//! * A **process-global registry** ([`arm`]/[`take`]/[`peek`]) for sites
+//!   buried inside the serving stack, where tests hold no handle on the
+//!   component (a `SlotEngine` lives inside a worker thread). The
+//!   disarmed fast path is a single relaxed atomic load — nothing is
+//!   locked, nothing allocates — so the hooks stay inside the serving
+//!   path's zero-allocation budget.
+//!
+//! Sites are `&'static str` names (constants below for the serving
+//! path); each carries a `u64` payload the firing site interprets (e.g.
+//! the tick index at which to inject). All failpoints are one-shot:
+//! firing disarms.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+
+/// Inject a NaN into the first row of the cohort when the engine's step
+/// counter equals the payload ([`crate::solvers::engine::SlotEngine::step_cohort`]).
+pub const ENGINE_NAN_TICK: &str = "engine.nan_tick";
+
+/// Panic inside the scheduler's tick path when the cohort's completed
+/// step count equals the payload — simulates a model eval blowing up
+/// mid-cohort.
+pub const SERVICE_EVAL_PANIC: &str = "service.eval_panic";
+
+/// Fail the next wire reply write with a broken-pipe error — simulates a
+/// client that vanished between request and reply.
+pub const PROTOCOL_WRITE_FAIL: &str = "protocol.reply_write_fail";
+
+/// Instance-scoped one-shot fail-point set.
+pub struct FailPoints {
+    armed: Vec<(&'static str, u64)>,
+}
+
+impl FailPoints {
+    pub const fn new() -> FailPoints {
+        FailPoints { armed: Vec::new() }
+    }
+
+    /// Arm `site` (payload 0). Re-arming replaces the payload.
+    pub fn arm(&mut self, site: &'static str) {
+        self.arm_with(site, 0);
+    }
+
+    /// Arm `site` with a payload the firing site interprets.
+    pub fn arm_with(&mut self, site: &'static str, payload: u64) {
+        if let Some(slot) = self.armed.iter_mut().find(|(s, _)| *s == site) {
+            slot.1 = payload;
+        } else {
+            self.armed.push((site, payload));
+        }
+    }
+
+    /// Payload of `site` if armed, without disarming.
+    pub fn peek(&self, site: &str) -> Option<u64> {
+        self.armed.iter().find(|(s, _)| *s == site).map(|&(_, p)| p)
+    }
+
+    /// Fire `site`: returns its payload and disarms it, or `None`.
+    pub fn take(&mut self, site: &str) -> Option<u64> {
+        let i = self.armed.iter().position(|(s, _)| *s == site)?;
+        Some(self.armed.swap_remove(i).1)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.armed.is_empty()
+    }
+}
+
+impl Default for FailPoints {
+    fn default() -> Self {
+        FailPoints::new()
+    }
+}
+
+/// Fast-path gate: true only while at least one global site is armed, so
+/// production code pays one relaxed load when chaos is off.
+static ANY_ARMED: AtomicBool = AtomicBool::new(false);
+static GLOBAL: Mutex<FailPoints> = Mutex::new(FailPoints::new());
+
+fn global() -> std::sync::MutexGuard<'static, FailPoints> {
+    // A panicking failpoint site (that is the point of some of them)
+    // must not poison the registry for the rest of the process.
+    GLOBAL.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Arm the global `site` with `payload`.
+pub fn arm(site: &'static str, payload: u64) {
+    let mut g = global();
+    g.arm_with(site, payload);
+    ANY_ARMED.store(true, Ordering::Release);
+}
+
+/// Payload of the global `site` if armed, without disarming. One relaxed
+/// atomic load when nothing is armed.
+pub fn peek(site: &str) -> Option<u64> {
+    if !ANY_ARMED.load(Ordering::Relaxed) {
+        return None;
+    }
+    global().peek(site)
+}
+
+/// Fire the global `site`: returns its payload and disarms it. One
+/// relaxed atomic load when nothing is armed.
+pub fn take(site: &str) -> Option<u64> {
+    if !ANY_ARMED.load(Ordering::Relaxed) {
+        return None;
+    }
+    let mut g = global();
+    let hit = g.take(site);
+    if g.is_empty() {
+        ANY_ARMED.store(false, Ordering::Release);
+    }
+    hit
+}
+
+/// Disarm every global site (test teardown).
+pub fn disarm_all() {
+    let mut g = global();
+    g.armed.clear();
+    ANY_ARMED.store(false, Ordering::Release);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn instance_set_is_one_shot() {
+        let mut fp = FailPoints::new();
+        assert!(fp.is_empty());
+        fp.arm_with("a", 7);
+        fp.arm("b");
+        assert_eq!(fp.peek("a"), Some(7));
+        assert_eq!(fp.take("a"), Some(7));
+        assert_eq!(fp.take("a"), None, "one-shot");
+        assert_eq!(fp.take("b"), Some(0));
+        assert!(fp.is_empty());
+    }
+
+    #[test]
+    fn rearming_replaces_payload() {
+        let mut fp = FailPoints::new();
+        fp.arm_with("a", 1);
+        fp.arm_with("a", 2);
+        assert_eq!(fp.take("a"), Some(2));
+        assert_eq!(fp.take("a"), None);
+    }
+
+    #[test]
+    fn global_registry_round_trips() {
+        // Unique site names: unit tests share the process-global registry.
+        arm("test.failpoint.global", 42);
+        assert_eq!(peek("test.failpoint.global"), Some(42));
+        assert_eq!(take("test.failpoint.global"), Some(42));
+        assert_eq!(take("test.failpoint.global"), None);
+        arm("test.failpoint.sweep", 1);
+        disarm_all();
+        assert_eq!(peek("test.failpoint.sweep"), None);
+    }
+}

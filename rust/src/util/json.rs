@@ -4,6 +4,13 @@
 //! has no serde, so we carry a small, well-tested JSON implementation of our
 //! own. It covers everything the system needs: coordinate dictionaries,
 //! server wire protocol, experiment result files.
+//!
+//! **Caveat for callers serializing floats:** JSON has no token for
+//! NaN/inf, so the writer emits `null` for a non-finite [`Json::Num`].
+//! That is the right call for result files (lossy but valid JSON), but on
+//! the serving wire it would turn numeric corruption into a structurally
+//! valid "success" — producers of wire replies must check finiteness
+//! *before* building the value (see `server::protocol::response_json`).
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
@@ -513,5 +520,22 @@ mod tests {
         let xs = [1.0, -2.25, 0.0, 1e-9];
         let j = Json::from_f64_slice(&xs);
         assert_eq!(j.to_f64_vec().unwrap(), xs.to_vec());
+    }
+
+    /// Documented lossy edge: non-finite floats serialize as `null`
+    /// (JSON has no NaN/inf token). Wire-reply producers rely on this
+    /// being *exactly* `null` — never a bare `NaN` that would corrupt
+    /// the line's parseability — and guard finiteness upstream.
+    #[test]
+    fn non_finite_num_serializes_as_null() {
+        for v in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            assert_eq!(Json::Num(v).to_string(), "null");
+        }
+        assert_eq!(
+            Json::from_f64_slice(&[1.0, f64::NAN]).to_string(),
+            "[1,null]"
+        );
+        // And the emitted line stays valid JSON end to end.
+        assert!(Json::parse("[1,null]").is_ok());
     }
 }

@@ -1,11 +1,13 @@
 //! Shared utilities: deterministic RNG, minimal JSON, logging, timing,
-//! and the scoped thread pool behind every batch-parallel hot loop.
+//! compiled-in fail points, and the scoped thread pool behind every
+//! batch-parallel hot loop.
 
 pub mod rng;
 pub mod json;
 pub mod log;
 pub mod timer;
 pub mod pool;
+pub mod failpoint;
 
 /// Mean of a slice. Returns 0.0 for an empty slice.
 pub fn mean(xs: &[f64]) -> f64 {

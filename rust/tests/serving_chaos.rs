@@ -1,0 +1,407 @@
+//! Serving-path chaos suite: drives the compiled-in fail points
+//! (`pas::util::failpoint`) and a deliberately poisonous dictionary
+//! through the *production* serving stack, asserting the containment
+//! contract end to end:
+//!
+//! * every submitted request gets **exactly one** structured reply —
+//!   eval panics, injected NaNs, and reply-write failures included;
+//! * faults are contained to the poisoned rows / the failing connection:
+//!   cohort-mates and later requests keep serving, and surviving rows
+//!   stay **bit-identical** to their solo runs;
+//! * the per-key numeric circuit breaker degrades a key to uncorrected
+//!   sampling after repeated corrected-path blow-ups, quarantines the
+//!   offending dict version in the artifact store, and recovers full
+//!   corrected serving after `rollback`;
+//! * nothing hangs: connection threads join, counters balance.
+//!
+//! Global fail points are process-wide one-shots, so every test here
+//! serializes on one mutex (the integration binary runs tests in
+//! parallel) and disarms on entry and exit.
+
+use pas::pas::coords::{CoordinateDict, ScaleMode};
+use pas::pas::correct::CorrectedSampler;
+use pas::schedule::default_schedule;
+use pas::score::analytic::AnalyticEps;
+use pas::server::protocol::{serve_with, ServerConfig};
+use pas::server::{SamplingRequest, SamplingResponse, Service, ServiceConfig};
+use pas::solvers::engine::{Record, SamplerEngine};
+use pas::traj::sample_prior_stream;
+use pas::util::failpoint;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::Receiver;
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+/// One chaos scenario at a time: global fail points are process-wide.
+static CHAOS: Mutex<()> = Mutex::new(());
+
+fn chaos_lock() -> MutexGuard<'static, ()> {
+    // A prior test failing while holding the lock must not cascade.
+    let g = CHAOS.lock().unwrap_or_else(|e| e.into_inner());
+    failpoint::disarm_all();
+    g
+}
+
+fn unique_dir(tag: &str) -> PathBuf {
+    static SEQ: AtomicU64 = AtomicU64::new(0);
+    let d = std::env::temp_dir().join(format!(
+        "pas_chaos_{tag}_{}_{}",
+        std::process::id(),
+        SEQ.fetch_add(1, Ordering::Relaxed)
+    ));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn request(dataset: &str, solver: &str, nfe: usize, n: usize, seed: u64) -> SamplingRequest {
+    SamplingRequest {
+        id: 0,
+        dataset: dataset.into(),
+        solver: solver.into(),
+        nfe,
+        n_samples: n,
+        seed,
+        use_pas: false,
+        deadline_ms: None,
+        priority: 0,
+    }
+}
+
+/// Exactly-one-reply receive: fails loudly instead of hanging, and
+/// asserts no second reply ever lands on the channel.
+fn recv_one(rx: Receiver<SamplingResponse>) -> SamplingResponse {
+    let resp = rx
+        .recv_timeout(Duration::from_secs(120))
+        .expect("request must get exactly one reply (got none)");
+    assert!(
+        rx.recv_timeout(Duration::from_millis(100)).is_err(),
+        "request must get exactly one reply (got a second)"
+    );
+    resp
+}
+
+/// The determinism contract's right-hand side: `req` alone through a
+/// fresh serving-configuration engine.
+fn solo_run(req: &SamplingRequest, id: u64, dict: Option<&CoordinateDict>) -> Vec<f64> {
+    let ds = pas::data::registry::get(&req.dataset).unwrap();
+    let model = AnalyticEps::from_dataset(&ds);
+    let solver = pas::solvers::registry::get(&req.solver).unwrap();
+    let steps = solver.steps_for_nfe(req.nfe).unwrap();
+    let sched = default_schedule(steps);
+    let dim = model.dim();
+    let x_t = sample_prior_stream(req.seed, id, req.n_samples, dim, sched.t_max());
+    let mut x0 = vec![0.0; req.n_samples * dim];
+    let mut engine = SamplerEngine::with_record(Record::None);
+    match dict {
+        Some(d) => {
+            let mut hook = CorrectedSampler::new(d, dim);
+            engine.run_into(
+                solver.as_ref(),
+                model.as_ref(),
+                &x_t,
+                req.n_samples,
+                &sched,
+                Some(&mut hook),
+                &mut x0,
+            );
+        }
+        None => {
+            engine.run_into(
+                solver.as_ref(),
+                model.as_ref(),
+                &x_t,
+                req.n_samples,
+                &sched,
+                None,
+                &mut x0,
+            );
+        }
+    }
+    x0
+}
+
+fn assert_counters_balance(svc: &Service) {
+    let m = &svc.metrics;
+    assert_eq!(
+        m.requests.load(Ordering::Relaxed),
+        m.completed.load(Ordering::Relaxed)
+            + m.rejected.load(Ordering::Relaxed)
+            + m.failed.load(Ordering::Relaxed),
+        "requests == completed + rejected + failed"
+    );
+}
+
+/// An eval panic mid-cohort is contained: the resident request fails
+/// with a structured error (not a dropped channel), the worker rebuilds
+/// its engine, and the key keeps serving.
+#[test]
+fn eval_panic_mid_cohort_is_contained() {
+    let _g = chaos_lock();
+    let svc = Service::start(
+        ServiceConfig {
+            workers: 1,
+            ..ServiceConfig::default()
+        },
+        Vec::new(),
+    );
+    failpoint::arm(failpoint::SERVICE_EVAL_PANIC, 2);
+    let rx = svc.submit(request("gmm2d", "ddim", 12, 4, 1)).unwrap();
+    let resp = recv_one(rx);
+    let err = resp
+        .error
+        .as_deref()
+        .expect("the panicked cohort's request must fail, not vanish");
+    assert!(err.contains("panic"), "structured panic error, got: {err}");
+    // The key recovers: the next request on the same key succeeds and
+    // matches its solo run bitwise (fresh engine, clean state).
+    let req = request("gmm2d", "ddim", 12, 4, 2);
+    let ok = recv_one(svc.submit(req.clone()).unwrap());
+    assert!(ok.error.is_none(), "{:?}", ok.error);
+    assert_eq!(ok.samples, solo_run(&req, ok.id, None), "post-panic run diverged");
+    assert_counters_balance(&svc);
+    svc.shutdown();
+    failpoint::disarm_all();
+}
+
+/// An injected NaN at a chosen tick fails only the poisoned member;
+/// cohort-mates keep stepping and retire bit-identical to their solo
+/// runs.
+#[test]
+fn nan_tick_fails_poisoned_rows_and_spares_cohort_mates() {
+    let _g = chaos_lock();
+    let svc = Service::start(
+        ServiceConfig {
+            workers: 1,
+            ..ServiceConfig::default()
+        },
+        Vec::new(),
+    );
+    // Poison row 0 at step j=3 of the first cohort to reach it — request
+    // A's first row (admitted first, ticked first).
+    failpoint::arm(failpoint::ENGINE_NAN_TICK, 3);
+    let req_a = request("gmm2d", "ddim", 12, 2, 10);
+    let req_b = request("gmm2d", "ddim", 12, 3, 11);
+    let rx_a = svc.submit(req_a).unwrap();
+    let rx_b = svc.submit(req_b.clone()).unwrap();
+    let resp_a = recv_one(rx_a);
+    let err = resp_a
+        .error
+        .as_deref()
+        .expect("the poisoned request must fail with a structured error");
+    assert!(err.starts_with("numeric:"), "{err}");
+    let resp_b = recv_one(rx_b);
+    assert!(resp_b.error.is_none(), "cohort-mate must survive: {:?}", resp_b.error);
+    assert_eq!(
+        resp_b.samples,
+        solo_run(&req_b, resp_b.id, None),
+        "surviving rows must stay bit-identical to the solo run"
+    );
+    assert!(svc.metrics.numeric_failures.load(Ordering::Relaxed) >= 1);
+    assert_counters_balance(&svc);
+    svc.shutdown();
+    failpoint::disarm_all();
+}
+
+/// A reply write that fails (client vanished) tears down only that
+/// connection; the service and the front-end keep serving.
+#[test]
+fn reply_write_failure_is_contained_to_the_connection() {
+    let _g = chaos_lock();
+    let svc = Arc::new(Service::start(
+        ServiceConfig {
+            workers: 1,
+            ..ServiceConfig::default()
+        },
+        Vec::new(),
+    ));
+    let stop = Arc::new(AtomicBool::new(false));
+    let server = serve_with(svc.clone(), "127.0.0.1:0", stop, ServerConfig::default()).unwrap();
+    let mut doomed = TcpStream::connect(server.local_addr()).unwrap();
+    failpoint::arm(failpoint::PROTOCOL_WRITE_FAIL, 0);
+    doomed
+        .write_all(b"{\"dataset\":\"gmm2d\",\"solver\":\"ddim\",\"nfe\":6,\"n\":2,\"seed\":1}\n")
+        .unwrap();
+    // The injected broken pipe closes the connection without a reply.
+    let mut reader = BufReader::new(doomed.try_clone().unwrap());
+    let mut line = String::new();
+    assert_eq!(
+        reader.read_line(&mut line).unwrap(),
+        0,
+        "failed-write connection must close, got: {line}"
+    );
+    // The request itself completed at the service layer (the fault was
+    // on the wire, after sampling) and a fresh connection still serves.
+    assert!(svc.metrics.completed.load(Ordering::Relaxed) >= 1);
+    let mut conn = TcpStream::connect(server.local_addr()).unwrap();
+    conn.write_all(b"{\"dataset\":\"gmm2d\",\"solver\":\"ddim\",\"nfe\":6,\"n\":2,\"seed\":2}\n")
+        .unwrap();
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    let mut ok = String::new();
+    reader.read_line(&mut ok).unwrap();
+    assert!(
+        !ok.contains("\"error\"") && ok.contains("samples"),
+        "front-end must keep serving after a write failure: {ok}"
+    );
+    assert!(
+        server.join(Duration::from_secs(10)),
+        "no leaked connection threads"
+    );
+    assert_counters_balance(&svc);
+    svc.shutdown();
+    failpoint::disarm_all();
+}
+
+/// A half-open client (partial frame, then silence) cannot hold drain
+/// hostage: the read timeout cuts it off and `join` completes.
+#[test]
+fn stalled_socket_does_not_block_drain() {
+    let _g = chaos_lock();
+    let svc = Arc::new(Service::start(
+        ServiceConfig {
+            workers: 1,
+            ..ServiceConfig::default()
+        },
+        Vec::new(),
+    ));
+    let stop = Arc::new(AtomicBool::new(false));
+    let server = serve_with(
+        svc.clone(),
+        "127.0.0.1:0",
+        stop,
+        ServerConfig {
+            read_timeout: Duration::from_millis(200),
+            ..ServerConfig::default()
+        },
+    )
+    .unwrap();
+    let mut half_open = TcpStream::connect(server.local_addr()).unwrap();
+    half_open.write_all(b"{\"dataset\":").unwrap(); // never finishes the frame
+    // Give the accept loop time to register the connection, then drain.
+    std::thread::sleep(Duration::from_millis(50));
+    let t0 = Instant::now();
+    server.begin_drain();
+    svc.shutdown();
+    assert!(
+        server.join(Duration::from_secs(10)),
+        "drain must reap the stalled connection"
+    );
+    assert!(
+        t0.elapsed() < Duration::from_secs(10),
+        "drain must be bounded by the read timeout"
+    );
+    drop(half_open);
+}
+
+/// The acceptance scenario for the numeric circuit breaker: a dict whose
+/// corrections blow up the solver gets its key degraded to uncorrected
+/// sampling after repeated failures, the poisonous blob is quarantined
+/// in the artifact store, and `rollback` restores corrected serving on
+/// the previous good version.
+#[test]
+fn breaker_quarantines_bad_dict_and_recovers_after_rollback() {
+    let _g = chaos_lock();
+    let dir = unique_dir("breaker");
+    let svc = Service::start(
+        ServiceConfig {
+            workers: 1,
+            artifact_root: Some(dir.clone()),
+            ..ServiceConfig::default()
+        },
+        Vec::new(),
+    );
+    let (dataset, solver, nfe) = ("gmm2d", "ddim", 6);
+    let corrected_req = |seed: u64| {
+        let mut r = request(dataset, solver, nfe, 4, seed);
+        r.use_pas = true;
+        r
+    };
+
+    // v1: a benign dict. Corrected serving works and matches the solo
+    // corrected run bitwise.
+    let mut good = CoordinateDict::new(4, ScaleMode::Relative, solver, dataset, nfe);
+    good.steps.insert(4, vec![0.95, 0.02, 0.0, 0.0]);
+    good.steps.insert(2, vec![1.0, 0.0, -0.05, 0.0]);
+    let v1 = svc.publish_dict(dataset, solver, nfe, good.clone()).unwrap();
+    assert_eq!(v1, Some(1));
+    let req = corrected_req(1);
+    let resp = recv_one(svc.submit(req.clone()).unwrap());
+    assert!(resp.error.is_none(), "{:?}", resp.error);
+    assert_eq!(resp.samples, solo_run(&req, resp.id, Some(&good)));
+
+    // v2: huge-but-finite coordinates. They pass serialization and
+    // checksums, then overflow to inf/NaN during corrected sampling.
+    let mut bad = CoordinateDict::new(4, ScaleMode::Relative, solver, dataset, nfe);
+    for step in 0..=nfe {
+        bad.steps.insert(step, vec![1e300; 4]);
+    }
+    let v2 = svc.publish_dict(dataset, solver, nfe, bad).unwrap();
+    assert_eq!(v2, Some(2));
+
+    // Three consecutive corrected cohorts blow up -> breaker opens.
+    for i in 0..3u64 {
+        let resp = recv_one(svc.submit(corrected_req(100 + i)).unwrap());
+        let err = resp
+            .error
+            .as_deref()
+            .unwrap_or_else(|| panic!("bad-dict request {i} must fail"));
+        assert!(err.starts_with("numeric:"), "{err}");
+    }
+    // The breaker opens (and containment runs) just after the third
+    // failure's reply is sent; wait for the observable effects.
+    let t0 = Instant::now();
+    let quarantine = dir.join("quarantine");
+    loop {
+        let open = svc.metrics.breaker_open.load(Ordering::Relaxed) == 1;
+        let quarantined = std::fs::read_dir(&quarantine)
+            .map(|d| d.count() > 0)
+            .unwrap_or(false);
+        if open && quarantined {
+            break;
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(30),
+            "breaker must open and quarantine the bad blob (open={open}, quarantined={quarantined})"
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    // Containment also drops the poisonous dict from the live registry.
+    assert!(svc.dict_snapshot(dataset, solver, nfe).is_none());
+    assert_eq!(
+        svc.health_json().get("status").and_then(|s| s.as_str()),
+        Some("degraded")
+    );
+
+    // Degraded serving: pas-requests succeed *uncorrected* while the
+    // breaker is open (bit-identical to an uncorrected solo run).
+    let req = corrected_req(200);
+    let resp = recv_one(svc.submit(req.clone()).unwrap());
+    assert!(resp.error.is_none(), "degraded serving must succeed: {:?}", resp.error);
+    assert_eq!(
+        resp.samples,
+        solo_run(&req, resp.id, None),
+        "breaker-open serving must be the uncorrected path"
+    );
+
+    // Rollback to v1 closes the breaker and corrected serving resumes.
+    let restored = svc.rollback(dataset, solver, nfe).unwrap();
+    assert_eq!(restored, 1);
+    assert_eq!(svc.metrics.breaker_open.load(Ordering::Relaxed), 0);
+    assert_eq!(
+        svc.health_json().get("status").and_then(|s| s.as_str()),
+        Some("ok")
+    );
+    let req = corrected_req(300);
+    let resp = recv_one(svc.submit(req.clone()).unwrap());
+    assert!(resp.error.is_none(), "{:?}", resp.error);
+    assert_eq!(
+        resp.samples,
+        solo_run(&req, resp.id, Some(&good)),
+        "corrected serving must resume on the rolled-back dict"
+    );
+    assert_counters_balance(&svc);
+    svc.shutdown();
+    let _ = std::fs::remove_dir_all(dir);
+}
