@@ -11,7 +11,10 @@
 //! duration* plus the shared-tick slowdown.
 //!
 //! Emits `BENCH_serve.json` (cwd) with per-mode latency percentiles and
-//! throughput at the same offered load.
+//! throughput at the same offered load, plus a `staging_cut` section
+//! recording the per-solver history windows the continuous scheduler now
+//! stages (`hist_depth()+2` x-nodes / `+1` d-nodes vs the old fixed
+//! `HIST_NODES` copy) and a measured depth-0 (ddim) continuous run.
 
 use pas::schedule::default_schedule;
 use pas::score::analytic::AnalyticEps;
@@ -44,10 +47,10 @@ fn percentile(sorted: &[f64], p: f64) -> f64 {
 }
 
 /// One solo rollout on the serving engine, for arrival-rate calibration.
-fn calibrate_solo_ms() -> f64 {
+fn calibrate_solo_ms(solver_name: &str) -> f64 {
     let ds = pas::data::registry::get(DATASET).unwrap();
     let model = AnalyticEps::from_dataset(&ds);
-    let solver = pas::solvers::registry::get(SOLVER).unwrap();
+    let solver = pas::solvers::registry::get(solver_name).unwrap();
     let steps = solver.steps_for_nfe(NFE).unwrap();
     let sched = default_schedule(steps);
     let dim = model.dim();
@@ -64,7 +67,7 @@ fn calibrate_solo_ms() -> f64 {
     t.elapsed().as_secs_f64() * 1e3 / reps as f64
 }
 
-fn run_mode(batching: Batching, interval: Duration) -> ModeStats {
+fn run_mode(solver_name: &str, batching: Batching, interval: Duration) -> ModeStats {
     let svc = Service::start(
         ServiceConfig {
             workers: 1, // one worker: scheduling policy, not parallelism, decides
@@ -89,7 +92,7 @@ fn run_mode(batching: Batching, interval: Duration) -> ModeStats {
             svc.submit(SamplingRequest {
                 id: 0,
                 dataset: DATASET.into(),
-                solver: SOLVER.into(),
+                solver: solver_name.into(),
                 nfe: NFE,
                 n_samples: N_PER_REQ,
                 seed: i as u64,
@@ -313,7 +316,7 @@ fn print_stats(name: &str, s: &ModeStats) {
 }
 
 fn main() {
-    let solo_ms = calibrate_solo_ms();
+    let solo_ms = calibrate_solo_ms(SOLVER);
     // Arrivals 3x faster than solo rollouts: sustained only by batching;
     // the two modes differ in *when* a late arrival can start.
     let interval = Duration::from_secs_f64(solo_ms / 3.0 / 1e3);
@@ -323,9 +326,9 @@ fn main() {
         interval.as_secs_f64() * 1e3
     );
     // Collect-then-run first (cold pool warms up in calibration above).
-    let collect = run_mode(Batching::CollectThenRun, interval);
+    let collect = run_mode(SOLVER, Batching::CollectThenRun, interval);
     print_stats("collect", &collect);
-    let continuous = run_mode(Batching::Continuous, interval);
+    let continuous = run_mode(SOLVER, Batching::Continuous, interval);
     print_stats("continuous", &continuous);
     let p99_speedup = collect.p99_ms / continuous.p99_ms.max(1e-9);
     let thpt_ratio = continuous.samples_per_s / collect.samples_per_s.max(1e-9);
@@ -365,11 +368,47 @@ fn main() {
         );
     }
 
+    // History-staging cut: per-solver, the continuous scheduler now
+    // stages hist_depth()+2 x-nodes and hist_depth()+1 d-nodes per tick
+    // instead of the fixed HIST_NODES / HIST_NODES−1 windows. Record the
+    // window sizes plus a measured continuous-mode run on a depth-0
+    // solver (ddim — the maximal cut) next to the default dpmpp3m run
+    // above, so the staging delta lands in the artifact.
+    let staging_cut = {
+        use pas::solvers::engine::HIST_NODES;
+        let mut arr: Vec<Json> = Vec::new();
+        for name in ["ddim", SOLVER] {
+            let depth = pas::solvers::registry::get(name).unwrap().hist_depth();
+            let mut o = Json::obj();
+            o.set("solver", Json::Str(name.into()))
+                .set("hist_depth", Json::Num(depth as f64))
+                .set("staged_x_nodes", Json::Num((depth + 2) as f64))
+                .set("staged_d_nodes", Json::Num((depth + 1) as f64))
+                .set("full_window_x_nodes", Json::Num(HIST_NODES as f64))
+                .set("full_window_d_nodes", Json::Num((HIST_NODES - 1) as f64));
+            arr.push(o);
+        }
+        let ddim_solo_ms = calibrate_solo_ms("ddim");
+        let ddim_interval = Duration::from_secs_f64(ddim_solo_ms / 3.0 / 1e3);
+        let ddim_cont = run_mode("ddim", Batching::Continuous, ddim_interval);
+        print_stats("ddim cont", &ddim_cont);
+        let mut o = Json::obj();
+        o.set("windows", Json::Arr(arr))
+            .set("ddim_solo_run_ms", Json::Num(ddim_solo_ms))
+            .set(
+                "ddim_arrival_interval_ms",
+                Json::Num(ddim_interval.as_secs_f64() * 1e3),
+            )
+            .set("ddim_continuous", stats_json(&ddim_cont));
+        o
+    };
+
     top.set("workload", workload)
         .set("collect_then_run", stats_json(&collect))
         .set("continuous", stats_json(&continuous))
         .set("p99_improvement", Json::Num(p99_speedup))
         .set("throughput_ratio", Json::Num(thpt_ratio))
+        .set("staging_cut", staging_cut)
         .set(
             "overload",
             Json::Arr(vec![overload_json(&tight), overload_json(&loose)]),

@@ -5,84 +5,149 @@
 //! sample-blocked GEMM pipeline) against
 //! [`AnalyticEps::eval_batch_per_sample`] (the pre-blocking per-sample
 //! path, same pool fan-out), across data dimensions {2, 64, 256} × mode
-//! counts × batch sizes.
+//! counts × batch sizes — and now across **kernel backends**: every cell
+//! is measured once per backend the hardware supports (scalar always;
+//! avx2 and the opt-in avx2fma tier where detected), selected via
+//! `force_backend` so one process sweeps them all.
 //!
 //! CI runs this in both `PAS_THREADS` matrix legs {1, 4} and uploads
 //! `BENCH_eval_batch.json` as an artifact alongside
 //! `BENCH_solver_step.json`; the d=256 low-rank workload (latent256) at
 //! PAS_THREADS=4 is the acceptance cell — the blocked pipeline must hold
 //! ≥ 2× rows/sec over the per-sample path there, with no regression at
-//! d=2.
+//! d=2. The backend sweep adds a second acceptance surface: the
+//! `avx2_vs_scalar_dim64` summary must show ≥ 1.5× blocked rows/sec at
+//! dim ≥ 64 on AVX2 hardware.
 
 #[path = "harness.rs"]
 mod harness;
 
 use pas::score::analytic::AnalyticEps;
 use pas::score::EpsModel;
+use pas::tensor::gemm::{force_backend, simd_available, Backend};
 use pas::traj::sample_prior;
 use pas::util::json::Json;
 use pas::util::rng::Pcg64;
 
 fn main() {
     let threads = pas::util::pool::Pool::global().size();
+    let mut backends = vec![Backend::Scalar];
+    if simd_available() {
+        backends.push(Backend::Avx2);
+        backends.push(Backend::Avx2Fma);
+    } else {
+        println!("note: CPU lacks avx2+fma; sweeping the scalar backend only");
+    }
     let mut cells: Vec<Json> = Vec::new();
+    // (backend, dataset, dim, modes, batch, blocked rows/s) — kept flat
+    // for the avx2-vs-scalar summary below.
+    let mut blocked_rows: Vec<(Backend, &'static str, usize, usize, usize, f64)> = Vec::new();
     println!("== analytic eval throughput: blocked GEMM pipeline vs per-sample (threads = {threads}) ==");
-    for ds_name in ["gmm2d", "gmm-hd64", "latent256"] {
-        let ds = pas::data::registry::get(ds_name).unwrap();
-        let dim = ds.dim();
-        let all_modes = ds.spec.modes.len();
-        // Mode-count axis: the full mixture and a single-mode slice of it
-        // (same covariance structure, no softmax mixing work).
-        for n_modes in [1usize, all_modes] {
-            let model = AnalyticEps::new(
-                format!("{ds_name}[m{n_modes}]"),
-                ds.spec.modes[..n_modes].to_vec(),
-            );
-            for n in [64usize, 1024] {
-                let mut rng = Pcg64::seed(3);
-                let x = sample_prior(&mut rng, n, dim, 10.0);
-                let mut out = vec![0.0; n * dim];
-                let blocked = harness::bench(
-                    &format!("{ds_name} d{dim} m{n_modes} b{n} blocked"),
-                    3,
-                    20,
-                    0.4,
-                    || {
-                        model.eval_batch(&x, n, 2.0, &mut out);
-                        harness::black_box(&out);
-                    },
+    for &be in &backends {
+        let active = force_backend(be);
+        println!("-- kernel backend: {} --", active.name());
+        for ds_name in ["gmm2d", "gmm-hd64", "latent256"] {
+            let ds = pas::data::registry::get(ds_name).unwrap();
+            let dim = ds.dim();
+            let all_modes = ds.spec.modes.len();
+            // Mode-count axis: the full mixture and a single-mode slice of it
+            // (same covariance structure, no softmax mixing work).
+            for n_modes in [1usize, all_modes] {
+                let model = AnalyticEps::new(
+                    format!("{ds_name}[m{n_modes}]"),
+                    ds.spec.modes[..n_modes].to_vec(),
                 );
-                let scalar = harness::bench(
-                    &format!("{ds_name} d{dim} m{n_modes} b{n} per-sample"),
-                    3,
-                    20,
-                    0.4,
-                    || {
-                        model.eval_batch_per_sample(&x, n, 2.0, &mut out);
-                        harness::black_box(&out);
-                    },
-                );
-                let rows_blocked = n as f64 / blocked.median_s;
-                let rows_scalar = n as f64 / scalar.median_s;
-                let speedup = rows_blocked / rows_scalar;
-                println!(
-                    "  -> {rows_blocked:.3e} rows/s blocked vs {rows_scalar:.3e} per-sample ({speedup:.2}x)"
-                );
-                let mut cell = Json::obj();
-                cell.set("dataset", Json::Str(ds_name.into()))
-                    .set("dim", Json::Num(dim as f64))
-                    .set("modes", Json::Num(n_modes as f64))
-                    .set("batch", Json::Num(n as f64))
-                    .set("rows_per_s_blocked", Json::Num(rows_blocked))
-                    .set("rows_per_s_per_sample", Json::Num(rows_scalar))
-                    .set("speedup", Json::Num(speedup));
-                cells.push(cell);
+                for n in [64usize, 1024] {
+                    let mut rng = Pcg64::seed(3);
+                    let x = sample_prior(&mut rng, n, dim, 10.0);
+                    let mut out = vec![0.0; n * dim];
+                    let blocked = harness::bench(
+                        &format!("[{}] {ds_name} d{dim} m{n_modes} b{n} blocked", active.name()),
+                        3,
+                        20,
+                        0.4,
+                        || {
+                            model.eval_batch(&x, n, 2.0, &mut out);
+                            harness::black_box(&out);
+                        },
+                    );
+                    let scalar = harness::bench(
+                        &format!(
+                            "[{}] {ds_name} d{dim} m{n_modes} b{n} per-sample",
+                            active.name()
+                        ),
+                        3,
+                        20,
+                        0.4,
+                        || {
+                            model.eval_batch_per_sample(&x, n, 2.0, &mut out);
+                            harness::black_box(&out);
+                        },
+                    );
+                    let rows_blocked = n as f64 / blocked.median_s;
+                    let rows_scalar = n as f64 / scalar.median_s;
+                    let speedup = rows_blocked / rows_scalar;
+                    println!(
+                        "  -> {rows_blocked:.3e} rows/s blocked vs {rows_scalar:.3e} per-sample ({speedup:.2}x)"
+                    );
+                    blocked_rows.push((be, ds_name, dim, n_modes, n, rows_blocked));
+                    let mut cell = Json::obj();
+                    cell.set("backend", Json::Str(active.name().into()))
+                        .set("dataset", Json::Str(ds_name.into()))
+                        .set("dim", Json::Num(dim as f64))
+                        .set("modes", Json::Num(n_modes as f64))
+                        .set("batch", Json::Num(n as f64))
+                        .set("rows_per_s_blocked", Json::Num(rows_blocked))
+                        .set("rows_per_s_per_sample", Json::Num(rows_scalar))
+                        .set("speedup", Json::Num(speedup));
+                    cells.push(cell);
+                }
             }
         }
     }
+
+    // avx2-vs-scalar summary at dim ≥ 64 (the SIMD acceptance surface):
+    // per-cell blocked-rows ratio, recorded in the artifact so the
+    // ≥ 1.5× claim is checkable even when CI hardware varies.
+    let mut summary: Vec<Json> = Vec::new();
+    if backends.contains(&Backend::Avx2) {
+        println!("-- avx2 vs scalar, blocked rows/s at dim >= 64 --");
+        for &(be, ds_name, dim, n_modes, n, avx2_rows) in &blocked_rows {
+            if be != Backend::Avx2 || dim < 64 {
+                continue;
+            }
+            let scalar_rows = blocked_rows
+                .iter()
+                .find(|&&(b, d, dd, m, bn, _)| {
+                    b == Backend::Scalar && d == ds_name && dd == dim && m == n_modes && bn == n
+                })
+                .map(|&(_, _, _, _, _, r)| r)
+                .expect("scalar leg runs first");
+            let ratio = avx2_rows / scalar_rows;
+            println!("  {ds_name} d{dim} m{n_modes} b{n}: {ratio:.2}x");
+            let mut s = Json::obj();
+            s.set("dataset", Json::Str(ds_name.into()))
+                .set("dim", Json::Num(dim as f64))
+                .set("modes", Json::Num(n_modes as f64))
+                .set("batch", Json::Num(n as f64))
+                .set("avx2_over_scalar_blocked", Json::Num(ratio));
+            summary.push(s);
+        }
+    }
+
     let mut top = Json::obj();
     top.set("bench", Json::Str("eval_throughput".into()))
         .set("threads", Json::Num(threads as f64))
+        .set(
+            "backends",
+            Json::Arr(
+                backends
+                    .iter()
+                    .map(|b| Json::Str(b.name().into()))
+                    .collect(),
+            ),
+        )
+        .set("avx2_vs_scalar_dim64", Json::Arr(summary))
         .set("results", Json::Arr(cells));
     match std::fs::write("BENCH_eval_batch.json", top.to_string()) {
         Ok(()) => println!("\nwrote BENCH_eval_batch.json"),

@@ -1,10 +1,13 @@
 //! Bench: full sampling runs on the analytic models — the L3 compute hot
 //! path — comparing the seed's allocate-per-step driver
 //! (`run_solver_legacy`) against the workspace-pooled [`SamplerEngine`]
-//! in its serving configuration (`Record::None`, pooled row-sharding).
+//! in its serving configuration (`Record::None`, pooled row-sharding),
+//! swept across every kernel backend the hardware supports (scalar
+//! always; avx2 / avx2fma where detected).
 //!
 //! Emits `BENCH_solver_step.json` (cwd) with per-cell medians and
-//! speedups so the perf trajectory is tracked across PRs.
+//! speedups — each cell tagged with its `backend` — so the perf
+//! trajectory is tracked across PRs and backends.
 
 #[path = "harness.rs"]
 mod harness;
@@ -14,101 +17,133 @@ use pas::score::analytic::AnalyticEps;
 use pas::score::EpsModel;
 use pas::solvers::engine::{Record, SamplerEngine};
 use pas::solvers::{registry, run_solver_legacy};
+use pas::tensor::gemm::{force_backend, simd_available, Backend};
 use pas::traj::sample_prior;
 use pas::util::json::Json;
 use pas::util::rng::Pcg64;
 
 fn main() {
+    let mut backends = vec![Backend::Scalar];
+    if simd_available() {
+        backends.push(Backend::Avx2);
+        backends.push(Backend::Avx2Fma);
+    } else {
+        println!("note: CPU lacks avx2+fma; sweeping the scalar backend only");
+    }
     let mut cells: Vec<Json> = Vec::new();
     println!("== solver_step: full 10-NFE sampling run, batch 256 ==");
     println!("   (legacy = seed allocate-per-step driver, engine = Record::None workspace)");
-    for ds_name in ["gmm2d", "gmm-hd64", "latent256"] {
-        let ds = pas::data::registry::get(ds_name).unwrap();
-        let model = AnalyticEps::from_dataset(&ds);
-        let mut rng = Pcg64::seed(1);
-        let n = 256;
-        let dim = ds.dim();
-        // Multi-eval solvers (heun, dpm2) included since the engine now
-        // row-shards them too (internal evals go per-chunk).
-        for solver_name in [
-            "ddim", "heun", "dpm2", "ipndm", "dpmpp3m", "unipc3m", "deis-tab3",
-        ] {
-            let solver = registry::get(solver_name).unwrap();
-            let steps = solver.steps_for_nfe(10).unwrap();
-            let sched = default_schedule(steps);
-            let x_t = sample_prior(&mut rng, n, dim, sched.t_max());
-            let legacy = harness::bench(
-                &format!("{ds_name}/{solver_name} 10NFE b{n} legacy"),
-                1,
-                5,
-                0.5,
-                || {
-                    harness::black_box(run_solver_legacy(
-                        solver.as_ref(),
-                        model.as_ref(),
-                        &x_t,
-                        n,
-                        &sched,
-                        None,
-                    ));
-                },
-            );
-            let mut engine = SamplerEngine::with_record(Record::None);
-            let mut x0 = vec![0.0; n * dim];
-            let engined = harness::bench(
-                &format!("{ds_name}/{solver_name} 10NFE b{n} engine"),
-                1,
-                5,
-                0.5,
-                || {
-                    engine.run_into(
-                        solver.as_ref(),
-                        model.as_ref(),
-                        &x_t,
-                        n,
-                        &sched,
-                        None,
-                        &mut x0,
-                    );
-                    harness::black_box(&x0);
-                },
-            );
-            let speedup = legacy.median_s / engined.median_s;
-            println!("  -> engine speedup vs legacy driver: {speedup:.2}x");
-            let mut cell = Json::obj();
-            cell.set("dataset", Json::Str(ds_name.into()))
-                .set("solver", Json::Str(solver_name.into()))
-                .set("nfe", Json::Num(10.0))
-                .set("batch", Json::Num(n as f64))
-                .set("legacy_median_s", Json::Num(legacy.median_s))
-                .set("engine_median_s", Json::Num(engined.median_s))
-                .set("speedup", Json::Num(speedup));
-            cells.push(cell);
+    for &be in &backends {
+        let active = force_backend(be);
+        println!("-- kernel backend: {} --", active.name());
+        for ds_name in ["gmm2d", "gmm-hd64", "latent256"] {
+            let ds = pas::data::registry::get(ds_name).unwrap();
+            let model = AnalyticEps::from_dataset(&ds);
+            let mut rng = Pcg64::seed(1);
+            let n = 256;
+            let dim = ds.dim();
+            // Multi-eval solvers (heun, dpm2) included since the engine now
+            // row-shards them too (internal evals go per-chunk).
+            for solver_name in [
+                "ddim", "heun", "dpm2", "ipndm", "dpmpp3m", "unipc3m", "deis-tab3",
+            ] {
+                let solver = registry::get(solver_name).unwrap();
+                let steps = solver.steps_for_nfe(10).unwrap();
+                let sched = default_schedule(steps);
+                let x_t = sample_prior(&mut rng, n, dim, sched.t_max());
+                let legacy = harness::bench(
+                    &format!("[{}] {ds_name}/{solver_name} 10NFE b{n} legacy", active.name()),
+                    1,
+                    5,
+                    0.5,
+                    || {
+                        harness::black_box(run_solver_legacy(
+                            solver.as_ref(),
+                            model.as_ref(),
+                            &x_t,
+                            n,
+                            &sched,
+                            None,
+                        ));
+                    },
+                );
+                let mut engine = SamplerEngine::with_record(Record::None);
+                let mut x0 = vec![0.0; n * dim];
+                let engined = harness::bench(
+                    &format!("[{}] {ds_name}/{solver_name} 10NFE b{n} engine", active.name()),
+                    1,
+                    5,
+                    0.5,
+                    || {
+                        engine.run_into(
+                            solver.as_ref(),
+                            model.as_ref(),
+                            &x_t,
+                            n,
+                            &sched,
+                            None,
+                            &mut x0,
+                        );
+                        harness::black_box(&x0);
+                    },
+                );
+                let speedup = legacy.median_s / engined.median_s;
+                println!("  -> engine speedup vs legacy driver: {speedup:.2}x");
+                let mut cell = Json::obj();
+                cell.set("backend", Json::Str(active.name().into()))
+                    .set("dataset", Json::Str(ds_name.into()))
+                    .set("solver", Json::Str(solver_name.into()))
+                    .set("nfe", Json::Num(10.0))
+                    .set("batch", Json::Num(n as f64))
+                    .set("legacy_median_s", Json::Num(legacy.median_s))
+                    .set("engine_median_s", Json::Num(engined.median_s))
+                    .set("speedup", Json::Num(speedup));
+                cells.push(cell);
+            }
         }
     }
-    // Raw model eval throughput (the inner hot loop).
+    // Raw model eval throughput (the inner hot loop), per backend.
     println!("\n== analytic eps eval, batch 256 ==");
-    for ds_name in ["gmm2d", "gmm-hd64", "latent256"] {
-        let ds = pas::data::registry::get(ds_name).unwrap();
-        let model = AnalyticEps::from_dataset(&ds);
-        let mut rng = Pcg64::seed(2);
-        let n = 256;
-        let x = sample_prior(&mut rng, n, ds.dim(), 10.0);
-        let mut out = vec![0.0; n * ds.dim()];
-        let r = harness::bench(&format!("{ds_name}/eval b{n}"), 3, 20, 0.5, || {
-            model.eval_batch(&x, n, 2.0, &mut out);
-            harness::black_box(&out);
-        });
-        let mut cell = Json::obj();
-        cell.set("dataset", Json::Str(ds_name.into()))
-            .set("kind", Json::Str("raw_eval".into()))
-            .set("batch", Json::Num(n as f64))
-            .set("eval_median_s", Json::Num(r.median_s));
-        cells.push(cell);
+    for &be in &backends {
+        let active = force_backend(be);
+        for ds_name in ["gmm2d", "gmm-hd64", "latent256"] {
+            let ds = pas::data::registry::get(ds_name).unwrap();
+            let model = AnalyticEps::from_dataset(&ds);
+            let mut rng = Pcg64::seed(2);
+            let n = 256;
+            let x = sample_prior(&mut rng, n, ds.dim(), 10.0);
+            let mut out = vec![0.0; n * ds.dim()];
+            let r = harness::bench(
+                &format!("[{}] {ds_name}/eval b{n}", active.name()),
+                3,
+                20,
+                0.5,
+                || {
+                    model.eval_batch(&x, n, 2.0, &mut out);
+                    harness::black_box(&out);
+                },
+            );
+            let mut cell = Json::obj();
+            cell.set("backend", Json::Str(active.name().into()))
+                .set("dataset", Json::Str(ds_name.into()))
+                .set("kind", Json::Str("raw_eval".into()))
+                .set("batch", Json::Num(n as f64))
+                .set("eval_median_s", Json::Num(r.median_s));
+            cells.push(cell);
+        }
     }
     let mut top = Json::obj();
     top.set("bench", Json::Str("solver_step".into()))
         .set("threads", Json::Num(pas::util::pool::Pool::global().size() as f64))
+        .set(
+            "backends",
+            Json::Arr(
+                backends
+                    .iter()
+                    .map(|b| Json::Str(b.name().into()))
+                    .collect(),
+            ),
+        )
         .set("results", Json::Arr(cells));
     match std::fs::write("BENCH_solver_step.json", top.to_string()) {
         Ok(()) => println!("\nwrote BENCH_solver_step.json"),

@@ -347,9 +347,10 @@ fn cmd_serve(args: &Args) -> Result<(), String> {
     let server = serve_with(svc.clone(), &addr, stop, ServerConfig::default())
         .map_err(|e| e.to_string())?;
     println!(
-        "pas server listening on {} (line-delimited JSON; SIGTERM/Ctrl-C drains, \
-         --drain-ms {drain_ms})",
-        server.local_addr()
+        "pas server listening on {} (line-delimited JSON; kernel backend {}; \
+         SIGTERM/Ctrl-C drains, --drain-ms {drain_ms})",
+        server.local_addr(),
+        crate::tensor::gemm::backend_name()
     );
     #[cfg(unix)]
     {

@@ -172,6 +172,8 @@ pub struct PoolInfo {
     pub backlog: usize,
     pub uptime_s: f64,
     pub batching: &'static str,
+    /// Active matmul kernel backend (`scalar` / `avx2` / `avx2fma`).
+    pub kernel_backend: &'static str,
 }
 
 /// Escape a label value for the exposition format (backslash and quote).
@@ -257,6 +259,13 @@ pub fn render_text(metrics: &Metrics, keys: &[KeySnapshot], pool: &PoolInfo) -> 
     let _ = writeln!(out, "# HELP pas_batching Active batching mode");
     let _ = writeln!(out, "# TYPE pas_batching gauge");
     let _ = writeln!(out, "pas_batching{{mode=\"{}\"}} 1", escape_label(pool.batching));
+    let _ = writeln!(out, "# HELP pas_kernel_backend Active matmul kernel backend");
+    let _ = writeln!(out, "# TYPE pas_kernel_backend gauge");
+    let _ = writeln!(
+        out,
+        "pas_kernel_backend{{backend=\"{}\"}} 1",
+        escape_label(pool.kernel_backend)
+    );
 
     let _ = writeln!(out, "# HELP pas_keys Compatibility keys in the router table");
     let _ = writeln!(out, "# TYPE pas_keys gauge");
@@ -298,6 +307,7 @@ pub fn health_json(
     uptime_s: f64,
     dicts_registered: usize,
     artifact_store: Option<String>,
+    kernel_backend: &str,
 ) -> Json {
     let requests = metrics.requests.load(Ordering::Relaxed);
     let completed = metrics.completed.load(Ordering::Relaxed);
@@ -350,7 +360,8 @@ pub fn health_json(
         )
         .set("keys_saturated", Json::UInt(saturated as u64))
         .set("max_key_queue_depth", Json::UInt(max_queue as u64))
-        .set("dicts_registered", Json::UInt(dicts_registered as u64));
+        .set("dicts_registered", Json::UInt(dicts_registered as u64))
+        .set("kernel_backend", Json::Str(kernel_backend.into()));
     match artifact_store {
         Some(root) => o.set("artifact_store", Json::Str(root)),
         None => o.set("artifact_store", Json::Null),
@@ -407,9 +418,11 @@ mod tests {
             backlog: 0,
             uptime_s: 1.0,
             batching: "continuous",
+            kernel_backend: "scalar",
         };
         let text = render_text(&metrics, &keys, &pool);
         assert!(text.contains("pas_requests_total 7"));
+        assert!(text.contains("pas_kernel_backend{backend=\"scalar\"} 1"));
         assert!(text.contains("pas_serve_latency_ms_bucket{le=\"+Inf\"} 1"));
         assert!(text.contains("pas_serve_latency_ms_count 1"));
         assert!(text.contains("pas_key_queue_depth{key=\"gmm2d/ddim/6\"} 3"));
@@ -446,18 +459,22 @@ mod tests {
             retired: 6,
             shed: 0,
         }];
-        let h = health_json(&metrics, &keys, 256, 2.0, 1, None);
+        let h = health_json(&metrics, &keys, 256, 2.0, 1, None, "scalar");
         assert_eq!(h.get("status").and_then(|s| s.as_str()), Some("ok"));
         assert_eq!(h.get("in_flight").and_then(|v| v.as_u64()), Some(3));
+        assert_eq!(
+            h.get("kernel_backend").and_then(|s| s.as_str()),
+            Some("scalar")
+        );
         keys[0].queue_depth = 250; // >= 80% of 256
-        let h = health_json(&metrics, &keys, 256, 2.0, 1, None);
+        let h = health_json(&metrics, &keys, 256, 2.0, 1, None, "scalar");
         assert_eq!(h.get("status").and_then(|s| s.as_str()), Some("overloaded"));
         assert_eq!(h.get("keys_saturated").and_then(|v| v.as_u64()), Some(1));
         // An open numeric breaker degrades health (overload still wins).
         keys[0].queue_depth = 1;
         metrics.breaker_open.store(1, Ordering::Relaxed);
         metrics.numeric_failures.store(3, Ordering::Relaxed);
-        let h = health_json(&metrics, &keys, 256, 2.0, 1, None);
+        let h = health_json(&metrics, &keys, 256, 2.0, 1, None, "scalar");
         assert_eq!(h.get("status").and_then(|s| s.as_str()), Some("degraded"));
         assert_eq!(h.get("breakers_open").and_then(|v| v.as_u64()), Some(1));
         assert_eq!(h.get("numeric_failures").and_then(|v| v.as_u64()), Some(3));

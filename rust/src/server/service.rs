@@ -867,6 +867,10 @@ impl Service {
             .set(
                 "dicts_registered",
                 Json::UInt(self.dicts.read().unwrap().len() as u64),
+            )
+            .set(
+                "kernel_backend",
+                Json::Str(crate::tensor::gemm::backend_name().into()),
             );
         match self.store.as_ref() {
             Some(s) => o.set(
@@ -934,6 +938,7 @@ impl Service {
                 Batching::Continuous => "continuous",
                 Batching::CollectThenRun => "collect-then-run",
             },
+            kernel_backend: crate::tensor::gemm::backend_name(),
         };
         metrics_export::render_text(&self.metrics, &keys, &pool)
     }
@@ -954,6 +959,7 @@ impl Service {
             self.started.elapsed().as_secs_f64(),
             self.dicts.read().unwrap().len(),
             store_root,
+            crate::tensor::gemm::backend_name(),
         )
     }
 
@@ -2728,8 +2734,18 @@ mod tests {
         assert!(text.contains("pas_key_queue_depth{key=\"gmm2d/ddim/6\"} 0"));
         assert!(text.contains("pas_key_retired_total{key=\"gmm2d/ddim/6\"} 3"));
         assert!(text.contains("pas_pool_utilization"));
+        // The active kernel backend is hardware-dependent; assert the
+        // series exists and carries the live selection.
+        assert!(text.contains(&format!(
+            "pas_kernel_backend{{backend=\"{}\"}} 1",
+            crate::tensor::gemm::backend_name()
+        )));
         let h = svc.health_json();
         assert_eq!(h.get("status").and_then(|s| s.as_str()), Some("ok"));
+        assert_eq!(
+            h.get("kernel_backend").and_then(|s| s.as_str()),
+            Some(crate::tensor::gemm::backend_name())
+        );
         assert_eq!(h.get("completed").and_then(|v| v.as_u64()), Some(3));
         assert_eq!(h.get("in_flight").and_then(|v| v.as_u64()), Some(0));
         assert!(h.get("latency_p50_ms").and_then(|v| v.as_f64()).unwrap() > 0.0);

@@ -87,6 +87,11 @@ impl Solver for DpmPp {
         Some(-ctx.t * self.m0_coef(ctx))
     }
 
+    fn hist_depth(&self) -> usize {
+        // Deepest read: m_hist_into at node j - (max_order - 1).
+        self.max_order - 1
+    }
+
     fn scratch_spec(&self, dim: usize, _n: usize) -> ScratchSpec {
         // Data predictions m0 (always) and m1/m2 as the warm-up ramp
         // unlocks them: sized for the max order so one arena covers

@@ -79,10 +79,16 @@ impl Default for EngineConfig {
     }
 }
 
-/// History nodes retained in `Record::None` mode. The deepest look-back
-/// among registered solvers is 3 nodes behind the current one (order-4
-/// Adams–Bashforth, UniPC-3's corrector), i.e. 4 live nodes, plus one
-/// slot that is always the in-flight write row — 6 leaves a margin slot.
+/// Upper bound on history nodes retained in `Record::None` mode, and the
+/// fixed depth of each [`SlotEngine`] slot's per-row ring. The deepest
+/// look-back among registered solvers is 3 nodes behind the current one
+/// (order-4 Adams–Bashforth, UniPC-3's corrector), i.e. 4 live nodes,
+/// plus one slot that is always the in-flight write row — 6 leaves a
+/// margin slot. Per-run retention is now sized from
+/// [`Solver::hist_depth`] (clamped to `HIST_NODES - 2`), so this bound
+/// only pays for itself when a solver actually declares the deepest
+/// window; slot rings still use it because admission happens before the
+/// serving key's solver is consulted.
 pub const HIST_NODES: usize = 6;
 
 /// Batches smaller than this (elements) step sequentially — sharding
@@ -283,7 +289,18 @@ impl SamplerEngine {
         let n_steps = sched.n_steps();
         let (xs_cap, ds_cap) = match self.cfg.record {
             Record::Full => (n_steps + 1, n_steps.max(1)),
-            Record::None => ((n_steps + 1).min(HIST_NODES), n_steps.max(1).min(HIST_NODES)),
+            Record::None => {
+                // Retain only the solver's declared lookback: at step j
+                // it reads xs[j-depth..=j] (depth+1 live rows plus the
+                // in-flight write row) and ds[j-depth..j] (depth rows
+                // plus the write row). Clamped so an over-declaring
+                // solver degrades to the historical full window.
+                let depth = solver.hist_depth().min(HIST_NODES - 2);
+                (
+                    (n_steps + 1).min(depth + 2),
+                    n_steps.max(1).min(depth + 1),
+                )
+            }
         };
         self.xs.reset(row_len, xs_cap);
         self.ds.reset(row_len, ds_cap);
@@ -443,9 +460,12 @@ pub struct SlotEngine {
     free: Vec<usize>,
     n_active: usize,
     /// Ring-layout staging of the cohort's state history: node `m` lives
-    /// at staging slot `m % HIST_NODES`, each a flat `(rows, dim)` block.
+    /// at staging slot `m % (hist_depth + 2)`, each a flat `(rows, dim)`
+    /// block — sized per tick from the stepping solver's
+    /// [`Solver::hist_depth`], not the worst-case [`HIST_NODES`].
     xh_stage: Vec<f64>,
-    /// Same for the direction history (committed nodes `< j` only).
+    /// Same for the direction history (committed nodes `< j` only),
+    /// modulus `hist_depth + 1`.
     dh_stage: Vec<f64>,
     /// Cohort directions for the in-flight step.
     d_buf: Vec<f64>,
@@ -525,6 +545,10 @@ impl SlotEngine {
                 }
             };
             let slot = &mut self.slots[id];
+            // Slot rings keep the worst-case depth: admission happens
+            // before the key's solver is known here, and a fixed shape
+            // keeps re-admission into a freed slot allocation-free.
+            // Only the per-tick staging gather is depth-trimmed.
             slot.xs.reset(dim, HIST_NODES);
             slot.ds.reset(dim, HIST_NODES);
             slot.xs.push_row(&x_t[r * dim..(r + 1) * dim]);
@@ -599,12 +623,23 @@ impl SlotEngine {
         let j = self.slots[slots[0]].xs.len() - 1;
         assert!(j < self.n_steps, "cohort already finished");
         let row_len = rows * dim;
-        let stage_need = HIST_NODES * row_len;
-        if self.xh_stage.len() < stage_need {
-            self.xh_stage.resize(stage_need, 0.0);
+        // Stage only the lookback window the solver declared: at step j
+        // it reads xs[j-depth ..= j] and ds[j-depth .. j]
+        // ([`Solver::hist_depth`]), so single-step solvers gather one
+        // state node per tick instead of the full `HIST_NODES - 1`
+        // window. The ring caps (and staging layout moduli — they must
+        // match) are depth+2 for xs (depth+1 live rows + the in-flight
+        // write slot of the ring convention) and depth+1 for ds (depth
+        // live rows + write slot). Clamped so an over-declaring solver
+        // degrades to the historical full window.
+        let depth = solver.hist_depth().min(HIST_NODES - 2);
+        let xw = depth + 2;
+        let dw = depth + 1;
+        if self.xh_stage.len() < xw * row_len {
+            self.xh_stage.resize(xw * row_len, 0.0);
         }
-        if self.dh_stage.len() < stage_need {
-            self.dh_stage.resize(stage_need, 0.0);
+        if self.dh_stage.len() < dw * row_len {
+            self.dh_stage.resize(dw * row_len, 0.0);
         }
         if self.d_buf.len() < row_len {
             self.d_buf.resize(row_len, 0.0);
@@ -613,13 +648,15 @@ impl SlotEngine {
             self.out_buf.resize(row_len, 0.0);
         }
         // Gather the admissible history windows into ring-layout staging:
-        // exactly the nodes a `NodeView::ring(len, HIST_NODES)` admits,
-        // copied from each slot's own ring (bit-exact reads of the row's
-        // past). States: nodes `len - (HIST_NODES - 1) ..= j` of `len =
-        // j + 1`; directions: the trailing window of the `j` committed.
-        let x_lo = (j + 1).saturating_sub(HIST_NODES - 1);
+        // exactly the nodes a `NodeView::ring(len, xw)` admits, copied
+        // from each slot's own (HIST_NODES-deep) ring — bit-exact reads
+        // of the row's past. States: nodes `len - (xw - 1) ..= j` of
+        // `len = j + 1`; directions: the trailing `dw - 1` of the `j`
+        // committed. The x loop always runs at least once (the current
+        // node), so the residency/cursor asserts hold at every depth.
+        let x_lo = (j + 1).saturating_sub(xw - 1);
         for node in x_lo..=j {
-            let base = (node % HIST_NODES) * row_len;
+            let base = (node % xw) * row_len;
             for (r, &id) in slots.iter().enumerate() {
                 let s = &self.slots[id];
                 assert!(s.active, "slot {id} not resident");
@@ -628,9 +665,9 @@ impl SlotEngine {
                     .copy_from_slice(s.xs.row(node));
             }
         }
-        let d_lo = j.saturating_sub(HIST_NODES - 1);
+        let d_lo = j.saturating_sub(dw - 1);
         for node in d_lo..j {
-            let base = (node % HIST_NODES) * row_len;
+            let base = (node % dw) * row_len;
             for (r, &id) in slots.iter().enumerate() {
                 self.dh_stage[base + r * dim..base + (r + 1) * dim]
                     .copy_from_slice(self.slots[id].ds.row(node));
@@ -639,7 +676,7 @@ impl SlotEngine {
         let t = sched.ts[j];
         let t_next = sched.ts[j + 1];
         let x_cur: &[f64] = {
-            let base = (j % HIST_NODES) * row_len;
+            let base = (j % xw) * row_len;
             // Reborrow immutably for the rest of the step; staging is not
             // written again until the next call.
             &self.xh_stage[base..base + row_len]
@@ -647,8 +684,8 @@ impl SlotEngine {
         let d = &mut self.d_buf[..row_len];
         // Primary evaluation, then the hook, exactly as `run_into`.
         model.eval_batch(x_cur, rows, t, d);
-        let xs_view = NodeView::ring(self.xh_stage.as_ptr(), row_len, j + 1, HIST_NODES);
-        let ds_view = NodeView::ring(self.dh_stage.as_ptr(), row_len, j, HIST_NODES);
+        let xs_view = NodeView::ring(self.xh_stage.as_ptr(), row_len, j + 1, xw);
+        let ds_view = NodeView::ring(self.dh_stage.as_ptr(), row_len, j, dw);
         let ctx = StepCtx {
             j,
             i_paper: self.n_steps - j,
@@ -961,7 +998,7 @@ mod tests {
         // (admission tick, rows): the third admission lands after the
         // first retired, so it reuses freed slots mid-flight.
         let arrivals: [(usize, usize); 3] = [(0, 3), (2, 2), (8, 4)];
-        for name in ["ddim", "ipndm", "dpmpp3m", "unipc3m", "heun"] {
+        for name in ["ddim", "ipndm", "ipndm4", "dpmpp3m", "unipc3m", "deis-tab3", "heun"] {
             let solver = registry::get(name).unwrap();
             let mut rng = Pcg64::seed(21);
             let priors: Vec<Vec<f64>> = arrivals

@@ -19,6 +19,10 @@ impl Solver for Euler {
         Some(ctx.h())
     }
 
+    fn hist_depth(&self) -> usize {
+        0 // current x and d only
+    }
+
     fn step(
         &self,
         _model: &dyn EpsModel,

@@ -414,6 +414,27 @@ pub trait Solver: Send + Sync {
         ScratchSpec::NONE
     }
 
+    /// Deepest history lookback `step` performs, in *steps back from the
+    /// current node*: at step `j` the solver promises to read only
+    /// `ctx.xs[j - hist_depth() ..= j]` and `ctx.ds[j - hist_depth() ..
+    /// j]` (clamped at 0). `0` therefore means "current state and primary
+    /// direction only" — no history at all. Drivers use this to stage /
+    /// retain only the nodes actually read: the [`engine::SlotEngine`]
+    /// serve path gathers `hist_depth()`-deep windows per tick instead of
+    /// the full `engine::HIST_NODES - 1` window, so single-step solvers
+    /// stop paying the multistep staging cost.
+    ///
+    /// The promise covers the whole step context — [`DirectionHook`]s run
+    /// against the same trimmed views (the PAS hook reads no history, so
+    /// this is safe for every registered hook). Returning a depth smaller
+    /// than what `step` actually reads makes the ring views panic on the
+    /// evicted node; the conservative default — the deepest window the
+    /// engine can retain — is always correct for solvers written against
+    /// [`engine::HIST_NODES`].
+    fn hist_depth(&self) -> usize {
+        engine::HIST_NODES - 2
+    }
+
     /// Advance the batch: write `x_{t_{j+1}}` into `out`. `scratch` must
     /// provide at least `scratch_spec(dim, n).len_for(n)` elements; step
     /// performs no heap allocation.

@@ -55,6 +55,12 @@ impl Solver for Ipndm {
         Some(ctx.h() * AB[ord - 1][0])
     }
 
+    fn hist_depth(&self) -> usize {
+        // Deepest read: ds[len - k] for k ≤ order - 1, i.e. order - 1
+        // steps back from the current node.
+        self.order - 1
+    }
+
     fn step(
         &self,
         _model: &dyn EpsModel,
@@ -206,6 +212,11 @@ impl Solver for DeisTab {
         let mut coefs = [0.0f64; 4];
         lagrange_integrals_into(&nodes[..k], ctx.t, ctx.t_next, &mut coefs[..k]);
         Some(coefs[0])
+    }
+
+    fn hist_depth(&self) -> usize {
+        // Deepest read: ds[len - m] for m ≤ order - 1.
+        self.order - 1
     }
 
     // Quadrature temporaries are stack arrays (order <= 4), so no arena

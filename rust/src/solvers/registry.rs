@@ -74,6 +74,41 @@ mod tests {
     }
 
     #[test]
+    fn declared_hist_depths_are_pinned() {
+        use crate::solvers::engine::HIST_NODES;
+        // Every registered depth must fit the engine's retention bound.
+        for name in ALL {
+            let s = get(name).unwrap();
+            assert!(
+                s.hist_depth() <= HIST_NODES - 2,
+                "{name} declares a deeper lookback than the engine retains"
+            );
+        }
+        // Pin the known values so deepening a solver's history reads
+        // forces its declaration (and this table) to be updated in step.
+        for (name, depth) in [
+            ("ddim", 0),
+            ("heun", 0),
+            ("dpm2", 0),
+            ("ipndm1", 0),
+            ("ipndm2", 1),
+            ("ipndm3", 2),
+            ("ipndm", 2),
+            ("ipndm4", 3),
+            ("deis-tab1", 0),
+            ("deis-tab2", 1),
+            ("deis-tab3", 2),
+            ("dpmpp2m", 1),
+            ("dpmpp3m", 2),
+            ("unipc1m", 1),
+            ("unipc2m", 2),
+            ("unipc3m", 3),
+        ] {
+            assert_eq!(get(name).unwrap().hist_depth(), depth, "{name}");
+        }
+    }
+
+    #[test]
     fn pas_support_flags() {
         assert!(supports_pas("ddim"));
         assert!(supports_pas("ipndm"));

@@ -23,6 +23,10 @@ impl Solver for Heun {
         None // second eval depends on d nonlinearly through x_pred
     }
 
+    fn hist_depth(&self) -> usize {
+        0 // both evals derive from the current node
+    }
+
     fn scratch_spec(&self, dim: usize, _n: usize) -> ScratchSpec {
         // d2: the corrector's direction at the predicted state.
         ScratchSpec {
@@ -76,6 +80,10 @@ impl Solver for Dpm2 {
 
     fn gamma(&self, _ctx: &StepCtx<'_>) -> Option<f64> {
         None
+    }
+
+    fn hist_depth(&self) -> usize {
+        0 // midpoint eval derives from the current node
     }
 
     fn scratch_spec(&self, dim: usize, _n: usize) -> ScratchSpec {

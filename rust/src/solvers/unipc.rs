@@ -171,6 +171,13 @@ impl Solver for UniPc {
         None // current eval feeds both UniC and UniP; PAS targets DDIM/iPNDM
     }
 
+    fn hist_depth(&self) -> usize {
+        // Deepest read: the UniC corrector's m_at_into touches xs/ds at
+        // node j - 1 - k for k < order_c ≤ max_order, i.e. max_order
+        // steps back (one deeper than the predictor's window).
+        self.max_order
+    }
+
     fn scratch_spec(&self, dim: usize, _n: usize) -> ScratchSpec {
         // m_t, x_cur, m0, mk_tmp, d1_new, plus (max_order - 1) divided-
         // difference rows (reused between corrector and predictor).

@@ -1,4 +1,5 @@
-//! Register-tiled, cache-blocked matmul micro-kernels.
+//! Register-tiled, cache-blocked matmul micro-kernels with a runtime
+//! CPU-feature-dispatched SIMD backend.
 //!
 //! Every dense product on the hot paths — the analytic model's
 //! sample-blocked evaluation ([`crate::score::analytic`]), the Gram
@@ -12,12 +13,55 @@
 //! the working set inside L1/L2 instead of re-streaming panels from
 //! memory once per output row.
 //!
+//! # Kernel backends
+//!
+//! Each public kernel dispatches on a process-wide [`Backend`], selected
+//! lazily on first use ([`backend`]):
+//!
+//! * [`Backend::Scalar`] — the portable loops in `mod scalar` below; the
+//!   reference semantics every other backend must reproduce.
+//! * [`Backend::Avx2`] — explicit `std::arch` x86-64 AVX2 kernels
+//!   (`_mm256_*_pd`) that vectorize **across independent output entries /
+//!   dot lanes, never within a single entry's reduction**. Each 64-bit
+//!   vector lane carries exactly one scalar accumulator chain, advanced
+//!   as `acc = add(acc, mul(a, b))` — two roundings per step, exactly
+//!   like the scalar `acc += a * b` it replaces, with no FMA contraction
+//!   (Rust/LLVM never contracts separate mul+add without fast-math). The
+//!   four per-entry accumulator lanes of the dot-ordered kernels map onto
+//!   one 256-bit vector; the ascending-k kernels spread the NR
+//!   register-tile columns across vectors while each column's reduction
+//!   stays a serial ascending-k chain in its own lane. The backend is
+//!   therefore **bit-identical** to scalar, and the golden/parity suites
+//!   (`tests/golden_trajectories.rs`, `tests/engine_parity.rs`,
+//!   `tests/eval_blocked_parity.rs`, `tests/backend_parity.rs`) pin it
+//!   with `assert_eq!`, not tolerances.
+//! * [`Backend::Avx2Fma`] — opt-in reduced-rounding serving tier:
+//!   identical loop structure, but each multiply-add contracts to
+//!   `_mm256_fmadd_pd`. One rounding per madd instead of two, so results
+//!   are (slightly, often *more* accurately) different bits. It is
+//!   tolerance-tested in `tests/backend_parity.rs`, excluded from the
+//!   golden fixtures, and never auto-selected — only
+//!   `PAS_KERNEL=avx2fma` (or [`force_backend`]) turns it on.
+//!
+//! Selection order: `PAS_KERNEL=scalar|avx2|avx2fma` overrides
+//! everything; otherwise auto-detection picks AVX2 iff the CPU reports
+//! both `avx2` and `fma` (`is_x86_feature_detected!`). Requesting a SIMD
+//! backend on hardware without the features logs a one-line warning and
+//! falls back to scalar, so a misconfigured `PAS_KERNEL` can never
+//! crash. [`force_backend`] re-pins the process-wide choice (used by the
+//! bench sweeps); the `*_with` kernel variants take an explicit backend
+//! argument without touching global state (used by the parity tests so
+//! they can compare backends while golden tests run concurrently in the
+//! same process). The active choice is observable: `pas serve` logs it at
+//! startup and `{"cmd":"status"}` / health JSON report `kernel_backend`.
+//!
 //! # Determinism contract
 //!
 //! These kernels are **bit-compatible replacements**, not merely
-//! numerically close ones. Tiling only reorders *which entry* is worked
-//! on when; the reduction order *within each output entry* is pinned to
-//! the exact sequence of the scalar code each kernel replaces:
+//! numerically close ones. Tiling (and lane-level SIMD) only reorders
+//! *which entry* is worked on when; the reduction order *within each
+//! output entry* is pinned to the exact sequence of the scalar code each
+//! kernel replaces:
 //!
 //! * [`gemm_nn_acc`] / [`gemm_tn_acc`] accumulate each entry strictly in
 //!   ascending-k order — the order of the seed `matmul_acc` (and of every
@@ -30,32 +74,38 @@
 //!   k-blocking: the lane combine happens once per entry, so the lanes
 //!   must span the whole reduction — our k never exceeds the data
 //!   dimension (≤ a few hundred), so the a-panel stays cache-resident
-//!   anyway.
+//!   anyway. On AVX2 the four lanes *are* one `__m256d`; the horizontal
+//!   combine is done in scalar f64 arithmetic in the exact same tree.
 //! * [`gemm_nt_seq_into`] accumulates each entry with a single
 //!   ascending-k chain (the order of the dense eigenbasis pass in
 //!   `ModeEval::Full`).
 //!
 //! The engine-parity and golden-trajectory suites (and
 //! `tests/eval_blocked_parity.rs`) pin this bitwise; the in-module tests
-//! below pin each kernel against a scalar reference with `assert_eq!`.
+//! below pin each kernel against a scalar reference with `assert_eq!`
+//! under whatever backend is active, and `tests/backend_parity.rs` pins
+//! AVX2 ≡ scalar explicitly across edge tile shapes.
 //!
 //! # Tile sizes
 //!
 //! `MR=4 × NR=8` for the k-sequential kernels: 32 f64 accumulators fill
 //! half the 16 × 256-bit vector registers of the baseline x86-64 target
-//! (4 ymm), leaving room for the broadcast `a` value and a streamed `b`
-//! row; the inner loop is a textbook broadcast-FMA that autovectorizes
-//! over the NR columns. The dot-ordered kernel uses `MR=2 × NR=4` with a
-//! 4-wide lane accumulator per entry (8 ymm total) — lanes map onto one
-//! vector register each, and the per-entry horizontal combine happens
-//! once at the end. `KC=256` k-panels keep an MR×KC `a` slab (8 KiB) and
-//! a KC×NR `b` slab (16 KiB) simultaneously L1/L2-resident. Edge tiles
-//! fall back to the same loops with clamped bounds — order per entry is
-//! unchanged, only fewer entries are in flight.
+//! (8 ymm), leaving room for the broadcast `a` value and a streamed `b`
+//! row; the scalar inner loop is a textbook broadcast-multiply-add that
+//! autovectorizes over the NR columns, and the AVX2 path issues the same
+//! shape explicitly (two `__m256d` per tile row). The dot-ordered kernel
+//! uses `MR=2 × NR=4` with a 4-wide lane accumulator per entry (8 ymm
+//! total). `KC=256` k-panels keep an MR×KC `a` slab (8 KiB) and a KC×NR
+//! `b` slab (16 KiB) simultaneously L1/L2-resident. Edge tiles fall back
+//! to the same scalar loops with clamped bounds on every backend — order
+//! per entry is unchanged, only fewer entries are in flight.
 //!
-//! All kernels write into caller-owned output (and read caller-owned
-//! inputs) with **zero heap allocations** — `tests/alloc_audit.rs`
-//! asserts this under a counting global allocator.
+//! All kernels (and the dispatch layer itself, after first selection)
+//! read caller-owned inputs and write caller-owned output with **zero
+//! heap allocations** — `tests/alloc_audit.rs` asserts this under a
+//! counting global allocator, per backend.
+
+use std::sync::atomic::{AtomicU8, Ordering};
 
 /// Register-tile rows of the ascending-k kernels.
 pub const MR: usize = 4;
@@ -69,29 +119,210 @@ pub const MR_DOT: usize = 2;
 /// Register-tile columns of the dot-ordered kernel.
 pub const NR_DOT: usize = 4;
 
+/// Register-tile rows of the sequential-reduction kernel.
+const MS: usize = 4;
+/// Register-tile columns of the sequential-reduction kernel.
+const NS: usize = 4;
+
+// ---------------------------------------------------------------------------
+// Backend selection
+// ---------------------------------------------------------------------------
+
+/// Kernel backend identifier. Discriminants are the values stored in the
+/// process-wide selection atomic (0 is reserved for "not yet selected").
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+#[repr(u8)]
+pub enum Backend {
+    /// Portable scalar loops — the reference semantics.
+    Scalar = 1,
+    /// Explicit AVX2, bit-identical to scalar (mul + add, no FMA).
+    Avx2 = 2,
+    /// Explicit AVX2 with FMA contraction — reduced-rounding, *not*
+    /// bit-identical; opt-in only.
+    Avx2Fma = 3,
+}
+
+impl Backend {
+    /// All backends, in fallback order (used by the bench sweeps).
+    pub const ALL: [Backend; 3] = [Backend::Scalar, Backend::Avx2, Backend::Avx2Fma];
+
+    /// Stable lowercase name (the `PAS_KERNEL` vocabulary).
+    pub fn name(self) -> &'static str {
+        match self {
+            Backend::Scalar => "scalar",
+            Backend::Avx2 => "avx2",
+            Backend::Avx2Fma => "avx2fma",
+        }
+    }
+
+    /// Inverse of [`Backend::name`].
+    pub fn parse(s: &str) -> Option<Backend> {
+        match s {
+            "scalar" => Some(Backend::Scalar),
+            "avx2" => Some(Backend::Avx2),
+            "avx2fma" => Some(Backend::Avx2Fma),
+            _ => None,
+        }
+    }
+
+    /// Whether this backend is bit-identical to [`Backend::Scalar`]
+    /// (everything except the FMA tier). Golden-fixture suites must only
+    /// run under bit-identical backends.
+    pub fn bit_identical(self) -> bool {
+        self != Backend::Avx2Fma
+    }
+
+    fn from_u8(v: u8) -> Backend {
+        match v {
+            2 => Backend::Avx2,
+            3 => Backend::Avx2Fma,
+            _ => Backend::Scalar,
+        }
+    }
+}
+
+/// Process-wide selected backend; 0 = not yet selected.
+static ACTIVE: AtomicU8 = AtomicU8::new(0);
+
+/// Whether the SIMD backends can run on this machine (x86-64 with AVX2
+/// and FMA). Feature detection caches its result internally and does not
+/// allocate.
+#[cfg(target_arch = "x86_64")]
+pub fn simd_available() -> bool {
+    is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+}
+
+/// Whether the SIMD backends can run on this machine (x86-64 with AVX2
+/// and FMA).
+#[cfg(not(target_arch = "x86_64"))]
+pub fn simd_available() -> bool {
+    false
+}
+
+/// The backend the hardware supports by default: AVX2 when available,
+/// scalar otherwise. The FMA tier is never auto-selected — it changes
+/// bits, so it must be asked for.
+fn auto_backend() -> Backend {
+    if simd_available() {
+        Backend::Avx2
+    } else {
+        Backend::Scalar
+    }
+}
+
+/// Clamp a requested backend to what the hardware can run, warning on
+/// downgrade so a misdispatched binary is diagnosable from its logs.
+fn resolve(req: Backend) -> Backend {
+    match req {
+        Backend::Scalar => Backend::Scalar,
+        Backend::Avx2 | Backend::Avx2Fma => {
+            if simd_available() {
+                req
+            } else {
+                eprintln!(
+                    "pas: kernel backend {:?} requested but CPU lacks avx2+fma; using scalar",
+                    req.name()
+                );
+                Backend::Scalar
+            }
+        }
+    }
+}
+
+/// First-use selection: honor `PAS_KERNEL` if set and valid, otherwise
+/// auto-detect. Called at most a handful of times per process (races on
+/// first use all compute the same answer); allocation here is outside
+/// every steady-state window.
+fn select_backend() -> Backend {
+    match std::env::var("PAS_KERNEL") {
+        Ok(v) => {
+            let v = v.trim();
+            match Backend::parse(v) {
+                Some(b) => resolve(b),
+                None => {
+                    if !v.is_empty() {
+                        eprintln!(
+                            "pas: unknown PAS_KERNEL value {v:?} (expected scalar|avx2|avx2fma); auto-selecting"
+                        );
+                    }
+                    auto_backend()
+                }
+            }
+        }
+        Err(_) => auto_backend(),
+    }
+}
+
+/// The process-wide active kernel backend, selecting it on first call.
+/// Steady-state this is one relaxed atomic load.
+pub fn backend() -> Backend {
+    let v = ACTIVE.load(Ordering::Relaxed);
+    if v != 0 {
+        return Backend::from_u8(v);
+    }
+    let b = select_backend();
+    ACTIVE.store(b as u8, Ordering::Relaxed);
+    b
+}
+
+/// Stable name of the active backend (for logs / status / metrics).
+pub fn backend_name() -> &'static str {
+    backend().name()
+}
+
+/// Re-pin the process-wide backend, clamped to hardware support; returns
+/// the backend actually installed. Bench sweeps use this to exercise each
+/// backend through the full (non-`_with`) call graph. Tests should prefer
+/// the `*_with` kernel variants, which don't touch global state.
+pub fn force_backend(req: Backend) -> Backend {
+    let b = resolve(req);
+    ACTIVE.store(b as u8, Ordering::Relaxed);
+    b
+}
+
+/// Route one kernel call to the active backend's implementation. SIMD
+/// arms are compiled only on x86-64 and guarded by runtime feature
+/// detection, so reaching an `unsafe` SIMD entry point implies the
+/// required CPU features are present (its only safety condition).
+macro_rules! dispatch {
+    ($be:expr, $scalar:expr, $avx2:expr, $fma:expr) => {
+        match $be {
+            #[cfg(target_arch = "x86_64")]
+            Backend::Avx2 if simd_available() => unsafe { $avx2 },
+            #[cfg(target_arch = "x86_64")]
+            Backend::Avx2Fma if simd_available() => unsafe { $fma },
+            _ => $scalar,
+        }
+    };
+}
+
+// ---------------------------------------------------------------------------
+// Public dispatched kernels
+// ---------------------------------------------------------------------------
+
 /// `c[m,n] += a[m,k] * b[k,n]`, all row-major. Bit-identical to the seed
 /// `matmul_acc` loop nest: each output entry accumulates in ascending-k
-/// order.
+/// order. Dispatches on the active [`backend`].
 pub fn gemm_nn_acc(a: &[f64], m: usize, k: usize, b: &[f64], n: usize, c: &mut [f64]) {
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(b.len(), k * n);
-    debug_assert_eq!(c.len(), m * n);
-    let mut p0 = 0;
-    while p0 < k {
-        let pc = KC.min(k - p0);
-        let mut i0 = 0;
-        while i0 < m {
-            let mr = MR.min(m - i0);
-            let mut j0 = 0;
-            while j0 < n {
-                let nr = NR.min(n - j0);
-                nn_micro(a, k, b, n, c, i0, j0, p0, pc, mr, nr);
-                j0 += NR;
-            }
-            i0 += MR;
-        }
-        p0 += KC;
-    }
+    gemm_nn_acc_with(backend(), a, m, k, b, n, c);
+}
+
+/// [`gemm_nn_acc`] on an explicit backend (no global state).
+pub fn gemm_nn_acc_with(
+    be: Backend,
+    a: &[f64],
+    m: usize,
+    k: usize,
+    b: &[f64],
+    n: usize,
+    c: &mut [f64],
+) {
+    dispatch!(
+        be,
+        scalar::gemm_nn_acc(a, m, k, b, n, c),
+        avx2::exact::gemm_nn_acc(a, m, k, b, n, c),
+        avx2::fma::gemm_nn_acc(a, m, k, b, n, c)
+    )
 }
 
 /// `c = a * b` (zeroes `c`, then [`gemm_nn_acc`]).
@@ -100,10 +331,137 @@ pub fn gemm_nn_into(a: &[f64], m: usize, k: usize, b: &[f64], n: usize, c: &mut 
     gemm_nn_acc(a, m, k, b, n, c);
 }
 
+/// [`gemm_nn_into`] on an explicit backend (no global state).
+pub fn gemm_nn_into_with(
+    be: Backend,
+    a: &[f64],
+    m: usize,
+    k: usize,
+    b: &[f64],
+    n: usize,
+    c: &mut [f64],
+) {
+    c.fill(0.0);
+    gemm_nn_acc_with(be, a, m, k, b, n, c);
+}
+
+/// `c[m,n] += a[m,k] * b[n,k]ᵀ` — i.e. `c[i][j] += dot(a_i, b_j)` with
+/// each entry reduced in **exactly** the 4-lane order of
+/// [`crate::tensor::dot`]. This is the Gram-matrix / projection /
+/// eigenbasis-forward kernel: the register tile loads each `a` panel once
+/// for [`NR_DOT`] columns and each `b` panel once for [`MR_DOT`] rows.
+/// Dispatches on the active [`backend`].
+pub fn gemm_nt_dot_acc(a: &[f64], m: usize, b: &[f64], n: usize, k: usize, c: &mut [f64]) {
+    gemm_nt_dot_acc_with(backend(), a, m, b, n, k, c);
+}
+
+/// [`gemm_nt_dot_acc`] on an explicit backend (no global state).
+pub fn gemm_nt_dot_acc_with(
+    be: Backend,
+    a: &[f64],
+    m: usize,
+    b: &[f64],
+    n: usize,
+    k: usize,
+    c: &mut [f64],
+) {
+    dispatch!(
+        be,
+        scalar::nt_dot_kernel::<true>(a, m, b, n, k, c),
+        avx2::exact::gemm_nt_dot(a, m, b, n, k, c, true),
+        avx2::fma::gemm_nt_dot(a, m, b, n, k, c, true)
+    )
+}
+
+/// `c[m,n] = a[m,k] * b[n,k]ᵀ` in [`crate::tensor::dot`] order — assign
+/// semantics, bit-identical to `c[i][j] = dot(a_i, b_j)` per entry
+/// (including a `-0.0` dot result, which `0.0 + s` would lose).
+/// Dispatches on the active [`backend`].
+pub fn gemm_nt_dot_into(a: &[f64], m: usize, b: &[f64], n: usize, k: usize, c: &mut [f64]) {
+    gemm_nt_dot_into_with(backend(), a, m, b, n, k, c);
+}
+
+/// [`gemm_nt_dot_into`] on an explicit backend (no global state).
+pub fn gemm_nt_dot_into_with(
+    be: Backend,
+    a: &[f64],
+    m: usize,
+    b: &[f64],
+    n: usize,
+    k: usize,
+    c: &mut [f64],
+) {
+    dispatch!(
+        be,
+        scalar::nt_dot_kernel::<false>(a, m, b, n, k, c),
+        avx2::exact::gemm_nt_dot(a, m, b, n, k, c, false),
+        avx2::fma::gemm_nt_dot(a, m, b, n, k, c, false)
+    )
+}
+
+/// `c[m,n] = a[m,k] * b[n,k]ᵀ` with each entry reduced by a **single
+/// ascending-k chain** (`s += a[i][p] * b[j][p]`, p = 0..k) — the order
+/// of the dense `ModeEval::Full` eigenbasis pass. MS×NS = 4×4 register
+/// tile: 16 independent scalar chains pipeline the FP-add latency even
+/// though each chain is serial. Dispatches on the active [`backend`].
+pub fn gemm_nt_seq_into(a: &[f64], m: usize, b: &[f64], n: usize, k: usize, c: &mut [f64]) {
+    gemm_nt_seq_into_with(backend(), a, m, b, n, k, c);
+}
+
+/// [`gemm_nt_seq_into`] on an explicit backend (no global state).
+pub fn gemm_nt_seq_into_with(
+    be: Backend,
+    a: &[f64],
+    m: usize,
+    b: &[f64],
+    n: usize,
+    k: usize,
+    c: &mut [f64],
+) {
+    dispatch!(
+        be,
+        scalar::gemm_nt_seq_into(a, m, b, n, k, c),
+        avx2::exact::gemm_nt_seq_into(a, m, b, n, k, c),
+        avx2::fma::gemm_nt_seq_into(a, m, b, n, k, c)
+    )
+}
+
+/// `c[m,n] += a[k,m]ᵀ * b[k,n]` — the rank-k update kernel (batch
+/// covariance `Cᵀ C`, eigen reconstruction `Vᵀ diag(s) V`). Each entry
+/// accumulates in ascending-k order; the register tile turns the
+/// per-sample rank-1 update loop into MR×NR outer-product multiply-adds
+/// per loaded panel. Dispatches on the active [`backend`].
+pub fn gemm_tn_acc(a: &[f64], k: usize, m: usize, b: &[f64], n: usize, c: &mut [f64]) {
+    gemm_tn_acc_with(backend(), a, k, m, b, n, c);
+}
+
+/// [`gemm_tn_acc`] on an explicit backend (no global state).
+pub fn gemm_tn_acc_with(
+    be: Backend,
+    a: &[f64],
+    k: usize,
+    m: usize,
+    b: &[f64],
+    n: usize,
+    c: &mut [f64],
+) {
+    dispatch!(
+        be,
+        scalar::gemm_tn_acc(a, k, m, b, n, c),
+        avx2::exact::gemm_tn_acc(a, k, m, b, n, c),
+        avx2::fma::gemm_tn_acc(a, k, m, b, n, c)
+    )
+}
+
+// ---------------------------------------------------------------------------
+// Shared scalar micro-kernels (edge tiles on every backend)
+// ---------------------------------------------------------------------------
+
 /// MR×NR block of `c += a·b`, k-panel `[p0, p0+pc)`. Partial sums are
 /// carried in `c` across panels, so per-entry addition order stays a
 /// single ascending-k chain.
 #[inline(always)]
+#[allow(clippy::too_many_arguments)]
 fn nn_micro(
     a: &[f64],
     k: usize,
@@ -162,164 +520,548 @@ fn nn_micro(
     }
 }
 
-/// `c[m,n] += a[m,k] * b[n,k]ᵀ` — i.e. `c[i][j] += dot(a_i, b_j)` with
-/// each entry reduced in **exactly** the 4-lane order of
-/// [`crate::tensor::dot`]. This is the Gram-matrix / projection /
-/// eigenbasis-forward kernel: the register tile loads each `a` panel once
-/// for [`NR_DOT`] columns and each `b` panel once for [`MR_DOT`] rows.
-pub fn gemm_nt_dot_acc(a: &[f64], m: usize, b: &[f64], n: usize, k: usize, c: &mut [f64]) {
-    nt_dot_kernel::<true>(a, m, b, n, k, c);
-}
-
-/// `c[m,n] = a[m,k] * b[n,k]ᵀ` in [`crate::tensor::dot`] order — assign
-/// semantics, bit-identical to `c[i][j] = dot(a_i, b_j)` per entry
-/// (including a `-0.0` dot result, which `0.0 + s` would lose).
-pub fn gemm_nt_dot_into(a: &[f64], m: usize, b: &[f64], n: usize, k: usize, c: &mut [f64]) {
-    nt_dot_kernel::<false>(a, m, b, n, k, c);
-}
-
-/// Shared dot-order micro-kernel; `ACC` selects accumulate (`+=`) vs
-/// assign (`=`) on the final per-entry store — everything else, including
-/// the debug shape checks, lives here once.
-fn nt_dot_kernel<const ACC: bool>(
+/// MR×NR block of the rank-k update `c += aᵀ·b`, k-panel `[p0, p0+pc)`,
+/// clamped bounds. Ascending-k per entry, partial sums carried in `c`.
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+fn tn_micro(
     a: &[f64],
     m: usize,
     b: &[f64],
     n: usize,
+    c: &mut [f64],
+    i0: usize,
+    j0: usize,
+    p0: usize,
+    pc: usize,
+    mr: usize,
+    nr: usize,
+) {
+    let mut acc = [[0.0f64; NR]; MR];
+    for ir in 0..mr {
+        for jr in 0..nr {
+            acc[ir][jr] = c[(i0 + ir) * n + j0 + jr];
+        }
+    }
+    for p in p0..p0 + pc {
+        let brow = &b[p * n + j0..p * n + j0 + nr];
+        for (ir, row) in acc.iter_mut().enumerate().take(mr) {
+            let av = a[p * m + i0 + ir];
+            for jr in 0..nr {
+                row[jr] += av * brow[jr];
+            }
+        }
+    }
+    for ir in 0..mr {
+        for jr in 0..nr {
+            c[(i0 + ir) * n + j0 + jr] = acc[ir][jr];
+        }
+    }
+}
+
+/// MS×NS block of the sequential-reduction `c = a·bᵀ`, clamped bounds.
+/// Single ascending-k chain per entry, assign store.
+#[inline(always)]
+#[allow(clippy::too_many_arguments)]
+fn nt_seq_micro(
+    a: &[f64],
+    b: &[f64],
+    n: usize,
     k: usize,
     c: &mut [f64],
+    i0: usize,
+    j0: usize,
+    mr: usize,
+    nr: usize,
 ) {
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(b.len(), n * k);
-    debug_assert_eq!(c.len(), m * n);
-    let k4 = k & !3;
-    let mut i0 = 0;
-    while i0 < m {
-        let mr = MR_DOT.min(m - i0);
-        let mut j0 = 0;
-        while j0 < n {
-            let nr = NR_DOT.min(n - j0);
-            // One 4-wide lane accumulator per entry: lane l holds the
-            // partial sum over indices ≡ l (mod 4), exactly dot's s0..s3.
-            let mut lanes = [[[0.0f64; 4]; NR_DOT]; MR_DOT];
-            let mut p = 0;
-            while p < k4 {
-                for (ir, lrow) in lanes.iter_mut().enumerate().take(mr) {
-                    let ap = &a[(i0 + ir) * k + p..(i0 + ir) * k + p + 4];
-                    for (jr, lv) in lrow.iter_mut().enumerate().take(nr) {
-                        let bp = &b[(j0 + jr) * k + p..(j0 + jr) * k + p + 4];
-                        for l in 0..4 {
-                            lv[l] += ap[l] * bp[l];
-                        }
-                    }
-                }
-                p += 4;
+    let mut acc = [[0.0f64; NS]; MS];
+    for p in 0..k {
+        for (ir, row) in acc.iter_mut().enumerate().take(mr) {
+            let av = a[(i0 + ir) * k + p];
+            for (jr, cv) in row.iter_mut().enumerate().take(nr) {
+                *cv += av * b[(j0 + jr) * k + p];
             }
-            for ir in 0..mr {
-                let arow = &a[(i0 + ir) * k..(i0 + ir) * k + k];
-                for jr in 0..nr {
-                    let brow = &b[(j0 + jr) * k..(j0 + jr) * k + k];
-                    let lv = &lanes[ir][jr];
-                    let mut s = (lv[0] + lv[1]) + (lv[2] + lv[3]);
-                    let mut p = k4;
-                    while p < k {
-                        s += arow[p] * brow[p];
-                        p += 1;
-                    }
-                    if ACC {
-                        c[(i0 + ir) * n + j0 + jr] += s;
-                    } else {
-                        c[(i0 + ir) * n + j0 + jr] = s;
-                    }
-                }
-            }
-            j0 += NR_DOT;
         }
-        i0 += MR_DOT;
+    }
+    for ir in 0..mr {
+        for jr in 0..nr {
+            c[(i0 + ir) * n + j0 + jr] = acc[ir][jr];
+        }
     }
 }
 
-/// `c[m,n] = a[m,k] * b[n,k]ᵀ` with each entry reduced by a **single
-/// ascending-k chain** (`s += a[i][p] * b[j][p]`, p = 0..k) — the order
-/// of the dense `ModeEval::Full` eigenbasis pass. MR×NR = 4×4 register
-/// tile: 16 independent scalar chains pipeline the FP-add latency even
-/// though each chain is serial.
-pub fn gemm_nt_seq_into(a: &[f64], m: usize, b: &[f64], n: usize, k: usize, c: &mut [f64]) {
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(b.len(), n * k);
-    debug_assert_eq!(c.len(), m * n);
-    const MS: usize = 4;
-    const NS: usize = 4;
-    let mut i0 = 0;
-    while i0 < m {
-        let mr = MS.min(m - i0);
-        let mut j0 = 0;
-        while j0 < n {
-            let nr = NS.min(n - j0);
-            let mut acc = [[0.0f64; NS]; MS];
-            for p in 0..k {
-                for (ir, row) in acc.iter_mut().enumerate().take(mr) {
-                    let av = a[(i0 + ir) * k + p];
-                    for (jr, cv) in row.iter_mut().enumerate().take(nr) {
-                        *cv += av * b[(j0 + jr) * k + p];
-                    }
-                }
-            }
-            for ir in 0..mr {
-                for jr in 0..nr {
-                    c[(i0 + ir) * n + j0 + jr] = acc[ir][jr];
-                }
-            }
-            j0 += NS;
-        }
-        i0 += MS;
-    }
-}
+// ---------------------------------------------------------------------------
+// Scalar backend — the portable reference loops
+// ---------------------------------------------------------------------------
 
-/// `c[m,n] += a[k,m]ᵀ * b[k,n]` — the rank-k update kernel (batch
-/// covariance `Cᵀ C`, eigen reconstruction `Vᵀ diag(s) V`). Each entry
-/// accumulates in ascending-k order; the register tile turns the
-/// per-sample rank-1 update loop into MR×NR outer-product FMAs per loaded
-/// panel.
-pub fn gemm_tn_acc(a: &[f64], k: usize, m: usize, b: &[f64], n: usize, c: &mut [f64]) {
-    debug_assert_eq!(a.len(), k * m);
-    debug_assert_eq!(b.len(), k * n);
-    debug_assert_eq!(c.len(), m * n);
-    let mut p0 = 0;
-    while p0 < k {
-        let pc = KC.min(k - p0);
+mod scalar {
+    use super::{nn_micro, nt_seq_micro, tn_micro, KC, MR, MR_DOT, MS, NR, NR_DOT, NS};
+
+    pub fn gemm_nn_acc(a: &[f64], m: usize, k: usize, b: &[f64], n: usize, c: &mut [f64]) {
+        debug_assert_eq!(a.len(), m * k);
+        debug_assert_eq!(b.len(), k * n);
+        debug_assert_eq!(c.len(), m * n);
+        let mut p0 = 0;
+        while p0 < k {
+            let pc = KC.min(k - p0);
+            let mut i0 = 0;
+            while i0 < m {
+                let mr = MR.min(m - i0);
+                let mut j0 = 0;
+                while j0 < n {
+                    let nr = NR.min(n - j0);
+                    nn_micro(a, k, b, n, c, i0, j0, p0, pc, mr, nr);
+                    j0 += NR;
+                }
+                i0 += MR;
+            }
+            p0 += KC;
+        }
+    }
+
+    /// Shared dot-order kernel; `ACC` selects accumulate (`+=`) vs assign
+    /// (`=`) on the final per-entry store — everything else, including
+    /// the debug shape checks, lives here once.
+    pub fn nt_dot_kernel<const ACC: bool>(
+        a: &[f64],
+        m: usize,
+        b: &[f64],
+        n: usize,
+        k: usize,
+        c: &mut [f64],
+    ) {
+        debug_assert_eq!(a.len(), m * k);
+        debug_assert_eq!(b.len(), n * k);
+        debug_assert_eq!(c.len(), m * n);
+        let k4 = k & !3;
         let mut i0 = 0;
         while i0 < m {
-            let mr = MR.min(m - i0);
+            let mr = MR_DOT.min(m - i0);
             let mut j0 = 0;
             while j0 < n {
-                let nr = NR.min(n - j0);
-                let mut acc = [[0.0f64; NR]; MR];
-                for ir in 0..mr {
-                    for jr in 0..nr {
-                        acc[ir][jr] = c[(i0 + ir) * n + j0 + jr];
+                let nr = NR_DOT.min(n - j0);
+                // One 4-wide lane accumulator per entry: lane l holds the
+                // partial sum over indices ≡ l (mod 4), exactly dot's s0..s3.
+                let mut lanes = [[[0.0f64; 4]; NR_DOT]; MR_DOT];
+                let mut p = 0;
+                while p < k4 {
+                    for (ir, lrow) in lanes.iter_mut().enumerate().take(mr) {
+                        let ap = &a[(i0 + ir) * k + p..(i0 + ir) * k + p + 4];
+                        for (jr, lv) in lrow.iter_mut().enumerate().take(nr) {
+                            let bp = &b[(j0 + jr) * k + p..(j0 + jr) * k + p + 4];
+                            for l in 0..4 {
+                                lv[l] += ap[l] * bp[l];
+                            }
+                        }
                     }
+                    p += 4;
                 }
-                for p in p0..p0 + pc {
-                    let brow = &b[p * n + j0..p * n + j0 + nr];
-                    for (ir, row) in acc.iter_mut().enumerate().take(mr) {
-                        let av = a[p * m + i0 + ir];
-                        for jr in 0..nr {
-                            row[jr] += av * brow[jr];
+                for ir in 0..mr {
+                    let arow = &a[(i0 + ir) * k..(i0 + ir) * k + k];
+                    for jr in 0..nr {
+                        let brow = &b[(j0 + jr) * k..(j0 + jr) * k + k];
+                        let lv = &lanes[ir][jr];
+                        let mut s = (lv[0] + lv[1]) + (lv[2] + lv[3]);
+                        let mut p = k4;
+                        while p < k {
+                            s += arow[p] * brow[p];
+                            p += 1;
+                        }
+                        if ACC {
+                            c[(i0 + ir) * n + j0 + jr] += s;
+                        } else {
+                            c[(i0 + ir) * n + j0 + jr] = s;
                         }
                     }
                 }
-                for ir in 0..mr {
-                    for jr in 0..nr {
-                        c[(i0 + ir) * n + j0 + jr] = acc[ir][jr];
+                j0 += NR_DOT;
+            }
+            i0 += MR_DOT;
+        }
+    }
+
+    pub fn gemm_nt_seq_into(a: &[f64], m: usize, b: &[f64], n: usize, k: usize, c: &mut [f64]) {
+        debug_assert_eq!(a.len(), m * k);
+        debug_assert_eq!(b.len(), n * k);
+        debug_assert_eq!(c.len(), m * n);
+        let mut i0 = 0;
+        while i0 < m {
+            let mr = MS.min(m - i0);
+            let mut j0 = 0;
+            while j0 < n {
+                let nr = NS.min(n - j0);
+                nt_seq_micro(a, b, n, k, c, i0, j0, mr, nr);
+                j0 += NS;
+            }
+            i0 += MS;
+        }
+    }
+
+    pub fn gemm_tn_acc(a: &[f64], k: usize, m: usize, b: &[f64], n: usize, c: &mut [f64]) {
+        debug_assert_eq!(a.len(), k * m);
+        debug_assert_eq!(b.len(), k * n);
+        debug_assert_eq!(c.len(), m * n);
+        let mut p0 = 0;
+        while p0 < k {
+            let pc = KC.min(k - p0);
+            let mut i0 = 0;
+            while i0 < m {
+                let mr = MR.min(m - i0);
+                let mut j0 = 0;
+                while j0 < n {
+                    let nr = NR.min(n - j0);
+                    tn_micro(a, m, b, n, c, i0, j0, p0, pc, mr, nr);
+                    j0 += NR;
+                }
+                i0 += MR;
+            }
+            p0 += KC;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AVX2 backend — lane-per-entry vectorization, stamped in two tiers
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    //! Explicit AVX2 kernels. The `exact` submodule advances each lane as
+    //! `add(acc, mul(a, b))` — per-lane bit-identical to the scalar
+    //! `acc += a * b` — while `fma` contracts to `fmadd(a, b, acc)`.
+    //! Everything else (loop structure, edge-tile fallbacks to the shared
+    //! scalar micro-kernels, the per-entry reduction orders) is stamped
+    //! identically from one macro body.
+    //!
+    //! # Safety
+    //!
+    //! Every kernel here is `#[target_feature(enable = "avx2,fma")]` and
+    //! thus `unsafe fn`: the caller must guarantee the CPU supports AVX2
+    //! and FMA. The dispatch macro in the parent module guards every call
+    //! with `simd_available()`. All memory accesses stay in bounds by the
+    //! same tile arithmetic as the scalar loops (full tiles only where
+    //! `i0+MR ≤ m` and `j0+NR ≤ n`; vector loads of 4 only where
+    //! `p + 4 ≤ k4 ≤ k`).
+
+    /// Stamp one kernel-family tier. `$madd` is the multiply-add policy:
+    /// per lane, `exact` computes `acc + a*b` with two roundings (scalar
+    /// order), `fma` computes `fma(a, b, acc)` with one.
+    macro_rules! avx2_variant {
+        ($name:ident, |$acc:ident, $av:ident, $bv:ident| $madd:expr) => {
+            pub mod $name {
+                use crate::tensor::gemm::{nn_micro, nt_seq_micro, tn_micro};
+                use crate::tensor::gemm::{KC, MR, MR_DOT, MS, NR, NR_DOT, NS};
+                use std::arch::x86_64::*;
+
+                /// The tier's lane-wise multiply-add policy.
+                #[inline]
+                #[target_feature(enable = "avx2,fma")]
+                unsafe fn madd($acc: __m256d, $av: __m256d, $bv: __m256d) -> __m256d {
+                    $madd
+                }
+
+                /// `c += a·b`, seed ascending-k order, vectorized across
+                /// the NR register-tile columns (two `__m256d` per tile
+                /// row, one serial reduction chain per lane).
+                ///
+                /// # Safety
+                /// CPU must support AVX2 and FMA.
+                #[target_feature(enable = "avx2,fma")]
+                pub unsafe fn gemm_nn_acc(
+                    a: &[f64],
+                    m: usize,
+                    k: usize,
+                    b: &[f64],
+                    n: usize,
+                    c: &mut [f64],
+                ) {
+                    debug_assert_eq!(a.len(), m * k);
+                    debug_assert_eq!(b.len(), k * n);
+                    debug_assert_eq!(c.len(), m * n);
+                    let mut p0 = 0;
+                    while p0 < k {
+                        let pc = KC.min(k - p0);
+                        let mut i0 = 0;
+                        while i0 < m {
+                            let mr = MR.min(m - i0);
+                            let mut j0 = 0;
+                            while j0 < n {
+                                let nr = NR.min(n - j0);
+                                if mr == MR && nr == NR {
+                                    nn_tile(a, k, b, n, c, i0, j0, p0, pc);
+                                } else {
+                                    nn_micro(a, k, b, n, c, i0, j0, p0, pc, mr, nr);
+                                }
+                                j0 += NR;
+                            }
+                            i0 += MR;
+                        }
+                        p0 += KC;
                     }
                 }
-                j0 += NR;
+
+                /// Full MR×NR tile of [`gemm_nn_acc`].
+                ///
+                /// # Safety
+                /// CPU must support AVX2/FMA; `i0+MR ≤ m`, `j0+NR ≤ n`.
+                #[target_feature(enable = "avx2,fma")]
+                #[allow(clippy::too_many_arguments)]
+                unsafe fn nn_tile(
+                    a: &[f64],
+                    k: usize,
+                    b: &[f64],
+                    n: usize,
+                    c: &mut [f64],
+                    i0: usize,
+                    j0: usize,
+                    p0: usize,
+                    pc: usize,
+                ) {
+                    let mut acc = [[_mm256_setzero_pd(); 2]; MR];
+                    for (ir, row) in acc.iter_mut().enumerate() {
+                        let base = (i0 + ir) * n + j0;
+                        row[0] = _mm256_loadu_pd(c.as_ptr().add(base));
+                        row[1] = _mm256_loadu_pd(c.as_ptr().add(base + 4));
+                    }
+                    for p in p0..p0 + pc {
+                        let bbase = p * n + j0;
+                        let b0 = _mm256_loadu_pd(b.as_ptr().add(bbase));
+                        let b1 = _mm256_loadu_pd(b.as_ptr().add(bbase + 4));
+                        for (ir, row) in acc.iter_mut().enumerate() {
+                            let av = _mm256_set1_pd(a[(i0 + ir) * k + p]);
+                            row[0] = madd(row[0], av, b0);
+                            row[1] = madd(row[1], av, b1);
+                        }
+                    }
+                    for (ir, row) in acc.iter().enumerate() {
+                        let base = (i0 + ir) * n + j0;
+                        _mm256_storeu_pd(c.as_mut_ptr().add(base), row[0]);
+                        _mm256_storeu_pd(c.as_mut_ptr().add(base + 4), row[1]);
+                    }
+                }
+
+                /// `c[i][j] (+)= dot(a_i, b_j)` in [`crate::tensor::dot`]
+                /// lane order: the four per-entry accumulator lanes are
+                /// one `__m256d`; the horizontal combine and the `k % 4`
+                /// tail run in scalar f64 in the exact scalar tree.
+                /// `acc` selects `+=` vs `=` on the final store.
+                ///
+                /// # Safety
+                /// CPU must support AVX2 and FMA.
+                #[target_feature(enable = "avx2,fma")]
+                #[allow(clippy::too_many_arguments)]
+                pub unsafe fn gemm_nt_dot(
+                    a: &[f64],
+                    m: usize,
+                    b: &[f64],
+                    n: usize,
+                    k: usize,
+                    c: &mut [f64],
+                    acc: bool,
+                ) {
+                    debug_assert_eq!(a.len(), m * k);
+                    debug_assert_eq!(b.len(), n * k);
+                    debug_assert_eq!(c.len(), m * n);
+                    let k4 = k & !3;
+                    let mut i0 = 0;
+                    while i0 < m {
+                        let mr = MR_DOT.min(m - i0);
+                        let mut j0 = 0;
+                        while j0 < n {
+                            let nr = NR_DOT.min(n - j0);
+                            let mut lanes = [[_mm256_setzero_pd(); NR_DOT]; MR_DOT];
+                            let mut p = 0;
+                            while p < k4 {
+                                for (ir, lrow) in lanes.iter_mut().enumerate().take(mr) {
+                                    let ap = _mm256_loadu_pd(a.as_ptr().add((i0 + ir) * k + p));
+                                    for (jr, lv) in lrow.iter_mut().enumerate().take(nr) {
+                                        let bp =
+                                            _mm256_loadu_pd(b.as_ptr().add((j0 + jr) * k + p));
+                                        *lv = madd(*lv, ap, bp);
+                                    }
+                                }
+                                p += 4;
+                            }
+                            for ir in 0..mr {
+                                let arow = &a[(i0 + ir) * k..(i0 + ir) * k + k];
+                                for jr in 0..nr {
+                                    let brow = &b[(j0 + jr) * k..(j0 + jr) * k + k];
+                                    let mut lv = [0.0f64; 4];
+                                    _mm256_storeu_pd(lv.as_mut_ptr(), lanes[ir][jr]);
+                                    let mut s = (lv[0] + lv[1]) + (lv[2] + lv[3]);
+                                    let mut q = k4;
+                                    while q < k {
+                                        s += arow[q] * brow[q];
+                                        q += 1;
+                                    }
+                                    let cv = &mut c[(i0 + ir) * n + j0 + jr];
+                                    if acc {
+                                        *cv += s;
+                                    } else {
+                                        *cv = s;
+                                    }
+                                }
+                            }
+                            j0 += NR_DOT;
+                        }
+                        i0 += MR_DOT;
+                    }
+                }
+
+                /// `c = a·bᵀ`, single ascending-k chain per entry,
+                /// vectorized across the NS tile columns (strided gather
+                /// of the `b` column, broadcast `a`).
+                ///
+                /// # Safety
+                /// CPU must support AVX2 and FMA.
+                #[target_feature(enable = "avx2,fma")]
+                pub unsafe fn gemm_nt_seq_into(
+                    a: &[f64],
+                    m: usize,
+                    b: &[f64],
+                    n: usize,
+                    k: usize,
+                    c: &mut [f64],
+                ) {
+                    debug_assert_eq!(a.len(), m * k);
+                    debug_assert_eq!(b.len(), n * k);
+                    debug_assert_eq!(c.len(), m * n);
+                    let mut i0 = 0;
+                    while i0 < m {
+                        let mr = MS.min(m - i0);
+                        let mut j0 = 0;
+                        while j0 < n {
+                            let nr = NS.min(n - j0);
+                            if mr == MS && nr == NS {
+                                nt_seq_tile(a, b, n, k, c, i0, j0);
+                            } else {
+                                nt_seq_micro(a, b, n, k, c, i0, j0, mr, nr);
+                            }
+                            j0 += NS;
+                        }
+                        i0 += MS;
+                    }
+                }
+
+                /// Full MS×NS tile of [`gemm_nt_seq_into`].
+                ///
+                /// # Safety
+                /// CPU must support AVX2/FMA; `i0+MS ≤ m`, `j0+NS ≤ n`.
+                #[target_feature(enable = "avx2,fma")]
+                unsafe fn nt_seq_tile(
+                    a: &[f64],
+                    b: &[f64],
+                    n: usize,
+                    k: usize,
+                    c: &mut [f64],
+                    i0: usize,
+                    j0: usize,
+                ) {
+                    let mut acc = [_mm256_setzero_pd(); MS];
+                    for p in 0..k {
+                        let bcol = _mm256_setr_pd(
+                            b[j0 * k + p],
+                            b[(j0 + 1) * k + p],
+                            b[(j0 + 2) * k + p],
+                            b[(j0 + 3) * k + p],
+                        );
+                        for (ir, accv) in acc.iter_mut().enumerate() {
+                            let av = _mm256_set1_pd(a[(i0 + ir) * k + p]);
+                            *accv = madd(*accv, av, bcol);
+                        }
+                    }
+                    for (ir, accv) in acc.iter().enumerate() {
+                        _mm256_storeu_pd(c.as_mut_ptr().add((i0 + ir) * n + j0), *accv);
+                    }
+                }
+
+                /// `c += aᵀ·b` rank-k update, seed ascending-k order,
+                /// vectorized across the NR register-tile columns.
+                ///
+                /// # Safety
+                /// CPU must support AVX2 and FMA.
+                #[target_feature(enable = "avx2,fma")]
+                pub unsafe fn gemm_tn_acc(
+                    a: &[f64],
+                    k: usize,
+                    m: usize,
+                    b: &[f64],
+                    n: usize,
+                    c: &mut [f64],
+                ) {
+                    debug_assert_eq!(a.len(), k * m);
+                    debug_assert_eq!(b.len(), k * n);
+                    debug_assert_eq!(c.len(), m * n);
+                    let mut p0 = 0;
+                    while p0 < k {
+                        let pc = KC.min(k - p0);
+                        let mut i0 = 0;
+                        while i0 < m {
+                            let mr = MR.min(m - i0);
+                            let mut j0 = 0;
+                            while j0 < n {
+                                let nr = NR.min(n - j0);
+                                if mr == MR && nr == NR {
+                                    tn_tile(a, m, b, n, c, i0, j0, p0, pc);
+                                } else {
+                                    tn_micro(a, m, b, n, c, i0, j0, p0, pc, mr, nr);
+                                }
+                                j0 += NR;
+                            }
+                            i0 += MR;
+                        }
+                        p0 += KC;
+                    }
+                }
+
+                /// Full MR×NR tile of [`gemm_tn_acc`].
+                ///
+                /// # Safety
+                /// CPU must support AVX2/FMA; `i0+MR ≤ m`, `j0+NR ≤ n`.
+                #[target_feature(enable = "avx2,fma")]
+                #[allow(clippy::too_many_arguments)]
+                unsafe fn tn_tile(
+                    a: &[f64],
+                    m: usize,
+                    b: &[f64],
+                    n: usize,
+                    c: &mut [f64],
+                    i0: usize,
+                    j0: usize,
+                    p0: usize,
+                    pc: usize,
+                ) {
+                    let mut acc = [[_mm256_setzero_pd(); 2]; MR];
+                    for (ir, row) in acc.iter_mut().enumerate() {
+                        let base = (i0 + ir) * n + j0;
+                        row[0] = _mm256_loadu_pd(c.as_ptr().add(base));
+                        row[1] = _mm256_loadu_pd(c.as_ptr().add(base + 4));
+                    }
+                    for p in p0..p0 + pc {
+                        let bbase = p * n + j0;
+                        let b0 = _mm256_loadu_pd(b.as_ptr().add(bbase));
+                        let b1 = _mm256_loadu_pd(b.as_ptr().add(bbase + 4));
+                        for (ir, row) in acc.iter_mut().enumerate() {
+                            let av = _mm256_set1_pd(a[p * m + i0 + ir]);
+                            row[0] = madd(row[0], av, b0);
+                            row[1] = madd(row[1], av, b1);
+                        }
+                    }
+                    for (ir, row) in acc.iter().enumerate() {
+                        let base = (i0 + ir) * n + j0;
+                        _mm256_storeu_pd(c.as_mut_ptr().add(base), row[0]);
+                        _mm256_storeu_pd(c.as_mut_ptr().add(base + 4), row[1]);
+                    }
+                }
             }
-            i0 += MR;
-        }
-        p0 += KC;
+        };
     }
+
+    avx2_variant!(exact, |acc, av, bv| _mm256_add_pd(
+        acc,
+        _mm256_mul_pd(av, bv)
+    ));
+    avx2_variant!(fma, |acc, av, bv| _mm256_fmadd_pd(av, bv, acc));
 }
 
 #[cfg(test)]
@@ -377,6 +1119,11 @@ mod tests {
         (13, 11, 257),
         (16, 3, 300),
     ];
+
+    // The bitwise tests below exercise the *dispatched* public kernels, so
+    // whatever backend `PAS_KERNEL` (or auto-detection) selects for this
+    // test process is pinned against the scalar references. CI runs them
+    // under both PAS_KERNEL=scalar and PAS_KERNEL=avx2.
 
     #[test]
     fn nn_bitwise_matches_seed_order() {
@@ -480,6 +1227,70 @@ mod tests {
             for i in 0..m {
                 assert_eq!(got[i], dot(&a[i * k..(i + 1) * k], &v), "k={k} row {i}");
             }
+        }
+    }
+
+    #[test]
+    fn backend_names_roundtrip() {
+        for be in Backend::ALL {
+            assert_eq!(Backend::parse(be.name()), Some(be));
+        }
+        assert_eq!(Backend::parse("sse9"), None);
+        assert_eq!(Backend::parse(""), None);
+        assert!(Backend::Scalar.bit_identical());
+        assert!(Backend::Avx2.bit_identical());
+        assert!(!Backend::Avx2Fma.bit_identical());
+        // The active backend is always a valid, resolvable choice.
+        assert_eq!(Backend::parse(backend_name()), Some(backend()));
+    }
+
+    #[test]
+    fn avx2_with_variant_is_bit_identical_to_scalar() {
+        // Explicit-backend entry points, no global state touched: safe to
+        // run concurrently with every other test in this process. The
+        // deep coverage lives in tests/backend_parity.rs; this is the
+        // in-module smoke across the tile-boundary SHAPES.
+        if !simd_available() {
+            eprintln!("skipping avx2-vs-scalar smoke: CPU lacks avx2+fma");
+            return;
+        }
+        let mut rng = Pcg64::seed(6);
+        for &(m, k, n) in SHAPES {
+            let a: Vec<f64> = (0..m * k).map(|_| rng.normal()).collect();
+            let bn: Vec<f64> = (0..k * n).map(|_| rng.normal()).collect();
+            let bt: Vec<f64> = (0..n * k).map(|_| rng.normal()).collect();
+            let at: Vec<f64> = (0..k * m).map(|_| rng.normal()).collect();
+            let init: Vec<f64> = (0..m * n).map(|_| rng.normal()).collect();
+
+            let mut s = init.clone();
+            let mut v = init.clone();
+            gemm_nn_acc_with(Backend::Scalar, &a, m, k, &bn, n, &mut s);
+            gemm_nn_acc_with(Backend::Avx2, &a, m, k, &bn, n, &mut v);
+            assert_eq!(s, v, "nn ({m},{k},{n})");
+
+            let mut s = init.clone();
+            let mut v = init.clone();
+            gemm_nt_dot_acc_with(Backend::Scalar, &a, m, &bt, n, k, &mut s);
+            gemm_nt_dot_acc_with(Backend::Avx2, &a, m, &bt, n, k, &mut v);
+            assert_eq!(s, v, "nt_dot_acc ({m},{k},{n})");
+
+            let mut s = init.clone();
+            let mut v = init.clone();
+            gemm_nt_dot_into_with(Backend::Scalar, &a, m, &bt, n, k, &mut s);
+            gemm_nt_dot_into_with(Backend::Avx2, &a, m, &bt, n, k, &mut v);
+            assert_eq!(s, v, "nt_dot_into ({m},{k},{n})");
+
+            let mut s = init.clone();
+            let mut v = init.clone();
+            gemm_nt_seq_into_with(Backend::Scalar, &a, m, &bt, n, k, &mut s);
+            gemm_nt_seq_into_with(Backend::Avx2, &a, m, &bt, n, k, &mut v);
+            assert_eq!(s, v, "nt_seq ({m},{k},{n})");
+
+            let mut s = init.clone();
+            let mut v = init.clone();
+            gemm_tn_acc_with(Backend::Scalar, &at, k, m, &bn, n, &mut s);
+            gemm_tn_acc_with(Backend::Avx2, &at, k, m, &bn, n, &mut v);
+            assert_eq!(s, v, "tn ({m},{k},{n})");
         }
     }
 }

@@ -32,7 +32,7 @@ use pas::score::analytic::AnalyticEps;
 use pas::score::EpsModel;
 use pas::solvers::engine::{EngineConfig, Record, SamplerEngine};
 use pas::solvers::registry;
-use pas::tensor::gemm::{gemm_nn_acc, gemm_nt_dot_into, gemm_nt_seq_into, gemm_tn_acc};
+use pas::tensor::gemm::{self, gemm_nn_acc, gemm_nt_dot_into, gemm_nt_seq_into, gemm_tn_acc};
 use pas::traj::sample_prior;
 use pas::util::rng::Pcg64;
 use std::sync::atomic::Ordering;
@@ -237,8 +237,16 @@ fn zero_steady_state_allocs_every_solver_both_record_modes() {
     }
 
     // The tiled matmul kernels work entirely in caller-owned buffers:
-    // zero allocations from the first call, no warm-up needed.
+    // zero allocations once the one-time backend selection has run
+    // (reading `PAS_KERNEL` from the environment may allocate; the
+    // steady-state dispatch is a relaxed atomic load). Audited on the
+    // active backend through the dispatching entry points AND on every
+    // hardware-supported backend through the explicit `_with` variants,
+    // so the SIMD kernels carry the same guarantee as scalar.
     {
+        // One-time selection + feature detection, outside the window.
+        std::hint::black_box(gemm::backend());
+        std::hint::black_box(gemm::simd_available());
         let (m, k, n2) = (13usize, 37usize, 11usize);
         let a: Vec<f64> = (0..m * k).map(|i| i as f64 * 0.25).collect();
         let bt: Vec<f64> = (0..n2 * k).map(|i| 1.0 - i as f64 * 0.125).collect();
@@ -250,6 +258,16 @@ fn zero_steady_state_allocs_every_solver_both_record_modes() {
         gemm_nt_dot_into(&a, m, &bt, n2, k, &mut c);
         gemm_nt_seq_into(&a, m, &bt, n2, k, &mut c);
         gemm_tn_acc(&b, k, n2, &b, n2, &mut c2);
+        for be in gemm::Backend::ALL {
+            if be != gemm::Backend::Scalar && !gemm::simd_available() {
+                continue;
+            }
+            gemm::gemm_nn_acc_with(be, &a, m, k, &b, n2, &mut c);
+            gemm::gemm_nt_dot_acc_with(be, &a, m, &bt, n2, k, &mut c);
+            gemm::gemm_nt_dot_into_with(be, &a, m, &bt, n2, k, &mut c);
+            gemm::gemm_nt_seq_into_with(be, &a, m, &bt, n2, k, &mut c);
+            gemm::gemm_tn_acc_with(be, &b, k, n2, &b, n2, &mut c2);
+        }
         let kernel_allocs = ALLOC_COUNT.load(Ordering::SeqCst) - before;
         std::hint::black_box(&c);
         std::hint::black_box(&c2);

@@ -1,0 +1,272 @@
+//! Kernel-backend parity suite.
+//!
+//! The AVX2 backend must be **bit-identical** to the scalar reference on
+//! every kernel family and every tile-edge shape — it vectorizes across
+//! independent output entries / dot lanes, never within an entry's
+//! reduction, so there is nothing to tolerate. The FMA tier contracts
+//! each multiply-add to one rounding and is therefore compared with an
+//! analytic tolerance instead (and asserted to actually differ, so a
+//! build that silently compiles FMA out of the tier is caught).
+//!
+//! Everything here uses the `*_with` kernel entry points, which take an
+//! explicit backend and never touch the process-wide selection — except
+//! `forced_backend_resolution`, which exercises `force_backend` itself
+//! (and restores the environment's selection before returning).
+
+use pas::tensor::gemm::{
+    backend, force_backend, gemm_nn_acc_with, gemm_nn_into_with, gemm_nt_dot_acc_with,
+    gemm_nt_dot_into_with, gemm_nt_seq_into_with, gemm_tn_acc_with, simd_available, Backend, KC,
+    MR, NR,
+};
+use pas::util::rng::Pcg64;
+
+/// Tile-boundary values for the row/column dimensions: 1, MR±1, MR,
+/// NR±1, NR, and a couple of multi-tile-plus-remainder sizes.
+const MNS: &[usize] = &[1, 3, 4, 5, 7, 8, 9, 13];
+
+/// Reduction depths straddling the 4-lane dot width and the KC k-panel:
+/// 1, MR−1, MR, MR+1, NR±1, NR, KC−1, KC, KC+1 and 3·KC+2.
+const KS: &[usize] = &[1, 3, 4, 5, 7, 8, 9, KC - 1, KC, KC + 1, 3 * KC + 2];
+
+/// True (with a notice) when the SIMD backends cannot run here — each
+/// test degrades to a skip instead of a failure on pre-AVX2 hardware.
+fn skip_without_simd(test: &str) -> bool {
+    if simd_available() {
+        return false;
+    }
+    eprintln!("notice: skipping {test}: CPU lacks avx2+fma");
+    true
+}
+
+struct Case {
+    m: usize,
+    n: usize,
+    k: usize,
+    a_nn: Vec<f64>,  // (m, k) row-major
+    b_nn: Vec<f64>,  // (k, n) row-major
+    a_tn: Vec<f64>,  // (k, m) row-major
+    b_nt: Vec<f64>,  // (n, k) row-major
+    init: Vec<f64>,  // (m, n) initial c for the accumulate kernels
+}
+
+fn cases(seed: u64) -> Vec<Case> {
+    let mut rng = Pcg64::seed(seed);
+    let mut out = Vec::new();
+    for &m in MNS {
+        for &n in MNS {
+            for &k in KS {
+                out.push(Case {
+                    m,
+                    n,
+                    k,
+                    a_nn: (0..m * k).map(|_| rng.normal()).collect(),
+                    b_nn: (0..k * n).map(|_| rng.normal()).collect(),
+                    a_tn: (0..k * m).map(|_| rng.normal()).collect(),
+                    b_nt: (0..n * k).map(|_| rng.normal()).collect(),
+                    init: (0..m * n).map(|_| rng.normal()).collect(),
+                });
+            }
+        }
+    }
+    // A few larger-than-one-register-block m/n probes so multi-tile row
+    // and column loops (and the KC panel restart) are crossed at once.
+    for (m, n, k) in [(2 * MR + 1, 2 * NR + 1, KC + 1), (17, 19, 3 * KC + 2)] {
+        out.push(Case {
+            m,
+            n,
+            k,
+            a_nn: (0..m * k).map(|_| rng.normal()).collect(),
+            b_nn: (0..k * n).map(|_| rng.normal()).collect(),
+            a_tn: (0..k * m).map(|_| rng.normal()).collect(),
+            b_nt: (0..n * k).map(|_| rng.normal()).collect(),
+            init: (0..m * n).map(|_| rng.normal()).collect(),
+        });
+    }
+    out
+}
+
+/// Run every kernel family on one backend; returns the six result
+/// matrices in a fixed order.
+fn run_all(be: Backend, c: &Case) -> [Vec<f64>; 6] {
+    let (m, n, k) = (c.m, c.n, c.k);
+    let mut nn_acc = c.init.clone();
+    gemm_nn_acc_with(be, &c.a_nn, m, k, &c.b_nn, n, &mut nn_acc);
+    let mut nn_into = vec![f64::NAN; m * n]; // _into must overwrite NaNs
+    gemm_nn_into_with(be, &c.a_nn, m, k, &c.b_nn, n, &mut nn_into);
+    let mut dot_acc = c.init.clone();
+    gemm_nt_dot_acc_with(be, &c.a_nn, m, &c.b_nt, n, k, &mut dot_acc);
+    let mut dot_into = vec![f64::NAN; m * n];
+    gemm_nt_dot_into_with(be, &c.a_nn, m, &c.b_nt, n, k, &mut dot_into);
+    let mut seq_into = vec![f64::NAN; m * n];
+    gemm_nt_seq_into_with(be, &c.a_nn, m, &c.b_nt, n, k, &mut seq_into);
+    let mut tn_acc = c.init.clone();
+    gemm_tn_acc_with(be, &c.a_tn, k, m, &c.b_nn, n, &mut tn_acc);
+    [nn_acc, nn_into, dot_acc, dot_into, seq_into, tn_acc]
+}
+
+const FAMILIES: [&str; 6] = [
+    "nn_acc",
+    "nn_into",
+    "nt_dot_acc",
+    "nt_dot_into",
+    "nt_seq_into",
+    "tn_acc",
+];
+
+#[test]
+fn avx2_is_bitwise_identical_to_scalar() {
+    if skip_without_simd("avx2_is_bitwise_identical_to_scalar") {
+        return;
+    }
+    for c in cases(11) {
+        let want = run_all(Backend::Scalar, &c);
+        let got = run_all(Backend::Avx2, &c);
+        for (f, (w, g)) in FAMILIES.iter().zip(want.iter().zip(got.iter())) {
+            // Bitwise, not ==: asserts -0.0 vs 0.0 and NaN payloads too.
+            let wb: Vec<u64> = w.iter().map(|v| v.to_bits()).collect();
+            let gb: Vec<u64> = g.iter().map(|v| v.to_bits()).collect();
+            assert_eq!(wb, gb, "{f} ({},{},{}) diverged", c.m, c.k, c.n);
+        }
+    }
+}
+
+/// Per-entry absolute-value products `Σ_p |a·b|` — the scale of the
+/// worst-case rounding difference between the 2-rounding scalar chain and
+/// the 1-rounding FMA chain (both are bounded by ~k·eps·this).
+fn abs_bound_nn(a: &[f64], m: usize, k: usize, b: &[f64], n: usize) -> Vec<f64> {
+    let mut out = vec![0.0; m * n];
+    for i in 0..m {
+        for p in 0..k {
+            let av = a[i * k + p].abs();
+            for j in 0..n {
+                out[i * n + j] += av * b[p * n + j].abs();
+            }
+        }
+    }
+    out
+}
+
+fn abs_bound_nt(a: &[f64], m: usize, k: usize, b: &[f64], n: usize) -> Vec<f64> {
+    let mut out = vec![0.0; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut s = 0.0;
+            for p in 0..k {
+                s += (a[i * k + p] * b[j * k + p]).abs();
+            }
+            out[i * n + j] = s;
+        }
+    }
+    out
+}
+
+fn abs_bound_tn(a: &[f64], k: usize, m: usize, b: &[f64], n: usize) -> Vec<f64> {
+    let mut out = vec![0.0; m * n];
+    for p in 0..k {
+        for i in 0..m {
+            let av = a[p * m + i].abs();
+            for j in 0..n {
+                out[i * n + j] += av * b[p * n + j].abs();
+            }
+        }
+    }
+    out
+}
+
+#[test]
+fn fma_tier_is_within_reduction_tolerance_of_scalar() {
+    if skip_without_simd("fma_tier_is_within_reduction_tolerance_of_scalar") {
+        return;
+    }
+    for c in cases(12) {
+        let (m, n, k) = (c.m, c.n, c.k);
+        let want = run_all(Backend::Scalar, &c);
+        let got = run_all(Backend::Avx2Fma, &c);
+        let bound_nn = abs_bound_nn(&c.a_nn, m, k, &c.b_nn, n);
+        let bound_nt = abs_bound_nt(&c.a_nn, m, k, &c.b_nt, n);
+        let bound_tn = abs_bound_tn(&c.a_tn, k, m, &c.b_nn, n);
+        let bounds: [&Vec<f64>; 6] = [
+            &bound_nn, &bound_nn, &bound_nt, &bound_nt, &bound_nt, &bound_tn,
+        ];
+        for ((f, bound), (w, g)) in FAMILIES
+            .iter()
+            .zip(bounds.iter())
+            .zip(want.iter().zip(got.iter()))
+        {
+            for (e, ((wv, gv), bv)) in w.iter().zip(g.iter()).zip(bound.iter()).enumerate() {
+                // Each chain's rounding error is ≤ ~k·eps·Σ|a·b| (the
+                // accumulate variants add one more term for the initial
+                // c); 4·(k+2) leaves comfortable slack while still
+                // scaling with the reduction, not the magnitude.
+                let tol = 4.0 * (k as f64 + 2.0)
+                    * f64::EPSILON
+                    * (bv + c.init.get(e).map_or(0.0, |v| v.abs()) + f64::MIN_POSITIVE);
+                assert!(
+                    (wv - gv).abs() <= tol,
+                    "{f} ({m},{k},{n}) entry {e}: scalar {wv} vs fma {gv} (tol {tol})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn fma_tier_actually_changes_bits() {
+    if skip_without_simd("fma_tier_actually_changes_bits") {
+        return;
+    }
+    // On a deep-reduction shape the odds of every FMA rounding matching
+    // the 2-rounding chain are nil; if all six families agree bitwise,
+    // the tier silently lost its fmadd (e.g. a bad dispatch edit).
+    let c = cases(13)
+        .into_iter()
+        .find(|c| c.m == 13 && c.n == 13 && c.k == KC)
+        .expect("case grid must contain (13, KC, 13)");
+    let want = run_all(Backend::Scalar, &c);
+    let got = run_all(Backend::Avx2Fma, &c);
+    let differs = want
+        .iter()
+        .zip(got.iter())
+        .any(|(w, g)| w.iter().zip(g.iter()).any(|(a, b)| a.to_bits() != b.to_bits()));
+    assert!(differs, "avx2fma produced scalar-identical bits everywhere");
+}
+
+#[test]
+fn unavailable_simd_requests_degrade_to_scalar() {
+    // `*_with` on a SIMD backend must fall back to scalar (same bits)
+    // when the hardware lacks the features, rather than crash. On AVX2
+    // hardware this arm is vacuous, but the dispatch guard it exercises
+    // is the same one `force_backend` relies on.
+    if simd_available() {
+        return;
+    }
+    let all = cases(14);
+    let c = &all[0];
+    let want = run_all(Backend::Scalar, c);
+    for be in [Backend::Avx2, Backend::Avx2Fma] {
+        let got = run_all(be, c);
+        assert_eq!(want, got, "{:?} without hardware support", be);
+    }
+}
+
+#[test]
+fn forced_backend_resolution() {
+    // force_backend resolves requests against the hardware and reports
+    // what it installed; the process-wide `backend()` must follow.
+    assert_eq!(force_backend(Backend::Scalar), Backend::Scalar);
+    assert_eq!(backend(), Backend::Scalar);
+    let got = force_backend(Backend::Avx2);
+    if simd_available() {
+        assert_eq!(got, Backend::Avx2);
+    } else {
+        assert_eq!(got, Backend::Scalar);
+    }
+    assert_eq!(backend(), got);
+    // Restore the environment's selection for any test scheduled after
+    // us in this binary (auto = what force(Avx2) resolves to, so only an
+    // explicit PAS_KERNEL needs re-applying).
+    match std::env::var("PAS_KERNEL").ok().and_then(|v| Backend::parse(v.trim())) {
+        Some(b) => force_backend(b),
+        None => force_backend(Backend::Avx2),
+    };
+}

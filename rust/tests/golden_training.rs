@@ -95,6 +95,18 @@ fn parse_fixture(text: &str) -> BTreeMap<usize, Vec<u64>> {
 
 #[test]
 fn trained_dict_is_bitwise_stable_across_thread_caps() {
+    // Bitwise fixture: exclude the reduced-rounding FMA kernel tier (see
+    // golden_trajectories.rs; tolerances live in backend_parity.rs).
+    {
+        use pas::tensor::gemm::{backend, force_backend, Backend};
+        if !backend().bit_identical() {
+            eprintln!(
+                "notice: golden fixtures exclude the {} tier; pinning avx2",
+                backend().name()
+            );
+            force_backend(Backend::Avx2);
+        }
+    }
     let ds = pas::data::registry::get(DATASET).unwrap();
     let model = AnalyticEps::from_dataset(&ds);
     let solver = registry::get(SOLVER).unwrap();
