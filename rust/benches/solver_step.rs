@@ -42,11 +42,11 @@ fn main() {
             let mut rng = Pcg64::seed(1);
             let n = 256;
             let dim = ds.dim();
-            // Multi-eval solvers (heun, dpm2) included since the engine now
-            // row-shards them too (internal evals go per-chunk).
-            for solver_name in [
-                "ddim", "heun", "dpm2", "ipndm", "dpmpp3m", "unipc3m", "deis-tab3",
-            ] {
+            // Sweep every registered solver (multi-eval solvers included
+            // since the engine row-shards their internal evals too). The
+            // "ipndm" alias is skipped: it resolves to the same solver as
+            // ipndm3 and would double-count that cell.
+            for &solver_name in registry::ALL.iter().filter(|&&s| s != "ipndm") {
                 let solver = registry::get(solver_name).unwrap();
                 let steps = solver.steps_for_nfe(10).unwrap();
                 let sched = default_schedule(steps);

@@ -1,0 +1,427 @@
+//! `pas lint` — dependency-free source-level contract enforcement.
+//!
+//! The repo's correctness story (bit-exact PAS correction, "an indexing
+//! change, not a numerics change") rests on invariants that runtime
+//! suites (`alloc_audit`, `backend_parity`, chaos tests) only catch
+//! after a violation ships into a hot path. This module is the static
+//! complement: a lightweight lexer/scanner (no syn, no proc-macro — the
+//! crate stays dependency-free) that walks the crate sources and fails
+//! on contract violations at review time.
+//!
+//! # Enforced contracts
+//!
+//! | rule id             | contract it guards |
+//! |---------------------|--------------------|
+//! | `safety-comment`    | Every `unsafe` block/fn/impl carries a `// SAFETY:` justification (or an `unsafe fn` with a `# Safety` doc section). Unsafe code in this repo exists only in the AVX2 kernels, the scoped thread pool, and the libc signal shim — each site must say why it is sound. |
+//! | `simd-gating`       | `_mm*` / `std::arch` intrinsics appear only inside `#[target_feature(enable = "avx2…")]` functions (runtime dispatch guarantees the feature before any call). `fmadd` intrinsics are confined to the opt-in `avx2fma` tier of `tensor/gemm.rs`: FMA contraction changes the per-lane reduction order, so it may never leak into the bit-exact `avx2` tier (see ROADMAP "Bit-exactness oracles"). |
+//! | `hot-path-alloc`    | Static complement of `tests/alloc_audit.rs`: allocation tokens (`vec!`, `Vec::new`, `to_vec`, `Box::new`, `format!`, `.collect`, `String::from`) are banned outside `#[cfg(test)]` in the pinned hot-path modules (`solvers/engine.rs`, `tensor/gemm.rs`, `pas/pca.rs`, `pas/correct.rs`, `server/metrics_export.rs`). Zero steady-state allocation is a throughput contract, not a style preference. |
+//! | `server-panic`      | Structured-errors contract on the serving path (`server/{mod,service,protocol,metrics_export}.rs`): no `unwrap`/`expect`/`panic!` outside tests — a bad request must become a structured error reply, never a connection-killing panic. Exemption: `lock()/read()/write().unwrap()` (lock-poisoning policy — a poisoned lock means a panic already escaped elsewhere, and crashing beats serving from torn state). |
+//! | `registry-coverage` | Every solver in `solvers/registry.rs::ALL` must appear in the pinned `hist_depth` table test, the golden-trajectory suite, and the bench sweep. A consumer that iterates `registry::ALL` covers all names at once — that is the preferred form, since it can never go stale. |
+//! | `dependency-free`   | `Cargo.toml` declares no non-dev dependencies. The whole stack — JSON, thread pool, HTTP-less wire protocol, benches — is hand-rolled by contract; `[dev-dependencies]` remain allowed. |
+//!
+//! # Suppressions
+//!
+//! A finding is suppressed in place with a comment:
+//!
+//! ```text
+//! // lint:allow(<rule-id>, <reason>)
+//! ```
+//!
+//! The suppression covers the same line, the statement directly below
+//! the contiguous comment/attribute block it sits in, or — when placed
+//! in the doc/attribute block above an `fn` signature — the entire
+//! function body. The reason is mandatory: an allow without one is
+//! reported as malformed and does **not** suppress. Unused suppressions
+//! are surfaced in the report (and `LINT_report.json`) so suppression
+//! creep stays visible at review time.
+//!
+//! # Entry points
+//!
+//! * `pas lint [--root DIR] [--json] [--report PATH | --no-report]` —
+//!   CLI; exits nonzero iff findings exist, writes `LINT_report.json`.
+//! * [`run_lint`] — library entry used by the CLI and by
+//!   `tests/lint_clean.rs` (the tree self-check plus per-rule fixture
+//!   tests under `tests/fixtures/lint/`).
+
+pub mod rules;
+pub mod scan;
+
+use crate::util::json::Json;
+use scan::SourceFile;
+use std::fmt;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// Stable identifiers for the six rules.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum RuleId {
+    SafetyComment,
+    SimdGating,
+    HotPathAlloc,
+    ServerPanic,
+    RegistryCoverage,
+    DependencyFree,
+}
+
+impl RuleId {
+    pub const ALL: &'static [RuleId] = &[
+        RuleId::SafetyComment,
+        RuleId::SimdGating,
+        RuleId::HotPathAlloc,
+        RuleId::ServerPanic,
+        RuleId::RegistryCoverage,
+        RuleId::DependencyFree,
+    ];
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            RuleId::SafetyComment => "safety-comment",
+            RuleId::SimdGating => "simd-gating",
+            RuleId::HotPathAlloc => "hot-path-alloc",
+            RuleId::ServerPanic => "server-panic",
+            RuleId::RegistryCoverage => "registry-coverage",
+            RuleId::DependencyFree => "dependency-free",
+        }
+    }
+
+    pub fn description(self) -> &'static str {
+        match self {
+            RuleId::SafetyComment => "every `unsafe` carries a SAFETY justification",
+            RuleId::SimdGating => {
+                "SIMD intrinsics only in #[target_feature] fns; fmadd only in gemm's avx2fma tier"
+            }
+            RuleId::HotPathAlloc => "no allocation tokens in pinned hot-path modules outside tests",
+            RuleId::ServerPanic => "no unwrap/expect/panic on the server request path",
+            RuleId::RegistryCoverage => {
+                "every registry solver covered by hist_depth table, golden suite, and bench sweep"
+            }
+            RuleId::DependencyFree => "Cargo.toml declares no non-dev dependencies",
+        }
+    }
+}
+
+impl fmt::Display for RuleId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// One lint finding: rule, crate-relative file, 1-based line.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    pub rule: RuleId,
+    pub file: String,
+    pub line: usize,
+    pub message: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{} {}:{} {}",
+            self.rule.as_str(),
+            self.file,
+            self.line,
+            self.message
+        )
+    }
+}
+
+/// A suppression in effect somewhere in the tree.
+#[derive(Clone, Debug)]
+pub struct Suppression {
+    pub file: String,
+    pub line: usize,
+    pub rule: String,
+    pub reason: String,
+    pub used: bool,
+}
+
+/// Per-rule aggregate statistics.
+#[derive(Clone, Debug)]
+pub struct RuleStats {
+    pub rule: RuleId,
+    pub sites_scanned: usize,
+    pub findings: usize,
+    pub suppressed: usize,
+}
+
+/// Full lint result for one crate root.
+pub struct LintReport {
+    pub root: PathBuf,
+    pub files_scanned: usize,
+    pub findings: Vec<Finding>,
+    pub suppressions: Vec<Suppression>,
+    /// `lint:allow` comments with no reason — reported, never honoured.
+    pub malformed: Vec<Suppression>,
+    pub rules: Vec<RuleStats>,
+}
+
+impl LintReport {
+    pub fn clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+
+    /// BENCH_*-style machine-readable report (written to
+    /// `LINT_report.json` by the CLI, uploaded as a CI artifact).
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("tool", Json::Str("pas lint".to_string()))
+            .set("files_scanned", Json::UInt(self.files_scanned as u64))
+            .set("total_findings", Json::UInt(self.findings.len() as u64))
+            .set(
+                "suppressions_in_effect",
+                Json::UInt(self.suppressions.len() as u64),
+            );
+        let mut rules = Vec::new();
+        for r in &self.rules {
+            let mut o = Json::obj();
+            o.set("id", Json::Str(r.rule.as_str().to_string()))
+                .set("description", Json::Str(r.rule.description().to_string()))
+                .set("sites_scanned", Json::UInt(r.sites_scanned as u64))
+                .set("findings", Json::UInt(r.findings as u64))
+                .set("suppressed", Json::UInt(r.suppressed as u64));
+            rules.push(o);
+        }
+        j.set("rules", Json::Arr(rules));
+        let mut findings = Vec::new();
+        for f in &self.findings {
+            let mut o = Json::obj();
+            o.set("rule", Json::Str(f.rule.as_str().to_string()))
+                .set("file", Json::Str(f.file.clone()))
+                .set("line", Json::UInt(f.line as u64))
+                .set("message", Json::Str(f.message.clone()));
+            findings.push(o);
+        }
+        j.set("findings", Json::Arr(findings));
+        let supp_json = |s: &Suppression| {
+            let mut o = Json::obj();
+            o.set("file", Json::Str(s.file.clone()))
+                .set("line", Json::UInt(s.line as u64))
+                .set("rule", Json::Str(s.rule.clone()))
+                .set("reason", Json::Str(s.reason.clone()))
+                .set("used", Json::Bool(s.used));
+            o
+        };
+        j.set(
+            "suppressions",
+            Json::Arr(self.suppressions.iter().map(supp_json).collect()),
+        );
+        j.set(
+            "malformed_suppressions",
+            Json::Arr(self.malformed.iter().map(supp_json).collect()),
+        );
+        j
+    }
+}
+
+/// Recursively collect `.rs` files under `dir`, sorted for determinism.
+fn rs_files(dir: &Path, out: &mut Vec<PathBuf>) {
+    let Ok(entries) = fs::read_dir(dir) else {
+        return;
+    };
+    let mut paths: Vec<PathBuf> = entries.flatten().map(|e| e.path()).collect();
+    paths.sort();
+    for p in paths {
+        if p.is_dir() {
+            rs_files(&p, out);
+        } else if p.extension().and_then(|e| e.to_str()) == Some("rs") {
+            out.push(p);
+        }
+    }
+}
+
+/// Run all six rules over the crate rooted at `root` (the directory
+/// containing `Cargo.toml` and `src/`). IO errors on individual files
+/// are surfaced as findings rather than aborting the pass.
+pub fn run_lint(root: &Path) -> LintReport {
+    let mut findings = Vec::new();
+    let mut suppressions = Vec::new();
+    let mut malformed = Vec::new();
+    let mut stats: Vec<RuleStats> = RuleId::ALL
+        .iter()
+        .map(|&rule| RuleStats {
+            rule,
+            sites_scanned: 0,
+            findings: 0,
+            suppressed: 0,
+        })
+        .collect();
+
+    let rel_of = |p: &Path| -> String {
+        p.strip_prefix(root)
+            .unwrap_or(p)
+            .to_string_lossy()
+            .replace('\\', "/")
+    };
+
+    let mut paths = Vec::new();
+    rs_files(&root.join("src"), &mut paths);
+    let files_scanned = paths.len();
+
+    let mut registry_src = String::new();
+    for path in &paths {
+        let rel = rel_of(path);
+        let src = match fs::read_to_string(path) {
+            Ok(s) => s,
+            Err(e) => {
+                findings.push(Finding {
+                    rule: RuleId::SafetyComment,
+                    file: rel,
+                    line: 1,
+                    message: format!("unreadable source file: {e}"),
+                });
+                continue;
+            }
+        };
+        if rel == "src/solvers/registry.rs" {
+            registry_src = src.clone();
+        }
+        let mut file = SourceFile::parse(&rel, &src);
+        // An allow without a reason is malformed: report it, never
+        // honour it.
+        let (valid, bad): (Vec<_>, Vec<_>) =
+            file.allows.drain(..).partition(|a| !a.reason.is_empty());
+        file.allows = valid;
+        for a in bad {
+            malformed.push(Suppression {
+                file: rel.clone(),
+                line: a.line + 1,
+                rule: a.rule,
+                reason: String::new(),
+                used: false,
+            });
+        }
+
+        type Pass = fn(&SourceFile, &mut Vec<Finding>, &mut usize) -> usize;
+        let passes: [(usize, Pass); 4] = [
+            (0, rules::safety_comment),
+            (1, rules::simd_gating),
+            (2, rules::hot_path_alloc),
+            (3, rules::server_panic),
+        ];
+        for (idx, pass) in passes {
+            let before = findings.len();
+            let mut suppressed = 0;
+            let sites = pass(&file, &mut findings, &mut suppressed);
+            stats[idx].sites_scanned += sites;
+            stats[idx].findings += findings.len() - before;
+            stats[idx].suppressed += suppressed;
+        }
+        for a in &file.allows {
+            suppressions.push(Suppression {
+                file: rel.clone(),
+                line: a.line + 1,
+                rule: a.rule.clone(),
+                reason: a.reason.clone(),
+                used: a.used.get(),
+            });
+        }
+    }
+
+    // Rule 5: cross-file registry coverage.
+    if !registry_src.is_empty() {
+        let mut consumers: Vec<(String, String)> = Vec::new();
+        for rel in ["tests/golden_trajectories.rs", "benches/solver_step.rs"] {
+            match fs::read_to_string(root.join(rel)) {
+                Ok(src) => consumers.push((rel.to_string(), src)),
+                Err(e) => findings.push(Finding {
+                    rule: RuleId::RegistryCoverage,
+                    file: rel.to_string(),
+                    line: 1,
+                    message: format!("registry consumer missing: {e}"),
+                }),
+            }
+        }
+        let refs: Vec<(&str, &str)> = consumers
+            .iter()
+            .map(|(r, s)| (r.as_str(), s.as_str()))
+            .collect();
+        let before = findings.len();
+        let sites = rules::registry_coverage(&registry_src, &refs, &mut findings);
+        stats[4].sites_scanned += sites;
+        stats[4].findings += findings.len() - before;
+    }
+
+    // Rule 6: Cargo.toml dependency ban.
+    match fs::read_to_string(root.join("Cargo.toml")) {
+        Ok(toml) => {
+            let before = findings.len();
+            let sites = rules::dependency_free(&toml, &mut findings);
+            stats[5].sites_scanned += sites;
+            stats[5].findings += findings.len() - before;
+        }
+        Err(e) => findings.push(Finding {
+            rule: RuleId::DependencyFree,
+            file: "Cargo.toml".to_string(),
+            line: 1,
+            message: format!("unreadable: {e}"),
+        }),
+    }
+
+    findings.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.rule.as_str()).cmp(&(b.file.as_str(), b.line, b.rule.as_str()))
+    });
+    LintReport {
+        root: root.to_path_buf(),
+        files_scanned,
+        findings,
+        suppressions,
+        malformed,
+        rules: stats,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rule_ids_roundtrip() {
+        for &r in RuleId::ALL {
+            assert!(!r.as_str().is_empty());
+            assert!(!r.description().is_empty());
+        }
+    }
+
+    #[test]
+    fn report_json_shape() {
+        let report = LintReport {
+            root: PathBuf::from("."),
+            files_scanned: 2,
+            findings: vec![Finding {
+                rule: RuleId::HotPathAlloc,
+                file: "src/x.rs".to_string(),
+                line: 7,
+                message: "m".to_string(),
+            }],
+            suppressions: vec![Suppression {
+                file: "src/y.rs".to_string(),
+                line: 3,
+                rule: "server-panic".to_string(),
+                reason: "r".to_string(),
+                used: true,
+            }],
+            malformed: Vec::new(),
+            rules: RuleId::ALL
+                .iter()
+                .map(|&rule| RuleStats {
+                    rule,
+                    sites_scanned: 1,
+                    findings: 0,
+                    suppressed: 0,
+                })
+                .collect(),
+        };
+        let s = report.to_json().to_string();
+        let parsed = Json::parse(&s).expect("report JSON parses");
+        if let Json::Obj(m) = parsed {
+            assert_eq!(m["total_findings"], Json::UInt(1));
+            assert_eq!(m["suppressions_in_effect"], Json::UInt(1));
+            assert!(matches!(&m["rules"], Json::Arr(a) if a.len() == 6));
+        } else {
+            unreachable!("report is an object");
+        }
+    }
+}

@@ -1,0 +1,539 @@
+//! The six lint rules. Each pass takes scanned sources plus whatever
+//! raw auxiliary text it needs (tests, benches, Cargo.toml) and pushes
+//! [`Finding`]s. Rules consult [`SourceFile::suppressed`] so a
+//! `// lint:allow(rule, reason)` at the site absorbs the finding.
+
+use super::scan::SourceFile;
+use super::{Finding, RuleId};
+
+/// Hot-path modules under the static allocation ban (the compile-time
+/// complement of `tests/alloc_audit.rs`). Paths are relative to the
+/// crate root, `/`-separated.
+pub const HOT_PATH_MODULES: &[&str] = &[
+    "src/solvers/engine.rs",
+    "src/tensor/gemm.rs",
+    "src/pas/pca.rs",
+    "src/pas/correct.rs",
+    "src/server/metrics_export.rs",
+];
+
+/// Server request-path modules under the structured-errors contract.
+pub const SERVER_PATH_MODULES: &[&str] = &[
+    "src/server/mod.rs",
+    "src/server/service.rs",
+    "src/server/protocol.rs",
+    "src/server/metrics_export.rs",
+];
+
+/// Allocation tokens banned in hot-path modules outside `#[cfg(test)]`.
+const ALLOC_TOKENS: &[&str] = &[
+    "vec!",
+    "Vec::new",
+    "to_vec",
+    "Box::new",
+    "format!",
+    ".collect",
+    "String::from",
+];
+
+/// Panic tokens banned on the server request path outside `#[cfg(test)]`.
+const PANIC_TOKENS: &[&str] = &[
+    ".unwrap(",
+    ".expect(",
+    "panic!",
+    "unreachable!",
+    "todo!",
+    "unimplemented!",
+];
+
+fn push(
+    out: &mut Vec<Finding>,
+    suppressed: &mut usize,
+    f: &SourceFile,
+    rule: RuleId,
+    line: usize,
+    message: String,
+) {
+    if f.suppressed(rule.as_str(), line) {
+        *suppressed += 1;
+    } else {
+        out.push(Finding {
+            rule,
+            file: f.rel.clone(),
+            line: line + 1,
+            message,
+        });
+    }
+}
+
+/// True if `code[pos..]` starts a standalone occurrence of `tok` (no
+/// identifier character hugging either side, unless the token itself
+/// starts/ends with a non-identifier character).
+fn standalone(code: &str, pos: usize, tok: &str) -> bool {
+    let bytes = code.as_bytes();
+    let ident = |b: u8| (b as char).is_alphanumeric() || b == b'_';
+    let first = tok.as_bytes()[0];
+    let last = tok.as_bytes()[tok.len() - 1];
+    if ident(first) && pos > 0 && ident(bytes[pos - 1]) {
+        return false;
+    }
+    if ident(last) {
+        if let Some(&next) = bytes.get(pos + tok.len()) {
+            if ident(next) {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+/// All standalone occurrences of `tok` in `code`.
+fn occurrences(code: &str, tok: &str) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut from = 0;
+    while let Some(p) = code[from..].find(tok) {
+        let at = from + p;
+        if standalone(code, at, tok) {
+            out.push(at);
+        }
+        from = at + tok.len();
+    }
+    out
+}
+
+/// Occurrences of identifier-prefix `tok` (e.g. `_mm256_`): only the
+/// left boundary must be a non-identifier character — the token is
+/// expected to continue (`_mm256_add_pd`).
+fn prefix_occurrences(code: &str, tok: &str) -> Vec<usize> {
+    let bytes = code.as_bytes();
+    let ident = |b: u8| (b as char).is_alphanumeric() || b == b'_';
+    let mut out = Vec::new();
+    let mut from = 0;
+    while let Some(p) = code[from..].find(tok) {
+        let at = from + p;
+        if at == 0 || !ident(bytes[at - 1]) {
+            out.push(at);
+        }
+        from = at + tok.len();
+    }
+    out
+}
+
+/// Rule 1 — `safety-comment`: every `unsafe` keyword (fn, impl, trait,
+/// block) must be justified by a comment containing `SAFETY` (or a
+/// `# Safety` doc section) on the same line, in the contiguous
+/// comment/attribute block above, or within a 6-line window above — one
+/// comment may cover a couple of adjacent unsafe statements.
+pub fn safety_comment(f: &SourceFile, out: &mut Vec<Finding>, suppressed: &mut usize) -> usize {
+    let mut sites = 0;
+    for (ln, line) in f.lines.iter().enumerate() {
+        for _ in occurrences(&line.code, "unsafe") {
+            sites += 1;
+            let ok = f.comment_above_contains(ln, 6, "SAFETY")
+                || f.comment_above_contains(ln, 6, "# Safety");
+            if !ok {
+                push(
+                    out,
+                    suppressed,
+                    f,
+                    RuleId::SafetyComment,
+                    ln,
+                    "`unsafe` without a `// SAFETY:` justification".to_string(),
+                );
+            }
+        }
+    }
+    sites
+}
+
+/// Rule 2 — `simd-gating`: `_mm*` / `std::arch` identifiers only inside
+/// `#[target_feature(enable = "avx2…")]` functions (or `use` items);
+/// `fmadd` intrinsics only in the opt-in `avx2fma` tier of
+/// `tensor/gemm.rs`.
+pub fn simd_gating(f: &SourceFile, out: &mut Vec<Finding>, suppressed: &mut usize) -> usize {
+    let mut sites = 0;
+    for (ln, line) in f.lines.iter().enumerate() {
+        let code = &line.code;
+        let is_use = code.trim_start().starts_with("use ")
+            || code.trim_start().starts_with("pub use ");
+        let in_tf = f.enclosing_fn(ln).is_some_and(|s| s.target_feature_avx2);
+        let mut flagged_gating = false;
+        for tok in ["_mm256_", "_mm_", "std::arch"] {
+            let hits = if tok.ends_with('_') {
+                prefix_occurrences(code, tok)
+            } else {
+                occurrences(code, tok)
+            };
+            for _ in hits {
+                sites += 1;
+                if is_use || in_tf || flagged_gating {
+                    continue;
+                }
+                flagged_gating = true; // one finding per line
+                push(
+                    out,
+                    suppressed,
+                    f,
+                    RuleId::SimdGating,
+                    ln,
+                    format!(
+                        "`{tok}` outside a #[target_feature(enable = \"avx2\")] function"
+                    ),
+                );
+            }
+        }
+        // FMA containment: contraction changes the reduction order, so
+        // fmadd intrinsics are confined to gemm.rs's opt-in tier. Plain
+        // substring match: the token sits mid-identifier
+        // (`_mm256_fmadd_pd`).
+        let fma_hits = code.match_indices("fmadd").count();
+        for _ in 0..fma_hits {
+            sites += 1;
+            let in_gemm = f.rel == "src/tensor/gemm.rs";
+            let near_fma_tier = in_gemm
+                && (0..=2).any(|back| {
+                    ln.checked_sub(back)
+                        .is_some_and(|l| f.lines[l].raw.contains("avx2_variant!(fma"))
+                });
+            if !(is_use && in_gemm) && !near_fma_tier {
+                push(
+                    out,
+                    suppressed,
+                    f,
+                    RuleId::SimdGating,
+                    ln,
+                    "`fmadd` outside the opt-in `avx2fma` tier of tensor/gemm.rs \
+                     (FMA contraction breaks bit-exactness)"
+                        .to_string(),
+                );
+            }
+        }
+    }
+    sites
+}
+
+/// Rule 3 — `hot-path-alloc`: allocation tokens banned in
+/// [`HOT_PATH_MODULES`] outside `#[cfg(test)]`.
+pub fn hot_path_alloc(f: &SourceFile, out: &mut Vec<Finding>, suppressed: &mut usize) -> usize {
+    if !HOT_PATH_MODULES.contains(&f.rel.as_str()) {
+        return 0;
+    }
+    let mut sites = 0;
+    for (ln, line) in f.lines.iter().enumerate() {
+        if f.in_test(ln) {
+            continue;
+        }
+        for tok in ALLOC_TOKENS {
+            for _ in occurrences(&line.code, tok) {
+                sites += 1;
+                push(
+                    out,
+                    suppressed,
+                    f,
+                    RuleId::HotPathAlloc,
+                    ln,
+                    format!("allocation `{tok}` in pinned hot-path module"),
+                );
+            }
+        }
+    }
+    sites
+}
+
+/// Rule 4 — `server-panic`: no `unwrap`/`expect`/`panic!` on the server
+/// request path outside `#[cfg(test)]`. Mutex/RwLock poisoning unwraps
+/// (`lock().unwrap()`, `read().unwrap()`, `write().unwrap()`) are exempt
+/// by policy: a poisoned lock means a panic already escaped on another
+/// thread, and crashing beats serving from torn state.
+pub fn server_panic(f: &SourceFile, out: &mut Vec<Finding>, suppressed: &mut usize) -> usize {
+    if !SERVER_PATH_MODULES.contains(&f.rel.as_str()) {
+        return 0;
+    }
+    let mut sites = 0;
+    for (ln, line) in f.lines.iter().enumerate() {
+        if f.in_test(ln) {
+            continue;
+        }
+        for tok in PANIC_TOKENS {
+            for at in occurrences(&line.code, tok) {
+                sites += 1;
+                if tok.starts_with('.') && lock_poison_exempt(f, ln, at) {
+                    continue;
+                }
+                push(
+                    out,
+                    suppressed,
+                    f,
+                    RuleId::ServerPanic,
+                    ln,
+                    format!("`{tok}` on the server request path (structured-errors contract)"),
+                );
+            }
+        }
+    }
+    sites
+}
+
+/// Whether the `.unwrap(`/`.expect(` at `(ln, col)` is immediately
+/// chained onto `lock()` / `read()` / `write()` — possibly across a line
+/// break from rustfmt chain wrapping.
+fn lock_poison_exempt(f: &SourceFile, ln: usize, col: usize) -> bool {
+    let before = f.lines[ln].code[..col].trim_end();
+    for callee in ["lock()", "read()", "write()"] {
+        if before.ends_with(callee) {
+            return true;
+        }
+    }
+    // Chain wrapped: `.unwrap()` begins the line; look at the previous
+    // code line's tail.
+    if before.is_empty() && ln > 0 {
+        let mut l = ln - 1;
+        loop {
+            let prev = f.lines[l].code.trim_end();
+            if !prev.is_empty() {
+                return ["lock()", "read()", "write()"]
+                    .iter()
+                    .any(|c| prev.ends_with(c));
+            }
+            if l == 0 {
+                return false;
+            }
+            l -= 1;
+        }
+    }
+    false
+}
+
+/// Rule 5 — `registry-coverage`: every solver name in
+/// `solvers/registry.rs :: ALL` must appear in the pinned `hist_depth`
+/// table test, the golden-trajectory suite, and the bench sweep. A
+/// consumer that iterates `registry::ALL` directly covers all names at
+/// once.
+pub fn registry_coverage(
+    registry_src: &str,
+    consumers: &[(&str, &str)], // (rel path, raw source)
+    out: &mut Vec<Finding>,
+) -> usize {
+    let names = registry_all_names(registry_src);
+    let mut sites = 0;
+    // hist_depth table inside registry.rs itself: entries look like
+    // `("name", depth)`.
+    for name in &names {
+        sites += 1;
+        let entry = format!("(\"{name}\",");
+        if !registry_src.contains(&entry) {
+            out.push(Finding {
+                rule: RuleId::RegistryCoverage,
+                file: "src/solvers/registry.rs".to_string(),
+                line: 1,
+                message: format!(
+                    "solver \"{name}\" missing from the pinned hist_depth table test"
+                ),
+            });
+        }
+    }
+    for (rel, src) in consumers {
+        let sweeps_all = src.contains("registry::ALL") || src.contains("::ALL");
+        for name in &names {
+            sites += 1;
+            if sweeps_all || src.contains(&format!("\"{name}\"")) {
+                continue;
+            }
+            out.push(Finding {
+                rule: RuleId::RegistryCoverage,
+                file: rel.to_string(),
+                line: 1,
+                message: format!("solver \"{name}\" not covered (and file does not sweep registry::ALL)"),
+            });
+        }
+    }
+    sites
+}
+
+/// Extract the string literals of `pub const ALL: &[&str] = &[ ... ];`.
+pub fn registry_all_names(registry_src: &str) -> Vec<String> {
+    let Some(start) = registry_src.find("const ALL") else {
+        return Vec::new();
+    };
+    let Some(end) = registry_src[start..].find("];") else {
+        return Vec::new();
+    };
+    let body = &registry_src[start..start + end];
+    let mut names = Vec::new();
+    let mut rest = body;
+    while let Some(q) = rest.find('"') {
+        let tail = &rest[q + 1..];
+        let Some(close) = tail.find('"') else { break };
+        let name = &tail[..close];
+        if !name.is_empty() && !names.iter().any(|n| n == name) {
+            names.push(name.to_string());
+        }
+        rest = &tail[close + 1..];
+    }
+    names
+}
+
+/// Rule 6 — `dependency-free`: `Cargo.toml` must declare no non-dev
+/// dependencies. `[dev-dependencies]` stay allowed; `[dependencies]`,
+/// `[build-dependencies]`, and `[target.*.dependencies]` entries are
+/// findings.
+pub fn dependency_free(cargo_toml: &str, out: &mut Vec<Finding>) -> usize {
+    let mut sites = 0;
+    let mut section = String::new();
+    for (ln, raw) in cargo_toml.lines().enumerate() {
+        let line = raw.split('#').next().unwrap_or("").trim();
+        if line.starts_with('[') && line.ends_with(']') {
+            section = line[1..line.len() - 1].trim().to_string();
+            continue;
+        }
+        let banned = section == "dependencies"
+            || section == "build-dependencies"
+            || (section.starts_with("target.") && section.ends_with(".dependencies"));
+        if banned && line.contains('=') {
+            sites += 1;
+            let dep = line.split('=').next().unwrap_or("").trim();
+            out.push(Finding {
+                rule: RuleId::DependencyFree,
+                file: "Cargo.toml".to_string(),
+                line: ln + 1,
+                message: format!("non-dev dependency `{dep}` (repo is dependency-free by contract)"),
+            });
+        }
+    }
+    sites
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run_on(rel: &str, src: &str, rule: fn(&SourceFile, &mut Vec<Finding>, &mut usize) -> usize)
+        -> (Vec<Finding>, usize, usize)
+    {
+        let f = SourceFile::parse(rel, src);
+        let mut out = Vec::new();
+        let mut supp = 0;
+        let sites = rule(&f, &mut out, &mut supp);
+        (out, supp, sites)
+    }
+
+    #[test]
+    fn unsafe_without_safety_flagged() {
+        let (f, _, sites) = run_on("src/x.rs", "fn g() { unsafe { do_it(); } }\n", safety_comment);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].line, 1);
+        assert_eq!(sites, 1);
+    }
+
+    #[test]
+    fn unsafe_with_safety_passes() {
+        let src = "fn g() {\n    // SAFETY: the pointer is valid for the call.\n    unsafe { do_it(); }\n}\n";
+        let (f, _, _) = run_on("src/x.rs", src, safety_comment);
+        assert!(f.is_empty());
+    }
+
+    #[test]
+    fn unsafe_fn_with_safety_doc_section_passes() {
+        let src = "/// Does things.\n///\n/// # Safety\n/// Caller must uphold X.\npub unsafe fn k() {\n}\n";
+        let (f, _, _) = run_on("src/x.rs", src, safety_comment);
+        assert!(f.is_empty());
+    }
+
+    #[test]
+    fn intrinsic_outside_target_feature_flagged() {
+        let src = "fn g() { let v = _mm256_add_pd(a, b); }\n";
+        let (f, _, _) = run_on("src/x.rs", src, simd_gating);
+        assert_eq!(f.len(), 1);
+    }
+
+    #[test]
+    fn intrinsic_inside_target_feature_passes() {
+        let src = "#[target_feature(enable = \"avx2\")]\nunsafe fn g() { let v = _mm256_add_pd(a, b); }\nuse std::arch::x86_64::*;\n";
+        let (f, _, _) = run_on("src/x.rs", src, simd_gating);
+        assert!(f.is_empty());
+    }
+
+    #[test]
+    fn fma_intrinsic_outside_gemm_flagged() {
+        let src = "#[target_feature(enable = \"avx2,fma\")]\nunsafe fn g() { let v = _mm256_fmadd_pd(a, b, c); }\n";
+        let (f, _, _) = run_on("src/solvers/x.rs", src, simd_gating);
+        assert_eq!(f.len(), 1);
+        assert!(f[0].message.contains("avx2fma"));
+    }
+
+    #[test]
+    fn alloc_in_hot_path_flagged_and_test_exempt() {
+        let src = "fn g() { let v = Vec::new(); }\n#[cfg(test)]\nmod tests {\n    fn h() { let v = vec![1]; }\n}\n";
+        let (f, _, _) = run_on("src/tensor/gemm.rs", src, hot_path_alloc);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].line, 1);
+    }
+
+    #[test]
+    fn alloc_outside_pinned_modules_ignored() {
+        let (f, _, sites) = run_on("src/cli/mod.rs", "fn g() { let v = Vec::new(); }\n", hot_path_alloc);
+        assert!(f.is_empty());
+        assert_eq!(sites, 0);
+    }
+
+    #[test]
+    fn suppression_absorbs_finding() {
+        let src = "fn g() {\n    // lint:allow(hot-path-alloc, cold init)\n    let v = Vec::new();\n}\n";
+        let (f, supp, _) = run_on("src/tensor/gemm.rs", src, hot_path_alloc);
+        assert!(f.is_empty());
+        assert_eq!(supp, 1);
+    }
+
+    #[test]
+    fn wrong_rule_suppression_does_not_absorb() {
+        let src = "fn g() {\n    // lint:allow(server-panic, wrong rule)\n    let v = Vec::new();\n}\n";
+        let (f, supp, _) = run_on("src/tensor/gemm.rs", src, hot_path_alloc);
+        assert_eq!(f.len(), 1);
+        assert_eq!(supp, 0);
+    }
+
+    #[test]
+    fn server_unwrap_flagged_lock_exempt() {
+        let src = "fn g() {\n    let a = map.get(k).unwrap();\n    let b = mu.lock().unwrap();\n    let c = rw\n        .read()\n        .unwrap();\n}\n";
+        let (f, _, _) = run_on("src/server/service.rs", src, server_panic);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].line, 2);
+    }
+
+    #[test]
+    fn server_panic_macro_flagged() {
+        let src = "fn g() { panic!(\"boom\"); }\n";
+        let (f, _, _) = run_on("src/server/protocol.rs", src, server_panic);
+        assert_eq!(f.len(), 1);
+    }
+
+    #[test]
+    fn registry_names_parse() {
+        let src = "pub const ALL: &[&str] = &[\n    \"ddim\",\n    \"heun\",\n];\nfn t() { [(\"ddim\", 0), (\"heun\", 1)]; }\n";
+        assert_eq!(registry_all_names(src), vec!["ddim", "heun"]);
+        let mut out = Vec::new();
+        registry_coverage(src, &[("tests/x.rs", "for s in registry::ALL {}")], &mut out);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn registry_gap_flagged() {
+        let src = "pub const ALL: &[&str] = &[\"ddim\", \"heun\"];\nfn t() { [(\"ddim\", 0)]; }\n";
+        let mut out = Vec::new();
+        registry_coverage(src, &[("benches/b.rs", "let s = [\"ddim\"];")], &mut out);
+        // heun missing from hist table and from the bench.
+        assert_eq!(out.len(), 2);
+        assert!(out.iter().any(|f| f.file == "src/solvers/registry.rs"));
+        assert!(out.iter().any(|f| f.file == "benches/b.rs"));
+    }
+
+    #[test]
+    fn cargo_dependencies_flagged_dev_allowed() {
+        let toml = "[package]\nname = \"x\"\n\n[dependencies]\nserde = \"1\"\n\n[dev-dependencies]\ncriterion = \"0.5\"\n";
+        let mut out = Vec::new();
+        let sites = dependency_free(toml, &mut out);
+        assert_eq!(out.len(), 1);
+        assert!(out[0].message.contains("serde"));
+        assert_eq!(sites, 1);
+    }
+}

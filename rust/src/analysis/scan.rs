@@ -1,0 +1,633 @@
+//! Source model for the `pas lint` scanner: comment/string masking,
+//! item-scope tracking, and suppression-comment collection.
+//!
+//! The scanner is deliberately a *lexer*, not a parser: it understands
+//! exactly enough Rust surface syntax to (a) know which bytes are code
+//! versus comment versus string-literal contents, (b) know which lines sit
+//! inside `#[cfg(test)]` items, (c) know which function body a line
+//! belongs to and whether that function carries
+//! `#[target_feature(enable = "avx2…")]`, and (d) attach
+//! `lint:allow(rule, reason)` comments to the code they cover. Everything
+//! heavier (type resolution, macro expansion) is out of scope by design —
+//! the rules in [`super::rules`] are written so that lexical evidence is
+//! sufficient, and anything the lexer cannot prove is escalated to a
+//! finding that a human either fixes or suppresses with a reason.
+
+/// One source line, split into its code and comment halves.
+pub struct Line {
+    /// Raw line text (attributes are matched on this, since their
+    /// arguments — e.g. `enable = "avx2,fma"` — live in string literals).
+    pub raw: String,
+    /// Code with comments removed and string/char-literal *contents*
+    /// blanked (quotes retained so token boundaries survive).
+    pub code: String,
+    /// Concatenated comment text on this line (line, block, and doc
+    /// comments).
+    pub comment: String,
+}
+
+impl Line {
+    /// Comment-only or blank or attribute-only: a line that can sit
+    /// between a suppression / SAFETY comment and the code it covers.
+    pub fn is_annotation(&self) -> bool {
+        let t = self.code.trim();
+        t.is_empty() || t.starts_with("#[") || t.starts_with("#![")
+    }
+}
+
+/// A function item scope, by line range.
+pub struct FnScope {
+    /// Line of the `fn` keyword (0-based).
+    pub sig_line: usize,
+    /// First line of the contiguous comment/attribute block above the
+    /// signature (== `sig_line` when there is none).
+    pub head_line: usize,
+    /// Inclusive body line range (opening to closing brace).
+    pub body: (usize, usize),
+    /// Carries `#[target_feature(enable = "…avx2…")]`.
+    pub target_feature_avx2: bool,
+}
+
+/// Scanned representation of one source file.
+pub struct SourceFile {
+    /// Path relative to the crate root, `/`-separated.
+    pub rel: String,
+    pub lines: Vec<Line>,
+    /// Inclusive line ranges of `#[cfg(test)]`-gated items.
+    pub test_regions: Vec<(usize, usize)>,
+    /// Function scopes, in source order (outer before inner).
+    pub fns: Vec<FnScope>,
+    /// Suppression comments, in source order.
+    pub allows: Vec<Allow>,
+}
+
+/// A parsed `lint:allow(rule, reason)` comment.
+pub struct Allow {
+    pub line: usize,
+    pub rule: String,
+    pub reason: String,
+    /// Set by the rule passes when the suppression absorbs a finding.
+    pub used: std::cell::Cell<bool>,
+}
+
+impl SourceFile {
+    pub fn parse(rel: &str, src: &str) -> SourceFile {
+        let lines = mask(src);
+        let (test_regions, fns) = scopes(&lines);
+        let allows = collect_allows(&lines);
+        SourceFile {
+            rel: rel.to_string(),
+            lines,
+            test_regions,
+            fns,
+            allows,
+        }
+    }
+
+    /// Whether `line` is inside a `#[cfg(test)]` item.
+    pub fn in_test(&self, line: usize) -> bool {
+        self.test_regions.iter().any(|&(a, b)| (a..=b).contains(&line))
+    }
+
+    /// Innermost function scope containing `line`, if any.
+    pub fn enclosing_fn(&self, line: usize) -> Option<&FnScope> {
+        self.fns
+            .iter()
+            .filter(|f| (f.body.0..=f.body.1).contains(&line))
+            .min_by_key(|f| f.body.1 - f.body.0)
+    }
+
+    /// Whether a finding of `rule` at `line` is covered by a suppression:
+    /// on the same line, in the contiguous comment/attribute block
+    /// directly above the statement, or attached to the enclosing
+    /// function's head (covering the whole body). Marks the suppression
+    /// used.
+    pub fn suppressed(&self, rule: &str, line: usize) -> bool {
+        // Same line, or the annotation block directly above it.
+        let mut lo = line;
+        while lo > 0 && self.lines[lo - 1].is_annotation() {
+            lo -= 1;
+        }
+        for a in &self.allows {
+            if a.rule == rule && (lo..=line).contains(&a.line) {
+                a.used.set(true);
+                return true;
+            }
+        }
+        // Function-head coverage.
+        if let Some(f) = self.enclosing_fn(line) {
+            for a in &self.allows {
+                if a.rule == rule && (f.head_line..=f.sig_line).contains(&a.line) {
+                    a.used.set(true);
+                    return true;
+                }
+            }
+        }
+        false
+    }
+
+    /// Whether any comment within `window` lines above `line` (or on the
+    /// line itself), or in the contiguous comment/attribute block above
+    /// the statement, contains `needle`.
+    pub fn comment_above_contains(&self, line: usize, window: usize, needle: &str) -> bool {
+        if self.lines[line].comment.contains(needle) {
+            return true;
+        }
+        // Contiguous annotation block (doc comments over an `unsafe fn`
+        // can be arbitrarily long).
+        let mut l = line;
+        while l > 0 && self.lines[l - 1].is_annotation() {
+            l -= 1;
+            if self.lines[l].comment.contains(needle) {
+                return true;
+            }
+        }
+        // Fixed window: covers one comment justifying a couple of
+        // adjacent unsafe statements.
+        for back in 1..=window {
+            match line.checked_sub(back) {
+                Some(l) if self.lines[l].comment.contains(needle) => return true,
+                Some(_) => {}
+                None => break,
+            }
+        }
+        false
+    }
+}
+
+/// Split source into per-line code/comment views. Handles line and
+/// (nested) block comments, plain/raw/byte string literals, char
+/// literals, and lifetimes.
+fn mask(src: &str) -> Vec<Line> {
+    #[derive(PartialEq)]
+    enum St {
+        Code,
+        LineComment,
+        BlockComment(usize),
+        Str,
+        RawStr(usize),
+    }
+    let mut st = St::Code;
+    let mut out = Vec::new();
+    let mut raw = String::new();
+    let mut code = String::new();
+    let mut comment = String::new();
+    let b: Vec<char> = src.chars().collect();
+    let mut i = 0;
+    while i <= b.len() {
+        let c = if i < b.len() { b[i] } else { '\n' };
+        let at_end = i == b.len();
+        if c == '\n' {
+            if st == St::LineComment {
+                st = St::Code;
+            }
+            if !(at_end && raw.is_empty()) {
+                out.push(Line {
+                    raw: std::mem::take(&mut raw),
+                    code: std::mem::take(&mut code),
+                    comment: std::mem::take(&mut comment),
+                });
+            }
+            i += 1;
+            continue;
+        }
+        raw.push(c);
+        match st {
+            St::Code => {
+                let next = b.get(i + 1).copied();
+                if c == '/' && next == Some('/') {
+                    st = St::LineComment;
+                    raw.push('/');
+                    i += 2;
+                    continue;
+                }
+                if c == '/' && next == Some('*') {
+                    st = St::BlockComment(1);
+                    raw.push('*');
+                    i += 2;
+                    continue;
+                }
+                if c == '"' {
+                    code.push('"');
+                    st = St::Str;
+                    i += 1;
+                    continue;
+                }
+                // Raw / byte string openers: r", r#", br", b".
+                let prev_ident = i > 0 && (b[i - 1].is_alphanumeric() || b[i - 1] == '_');
+                if !prev_ident && (c == 'r' || c == 'b') {
+                    let mut j = i;
+                    if c == 'b' && b.get(j + 1) == Some(&'r') {
+                        j += 1;
+                    }
+                    if c == 'b' && b.get(j + 1) == Some(&'"') {
+                        // b"...": plain byte string.
+                        code.push(c);
+                        raw.push('"');
+                        code.push('"');
+                        st = St::Str;
+                        i = j + 2;
+                        continue;
+                    }
+                    let opener = (b.get(j + 1) == Some(&'#') || b.get(j + 1) == Some(&'"'))
+                        && (c == 'r' || (c == 'b' && j > i));
+                    if opener {
+                        let mut hashes = 0;
+                        let mut k = j + 1;
+                        while b.get(k) == Some(&'#') {
+                            hashes += 1;
+                            k += 1;
+                        }
+                        if b.get(k) == Some(&'"') {
+                            for (off, &ch) in b[i..=k].iter().enumerate() {
+                                if off > 0 {
+                                    raw.push(ch);
+                                }
+                                code.push(if ch == '"' { '"' } else { ' ' });
+                            }
+                            st = St::RawStr(hashes);
+                            i = k + 1;
+                            continue;
+                        }
+                    }
+                }
+                if c == '\'' {
+                    // Char literal vs lifetime: a char literal closes with
+                    // a quote after one (possibly escaped) character.
+                    if let Some(&n1) = b.get(i + 1) {
+                        if n1 == '\\' {
+                            // Escaped char literal: consume to closing quote.
+                            code.push('\'');
+                            let mut k = i + 2;
+                            while k < b.len() && b[k] != '\'' && b[k] != '\n' {
+                                raw.push(b[k]);
+                                code.push(' ');
+                                k += 1;
+                            }
+                            if b.get(k) == Some(&'\'') {
+                                raw.push('\'');
+                                code.push('\'');
+                                k += 1;
+                            }
+                            // raw already got chars above; continue after.
+                            raw.push(n1);
+                            i = k;
+                            continue;
+                        } else if b.get(i + 2) == Some(&'\'') {
+                            code.push('\'');
+                            code.push(' ');
+                            code.push('\'');
+                            raw.push(n1);
+                            raw.push('\'');
+                            i += 3;
+                            continue;
+                        }
+                    }
+                    // Lifetime: keep as code.
+                    code.push('\'');
+                    i += 1;
+                    continue;
+                }
+                code.push(c);
+                i += 1;
+            }
+            St::LineComment => {
+                comment.push(c);
+                i += 1;
+            }
+            St::BlockComment(depth) => {
+                let next = b.get(i + 1).copied();
+                if c == '*' && next == Some('/') {
+                    raw.push('/');
+                    if depth == 1 {
+                        st = St::Code;
+                    } else {
+                        st = St::BlockComment(depth - 1);
+                    }
+                    i += 2;
+                } else if c == '/' && next == Some('*') {
+                    raw.push('*');
+                    st = St::BlockComment(depth + 1);
+                    i += 2;
+                } else {
+                    comment.push(c);
+                    i += 1;
+                }
+            }
+            St::Str => {
+                if c == '\\' {
+                    if let Some(&n) = b.get(i + 1) {
+                        if n == '\n' {
+                            // Line continuation: let the main loop flush
+                            // the line so numbering stays aligned.
+                            code.push(' ');
+                            i += 1;
+                            continue;
+                        }
+                        raw.push(n);
+                        code.push(' ');
+                        code.push(' ');
+                        i += 2;
+                        continue;
+                    }
+                }
+                if c == '"' {
+                    code.push('"');
+                    st = St::Code;
+                } else {
+                    code.push(' ');
+                }
+                i += 1;
+            }
+            St::RawStr(hashes) => {
+                if c == '"' {
+                    let mut ok = true;
+                    for h in 0..hashes {
+                        if b.get(i + 1 + h) != Some(&'#') {
+                            ok = false;
+                            break;
+                        }
+                    }
+                    if ok {
+                        code.push('"');
+                        for _ in 0..hashes {
+                            raw.push('#');
+                            code.push(' ');
+                        }
+                        st = St::Code;
+                        i += 1 + hashes;
+                        continue;
+                    }
+                }
+                code.push(' ');
+                i += 1;
+            }
+        }
+    }
+    out
+}
+
+/// Second pass: `#[cfg(test)]` item ranges and function scopes via brace
+/// depth tracking over the masked code.
+fn scopes(lines: &[Line]) -> (Vec<(usize, usize)>, Vec<FnScope>) {
+    let mut test_regions = Vec::new();
+    let mut fns = Vec::new();
+
+    // Pending attribute state: set when the attribute is seen, consumed
+    // by the next `{` (item body) or cancelled by a top-level `;`
+    // (bodiless item, e.g. a trait method declaration).
+    let mut pending_test: Option<usize> = None;
+    let mut pending_tf = false;
+    // Pending `fn` signature awaiting its body brace.
+    let mut pending_fn: Option<(usize, bool)> = None; // (sig_line, tf)
+
+    enum Open {
+        // `fns` index, plus whether a `#[cfg(test)]` attribute was
+        // pending when the body opened (a test helper fn at item level).
+        Fn(usize, Option<usize>),
+        Test(usize),
+        Other,
+    }
+    let mut stack: Vec<Open> = Vec::new();
+    // Paren/bracket nesting: a `;` inside `[u8; 32]` or a signature's
+    // parens must not cancel the pending `fn`.
+    let mut paren = 0usize;
+
+    for (ln, line) in lines.iter().enumerate() {
+        let raw = &line.raw;
+        // Attribute detection on raw text (arguments live in strings).
+        if raw.contains("#[cfg(test)") || raw.contains("#[cfg(all(test") {
+            pending_test = Some(ln);
+        }
+        if raw.contains("#[target_feature") && raw.contains("avx2") {
+            pending_tf = true;
+        }
+        // `fn` keyword detection on masked code (`fn(` type positions
+        // are excluded by the keyword matcher).
+        if find_fn_keyword(&line.code).is_some() && pending_fn.is_none() {
+            pending_fn = Some((ln, pending_tf));
+            pending_tf = false;
+        }
+        for c in line.code.chars() {
+            match c {
+                '(' | '[' => paren += 1,
+                ')' | ']' => paren = paren.saturating_sub(1),
+                '{' => {
+                    if let Some((sig_line, tf)) = pending_fn.take() {
+                        let mut head = sig_line;
+                        while head > 0 && lines[head - 1].is_annotation() {
+                            head -= 1;
+                        }
+                        fns.push(FnScope {
+                            sig_line,
+                            head_line: head,
+                            body: (ln, ln), // end patched on close
+                            target_feature_avx2: tf,
+                        });
+                        stack.push(Open::Fn(fns.len() - 1, pending_test.take()));
+                    } else if let Some(start) = pending_test.take() {
+                        stack.push(Open::Test(start));
+                    } else {
+                        stack.push(Open::Other);
+                    }
+                }
+                '}' => match stack.pop() {
+                    Some(Open::Test(start)) => test_regions.push((start, ln)),
+                    Some(Open::Fn(idx, test_from)) => {
+                        fns[idx].body.1 = ln;
+                        if let Some(start) = test_from {
+                            test_regions.push((start, ln));
+                        }
+                    }
+                    _ => {}
+                },
+                ';' if paren == 0 => {
+                    // Bodiless item ends: cancel pending attributes.
+                    pending_fn = None;
+                    pending_test = None;
+                }
+                _ => {}
+            }
+        }
+    }
+    // Unclosed scopes (truncated file): close at EOF.
+    let last = lines.len().saturating_sub(1);
+    while let Some(open) = stack.pop() {
+        match open {
+            Open::Test(start) => test_regions.push((start, last)),
+            Open::Fn(idx, test_from) => {
+                fns[idx].body.1 = last;
+                if let Some(start) = test_from {
+                    test_regions.push((start, last));
+                }
+            }
+            Open::Other => {}
+        }
+    }
+    (test_regions, fns)
+}
+
+/// Column of a standalone `fn` keyword in masked code, if present.
+fn find_fn_keyword(code: &str) -> Option<usize> {
+    let bytes = code.as_bytes();
+    let mut from = 0;
+    while let Some(pos) = code[from..].find("fn") {
+        let at = from + pos;
+        let before_ok = at == 0 || {
+            let c = bytes[at - 1] as char;
+            !(c.is_alphanumeric() || c == '_')
+        };
+        let after = bytes.get(at + 2).map(|&b| b as char);
+        let after_ok = matches!(after, None | Some(' ') | Some('\t'));
+        if before_ok && after_ok {
+            return Some(at);
+        }
+        from = at + 2;
+    }
+    None
+}
+
+/// Parse `lint:allow(rule, reason)` comments. The directive must be the
+/// comment's leading content (`// lint:allow(...)`) so prose that merely
+/// *mentions* the syntax (docs, this file) is not treated as a
+/// suppression.
+fn collect_allows(lines: &[Line]) -> Vec<Allow> {
+    let mut out = Vec::new();
+    for (ln, line) in lines.iter().enumerate() {
+        let c = line.comment.trim();
+        let Some(rest) = c.strip_prefix("lint:allow(") else {
+            continue;
+        };
+        let Some(close) = rest.find(')') else {
+            continue;
+        };
+        let inner = &rest[..close];
+        let (rule, reason) = match inner.find(',') {
+            Some(comma) => (
+                inner[..comma].trim().to_string(),
+                inner[comma + 1..].trim().to_string(),
+            ),
+            None => (inner.trim().to_string(), String::new()),
+        };
+        out.push(Allow {
+            line: ln,
+            rule,
+            reason,
+            used: std::cell::Cell::new(false),
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn masking_strips_comments_and_strings() {
+        let src = r#"let a = "unsafe vec![]"; // unsafe in comment
+let b = 'x';
+/* block unsafe */ let c = 1;
+"#;
+        let lines = mask(src);
+        assert!(!lines[0].code.contains("unsafe"));
+        assert!(lines[0].comment.contains("unsafe in comment"));
+        assert!(!lines[2].code.contains("unsafe"));
+        assert!(lines[2].comment.contains("block unsafe"));
+        assert!(lines[2].code.contains("let c = 1;"));
+    }
+
+    #[test]
+    fn masking_handles_raw_strings_and_lifetimes() {
+        let src = "let s = r#\"vec![inside]\"#;\nfn f<'a>(x: &'a str) {}\n";
+        let lines = mask(src);
+        assert!(!lines[0].code.contains("vec!"));
+        assert!(lines[1].code.contains("'a"));
+    }
+
+    #[test]
+    fn cfg_test_regions_and_fn_scopes() {
+        let src = "\
+fn hot() {
+    let x = 1;
+}
+#[cfg(test)]
+mod tests {
+    fn helper() {}
+}
+";
+        let f = SourceFile::parse("x.rs", src);
+        assert!(!f.in_test(1));
+        assert!(f.in_test(5));
+        let scope = f.enclosing_fn(1).unwrap();
+        assert_eq!(scope.sig_line, 0);
+        assert!(!scope.target_feature_avx2);
+    }
+
+    #[test]
+    fn target_feature_attr_marks_fn() {
+        let src = "\
+#[target_feature(enable = \"avx2,fma\")]
+unsafe fn kernel() {
+    let v = 1;
+}
+fn plain() {}
+";
+        let f = SourceFile::parse("x.rs", src);
+        assert!(f.enclosing_fn(2).unwrap().target_feature_avx2);
+        assert_eq!(f.enclosing_fn(2).unwrap().head_line, 0);
+    }
+
+    #[test]
+    fn fn_pointer_type_does_not_open_scope() {
+        let src = "\
+struct S {
+    cb: fn(i32) -> i32,
+}
+fn real() {
+    let y = 2;
+}
+";
+        let f = SourceFile::parse("x.rs", src);
+        // Line 4 must resolve to `real`, not a phantom scope from the
+        // fn-pointer field.
+        assert_eq!(f.enclosing_fn(4).unwrap().sig_line, 3);
+    }
+
+    #[test]
+    fn allows_parse_rule_and_reason() {
+        let src = "// lint:allow(hot-path-alloc, cold constructor)\nlet v = 1;\n";
+        let f = SourceFile::parse("x.rs", src);
+        assert_eq!(f.allows.len(), 1);
+        assert_eq!(f.allows[0].rule, "hot-path-alloc");
+        assert_eq!(f.allows[0].reason, "cold constructor");
+        assert!(f.suppressed("hot-path-alloc", 1));
+        assert!(!f.suppressed("server-panic", 1));
+    }
+
+    #[test]
+    fn fn_head_suppression_covers_body() {
+        let src = "\
+// lint:allow(hot-path-alloc, constructor allocates once)
+fn build() {
+    let v = 1;
+    let w = 2;
+}
+";
+        let f = SourceFile::parse("x.rs", src);
+        assert!(f.suppressed("hot-path-alloc", 3));
+    }
+
+    #[test]
+    fn safety_comment_window() {
+        let src = "\
+// SAFETY: ranges are disjoint.
+let a = 1;
+let b = 2;
+";
+        let f = SourceFile::parse("x.rs", src);
+        assert!(f.comment_above_contains(1, 6, "SAFETY"));
+        assert!(f.comment_above_contains(2, 6, "SAFETY"));
+        assert!(!f.comment_above_contains(2, 0, "SAFETY"));
+    }
+}

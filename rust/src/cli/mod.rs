@@ -87,6 +87,8 @@ USAGE:
   pas artifact load     --store DIR                  (quarantine + heal)
   pas artifact rollback --store DIR --dataset D --solver S --nfe N
   pas pjrt-check [--artifacts DIR] [--name eps_spiral2d]
+  pas lint    [--root DIR] [--json] [--report PATH] [--no-report]
+              (source-contract checks; exit 1 on findings; writes LINT_report.json)
   pas help
 
 Experiments (pas repro): fig2 fig3 table2 table3 table5 table6 fig6a fig6b
@@ -110,6 +112,7 @@ pub fn main(argv: Vec<String>) -> i32 {
         "client" => cmd_client(&args),
         "artifact" => cmd_artifact(&args),
         "pjrt-check" => cmd_pjrt_check(&args),
+        "lint" => cmd_lint(&args),
         "dump-data" => cmd_dump_data(&args),
         other => Err(format!("unknown command {other}\n{USAGE}")),
     };
@@ -319,6 +322,9 @@ mod signals {
         extern "C" {
             fn signal(signum: i32, handler: extern "C" fn(i32)) -> isize;
         }
+        // SAFETY: `signal` is the POSIX libc symbol std already links;
+        // the handler only performs an atomic store (async-signal-safe)
+        // and matches the required `extern "C" fn(i32)` ABI.
         unsafe {
             signal(SIGTERM, on_signal);
             signal(SIGINT, on_signal);
@@ -611,6 +617,87 @@ fn cmd_pjrt_check(args: &Args) -> Result<(), String> {
     }
     println!("pjrt-check OK");
     Ok(())
+}
+
+/// `pas lint`: run the source-contract checks (see `crate::analysis`).
+/// Exits nonzero iff findings exist. Writes `LINT_report.json` next to
+/// the crate root unless `--no-report`.
+fn cmd_lint(args: &Args) -> Result<(), String> {
+    let root = match args.get("root") {
+        Some(r) => PathBuf::from(r),
+        None => discover_crate_root()?,
+    };
+    if !root.join("Cargo.toml").is_file() || !root.join("src").is_dir() {
+        return Err(format!(
+            "{} is not a crate root (need Cargo.toml and src/); pass --root",
+            root.display()
+        ));
+    }
+    let report = crate::analysis::run_lint(&root);
+
+    if !args.has("no-report") {
+        let path = args
+            .get("report")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| root.join("LINT_report.json"));
+        std::fs::write(&path, report.to_json().to_string())
+            .map_err(|e| format!("write {}: {e}", path.display()))?;
+        if !args.has("json") {
+            println!("report: {}", path.display());
+        }
+    }
+
+    if args.has("json") {
+        let rendered = report.to_json().to_string();
+        println!("{rendered}");
+    } else {
+        for f in &report.findings {
+            println!("{f}");
+        }
+        for s in &report.malformed {
+            println!(
+                "malformed-suppression {}:{} lint:allow({}) is missing a reason",
+                s.file, s.line, s.rule
+            );
+        }
+        for s in report.suppressions.iter().filter(|s| !s.used) {
+            println!(
+                "unused-suppression {}:{} lint:allow({}, {})",
+                s.file, s.line, s.rule, s.reason
+            );
+        }
+        let suppressed: usize = report.rules.iter().map(|r| r.suppressed).sum();
+        let sites: usize = report.rules.iter().map(|r| r.sites_scanned).sum();
+        println!(
+            "pas lint: {} findings, {} suppressed, {} sites across {} files",
+            report.findings.len(),
+            suppressed,
+            sites,
+            report.files_scanned
+        );
+    }
+    if report.clean() {
+        Ok(())
+    } else {
+        Err(format!("{} lint finding(s)", report.findings.len()))
+    }
+}
+
+/// Find the crate root: `./Cargo.toml + ./src`, else `./rust/…` (repo
+/// root invocation), else walk up from the current directory.
+fn discover_crate_root() -> Result<PathBuf, String> {
+    let cwd = std::env::current_dir().map_err(|e| e.to_string())?;
+    let mut candidates = vec![cwd.clone(), cwd.join("rust")];
+    let mut up = cwd.as_path();
+    while let Some(parent) = up.parent() {
+        candidates.push(parent.to_path_buf());
+        candidates.push(parent.join("rust"));
+        up = parent;
+    }
+    candidates
+        .into_iter()
+        .find(|c| c.join("Cargo.toml").is_file() && c.join("src").is_dir())
+        .ok_or_else(|| "no crate root found; pass --root DIR".to_string())
 }
 
 #[cfg(test)]

@@ -17,6 +17,7 @@
 //! See `DESIGN.md` for the system inventory and the per-experiment index,
 //! and `EXPERIMENTS.md` for measured results.
 
+pub mod analysis;
 pub mod util;
 pub mod tensor;
 pub mod linalg;

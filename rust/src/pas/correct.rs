@@ -21,6 +21,7 @@ thread_local! {
     /// basis rows. Sized on first use per thread; afterwards a correction
     /// step performs zero heap allocations per sample.
     static PCA_TLS: std::cell::RefCell<(PcaScratch, Vec<f64>)> =
+        // lint:allow(hot-path-alloc, empty one-time thread-local init; steady-state corrections reuse it)
         std::cell::RefCell::new((PcaScratch::new(), Vec::new()));
 }
 
@@ -43,6 +44,7 @@ pub struct CorrectedSampler<'a> {
 }
 
 impl<'a> CorrectedSampler<'a> {
+    // lint:allow(hot-path-alloc, empty constructor; buffers grow once when the first step seeds them)
     pub fn new(dict: &'a CoordinateDict, dim: usize) -> CorrectedSampler<'a> {
         CorrectedSampler {
             dict: Cow::Borrowed(dict),
@@ -54,6 +56,7 @@ impl<'a> CorrectedSampler<'a> {
 
     /// Hook that owns its dictionary snapshot (no borrow to keep alive) —
     /// the continuous scheduler's per-cohort form.
+    // lint:allow(hot-path-alloc, empty constructor; buffers grow once when the first step seeds them)
     pub fn owned(dict: CoordinateDict, dim: usize) -> CorrectedSampler<'static> {
         CorrectedSampler {
             dict: Cow::Owned(dict),

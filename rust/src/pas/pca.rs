@@ -41,6 +41,7 @@ pub struct TrajBuffer {
 }
 
 impl TrajBuffer {
+    // lint:allow(hot-path-alloc, empty constructor; with_capacity / push own the one-time growth)
     pub fn new(dim: usize) -> TrajBuffer {
         TrajBuffer {
             dim,
@@ -164,6 +165,7 @@ impl Basis {
     }
 
     /// Allocating [`BasisRef::direction_into`] (test convenience).
+    // lint:allow(hot-path-alloc, test/bench convenience; serving uses direction_into)
     pub fn direction(&self, coords: &[f64]) -> Vec<f64> {
         let mut d = vec![0.0; self.dim];
         self.direction_into(coords, &mut d);
@@ -179,6 +181,7 @@ impl Basis {
     }
 
     /// Allocating [`BasisRef::project_into`] (test convenience).
+    // lint:allow(hot-path-alloc, test/bench convenience; serving uses project_into)
     pub fn project(&self, v: &[f64]) -> Vec<f64> {
         let mut out = vec![0.0; self.k];
         self.project_into(v, &mut out);
@@ -385,6 +388,7 @@ pub fn pca_basis_into(
 /// Allocating convenience over [`pca_basis_into`] (tests, benches, and
 /// the legacy-oracle training path). `n_basis` is the total number of
 /// basis vectors wanted (paper default 4, ablated 1–4 in Fig. 6c).
+// lint:allow(hot-path-alloc, allocating oracle/test wrapper; the hot path calls pca_basis_into with pooled scratch)
 pub fn pca_basis(q: &TrajBuffer, d: &[f64], n_basis: usize) -> Basis {
     let dim = q.dim;
     assert_eq!(d.len(), dim);
@@ -400,6 +404,7 @@ pub fn pca_basis(q: &TrajBuffer, d: &[f64], n_basis: usize) -> Basis {
 /// Cumulative percent variance of the top principal components of a row
 /// matrix (used by the Figure 2 experiment). Returns one entry per
 /// component: `cum_var[k] = (Σ_{j<=k} s_j²) / (Σ_j s_j²) * 100`.
+// lint:allow(hot-path-alloc, offline Figure 2 analysis helper; never on the sampling path)
 pub fn cumulative_percent_variance(x: &[f64], rows: usize, dim: usize, top_k: usize) -> Vec<f64> {
     // Center rows (classical PCA).
     let mu = crate::tensor::col_means(x, rows, dim);

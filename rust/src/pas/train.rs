@@ -631,11 +631,16 @@ impl TrainSession {
                     for jj in 0..j {
                         scratch.push_q_row(&ds_view.row(jj)[s * dim..(s + 1) * dim]);
                     }
+                    // SAFETY: sample `s` lies in this chunk's [r0, r1)
+                    // range only, so its stride-sized U row is written by
+                    // this task alone.
                     let u_row = unsafe {
                         std::slice::from_raw_parts_mut(u_ptr.get().add(s * stride), stride)
                     };
                     let (kk, dn) =
                         pca_basis_into(scratch, &d_all[s * dim..(s + 1) * dim], n_basis, u_row);
+                    // SAFETY: same disjointness — per-sample k/d_norm
+                    // slots are owned by this chunk.
                     unsafe {
                         *k_ptr.get().add(s) = kk;
                         *dn_ptr.get().add(s) = dn;
@@ -708,6 +713,8 @@ impl TrainSession {
                         for idx in r0..r1 {
                             let sk = mb[idx];
                             let b = bases.basis(sk);
+                            // SAFETY: idx ∈ [r0, r1) — this chunk owns
+                            // the per-index term_k slot.
                             unsafe { *termk_ptr.get().add(idx) = b.k };
                             if b.k == 0 {
                                 continue;
@@ -732,6 +739,8 @@ impl TrainSession {
                             // kernel.
                             let gs = gamma * s / mb_len as f64;
                             b.project_into(gx, proj);
+                            // SAFETY: idx ∈ [r0, r1) — the n_basis-sized
+                            // term row is written by this chunk alone.
                             let trow = unsafe {
                                 std::slice::from_raw_parts_mut(
                                     terms_ptr.get().add(idx * n_basis),
@@ -812,6 +821,8 @@ impl TrainSession {
                     }
                     let bk = &base[s * dim..(s + 1) * dim];
                     let gk = &gt_node[s * dim..(s + 1) * dim];
+                    // SAFETY: sample `s` is in this chunk's [r0, r1) only
+                    // — its corrected-x row has a single writer.
                     let xc = unsafe {
                         std::slice::from_raw_parts_mut(xc_ptr.get().add(s * dim), dim)
                     };
@@ -825,6 +836,8 @@ impl TrainSession {
                         resid[m] = xu[m] - gk[m];
                     }
                     let lu = le.value(resid);
+                    // SAFETY: same per-sample disjointness for the loss
+                    // slots.
                     unsafe {
                         *lc_ptr.get().add(s) = lc;
                         *lu_ptr.get().add(s) = lu;
@@ -880,6 +893,8 @@ impl TrainSession {
                             ScaleMode::Relative => b.d_norm,
                         };
                         b.direction_into(coords, dtilde);
+                        // SAFETY: sample `s` is in this chunk's [r0, r1)
+                        // only — the d_used row has a single writer.
                         let du = unsafe {
                             std::slice::from_raw_parts_mut(du_ptr.get().add(s * dim), dim)
                         };

@@ -265,6 +265,11 @@ pub struct Metrics {
 /// service is shutting down. Clients can match on the `draining:` prefix.
 const DRAINING_ERR: &str = "draining: service is shutting down";
 
+/// Structured error text for queued requests shed by deadline admission.
+/// Static (no per-request formatting) so the shed path stays
+/// allocation-free; clients match on the `deadline:` prefix.
+const SHED_ERR: &str = "deadline: budget infeasible for this key's load";
+
 /// Consecutive corrected-path numeric failures on one key before its
 /// breaker opens and the key degrades to uncorrected sampling.
 const BREAKER_THRESHOLD: u32 = 3;
@@ -1184,6 +1189,7 @@ impl KeyRun {
             });
             metrics.batches.fetch_add(1, Ordering::Relaxed);
         }
+        // lint:allow(server-panic, cohort pushed just above when the list was empty; last_mut cannot miss)
         let cohort = self.cohorts.last_mut().unwrap();
         let row0 = cohort.slots.len();
         engine.admit(&x_t, &mut cohort.slots);
@@ -1225,6 +1231,7 @@ impl KeyRun {
                 == Some(cohort.steps_done as u64)
             {
                 crate::util::failpoint::take(crate::util::failpoint::SERVICE_EVAL_PANIC);
+                // lint:allow(server-panic, chaos failpoint: the panic IS the injected fault, contained by run_key unwind handling)
                 panic!("injected eval panic at step {}", cohort.steps_done);
             }
             for m in cohort.members.iter_mut() {
@@ -1611,6 +1618,7 @@ fn run_key(
                 let mut i = 0;
                 while i < st.queue.len() {
                     if past_deadline(&st.queue[i], run.n_steps, run.tick_ewma_ms) {
+                        // lint:allow(server-panic, index i bounds-checked by the loop condition; remove(i) cannot return None)
                         to_shed.push(st.queue.remove(i).unwrap());
                     } else {
                         i += 1;
@@ -1626,6 +1634,7 @@ fn run_key(
                         // failed below.)
                         if projected + rows <= shared.max_rows || projected == 0 {
                             projected += rows;
+                            // lint:allow(server-panic, front() returned Some in the loop condition; pop_front cannot return None)
                             to_admit.push(st.queue.pop_front().unwrap());
                         } else {
                             break;
@@ -1655,14 +1664,9 @@ fn run_key(
         // Shed and drain replies go out after the state lock is released
         // (reply channels can rendezvous with slow receivers).
         for p in to_shed {
-            let deadline = p.req.deadline_ms.unwrap_or(0.0);
             metrics.shed.fetch_add(1, Ordering::Relaxed);
             stats.shed.fetch_add(1, Ordering::Relaxed);
-            fail_one(
-                p,
-                &format!("deadline: {deadline}ms budget infeasible for this key's load"),
-                metrics,
-            );
+            fail_one(p, SHED_ERR, metrics);
         }
         fail_all(to_fail, DRAINING_ERR, metrics);
         match disposition {
@@ -1762,6 +1766,7 @@ fn batcher_loop(
         while i < held.len() {
             if BatchKey::of(&held[i].req) == key && total + held[i].req.n_samples <= cfg.max_batch
             {
+                // lint:allow(server-panic, index i bounds-checked by the loop condition; remove(i) cannot return None)
                 let p = held.remove(i).unwrap();
                 total += p.req.n_samples;
                 batch.push(p);

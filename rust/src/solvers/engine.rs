@@ -112,6 +112,7 @@ pub struct NodeStore {
 }
 
 impl NodeStore {
+    // lint:allow(hot-path-alloc, empty constructor; reset() owns the one-time growth)
     pub fn new() -> NodeStore {
         NodeStore {
             data: Vec::new(),
@@ -204,12 +205,14 @@ impl NodeStore {
     /// Drop the backing allocation (used by [`SamplerEngine::run`] after
     /// materializing, so a one-shot run does not keep the flat trajectory
     /// resident alongside the nested copy). The next `reset` re-grows.
+    // lint:allow(hot-path-alloc, deliberate deallocation of a one-shot run's workspace)
     fn release(&mut self) {
         self.data = Vec::new();
         self.len = 0;
     }
 
     /// Materialize nested rows (Record::Full stores only).
+    // lint:allow(hot-path-alloc, one-shot materialization API; serving uses views)
     pub fn to_nested(&self) -> Vec<Vec<f64>> {
         assert!(
             self.cap_rows >= self.len,
@@ -237,6 +240,7 @@ pub struct SamplerEngine {
 }
 
 impl SamplerEngine {
+    // lint:allow(hot-path-alloc, empty constructor; run_into sizes the workspaces once)
     pub fn new(cfg: EngineConfig) -> SamplerEngine {
         SamplerEngine {
             cfg,
@@ -384,6 +388,7 @@ impl SamplerEngine {
             Record::Full,
             "SolveRun materialization needs Record::Full; use run_into"
         );
+        // lint:allow(hot-path-alloc, one-shot SolveRun materialization wrapper; serving goes through run_into)
         let mut x0 = vec![0.0; x_t.len()];
         let nfe = self.run_into(solver, model, x_t, n, sched, hook, &mut x0);
         let run = SolveRun {
@@ -394,6 +399,7 @@ impl SamplerEngine {
         };
         self.xs.release();
         self.ds.release();
+        // lint:allow(hot-path-alloc, deliberate workspace drop after materializing)
         self.scratch = Vec::new();
         run
     }
@@ -481,6 +487,7 @@ pub struct SlotEngine {
 impl SlotEngine {
     /// `threads` caps the row-shards per cohort step (`0` = pool size,
     /// `1` = sequential). Output bits are identical either way.
+    // lint:allow(hot-path-alloc, empty constructor; admit/step grow the buffers once per shape)
     pub fn new(threads: usize) -> SlotEngine {
         SlotEngine {
             threads,

@@ -362,6 +362,8 @@ mod tests {
         let mut out = vec![0.0f64; rows * dim];
         let ptr = SendPtr::new(out.as_mut_ptr());
         pool.par_rows(rows, usize::MAX, 1, |r0, r1| {
+            // SAFETY: par_rows hands each worker a disjoint [r0, r1) row
+            // range, so the reconstructed sub-slices never alias.
             let o = unsafe {
                 std::slice::from_raw_parts_mut(ptr.get().add(r0 * dim), (r1 - r0) * dim)
             };

@@ -1,0 +1,5 @@
+//! Fixture consumer that sweeps registry::ALL — covers every name.
+
+pub fn sweep() {
+    for _name in registry::ALL {}
+}

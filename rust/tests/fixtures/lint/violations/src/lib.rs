@@ -1,0 +1,27 @@
+//! Seeded lint violations: `tests/lint_clean.rs` asserts each rule
+//! fires here with the exact rule id, file, and line.
+
+pub mod simd;
+
+pub fn unsafe_without_justification() -> u8 {
+    let x = [1u8, 2];
+    unsafe { *x.as_ptr() }
+}
+
+pub fn unsafe_suppressed() -> u8 {
+    let x = [3u8, 4];
+    // lint:allow(safety-comment, fixture: suppression roundtrip)
+    unsafe { *x.as_ptr() }
+}
+
+pub fn unsafe_wrong_rule_suppression() -> u8 {
+    let x = [5u8, 6];
+    // lint:allow(hot-path-alloc, fixture: wrong rule id must not absorb)
+    unsafe { *x.as_ptr() }
+}
+
+pub fn unsafe_reasonless_allow() -> u8 {
+    let x = [7u8, 8];
+    // lint:allow(safety-comment)
+    unsafe { *x.as_ptr() }
+}

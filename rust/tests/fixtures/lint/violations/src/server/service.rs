@@ -1,0 +1,9 @@
+//! Server request-path panic violations.
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+pub fn handle(map: &HashMap<u32, u32>, mu: &Mutex<u32>) -> u32 {
+    let v = map.get(&1).unwrap();
+    let g = mu.lock().unwrap();
+    *v + *g
+}

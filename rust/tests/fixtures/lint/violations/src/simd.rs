@@ -1,0 +1,14 @@
+//! SIMD gating violations.
+
+pub fn ungated_intrinsic(a: f64) -> f64 {
+    let v = _mm256_set1_pd(a);
+    v
+}
+
+/// # Safety
+/// Fixture only; never called.
+#[target_feature(enable = "avx2,fma")]
+pub unsafe fn fma_outside_gemm(a: f64) -> f64 {
+    let v = _mm256_fmadd_pd(a, a, a);
+    v
+}

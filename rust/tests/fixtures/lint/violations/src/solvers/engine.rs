@@ -1,0 +1,19 @@
+//! Hot-path allocation violations.
+
+pub fn leaks_per_step(n: usize) -> Vec<f64> {
+    let mut v = Vec::new();
+    v.resize(n, 0.0);
+    v
+}
+
+// lint:allow(hot-path-alloc, fixture: fn-head suppression covers the body)
+pub fn suppressed_alloc(n: usize) -> Vec<f64> {
+    vec![0.0; n]
+}
+
+#[cfg(test)]
+mod tests {
+    pub fn test_only_alloc() -> Vec<u8> {
+        vec![1, 2, 3]
+    }
+}

@@ -1,0 +1,12 @@
+//! Registry with a solver ("ghost") missing from the consumers.
+
+pub const ALL: &[&str] = &["ddim", "ghost"];
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn hist_depth_table_pinned() {
+        let table = [("ddim", 0usize)];
+        assert_eq!(table.len(), 1);
+    }
+}

@@ -1,0 +1,3 @@
+//! Fixture consumer: covers only one solver by name, not the full set.
+
+pub const COVERED: &[&str] = &["ddim"];

@@ -1,0 +1,169 @@
+//! `pas lint` gate: the tree itself must be clean, and every rule must
+//! demonstrably fire on the seeded fixture crate under
+//! `tests/fixtures/lint/violations/` (exact rule id, file, and line, so
+//! a rule that silently stops matching fails here, not in review).
+
+use pas::analysis::{run_lint, LintReport, RuleId};
+use pas::util::json::Json;
+use std::path::Path;
+
+fn crate_root() -> &'static Path {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+}
+
+fn fixture_root() -> std::path::PathBuf {
+    crate_root().join("tests/fixtures/lint/violations")
+}
+
+fn has(report: &LintReport, rule: RuleId, file: &str, line: usize) -> bool {
+    report
+        .findings
+        .iter()
+        .any(|f| f.rule == rule && f.file == file && f.line == line)
+}
+
+#[test]
+fn tree_is_lint_clean() {
+    let report = run_lint(crate_root());
+    let rendered: Vec<String> = report.findings.iter().map(|f| f.to_string()).collect();
+    assert!(
+        report.clean(),
+        "pas lint found {} violation(s) in the tree:\n{}",
+        report.findings.len(),
+        rendered.join("\n")
+    );
+    assert!(
+        report.malformed.is_empty(),
+        "reason-less lint:allow comments in the tree: {:?}",
+        report
+            .malformed
+            .iter()
+            .map(|s| format!("{}:{}", s.file, s.line))
+            .collect::<Vec<_>>()
+    );
+    let stale: Vec<String> = report
+        .suppressions
+        .iter()
+        .filter(|s| !s.used)
+        .map(|s| format!("{}:{} lint:allow({})", s.file, s.line, s.rule))
+        .collect();
+    assert!(stale.is_empty(), "stale suppressions (nothing to absorb): {stale:?}");
+}
+
+#[test]
+fn tree_scan_reaches_every_rule() {
+    let report = run_lint(crate_root());
+    assert!(report.files_scanned > 40, "only {} files scanned", report.files_scanned);
+    for r in &report.rules {
+        assert!(
+            r.sites_scanned > 0,
+            "rule {} scanned zero sites — the pass is not running",
+            r.rule
+        );
+    }
+    // The tree carries deliberate, reasoned suppressions (gemm closures,
+    // lock-free constructors, chaos failpoint); they must all be in use.
+    assert!(!report.suppressions.is_empty());
+}
+
+#[test]
+fn fixture_every_rule_fires_at_pinned_site() {
+    let report = run_lint(&fixture_root());
+    let rendered: Vec<String> = report.findings.iter().map(|f| f.to_string()).collect();
+    let ctx = rendered.join("\n");
+    assert!(
+        has(&report, RuleId::SafetyComment, "src/lib.rs", 8),
+        "safety-comment did not fire at src/lib.rs:8:\n{ctx}"
+    );
+    assert!(
+        has(&report, RuleId::SimdGating, "src/simd.rs", 4),
+        "simd-gating (ungated intrinsic) did not fire at src/simd.rs:4:\n{ctx}"
+    );
+    assert!(
+        has(&report, RuleId::SimdGating, "src/simd.rs", 12),
+        "simd-gating (fmadd containment) did not fire at src/simd.rs:12:\n{ctx}"
+    );
+    assert!(
+        has(&report, RuleId::HotPathAlloc, "src/solvers/engine.rs", 4),
+        "hot-path-alloc did not fire at src/solvers/engine.rs:4:\n{ctx}"
+    );
+    assert!(
+        has(&report, RuleId::ServerPanic, "src/server/service.rs", 6),
+        "server-panic did not fire at src/server/service.rs:6:\n{ctx}"
+    );
+    assert!(
+        has(&report, RuleId::RegistryCoverage, "src/solvers/registry.rs", 1),
+        "registry-coverage (hist_depth gap) did not fire:\n{ctx}"
+    );
+    assert!(
+        has(&report, RuleId::RegistryCoverage, "tests/golden_trajectories.rs", 1),
+        "registry-coverage (consumer gap) did not fire:\n{ctx}"
+    );
+    assert!(
+        has(&report, RuleId::DependencyFree, "Cargo.toml", 7),
+        "dependency-free did not fire at Cargo.toml:7:\n{ctx}"
+    );
+    // The lock-poisoning unwrap (service.rs:7) and the cfg(test) alloc
+    // (engine.rs:17) are exempt by design — no findings there.
+    assert!(!has(&report, RuleId::ServerPanic, "src/server/service.rs", 7));
+    assert!(!has(&report, RuleId::HotPathAlloc, "src/solvers/engine.rs", 17));
+    // The bench consumer sweeps registry::ALL, so it covers every name.
+    assert!(!report
+        .findings
+        .iter()
+        .any(|f| f.file == "benches/solver_step.rs"));
+}
+
+#[test]
+fn fixture_suppression_roundtrip() {
+    let report = run_lint(&fixture_root());
+    // A matching allow absorbs its finding and is marked used.
+    assert!(
+        !has(&report, RuleId::SafetyComment, "src/lib.rs", 14),
+        "suppressed unsafe at src/lib.rs:14 still reported"
+    );
+    assert!(report
+        .suppressions
+        .iter()
+        .any(|s| s.file == "src/lib.rs" && s.line == 13 && s.rule == "safety-comment" && s.used));
+    // A fn-head allow covers the body.
+    assert!(!has(&report, RuleId::HotPathAlloc, "src/solvers/engine.rs", 11));
+    assert!(report
+        .suppressions
+        .iter()
+        .any(|s| s.file == "src/solvers/engine.rs" && s.line == 9 && s.used));
+    // A wrong rule id does NOT absorb: the finding stands, the allow is
+    // reported unused.
+    assert!(has(&report, RuleId::SafetyComment, "src/lib.rs", 20));
+    assert!(report
+        .suppressions
+        .iter()
+        .any(|s| s.file == "src/lib.rs" && s.line == 19 && s.rule == "hot-path-alloc" && !s.used));
+    // A reason-less allow is malformed and does not suppress.
+    assert!(has(&report, RuleId::SafetyComment, "src/lib.rs", 26));
+    assert!(report
+        .malformed
+        .iter()
+        .any(|s| s.file == "src/lib.rs" && s.line == 25));
+}
+
+#[test]
+fn fixture_report_json_roundtrip() {
+    let report = run_lint(&fixture_root());
+    let text = report.to_json().to_string();
+    let parsed = Json::parse(&text).expect("LINT_report.json payload parses");
+    let Json::Obj(m) = parsed else {
+        panic!("report is a JSON object")
+    };
+    assert_eq!(m["tool"], Json::Str("pas lint".to_string()));
+    assert_eq!(
+        m["total_findings"],
+        Json::UInt(report.findings.len() as u64)
+    );
+    assert!(matches!(&m["rules"], Json::Arr(a) if a.len() == 6));
+    let Json::Arr(findings) = &m["findings"] else {
+        panic!("findings is an array")
+    };
+    assert_eq!(findings.len(), report.findings.len());
+    assert!(matches!(&m["malformed_suppressions"], Json::Arr(a) if a.len() == 1));
+}
